@@ -1,0 +1,110 @@
+//! Multi-LiDAR serving (paper §VI future work: "integrated data from
+//! multiple LiDARs"): S sensor threads stream frames into the batcher; a
+//! worker pool drains batches through the engine at the configured split,
+//! and the run reports end-to-end latency and aggregate throughput.
+//!
+//! This is the end-to-end serving driver recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example multi_lidar [sensors] [frames-per-sensor]
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::batcher::{BatchPolicy, Batcher};
+use splitpoint::coordinator::Engine;
+use splitpoint::metrics::Recorder;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::Frame;
+use splitpoint::Manifest;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let sensors: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let frames_per_sensor: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let engine = Arc::new(Engine::new(&manifest, SystemConfig::paper())?);
+    let sp = engine.graph().split_after("vfe")?;
+
+    let batcher = Arc::new(Batcher::new(BatchPolicy {
+        max_frames: 4,
+        max_wait: Duration::from_millis(30),
+    }));
+
+    println!(
+        "{sensors} sensors x {frames_per_sensor} frames, {workers} workers, split after VFE"
+    );
+
+    // ---- sensor threads: 10 Hz-ish LiDAR emission
+    let mut sensor_threads = Vec::new();
+    for sensor_id in 0..sensors as u32 {
+        let batcher = batcher.clone();
+        sensor_threads.push(std::thread::spawn(move || {
+            let mut gen = SceneGenerator::with_seed(1000 + sensor_id as u64);
+            for seq in 0..frames_per_sensor as u64 {
+                batcher.push(Frame {
+                    sensor_id,
+                    seq,
+                    cloud: gen.generate().cloud,
+                });
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }));
+    }
+
+    // ---- worker pool drains batches through the engine
+    let recorder = Arc::new(Mutex::new(Recorder::new()));
+    let processed = Arc::new(AtomicUsize::new(0));
+    let t_start = Instant::now();
+    let mut worker_threads = Vec::new();
+    for _ in 0..workers {
+        let batcher = batcher.clone();
+        let engine = engine.clone();
+        let recorder = recorder.clone();
+        let processed = processed.clone();
+        worker_threads.push(std::thread::spawn(move || -> Result<()> {
+            while let Some(batch) = batcher.next_batch() {
+                for frame in batch {
+                    let t0 = Instant::now();
+                    let r = engine.run_frame(&frame.cloud, sp)?;
+                    let wall = t0.elapsed().as_secs_f64() * 1e3;
+                    let mut rec = recorder.lock().unwrap();
+                    rec.record("wall_ms_per_frame", wall);
+                    rec.record(
+                        "virtual_inference_ms",
+                        r.timing.inference_time.as_millis_f64(),
+                    );
+                    rec.record("detections", r.detections.len() as f64);
+                    processed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(())
+        }));
+    }
+
+    for t in sensor_threads {
+        t.join().unwrap();
+    }
+    batcher.close();
+    for t in worker_threads {
+        t.join().unwrap()?;
+    }
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let total = processed.load(Ordering::Relaxed);
+    assert_eq!(total, sensors * frames_per_sensor, "lost frames!");
+
+    println!("\n{}", recorder.lock().unwrap().to_markdown("multi-LiDAR serving"));
+    println!(
+        "processed {total} frames in {wall:.1} s -> throughput {:.2} frames/s",
+        total as f64 / wall
+    );
+    Ok(())
+}

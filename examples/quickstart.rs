@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, run one synthetic LiDAR frame at the
+//! paper's recommended split (after VFE), and print the detections plus the
+//! timing breakdown.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::Manifest;
+
+fn main() -> Result<()> {
+    // 1. load the model (HLO artifacts AOT'd by `make artifacts`)
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    println!(
+        "loaded {} modules (grid {:?}, pallas={})",
+        manifest.modules.len(),
+        manifest.config.grid,
+        manifest.use_pallas
+    );
+
+    // 2. build the engine with the paper's calibrated testbed profile
+    let engine = Engine::new(&manifest, SystemConfig::paper())?;
+
+    // 3. one synthetic KITTI-like frame
+    let scene = SceneGenerator::with_seed(1).generate();
+    println!(
+        "scene: {} points, {} ground-truth objects",
+        scene.cloud.len(),
+        scene.boxes.len()
+    );
+
+    // 4. run at the paper's headline split: after VFE (voxelization)
+    let sp = engine.graph().split_after("vfe")?;
+    let result = engine.run_frame(&scene.cloud, sp)?;
+
+    println!("\ntop detections:");
+    for d in result.detections.iter().take(5) {
+        println!(
+            "  class={} score={:.2} box=({:.1}, {:.1}, {:.1}) {:.1}x{:.1}x{:.1} ry={:.2}",
+            d.class, d.score, d.boxx[0], d.boxx[1], d.boxx[2], d.boxx[3], d.boxx[4],
+            d.boxx[5], d.boxx[6]
+        );
+    }
+
+    let t = &result.timing;
+    println!("\ntiming (virtual clock, Jetson-calibrated):");
+    println!("  inference time : {:>8.1} ms   (paper Fig 6)", t.inference_time.as_millis_f64());
+    println!("  edge time      : {:>8.1} ms   (paper Fig 7)", t.edge_time.as_millis_f64());
+    println!("  transfer size  : {:>8.2} MB   (paper Fig 8)", t.uplink_bytes as f64 / 1e6);
+    println!("  transfer time  : {:>8.1} ms   (paper Fig 9)", t.uplink_time.as_millis_f64());
+    println!("\nper module:");
+    for (name, time, side) in &t.node_times {
+        println!("  {name:<12} {:>8.1} ms on {side:?}", time.as_millis_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Adaptive split selection across changing network conditions.
+//!
+//! The paper picks split points offline (§III-B); this example shows the
+//! coordinator choosing them automatically: for each link bandwidth the
+//! analytic cost model prices every split and picks the argmin, exposing
+//! the crossover the paper's Fig 6 implies (fast link → split early; slow
+//! link → run on the edge).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example split_sweep
+//! ```
+
+use anyhow::Result;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::adaptive::{choose_split, estimate_splits, Objective};
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::Manifest;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let scene = SceneGenerator::with_seed(3).generate();
+
+    println!("bandwidth sweep — chosen split per objective\n");
+    println!(
+        "{:<14} {:<18} {:<18}",
+        "link MB/s", "min inference", "min edge load"
+    );
+    for mbps in [0.5, 2.0, 8.0, 32.0, 128.0, 512.0] {
+        let mut cfg = SystemConfig::paper();
+        cfg.link.bandwidth_bps = mbps * 1e6;
+        let engine = Engine::new(&manifest, cfg)?;
+        let fast = choose_split(&engine, &scene.cloud, Objective::InferenceTime)?;
+        let light = choose_split(&engine, &scene.cloud, Objective::EdgeTime)?;
+        println!(
+            "{:<14} {:<18} {:<18}",
+            mbps,
+            format!("{} ({:.0} ms)", fast.label, fast.inference_time.as_millis_f64()),
+            format!("{} ({:.0} ms)", light.label, light.edge_time.as_millis_f64()),
+        );
+    }
+
+    // full table at the paper's calibrated link
+    let engine = Engine::new(&manifest, SystemConfig::paper())?;
+    println!("\nfull cost table at the paper link:\n");
+    println!(
+        "{:<18} {:>10} {:>12} {:>14}",
+        "split", "wire MB", "edge ms", "inference ms"
+    );
+    for e in estimate_splits(&engine, &scene.cloud)? {
+        println!(
+            "{:<18} {:>10.2} {:>12.1} {:>14.1}",
+            e.label,
+            e.uplink_bytes as f64 / 1e6,
+            e.edge_time.as_millis_f64(),
+            e.inference_time.as_millis_f64()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT: lower every L2 module to an HLO-text artifact + manifest.json.
+
+This is the only place python touches the pipeline — it runs once at build
+time (``make artifacts``); the rust coordinator is self-contained afterwards.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import config as cfg
+from . import model
+
+# Dataflow declaration of the OpenPCDet-style module chain. The rust side
+# derives split-point live sets (paper Table II) from exactly this graph.
+MODULE_IO = {
+    "vfe": {
+        "inputs": ["points_sum", "points_cnt"],
+        "outputs": ["vfe_feat", "vfe_mask"],
+    },
+    "conv1": {
+        "inputs": ["vfe_feat", "vfe_mask"],
+        "outputs": ["conv1_feat", "conv1_mask"],
+    },
+    "conv2": {
+        "inputs": ["conv1_feat", "conv1_mask"],
+        "outputs": ["conv2_feat", "conv2_mask"],
+    },
+    "conv3": {
+        "inputs": ["conv2_feat", "conv2_mask"],
+        "outputs": ["conv3_feat", "conv3_mask"],
+    },
+    "conv4": {
+        "inputs": ["conv3_feat", "conv3_mask"],
+        "outputs": ["conv4_feat", "conv4_mask"],
+    },
+    "bev_head": {
+        "inputs": ["conv4_feat"],
+        "outputs": ["cls_logits", "box_preds", "dir_logits"],
+    },
+    "roi_head": {
+        "inputs": ["conv2_feat", "conv3_feat", "conv4_feat", "rois"],
+        "outputs": ["roi_scores", "roi_boxes"],
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights must survive the text
+    # round-trip — default printing elides them as `constant({...})`,
+    # which the rust-side text parser cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_module(fn, input_shapes):
+    specs = [
+        jax.ShapeDtypeStruct(s, jax.numpy.float32) for s in input_shapes
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def export_all(out_dir: pathlib.Path, use_pallas: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    weights = model.init_weights()
+    fns = model.module_fns(weights, use_pallas=use_pallas)
+
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "use_pallas": use_pallas,
+        "config": cfg.manifest_dict(),
+        "modules": [],
+    }
+
+    for name in cfg.MODULE_NAMES:
+        fn, input_shapes = fns[name]
+        lowered = lower_module(fn, input_shapes)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+
+        out_shapes = [
+            list(o.shape) for o in jax.tree_util.tree_leaves(
+                jax.eval_shape(fn, *[
+                    jax.ShapeDtypeStruct(s, jax.numpy.float32)
+                    for s in input_shapes
+                ])
+            )
+        ]
+        io = MODULE_IO[name]
+        assert len(io["inputs"]) == len(input_shapes), name
+        assert len(io["outputs"]) == len(out_shapes), name
+        manifest["modules"].append(
+            {
+                "name": name,
+                "artifact": path.name,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "inputs": [
+                    {"name": n, "shape": list(s)}
+                    for n, s in zip(io["inputs"], input_shapes)
+                ],
+                "outputs": [
+                    {"name": n, "shape": s}
+                    for n, s in zip(io["outputs"], out_shapes)
+                ],
+            }
+        )
+        print(f"  {name:<9} -> {path.name:<18} {len(text)/1e6:.2f} MB text")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="bake the ref.py path instead of the Pallas kernels "
+        "(debug / A-B artifact comparison)",
+    )
+    args = ap.parse_args()
+    export_all(pathlib.Path(args.out_dir), use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Model geometry shared by every layer of the stack.
+
+All shapes are fixed at AOT time (PJRT executables are static-shape); the
+values here are serialized into ``artifacts/manifest.json`` so the rust
+coordinator never hardcodes a dimension.
+
+The grid is a scaled-down KITTI front-camera volume (see DESIGN.md §3):
+paper grid 1408x1600x41 @ 0.05 m -> ours 128x128x16 @ 0.36/0.25 m. Axis
+order everywhere is (z, y, x, channels) a.k.a. DHWC.
+"""
+
+from dataclasses import dataclass, field
+
+
+# ---------------------------------------------------------------- geometry
+# Point-cloud range in metres, KITTI-like front FoV.
+PC_RANGE = {
+    "x": (0.0, 46.08),
+    "y": (-23.04, 23.04),
+    "z": (-3.0, 1.0),
+}
+VOXEL_SIZE = (0.25, 0.36, 0.36)  # (z, y, x) metres
+
+# Dense voxel grid (z, y, x).
+GRID_D = 16
+GRID_H = 128
+GRID_W = 128
+
+# Raw point features: x, y, z, intensity.
+POINT_FEATURES = 4
+
+# VFE output channels (MeanVFE: mean of point features per voxel).
+VFE_CHANNELS = 4
+
+# ------------------------------------------------------------- backbone 3d
+# Four stages mirroring Voxel R-CNN's 1x/2x/4x/8x blocks. conv2 downsamples
+# z only (DESIGN.md §3 explains why on the scaled grid).
+@dataclass(frozen=True)
+class ConvStage:
+    name: str
+    cin: int
+    cout: int
+    stride: tuple  # (z, y, x)
+    # submanifold: occupancy mask is NOT dilated (SubMConv3d semantics);
+    # regular sparse conv dilates the active set by the kernel footprint.
+    submanifold: bool
+
+
+# conv1 is submanifold (SubMConv3d), exactly like Voxel R-CNN's conv_input/
+# conv1 blocks: the active set does not dilate until the first strided
+# SparseConv3d (conv2). This is what keeps the paper's conv1 transfer only
+# ~6x the VFE transfer (Fig 8) instead of blowing up by the kernel footprint.
+# Channel widths are Voxel R-CNN's divided by 2 — the single-core 2.1 GHz
+# CPU testbed needs ~4x fewer conv FLOPs to keep per-frame latency in the
+# regime where many-frame sweeps are practical (DESIGN.md §3 scaling).
+BACKBONE3D_STAGES = (
+    ConvStage("conv1", VFE_CHANNELS, 16, (1, 1, 1), submanifold=True),
+    ConvStage("conv2", 16, 16, (2, 1, 1), submanifold=False),
+    ConvStage("conv3", 16, 32, (2, 2, 2), submanifold=False),
+    ConvStage("conv4", 32, 64, (2, 2, 2), submanifold=False),
+)
+
+KERNEL_SIZE = 3  # all 3d convs are 3x3x3
+
+
+def stage_output_shape(stage_idx: int) -> tuple:
+    """(D, H, W, C) after BACKBONE3D_STAGES[stage_idx]."""
+    d, h, w = GRID_D, GRID_H, GRID_W
+    for i, st in enumerate(BACKBONE3D_STAGES):
+        sz, sy, sx = st.stride
+        d, h, w = d // sz, h // sy, w // sx
+        if i == stage_idx:
+            return (d, h, w, st.cout)
+    raise IndexError(stage_idx)
+
+
+# --------------------------------------------------------------- bev / rpn
+# MapToBEV folds conv4's z dim into channels.
+BEV_D, BEV_H, BEV_W, _C4 = stage_output_shape(3)
+BEV_CHANNELS = BEV_D * _C4          # 2 * 128 = 256
+BEV_BACKBONE_CHANNELS = 64          # backbone2d working width
+
+NUM_CLASSES = 3                      # Car, Pedestrian, Cyclist
+ANCHOR_ROTATIONS = (0.0, 1.5707963)  # 0 and pi/2
+# (l, w, h) per class, KITTI metric priors.
+ANCHOR_SIZES = (
+    (3.9, 1.6, 1.56),   # Car
+    (0.8, 0.6, 1.73),   # Pedestrian
+    (1.76, 0.6, 1.73),  # Cyclist
+)
+ANCHOR_Z = (-1.0, -0.6, -0.6)        # anchor center z per class
+ANCHORS_PER_CELL = NUM_CLASSES * len(ANCHOR_ROTATIONS)  # 6
+NUM_ANCHORS = BEV_H * BEV_W * ANCHORS_PER_CELL
+BOX_CODE_SIZE = 7                    # x, y, z, l, w, h, ry
+
+# ---------------------------------------------------------------- roi head
+NUM_PROPOSALS = 96      # top-K after rust-side NMS
+ROI_GRID = 6            # 6x6x6 grid points per RoI per scale (Voxel R-CNN)
+ROI_POOL_SCALES = ("conv2", "conv3", "conv4")
+ROI_POOL_CHANNELS = 16  # per-scale projection width before the point MLP
+ROI_MLP = 128           # shared per-grid-point MLP width (the head's bulk —
+                        # like Voxel R-CNN's, the RoI head dominates Table I)
+ROI_FC = 128            # post-pool FC width
+
+MODULE_NAMES = (
+    "vfe",
+    "conv1",
+    "conv2",
+    "conv3",
+    "conv4",
+    "bev_head",
+    "roi_head",
+)
+
+WEIGHTS_SEED = 20250710
+
+
+def grid_shape() -> tuple:
+    return (GRID_D, GRID_H, GRID_W)
+
+
+def manifest_dict() -> dict:
+    """Everything the rust side needs, JSON-serializable."""
+    return {
+        "pc_range": PC_RANGE,
+        "voxel_size": list(VOXEL_SIZE),
+        "grid": [GRID_D, GRID_H, GRID_W],
+        "point_features": POINT_FEATURES,
+        "vfe_channels": VFE_CHANNELS,
+        "stages": [
+            {
+                "name": s.name,
+                "cin": s.cin,
+                "cout": s.cout,
+                "stride": list(s.stride),
+                "submanifold": s.submanifold,
+                "out_shape": list(stage_output_shape(i)),
+            }
+            for i, s in enumerate(BACKBONE3D_STAGES)
+        ],
+        "bev": {
+            "h": BEV_H,
+            "w": BEV_W,
+            "channels": BEV_CHANNELS,
+            "backbone_channels": BEV_BACKBONE_CHANNELS,
+        },
+        "num_classes": NUM_CLASSES,
+        "anchor_sizes": [list(a) for a in ANCHOR_SIZES],
+        "anchor_z": list(ANCHOR_Z),
+        "anchor_rotations": list(ANCHOR_ROTATIONS),
+        "anchors_per_cell": ANCHORS_PER_CELL,
+        "num_anchors": NUM_ANCHORS,
+        "box_code_size": BOX_CODE_SIZE,
+        "num_proposals": NUM_PROPOSALS,
+        "roi_grid": ROI_GRID,
+        "roi_pool_scales": list(ROI_POOL_SCALES),
+        "roi_pool_channels": ROI_POOL_CHANNELS,
+        "weights_seed": WEIGHTS_SEED,
+    }

@@ -1,0 +1,62 @@
+"""Pallas fused 2D BEV convolution: conv3x3 (stride 1, SAME) + bias (+ReLU).
+
+Grid walks row-tiles of the BEV map; each program loads its (TH+2)-row halo
+slab and reduces the 9 taps as (TH·W, Ci) x (Ci, Co) matmuls. interpret=True
+(CPU PJRT), see conv3d.py for the rationale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, relu, tile, width):
+    """x_ref: (H+2, W+2, Ci) padded whole map; o_ref: (TH, W, Co)."""
+    ci = x_ref.shape[-1]
+    co = w_ref.shape[-1]
+    r0 = pl.program_id(0) * tile
+
+    slab = pl.load(
+        x_ref, (pl.dslice(r0, tile + 2), slice(None), slice(None))
+    )  # (TH+2, W+2, Ci)
+    acc = jnp.zeros((tile * width, co), dtype=jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = slab[ky : ky + tile, kx : kx + width, :]
+            acc += jnp.dot(
+                patch.reshape(tile * width, ci),
+                w_ref[ky, kx],
+                preferred_element_type=jnp.float32,
+            )
+    out = acc + b_ref[...]
+    if relu:
+        out = jax.nn.relu(out)
+    o_ref[...] = out.reshape(tile, width, co)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def conv2d_fused(x, w, b, relu=True):
+    """Drop-in for ref.conv2d_ref. x: (H, W, Ci) -> (H, W, Co)."""
+    h, wdim, ci = x.shape
+    co = w.shape[-1]
+    tile = ROW_TILE if h % ROW_TILE == 0 else 1
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(
+        _conv2d_kernel, relu=relu, tile=tile, width=wdim
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h // tile,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, wdim, co), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wdim, co), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

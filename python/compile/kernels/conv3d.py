@@ -1,0 +1,110 @@
+"""Pallas fused 3D convolution: conv3x3x3 + bias + ReLU + occupancy mask.
+
+TPU-shaped (see DESIGN.md §Hardware-Adaptation): the grid walks the kernel's
+z-taps; each program stages the z-shifted, z-strided input volume once and
+reduces its 9 in-plane taps as (Do·Ho·Wo, Ci) x (Ci, Co) MXU matmuls into a
+VMEM accumulator shared across the sequential grid — the Pallas analogue of
+spconv's gather-GEMM-scatter. The final program applies bias + ReLU + the
+occupancy mask (sparse-conv semantics).
+
+Perf note (EXPERIMENTS.md §Perf): the first version walked output z-slices
+(grid=(Do,)) and issued 27 tiny (Ho·Wo, Ci) dots per slice — 2.4 GFLOP/s on
+the CPU backend. Restructuring to 3 programs x 9 volume-sized matmuls gives
+XLA long contractions to fuse (5-10x wall-clock on the host and a far better
+MXU utilization profile on a real TPU).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (/opt/xla-example README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3d_kernel(x_ref, w_ref, b_ref, mask_ref, o_ref, *, stride, out_shape):
+    """One kernel z-tap per program; accumulate into o_ref across the grid.
+
+    x_ref:    (D+2, H+2, W+2, Ci) zero-padded input (whole array)
+    w_ref:    (3, 3, 3, Ci, Co)
+    b_ref:    (Co,)
+    mask_ref: (Do, Ho, Wo, 1) output occupancy
+    o_ref:    (Do, Ho, Wo, Co) accumulator across programs
+    """
+    do, ho, wo = out_shape
+    sz, sy, sx = stride
+    ci = x_ref.shape[-1]
+    co = w_ref.shape[-1]
+    kz = pl.program_id(0)
+
+    # stage the z-shifted slab once: rows kz + sz*j for j < Do
+    slab = pl.load(
+        x_ref,
+        (pl.dslice(kz, sz * (do - 1) + 1), slice(None), slice(None), slice(None)),
+    )[::sz]  # (Do, H+2, W+2, Ci)
+
+    acc = jnp.zeros((do * ho * wo, co), dtype=jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = slab[
+                :,
+                ky : ky + sy * (ho - 1) + 1 : sy,
+                kx : kx + sx * (wo - 1) + 1 : sx,
+                :,
+            ]  # (Do, Ho, Wo, Ci)
+            acc += jnp.dot(
+                patch.reshape(do * ho * wo, ci),
+                w_ref[kz, ky, kx],
+                preferred_element_type=jnp.float32,
+            )
+    acc = acc.reshape(do, ho, wo, co)
+
+    @pl.when(kz == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(kz > 0)
+    def _accum():
+        o_ref[...] += acc
+
+    @pl.when(kz == 2)
+    def _finish():
+        o_ref[...] = (
+            jax.nn.relu(o_ref[...] + b_ref[...]) * mask_ref[...]
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv3d_fused(x, w, b, mask, stride):
+    """Drop-in for ref.conv3d_ref, as a Pallas kernel.
+
+    x: (D, H, W, Ci); w: (3, 3, 3, Ci, Co); b: (Co,);
+    mask: (Do, Ho, Wo, 1); stride: (sz, sy, sx). Returns (Do, Ho, Wo, Co).
+    """
+    d, h, wdim, ci = x.shape
+    co = w.shape[-1]
+    sz, sy, sx = stride
+    do, ho, wo = d // sz, h // sy, wdim // sx
+
+    xp = jnp.pad(x, ((1, 1), (1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(
+        _conv3d_kernel, stride=stride, out_shape=(do, ho, wo)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(3,),
+        in_specs=[
+            # whole padded input visible to every program; the z-shifted
+            # slab is a dynamic slice inside the kernel. On a real TPU this
+            # would additionally block over y (DESIGN.md §Perf: VMEM-fit).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+            pl.BlockSpec((do, ho, wo, 1), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((do, ho, wo, co), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((do, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xp, w, b, mask)

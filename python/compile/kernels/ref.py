@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suites compare the kernels
+against, and the alternative compute path (``use_pallas=False``) used to
+cross-check the AOT'd pipeline end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv3d_ref(x, w, b, mask, stride):
+    """Fused 3x3x3 conv + bias + ReLU + occupancy-mask multiply.
+
+    x:      (D, H, W, Ci)  float32, unpadded
+    w:      (3, 3, 3, Ci, Co)
+    b:      (Co,)
+    mask:   (Do, Ho, Wo, 1) occupancy of the *output* active set
+    stride: (sz, sy, sx)
+    returns (Do, Ho, Wo, Co)
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=stride,
+        padding=[(1, 1), (1, 1), (1, 1)],
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )[0]
+    return jax.nn.relu(out + b) * mask
+
+
+def conv2d_ref(x, w, b, relu=True):
+    """Fused 3x3 2D conv (stride 1, SAME) + bias (+ ReLU).
+
+    x: (H, W, Ci), w: (3, 3, Ci, Co), b: (Co,)
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    out = out + b
+    return jax.nn.relu(out) if relu else out
+
+
+def dilate_mask_ref(mask, stride):
+    """Occupancy dilation of a regular (non-submanifold) sparse conv.
+
+    A 3x3x3 max-pool with the conv's stride: an output site is active iff
+    any input site under the kernel footprint is active. mask: (D, H, W, 1).
+    """
+    return jax.lax.reduce_window(
+        mask,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(3, 3, 3, 1),
+        window_strides=(*stride, 1),
+        padding=[(1, 1), (1, 1), (1, 1), (0, 0)],
+    )
+
+
+def stride_mask_ref(mask, stride):
+    """Occupancy of a submanifold strided conv: subsample, no dilation."""
+    sz, sy, sx = stride
+    return mask[::sz, ::sy, ::sx]
+
+
+def roi_grid_points_ref(rois, grid_size):
+    """Metric-space sample points of a GxGxG grid inside each rotated box.
+
+    rois: (K, 7) = (cx, cy, cz, l, w, h, ry). returns (K, G^3, 3) xyz.
+    """
+    g = grid_size
+    # grid point offsets in the box frame, cell centers in [-0.5, 0.5]
+    lin = (jnp.arange(g, dtype=jnp.float32) + 0.5) / g - 0.5
+    dz, dy, dx = jnp.meshgrid(lin, lin, lin, indexing="ij")
+    local = jnp.stack([dx.ravel(), dy.ravel(), dz.ravel()], axis=-1)  # (G^3, 3)
+
+    dims = rois[:, 3:6]  # (l, w, h)
+    scaled = local[None] * dims[:, None, :]  # (K, G^3, 3) box-frame offsets
+    ry = rois[:, 6]
+    c, s = jnp.cos(ry), jnp.sin(ry)
+    x = scaled[..., 0] * c[:, None] - scaled[..., 1] * s[:, None]
+    y = scaled[..., 0] * s[:, None] + scaled[..., 1] * c[:, None]
+    z = scaled[..., 2]
+    return jnp.stack([x, y, z], axis=-1) + rois[:, None, 0:3]
+
+
+def roi_pool_ref(feat, rois, grid_size, range_min, voxel_size):
+    """Voxel RoI grid pooling: nearest-voxel gather of G^3 points per RoI.
+
+    feat:       (D, H, W, C) one backbone scale
+    rois:       (K, 7) metric boxes
+    range_min:  (x0, y0, z0) of the point-cloud range
+    voxel_size: (vz, vy, vx) metres per voxel *at this scale*
+    returns     (K, G^3, C); out-of-range points contribute zeros.
+    """
+    d, h, w, c = feat.shape
+    pts = roi_grid_points_ref(rois, grid_size)  # (K, G^3, 3) xyz
+    x0, y0, z0 = range_min
+    vz, vy, vx = voxel_size
+    ix = jnp.floor((pts[..., 0] - x0) / vx).astype(jnp.int32)
+    iy = jnp.floor((pts[..., 1] - y0) / vy).astype(jnp.int32)
+    iz = jnp.floor((pts[..., 2] - z0) / vz).astype(jnp.int32)
+    valid = (
+        (ix >= 0) & (ix < w) & (iy >= 0) & (iy < h) & (iz >= 0) & (iz < d)
+    )
+    flat = (
+        jnp.clip(iz, 0, d - 1) * (h * w)
+        + jnp.clip(iy, 0, h - 1) * w
+        + jnp.clip(ix, 0, w - 1)
+    )
+    gathered = feat.reshape(d * h * w, c)[flat]  # (K, G^3, C)
+    return gathered * valid[..., None].astype(feat.dtype)

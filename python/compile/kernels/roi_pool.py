@@ -1,0 +1,91 @@
+"""Pallas voxel RoI grid pooling kernel.
+
+Grid walks RoI blocks; each program computes the metric-space G^3 sample
+grid of its RoIs (rotation included), converts to voxel indices at this
+backbone scale, and gathers features with a batched take — the TPU-shaped
+replacement for the warp-per-RoI CUDA kernel in Voxel R-CNN's RoI head
+(batched vector gathers instead of warp shuffles). interpret=True (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROI_BLOCK = 8
+
+
+def _roi_pool_kernel(
+    feat_ref, roi_ref, o_ref, *, grid_size, range_min, voxel_size, block
+):
+    """feat_ref: (D, H, W, C) whole scale; roi_ref: (RB, 7); o_ref: (RB, G^3, C)."""
+    d, h, w, c = feat_ref.shape
+    g = grid_size
+    x0, y0, z0 = range_min
+    vz, vy, vx = voxel_size
+
+    rois = roi_ref[...]  # (RB, 7)
+
+    # Box-frame grid offsets, cell centers in [-0.5, 0.5] (matches ref.py).
+    lin = (jnp.arange(g, dtype=jnp.float32) + 0.5) / g - 0.5
+    dz, dy, dx = jnp.meshgrid(lin, lin, lin, indexing="ij")
+    local = jnp.stack([dx.ravel(), dy.ravel(), dz.ravel()], axis=-1)  # (G^3, 3)
+
+    dims = rois[:, 3:6]
+    scaled = local[None] * dims[:, None, :]  # (RB, G^3, 3)
+    ry = rois[:, 6]
+    cos, sin = jnp.cos(ry)[:, None], jnp.sin(ry)[:, None]
+    px = scaled[..., 0] * cos - scaled[..., 1] * sin + rois[:, None, 0]
+    py = scaled[..., 0] * sin + scaled[..., 1] * cos + rois[:, None, 1]
+    pz = scaled[..., 2] + rois[:, None, 2]
+
+    ix = jnp.floor((px - x0) / vx).astype(jnp.int32)
+    iy = jnp.floor((py - y0) / vy).astype(jnp.int32)
+    iz = jnp.floor((pz - z0) / vz).astype(jnp.int32)
+    valid = (
+        (ix >= 0) & (ix < w) & (iy >= 0) & (iy < h) & (iz >= 0) & (iz < d)
+    )
+    flat = (
+        jnp.clip(iz, 0, d - 1) * (h * w)
+        + jnp.clip(iy, 0, h - 1) * w
+        + jnp.clip(ix, 0, w - 1)
+    )  # (RB, G^3)
+
+    feat = feat_ref[...].reshape(d * h * w, c)
+    gathered = jnp.take(feat, flat.reshape(block * g * g * g), axis=0)
+    gathered = gathered.reshape(block, g * g * g, c)
+    o_ref[...] = gathered * valid[..., None].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid_size", "range_min", "voxel_size")
+)
+def roi_pool(feat, rois, grid_size, range_min, voxel_size):
+    """Drop-in for ref.roi_pool_ref.
+
+    feat: (D, H, W, C); rois: (K, 7); returns (K, G^3, C).
+    range_min / voxel_size are python tuples (compile-time constants).
+    """
+    k = rois.shape[0]
+    c = feat.shape[-1]
+    g3 = grid_size**3
+    block = ROI_BLOCK if k % ROI_BLOCK == 0 else 1
+    kernel = functools.partial(
+        _roi_pool_kernel,
+        grid_size=grid_size,
+        range_min=range_min,
+        voxel_size=voxel_size,
+        block=block,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(k // block,),
+        in_specs=[
+            pl.BlockSpec(feat.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((block, 7), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, g3, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, g3, c), jnp.float32),
+        interpret=True,
+    )(feat, rois)

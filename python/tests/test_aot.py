@@ -1,0 +1,97 @@
+"""AOT contract tests: the manifest + HLO artifacts the rust side consumes."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, config as cfg
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    p = ARTIFACTS / "manifest.json"
+    if not p.exists():
+        pytest.skip("run `make artifacts` first")
+    return json.loads(p.read_text())
+
+
+def test_module_io_is_a_dag():
+    """Every module input is either a primal input or produced earlier —
+    the property the rust live-set analysis (paper Table II) depends on."""
+    produced = {"points_sum", "points_cnt", "rois"}
+    for name in cfg.MODULE_NAMES:
+        io = aot.MODULE_IO[name]
+        for i in io["inputs"]:
+            assert i in produced, f"{name} consumes undeclared {i}"
+        for o in io["outputs"]:
+            assert o not in produced, f"{o} produced twice"
+            produced.add(o)
+
+
+def test_table2_live_sets_from_module_io():
+    """Recompute paper Table II from the declared dataflow: the tensors
+    crossing each split boundary."""
+    order = list(cfg.MODULE_NAMES)
+
+    def live_after(split_idx):
+        prods = {}
+        for m in order:
+            for o in aot.MODULE_IO[m]["outputs"]:
+                prods[o] = m
+        head = set(order[: split_idx + 1])
+        live = set()
+        for m in order[split_idx + 1 :]:
+            for i in aot.MODULE_IO[m]["inputs"]:
+                if prods.get(i) in head:
+                    live.add(i)
+        return live
+
+    # paper Table II (masks ride along with their features in our codec)
+    assert live_after(order.index("conv1")) == {"conv1_feat", "conv1_mask"}
+    assert live_after(order.index("conv2")) == {"conv2_feat", "conv2_mask"}
+    assert live_after(order.index("conv3")) == {
+        "conv2_feat", "conv3_feat", "conv3_mask",
+    }
+    assert live_after(order.index("conv4")) == {
+        "conv2_feat", "conv3_feat", "conv4_feat",
+    }
+
+
+def test_manifest_covers_all_modules(manifest):
+    names = [m["name"] for m in manifest["modules"]]
+    assert names == list(cfg.MODULE_NAMES)
+    for m in manifest["modules"]:
+        assert (ARTIFACTS / m["artifact"]).exists()
+
+
+def test_manifest_shapes_match_config(manifest):
+    mods = {m["name"]: m for m in manifest["modules"]}
+    d, h, w = cfg.grid_shape()
+    assert mods["vfe"]["inputs"][0]["shape"] == [d, h, w, cfg.POINT_FEATURES]
+    for i, st in enumerate(cfg.BACKBONE3D_STAGES):
+        assert mods[st.name]["outputs"][0]["shape"] == list(
+            cfg.stage_output_shape(i)
+        )
+    assert mods["bev_head"]["outputs"][0]["shape"] == [cfg.NUM_ANCHORS]
+    assert mods["roi_head"]["inputs"][3]["shape"] == [
+        cfg.NUM_PROPOSALS, cfg.BOX_CODE_SIZE,
+    ]
+
+
+def test_artifacts_contain_unelided_constants(manifest):
+    """Baked weights must survive the text round-trip: no `constant({...})`
+    placeholders (the rust parser cannot reconstruct elided literals)."""
+    for m in manifest["modules"]:
+        text = (ARTIFACTS / m["artifact"]).read_text()
+        assert "constant({...})" not in text, m["name"]
+
+
+def test_artifact_hashes_match(manifest):
+    import hashlib
+
+    for m in manifest["modules"]:
+        text = (ARTIFACTS / m["artifact"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == m["sha256"]

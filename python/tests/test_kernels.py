@@ -1,0 +1,228 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes / strides / occupancies; each property asserts
+allclose against ref.py. These are the build-time gate for the AOT'd
+kernels (interpret=True lowers them into the same HLO the rust side runs).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bev_conv import conv2d_fused
+from compile.kernels.conv3d import conv3d_fused
+from compile.kernels.roi_pool import roi_pool
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- conv3d
+
+
+@st.composite
+def conv3d_cases(draw):
+    d = draw(st.sampled_from([2, 4, 8]))
+    h = draw(st.sampled_from([4, 8, 16]))
+    w = draw(st.sampled_from([4, 8, 16]))
+    ci = draw(st.sampled_from([1, 3, 4, 8]))
+    co = draw(st.sampled_from([1, 8, 16]))
+    stride = draw(
+        st.sampled_from([(1, 1, 1), (2, 1, 1), (1, 2, 2), (2, 2, 2)])
+    )
+    occupancy = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return d, h, w, ci, co, stride, occupancy, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(conv3d_cases())
+def test_conv3d_matches_ref(case):
+    d, h, w, ci, co, stride, occupancy, seed = case
+    rng = _rng(seed)
+    x = jnp.asarray(rng.normal(size=(d, h, w, ci)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(3, 3, 3, ci, co)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(co,)).astype(np.float32))
+    sz, sy, sx = stride
+    mask = jnp.asarray(
+        (rng.random((d // sz, h // sy, w // sx, 1)) < occupancy).astype(
+            np.float32
+        )
+    )
+    got = conv3d_fused(x, wt, b, mask, stride)
+    want = ref.conv3d_ref(x, wt, b, mask, stride)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv3d_zero_mask_zeroes_output():
+    rng = _rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 4)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(3, 3, 3, 4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    mask = jnp.zeros((4, 8, 8, 1), jnp.float32)
+    out = conv3d_fused(x, wt, b, mask, (1, 1, 1))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_conv3d_output_nonnegative():
+    # fused ReLU: outputs can never be negative
+    rng = _rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 4)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(3, 3, 3, 4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    mask = jnp.ones((2, 8, 8, 1), jnp.float32)
+    out = conv3d_fused(x, wt, b, mask, (2, 1, 1))
+    assert np.asarray(out).min() >= 0.0
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@st.composite
+def conv2d_cases(draw):
+    h = draw(st.sampled_from([4, 8, 16, 32]))
+    w = draw(st.sampled_from([4, 8, 16, 32]))
+    ci = draw(st.sampled_from([1, 4, 16]))
+    co = draw(st.sampled_from([1, 8, 32]))
+    relu = draw(st.booleans())
+    seed = draw(st.integers(0, 2**31 - 1))
+    return h, w, ci, co, relu, seed
+
+
+@settings(max_examples=20, deadline=None)
+@given(conv2d_cases())
+def test_conv2d_matches_ref(case):
+    h, w, ci, co, relu, seed = case
+    rng = _rng(seed)
+    x = jnp.asarray(rng.normal(size=(h, w, ci)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(3, 3, ci, co)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(co,)).astype(np.float32))
+    got = conv2d_fused(x, wt, b, relu=relu)
+    want = ref.conv2d_ref(x, wt, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv2d_odd_height_falls_back_to_row_tile_1():
+    rng = _rng(2)
+    x = jnp.asarray(rng.normal(size=(5, 8, 4)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    b = jnp.zeros((8,), jnp.float32)
+    np.testing.assert_allclose(
+        conv2d_fused(x, wt, b), ref.conv2d_ref(x, wt, b), rtol=RTOL, atol=ATOL
+    )
+
+
+# --------------------------------------------------------------- roi pool
+
+
+RANGE_MIN = (0.0, -23.04, -3.0)
+
+
+@st.composite
+def roi_cases(draw):
+    d = draw(st.sampled_from([2, 4, 8]))
+    h = draw(st.sampled_from([8, 16, 32]))
+    c = draw(st.sampled_from([1, 8, 32]))
+    k = draw(st.sampled_from([1, 8, 16, 24]))
+    g = draw(st.sampled_from([2, 4]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return d, h, c, k, g, seed
+
+
+def _random_rois(rng, k):
+    return jnp.asarray(
+        np.stack(
+            [
+                rng.uniform(-5, 50, k),   # cx (some out of range)
+                rng.uniform(-30, 30, k),  # cy
+                rng.uniform(-4, 2, k),    # cz
+                rng.uniform(0.5, 5, k),   # l
+                rng.uniform(0.5, 2.5, k), # w
+                rng.uniform(0.5, 2.5, k), # h
+                rng.uniform(-np.pi, np.pi, k),
+            ],
+            axis=1,
+        ).astype(np.float32)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(roi_cases())
+def test_roi_pool_matches_ref(case):
+    d, h, c, k, g, seed = case
+    rng = _rng(seed)
+    feat = jnp.asarray(rng.normal(size=(d, h, h, c)).astype(np.float32))
+    rois = _random_rois(rng, k)
+    vox = (4.0 / d, 46.08 / h, 46.08 / h)
+    got = roi_pool(feat, rois, g, RANGE_MIN, vox)
+    want = ref.roi_pool_ref(feat, rois, g, RANGE_MIN, vox)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_roi_pool_out_of_range_is_zero():
+    rng = _rng(3)
+    feat = jnp.asarray(rng.normal(size=(4, 16, 16, 8)).astype(np.float32))
+    # boxes far outside the range -> all grid points invalid -> zeros
+    rois = jnp.asarray(
+        np.tile(
+            np.array([[500.0, 500.0, 50.0, 2.0, 2.0, 2.0, 0.3]], np.float32),
+            (8, 1),
+        )
+    )
+    out = roi_pool(feat, rois, 4, RANGE_MIN, (1.0, 0.36, 0.36))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_roi_pool_rotation_invariance_of_center_point():
+    # An odd grid has no exact-center sample; instead check that rotating a
+    # box by exactly pi maps the grid onto itself mirrored — total energy
+    # (sum of squares) over gathered features is identical.
+    rng = _rng(4)
+    feat = jnp.asarray(rng.normal(size=(4, 32, 32, 4)).astype(np.float32))
+    base = np.array([[23.0, 0.0, -1.0, 4.0, 2.0, 1.5, 0.7]], np.float32)
+    rot = base.copy()
+    rot[0, 6] += np.pi
+    vox = (1.0, 46.08 / 32, 46.08 / 32)
+    a = np.asarray(roi_pool(jnp.asarray(feat), jnp.asarray(base), 4, RANGE_MIN, vox))
+    b = np.asarray(roi_pool(jnp.asarray(feat), jnp.asarray(rot), 4, RANGE_MIN, vox))
+    np.testing.assert_allclose(
+        np.sort(a.ravel()), np.sort(b.ravel()), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------- mask semantics
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([(1, 1, 1), (2, 1, 1), (2, 2, 2)]),
+    st.floats(0.0, 0.3),
+    st.integers(0, 2**31 - 1),
+)
+def test_dilate_mask_superset_of_stride_mask(stride, occ, seed):
+    """Regular sparse conv's active set contains the submanifold one."""
+    rng = _rng(seed)
+    mask = jnp.asarray((rng.random((8, 16, 16, 1)) < occ).astype(np.float32))
+    dil = np.asarray(ref.dilate_mask_ref(mask, stride))
+    sub = np.asarray(ref.stride_mask_ref(mask, stride))
+    assert dil.shape == sub.shape
+    assert np.all(dil >= sub)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+def test_dilate_mask_monotone_in_occupancy(occ, seed):
+    """More active inputs can only grow the dilated set (codec-size
+    monotonicity on the rust side relies on this)."""
+    rng = _rng(seed)
+    base = rng.random((8, 16, 16, 1))
+    m1 = jnp.asarray((base < occ * 0.5).astype(np.float32))
+    m2 = jnp.asarray((base < occ).astype(np.float32))
+    d1 = np.asarray(ref.dilate_mask_ref(m1, (1, 1, 1)))
+    d2 = np.asarray(ref.dilate_mask_ref(m2, (1, 1, 1)))
+    assert np.all(d2 >= d1)

@@ -1,0 +1,155 @@
+"""L2 correctness: module shapes, sparse-occupancy semantics, and the
+pallas-vs-ref path equivalence over the whole pipeline."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import config as cfg
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.init_weights()
+
+
+@pytest.fixture(scope="module")
+def frame():
+    """Synthetic voxelized frame: clustered occupancy like a LiDAR scene."""
+    rng = np.random.default_rng(7)
+    d, h, w = cfg.grid_shape()
+    cnt = np.zeros((d, h, w, 1), np.float32)
+    summ = np.zeros((d, h, w, cfg.POINT_FEATURES), np.float32)
+    # ground-plane band + a few object clusters
+    for _ in range(40):
+        cz = rng.integers(0, 4)
+        cy, cx = rng.integers(8, h - 8), rng.integers(8, w - 8)
+        sz, sy, sx = rng.integers(1, 3), rng.integers(2, 6), rng.integers(2, 6)
+        n = rng.integers(1, 6)
+        cnt[cz : cz + sz, cy : cy + sy, cx : cx + sx] += n
+        summ[cz : cz + sz, cy : cy + sy, cx : cx + sx] += rng.normal(
+            size=(sz, sy, sx, cfg.POINT_FEATURES)
+        ).astype(np.float32) * n
+    return jnp.asarray(summ), jnp.asarray(cnt)
+
+
+def test_vfe_mean_and_mask(frame):
+    summ, cnt = frame
+    feat, mask = model.vfe(summ, cnt)
+    assert feat.shape == (*cfg.grid_shape(), cfg.VFE_CHANNELS)
+    assert mask.shape == (*cfg.grid_shape(), 1)
+    m = np.asarray(mask)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    # mean = sum / cnt where cnt > 0
+    c = np.asarray(cnt)
+    occ = c[..., 0] > 0
+    np.testing.assert_allclose(
+        np.asarray(feat)[occ],
+        (np.asarray(summ) / np.maximum(c, 1.0))[occ],
+        rtol=1e-6,
+    )
+    assert np.all(np.asarray(feat)[~occ] == 0.0)
+
+
+def test_stage_output_shapes(weights, frame):
+    summ, cnt = frame
+    inter = model.run_backbone(weights, summ, cnt, use_pallas=False)
+    for i, st in enumerate(cfg.BACKBONE3D_STAGES):
+        feat, mask = inter[st.name]
+        assert feat.shape == cfg.stage_output_shape(i)
+        assert mask.shape == (*cfg.stage_output_shape(i)[:3], 1)
+
+
+def test_occupancy_grows_through_regular_stages(weights, frame):
+    """The mechanism behind the paper's Fig 8: regular sparse convs dilate
+    the active set, so occupied fraction grows monotonically with depth."""
+    summ, cnt = frame
+    inter = model.run_backbone(weights, summ, cnt, use_pallas=False)
+    frac = [float(np.asarray(inter["vfe"][1]).mean())]
+    for st in cfg.BACKBONE3D_STAGES:
+        frac.append(float(np.asarray(inter[st.name][1]).mean()))
+    for a, b in zip(frac, frac[1:]):
+        assert b >= a - 1e-6, frac
+
+
+def test_features_masked_by_occupancy(weights, frame):
+    summ, cnt = frame
+    inter = model.run_backbone(weights, summ, cnt, use_pallas=False)
+    for st in cfg.BACKBONE3D_STAGES:
+        feat, mask = inter[st.name]
+        inactive = np.asarray(mask)[..., 0] == 0.0
+        assert np.all(np.asarray(feat)[inactive] == 0.0), st.name
+
+
+def test_bev_head_shapes(weights, frame):
+    summ, cnt = frame
+    inter = model.run_backbone(weights, summ, cnt, use_pallas=False)
+    cls, box, direc = inter["bev_head"]
+    assert cls.shape == (cfg.NUM_ANCHORS,)
+    assert box.shape == (cfg.NUM_ANCHORS, cfg.BOX_CODE_SIZE)
+    assert direc.shape == (cfg.NUM_ANCHORS, 2)
+
+
+def _rois(k=cfg.NUM_PROPOSALS, seed=11):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.stack(
+            [
+                rng.uniform(2, 44, k),
+                rng.uniform(-20, 20, k),
+                rng.uniform(-2.5, 0.5, k),
+                rng.uniform(1, 5, k),
+                rng.uniform(0.5, 2.5, k),
+                rng.uniform(1, 2, k),
+                rng.uniform(-np.pi, np.pi, k),
+            ],
+            axis=1,
+        ).astype(np.float32)
+    )
+
+
+def test_roi_head_shapes_and_decode(weights, frame):
+    summ, cnt = frame
+    inter, scores, boxes = model.full_pipeline(
+        weights, summ, cnt, _rois(), use_pallas=False
+    )
+    assert scores.shape == (cfg.NUM_PROPOSALS,)
+    assert boxes.shape == (cfg.NUM_PROPOSALS, cfg.BOX_CODE_SIZE)
+    # decoded dims stay positive (exp of clipped deltas)
+    assert np.all(np.asarray(boxes)[:, 3:6] > 0.0)
+
+
+def test_pallas_and_ref_paths_agree(weights, frame):
+    """The invariant the AOT artifacts rely on: the kernels we bake equal
+    the oracle path at pipeline scale, not just kernel scale."""
+    summ, cnt = frame
+    rois = _rois()
+    _, s_ref, b_ref = model.full_pipeline(weights, summ, cnt, rois, use_pallas=False)
+    _, s_pal, b_pal = model.full_pipeline(weights, summ, cnt, rois, use_pallas=True)
+    np.testing.assert_allclose(s_pal, s_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(b_pal, b_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_map_to_bev_layout():
+    """Channel layout contract with the rust decoder: (H, W, D*C) where z is
+    the slower-varying factor of the folded channel dim."""
+    d, h, w, c = 2, 4, 4, 3
+    x = jnp.arange(d * h * w * c, dtype=jnp.float32).reshape(d, h, w, c)
+    bev = model.map_to_bev(x)
+    assert bev.shape == (h, w, d * c)
+    np.testing.assert_array_equal(
+        np.asarray(bev[1, 2]), np.asarray(jnp.concatenate([x[0, 1, 2], x[1, 1, 2]]))
+    )
+
+
+def test_empty_frame_runs(weights):
+    """No points at all: every mask is 0, every feature 0, heads still run."""
+    d, h, w = cfg.grid_shape()
+    summ = jnp.zeros((d, h, w, cfg.POINT_FEATURES), jnp.float32)
+    cnt = jnp.zeros((d, h, w, 1), jnp.float32)
+    inter = model.run_backbone(weights, summ, cnt, use_pallas=False)
+    for st in cfg.BACKBONE3D_STAGES:
+        assert np.all(np.asarray(inter[st.name][0]) == 0.0)
+    cls, box, direc = inter["bev_head"]
+    assert np.all(np.isfinite(np.asarray(cls)))

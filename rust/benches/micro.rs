@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the rust hot paths (perf-pass instrumentation):
+//! voxelizer scatter, wire codec encode/decode, NMS, per-module XLA
+//! execution, and the TCP frame protocol.
+//!
+//!   cargo bench --bench micro [-- keyword…]
+
+use splitpoint::bench::{print_table, run_bench, BenchConfig, BenchResult};
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::postprocess::nms::nms_bev;
+use splitpoint::postprocess::Detection;
+use splitpoint::tensor::codec::{Packet, Policy};
+use splitpoint::util::rng::Rng;
+use splitpoint::voxel::Voxelizer;
+use splitpoint::Manifest;
+
+fn want(filters: &[String], key: &str) -> bool {
+    filters.is_empty() || filters.iter().any(|f| key.contains(f.as_str()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let cfg = BenchConfig::from_env();
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let scene = SceneGenerator::with_seed(1).generate();
+
+    // ---- voxelizer
+    if want(&filters, "voxelizer") {
+        let vox = Voxelizer::from_config(&manifest.config);
+        results.push(run_bench("voxelizer/scatter_20k_pts", cfg, || {
+            let g = vox.voxelize(&scene.cloud);
+            std::hint::black_box(g.in_range);
+            None
+        }));
+    }
+
+    // ---- codec
+    if want(&filters, "codec") {
+        let vox = Voxelizer::from_config(&manifest.config);
+        let grids = vox.voxelize(&scene.cloud);
+        let packet = Packet::new(vec![
+            ("sum".into(), grids.sum.clone()),
+            ("cnt".into(), grids.cnt.clone()),
+        ]);
+        for (name, policy) in [
+            ("codec/encode_auto", Policy::Auto),
+            ("codec/encode_dense", Policy::Dense),
+            ("codec/encode_quant", Policy::AutoQuantized),
+        ] {
+            let p = packet.clone();
+            results.push(run_bench(name, cfg, move || {
+                std::hint::black_box(p.encode(policy).len());
+                None
+            }));
+        }
+        let bytes = packet.encode(Policy::Auto);
+        results.push(run_bench("codec/decode_auto", cfg, move || {
+            std::hint::black_box(Packet::decode(&bytes).unwrap().tensors.len());
+            None
+        }));
+    }
+
+    // ---- nms
+    if want(&filters, "nms") {
+        let mut rng = Rng::new(5);
+        let mut dets: Vec<Detection> = (0..512)
+            .map(|_| Detection {
+                score: rng.f32(),
+                boxx: [
+                    rng.uniform(0.0, 46.0) as f32,
+                    rng.uniform(-23.0, 23.0) as f32,
+                    -1.0,
+                    rng.uniform(1.0, 5.0) as f32,
+                    rng.uniform(0.5, 2.5) as f32,
+                    1.5,
+                    rng.uniform(-3.1, 3.1) as f32,
+                ],
+                class: rng.below(3),
+            })
+            .collect();
+        dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        results.push(run_bench("nms/512_boxes_keep96", cfg, move || {
+            std::hint::black_box(nms_bev(&dets, 0.7, 96).len());
+            None
+        }));
+    }
+
+    // ---- per-module XLA execution + frame paths
+    if want(&filters, "xla") || want(&filters, "frame") {
+        let engine = Engine::new(&manifest, SystemConfig::paper())?;
+        if want(&filters, "xla") {
+            let (store, _) = engine.profile_frame(&scene.cloud)?;
+            for node in engine.graph().nodes() {
+                if node.kind != splitpoint::model::graph::NodeKind::Xla {
+                    continue;
+                }
+                let inputs: Vec<_> = node
+                    .inputs
+                    .iter()
+                    .map(|n| store[n].clone())
+                    .collect();
+                let name = format!("xla/{}", node.name);
+                let rt = engine.runtime().clone();
+                let module = node.name.clone();
+                results.push(run_bench(&name, cfg, move || {
+                    std::hint::black_box(rt.execute(&module, &inputs).unwrap().len());
+                    None
+                }));
+            }
+        }
+        if want(&filters, "frame") {
+            for split in ["vfe", "conv1", "edge_only"] {
+                let sp = engine.graph().split_by_name(split)?;
+                let name = format!("frame/wall_{split}");
+                let e = &engine;
+                let cloud = scene.cloud.clone();
+                results.push(run_bench(&name, cfg, move || {
+                    std::hint::black_box(e.run_frame(&cloud, sp).unwrap().detections.len());
+                    None
+                }));
+            }
+        }
+    }
+
+    print_table("micro benches (wall-clock host ms)", &results);
+    Ok(())
+}

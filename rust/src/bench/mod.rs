@@ -1,0 +1,133 @@
+//! Micro/macro benchmark harness (criterion substitute, offline build).
+//!
+//! Warmup + fixed-iteration timing with mean/p50/p95 reporting; every
+//! paper-figure bench (`rust/benches/`) is built on this.
+
+pub mod paper;
+
+use std::time::Instant;
+
+use crate::metrics::Stats;
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Honor `SPLITPOINT_BENCH_ITERS` / `_WARMUP` env overrides (CI dials
+    /// the suite down; the perf pass dials it up).
+    pub fn from_env() -> BenchConfig {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        BenchConfig {
+            warmup_iters: get("SPLITPOINT_BENCH_WARMUP", 2),
+            iters: get("SPLITPOINT_BENCH_ITERS", 10),
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.stats.mean()
+    }
+}
+
+/// Time `f` under the config; `f` returns an optional "observed value"
+/// (e.g. simulated ms) — when provided it is recorded instead of wall time,
+/// letting virtual-clock benches reuse the same reporting.
+pub fn run_bench<F>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult
+where
+    F: FnMut() -> Option<f64>,
+{
+    for _ in 0..cfg.warmup_iters {
+        let _ = f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        let observed = f();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        stats.push(observed.unwrap_or(wall_ms));
+    }
+    BenchResult {
+        name: name.to_string(),
+        stats,
+    }
+}
+
+/// Pretty table of results.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<36} {:>10} {:>10} {:>10} {:>6}",
+        "bench", "mean ms", "p50 ms", "p95 ms", "n"
+    );
+    for r in results {
+        println!(
+            "{:<36} {:>10.2} {:>10.2} {:>10.2} {:>6}",
+            r.name,
+            r.stats.mean(),
+            r.stats.p50(),
+            r.stats.p95(),
+            r.stats.count()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_observed_value_when_given() {
+        let r = run_bench(
+            "obs",
+            BenchConfig {
+                warmup_iters: 0,
+                iters: 5,
+            },
+            || Some(42.0),
+        );
+        assert_eq!(r.stats.count(), 5);
+        assert!((r.mean_ms() - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn records_wall_time_otherwise() {
+        let r = run_bench(
+            "wall",
+            BenchConfig {
+                warmup_iters: 1,
+                iters: 3,
+            },
+            || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                None
+            },
+        );
+        assert!(r.mean_ms() >= 1.5, "{}", r.mean_ms());
+    }
+}

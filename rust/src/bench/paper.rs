@@ -1,0 +1,244 @@
+//! Paper-figure report generators: every table and figure of the paper's
+//! evaluation, regenerated against this stack. Shared by the CLI
+//! (`splitpoint sweep|table1`) and the bench suite (`cargo bench`).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::metrics::Recorder;
+use crate::model::graph::SplitPoint;
+use crate::pointcloud::scene::SceneGenerator;
+
+/// Paper reference numbers (RAGE 2024 / CS.DC 2025, §IV).
+pub mod reference {
+    /// Table I: module execution-time ratios (% of total), Voxel R-CNN.
+    pub const TABLE1: [(&str, f64); 6] = [
+        ("vfe", 0.16869),
+        ("backbone3d", 33.55415),
+        ("map_to_bev", 0.28388),
+        ("backbone2d", 2.43162),
+        ("dense_head", 1.15625),
+        ("roi_head", 62.40541),
+    ];
+    /// Fig 6: inference time ms per split pattern.
+    pub const FIG6: [(&str, f64); 4] = [
+        ("edge_only", 322.0),
+        ("after:vfe", 93.9),
+        ("after:conv1", 138.0),
+        ("after:conv2", 426.0),
+    ];
+    /// Fig 7: edge execution time ms.
+    pub const FIG7: [(&str, f64); 4] = [
+        ("edge_only", 322.0),
+        ("after:vfe", 33.6),
+        ("after:conv1", 98.2),
+        ("after:conv2", 353.0),
+    ];
+    /// Fig 8: transfer size MB (raw = input cloud).
+    pub const FIG8: [(&str, f64); 4] = [
+        ("raw", 1.84),
+        ("after:vfe", 1.18),
+        ("after:conv1", 7.23),
+        ("after:conv2", 29.0),
+    ];
+    /// Fig 9: transfer time ms.
+    pub const FIG9: [(&str, f64); 3] = [
+        ("after:vfe", 19.2),
+        ("after:conv1", 77.0),
+        ("after:conv2", 313.0),
+    ];
+}
+
+/// The split patterns the paper evaluates (plus the raw-offload baseline
+/// the intro argues against).
+pub fn paper_splits(engine: &Engine) -> Result<Vec<SplitPoint>> {
+    let g = engine.graph();
+    Ok(vec![
+        g.split_edge_only(),
+        g.split_raw(),
+        g.split_after("vfe")?,
+        g.split_after("conv1")?,
+        g.split_after("conv2")?,
+    ])
+}
+
+/// Measured sweep over split patterns: one Recorder per metric family.
+#[derive(Debug, Clone, Default)]
+pub struct SweepResult {
+    /// label -> series of per-frame values
+    pub inference_ms: Recorder,
+    pub edge_ms: Recorder,
+    pub transfer_mb: Recorder,
+    pub transfer_ms: Recorder,
+    /// per-node host time shares from edge_only runs (Table I)
+    pub module_ms: Recorder,
+    /// raw input size per frame (Fig 8's baseline bar)
+    pub raw_mb: Recorder,
+}
+
+/// Run `frames` synthetic frames through each split pattern.
+pub fn run_sweep(
+    engine: &Engine,
+    splits: &[SplitPoint],
+    frames: usize,
+    seed: u64,
+) -> Result<SweepResult> {
+    let mut out = SweepResult::default();
+    let mut gen = SceneGenerator::with_seed(seed);
+    for _ in 0..frames {
+        let scene = gen.generate();
+        out.raw_mb
+            .record("raw_input", scene.cloud.size_bytes() as f64 / 1e6);
+        for &sp in splits {
+            let label = engine.graph().split_label(sp);
+            let r = engine.run_frame(&scene.cloud, sp)?;
+            out.inference_ms
+                .record(&label, r.timing.inference_time.as_millis_f64());
+            out.edge_ms.record(&label, r.timing.edge_time.as_millis_f64());
+            if sp.head_len < engine.graph().len() {
+                out.transfer_mb
+                    .record(&label, r.timing.uplink_bytes as f64 / 1e6);
+                out.transfer_ms
+                    .record(&label, r.timing.uplink_time.as_millis_f64());
+            }
+            if sp.head_len == engine.graph().len() {
+                // edge-only run: harvest per-module times for Table I
+                for (name, t, _) in &r.timing.node_times {
+                    out.module_ms.record(name, t.as_millis_f64());
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Map our node names onto the paper's Table I module rows.
+fn table1_rows(sweep: &SweepResult) -> Vec<(&'static str, f64)> {
+    let m = |n: &str| sweep.module_ms.get(n).map(|s| s.mean()).unwrap_or(0.0);
+    let backbone3d = m("conv1") + m("conv2") + m("conv3") + m("conv4");
+    // bev_head fuses MapToBEV + Backbone2D + DenseHead in one artifact; we
+    // report it as backbone2d and mark the fused rows (paper's 0.28% +
+    // 2.43% + 1.16% together).
+    vec![
+        ("vfe", m("vfe") + m("preprocess")),
+        ("backbone3d", backbone3d),
+        ("map_to_bev+backbone2d+dense_head", m("bev_head")),
+        ("roi_head", m("proposal") + m("roi_head")),
+    ]
+}
+
+/// Table I report: measured module ratios vs the paper's.
+pub fn table1_report(sweep: &SweepResult) -> String {
+    let rows = table1_rows(sweep);
+    let total: f64 = rows.iter().map(|(_, v)| v).sum();
+    let mut s = String::new();
+    let _ = writeln!(s, "## Table I — module execution-time ratios (edge profile)\n");
+    let _ = writeln!(s, "| module | measured ms | measured % | paper % |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    let paper = |name: &str| -> f64 {
+        match name {
+            "vfe" => 0.16869,
+            "backbone3d" => 33.55415,
+            "map_to_bev+backbone2d+dense_head" => 0.28388 + 2.43162 + 1.15625,
+            "roi_head" => 62.40541,
+            _ => 0.0,
+        }
+    };
+    for (name, ms) in &rows {
+        let _ = writeln!(
+            s,
+            "| {name} | {ms:.2} | {:.2}% | {:.2}% |",
+            100.0 * ms / total,
+            paper(name)
+        );
+    }
+    s
+}
+
+/// Figs 6–9 report: measured vs paper, with reduction percentages.
+pub fn figures_report(sweep: &SweepResult) -> String {
+    let mut s = String::new();
+    let mean = |rec: &Recorder, label: &str| rec.get(label).map(|x| x.mean());
+
+    let _ = writeln!(s, "## Fig 6 — inference time per split pattern\n");
+    let _ = writeln!(s, "| split | measured ms | vs edge-only | paper ms | paper delta |");
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    let base = mean(&sweep.inference_ms, "edge_only").unwrap_or(f64::NAN);
+    for (label, paper_ms) in reference::FIG6 {
+        if let Some(ms) = mean(&sweep.inference_ms, label) {
+            let _ = writeln!(
+                s,
+                "| {label} | {ms:.1} | {:+.1}% | {paper_ms} | {:+.1}% |",
+                100.0 * (ms - base) / base,
+                100.0 * (paper_ms - 322.0) / 322.0
+            );
+        }
+    }
+
+    let _ = writeln!(s, "\n## Fig 7 — edge execution time per split pattern\n");
+    let _ = writeln!(s, "| split | measured ms | vs edge-only | paper ms | paper delta |");
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    let base7 = mean(&sweep.edge_ms, "edge_only").unwrap_or(f64::NAN);
+    for (label, paper_ms) in reference::FIG7 {
+        if let Some(ms) = mean(&sweep.edge_ms, label) {
+            let _ = writeln!(
+                s,
+                "| {label} | {ms:.1} | {:+.1}% | {paper_ms} | {:+.1}% |",
+                100.0 * (ms - base7) / base7,
+                100.0 * (paper_ms - 322.0) / 322.0
+            );
+        }
+    }
+
+    let _ = writeln!(s, "\n## Fig 8 — transfer size per split pattern\n");
+    let _ = writeln!(s, "| split | measured MB | paper MB |");
+    let _ = writeln!(s, "|---|---|---|");
+    let raw = sweep.raw_mb.get("raw_input").map(|s| s.mean()).unwrap_or(0.0);
+    let _ = writeln!(s, "| raw input cloud | {raw:.2} | 1.84 |");
+    for (label, paper_mb) in reference::FIG8 {
+        if label == "raw" {
+            continue;
+        }
+        if let Some(mb) = mean(&sweep.transfer_mb, label) {
+            let _ = writeln!(s, "| {label} | {mb:.2} | {paper_mb} |");
+        }
+    }
+
+    let _ = writeln!(s, "\n## Fig 9 — transfer time per split pattern\n");
+    let _ = writeln!(s, "| split | measured ms | paper ms |");
+    let _ = writeln!(s, "|---|---|---|");
+    for (label, paper_ms) in reference::FIG9 {
+        if let Some(ms) = mean(&sweep.transfer_ms, label) {
+            let _ = writeln!(s, "| {label} | {ms:.1} | {paper_ms} |");
+        }
+    }
+    s
+}
+
+/// Table II report from static analysis (plus measured bytes).
+pub fn table2_report(engine: &Engine) -> String {
+    let g = engine.graph();
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "## Table II — transfer sets per split point (live-set analysis)\n"
+    );
+    let _ = writeln!(s, "| split after | tensors crossing the link |");
+    let _ = writeln!(s, "|---|---|");
+    for sp in g.all_splits() {
+        let live = g.live_set(sp);
+        let _ = writeln!(
+            s,
+            "| {} | {} |",
+            g.split_label(sp),
+            if live.is_empty() {
+                "(none — edge only)".to_string()
+            } else {
+                live.join(", ")
+            }
+        );
+    }
+    s
+}

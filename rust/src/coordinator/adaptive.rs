@@ -1,0 +1,128 @@
+//! Adaptive split-point selection (extension; paper §III-B chooses split
+//! points offline by inspection — this automates it).
+//!
+//! One unscaled profile run yields per-node host times and every
+//! intermediate tensor; each candidate split is then costed analytically:
+//!
+//!   inference(s) = Σ_head t_i·edge_slowdown + wire(s)/bw + rtt
+//!                + Σ_tail t_i·server_slowdown + response(s)/bw + rtt
+//!
+//! which is exact for the additive virtual-clock model (validated against
+//! `Engine::run_frame` in the property tests). The selector re-runs when
+//! link bandwidth changes, giving the crossover behaviour Fig 6 implies.
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::metrics::SimTime;
+use crate::model::graph::SplitPoint;
+use crate::pointcloud::PointCloud;
+use crate::tensor::codec::Packet;
+
+/// Predicted cost of one candidate split.
+#[derive(Debug, Clone)]
+pub struct SplitEstimate {
+    pub split: SplitPoint,
+    pub label: String,
+    pub uplink_bytes: usize,
+    pub downlink_bytes: usize,
+    pub edge_time: SimTime,
+    pub inference_time: SimTime,
+}
+
+/// Cost out every split point from a single profile frame.
+pub fn estimate_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitEstimate>> {
+    let (store, host_times) = engine.profile_frame(cloud)?;
+    let cfg = engine.config();
+    let graph = engine.graph();
+    let policy = cfg.codec;
+
+    let mut estimates = Vec::new();
+    for sp in graph.all_splits() {
+        let live = graph.live_set(sp);
+        let uplink_bytes = if live.is_empty() {
+            0
+        } else {
+            Packet::new(
+                live.iter()
+                    .map(|n| (n.clone(), store[n].clone()))
+                    .collect(),
+            )
+            .encoded_size(policy)
+        };
+        let resp = graph.response_set(sp);
+        let downlink_bytes = if resp.is_empty() {
+            0
+        } else {
+            Packet::new(
+                resp.iter()
+                    .map(|n| (n.clone(), store[n].clone()))
+                    .collect(),
+            )
+            .encoded_size(policy)
+        };
+
+        let edge_compute: SimTime = host_times[..sp.head_len]
+            .iter()
+            .map(|(n, d)| SimTime::from_duration(*d).scaled(cfg.edge.factor_for(n)))
+            .sum();
+        let server_compute: SimTime = host_times[sp.head_len..]
+            .iter()
+            .map(|(n, d)| SimTime::from_duration(*d).scaled(cfg.server.factor_for(n)))
+            .sum();
+
+        let uplink = if sp.head_len == graph.len() {
+            SimTime::ZERO
+        } else {
+            engine.link().transfer_time(uplink_bytes)
+        };
+        let downlink = if resp.is_empty() {
+            SimTime::ZERO
+        } else {
+            engine.link().transfer_time(downlink_bytes)
+        };
+
+        let edge_time = edge_compute + uplink;
+        estimates.push(SplitEstimate {
+            split: sp,
+            label: graph.split_label(sp),
+            uplink_bytes,
+            downlink_bytes,
+            edge_time,
+            inference_time: edge_time + server_compute + downlink,
+        });
+    }
+    Ok(estimates)
+}
+
+/// What the selector optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// total inference latency (paper Fig 6)
+    InferenceTime,
+    /// edge-device busy time (paper Fig 7 / power proxy)
+    EdgeTime,
+}
+
+/// Pick the best split for an objective.
+pub fn choose_split(
+    engine: &Engine,
+    cloud: &PointCloud,
+    objective: Objective,
+) -> Result<SplitEstimate> {
+    let estimates = estimate_splits(engine, cloud)?;
+    Ok(estimates
+        .into_iter()
+        .min_by(|a, b| {
+            let ka = match objective {
+                Objective::InferenceTime => a.inference_time,
+                Objective::EdgeTime => a.edge_time,
+            };
+            let kb = match objective {
+                Objective::InferenceTime => b.inference_time,
+                Objective::EdgeTime => b.edge_time,
+            };
+            ka.cmp(&kb)
+        })
+        .expect("graph has at least one split point"))
+}

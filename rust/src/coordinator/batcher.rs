@@ -1,0 +1,203 @@
+//! Multi-sensor frame batcher (paper §VI future work: "processing
+//! integrated data from multiple LiDARs").
+//!
+//! Frames from S sensors land in a shared queue; a batch flushes when it
+//! reaches `batch_max` frames or the oldest frame has waited
+//! `batch_wait_ms`. Per-sensor FIFO order is preserved.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::pointcloud::Frame;
+
+/// Flush policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_frames: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_frames: 4,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+struct Queue {
+    frames: VecDeque<(Frame, Instant)>,
+    closed: bool,
+}
+
+/// Thread-safe frame batcher.
+pub struct Batcher {
+    policy: BatchPolicy,
+    q: Mutex<Queue>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        assert!(policy.max_frames > 0);
+        Batcher {
+            policy,
+            q: Mutex::new(Queue {
+                frames: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a frame (called by sensor threads).
+    pub fn push(&self, frame: Frame) {
+        let mut q = self.q.lock().unwrap();
+        if q.closed {
+            return;
+        }
+        q.frames.push_back((frame, Instant::now()));
+        self.cv.notify_all();
+    }
+
+    /// No more frames will arrive; wakes waiting consumers.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.q.lock().unwrap().frames.len()
+    }
+
+    /// Dequeue the next batch. Blocks until the policy triggers a flush or
+    /// the batcher is closed; `None` means closed-and-drained.
+    pub fn next_batch(&self) -> Option<Vec<Frame>> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if q.frames.len() >= self.policy.max_frames {
+                return Some(self.drain(&mut q));
+            }
+            if let Some((_, t0)) = q.frames.front() {
+                let age = t0.elapsed();
+                if age >= self.policy.max_wait {
+                    return Some(self.drain(&mut q));
+                }
+                let remaining = self.policy.max_wait - age;
+                let (guard, _) = self.cv.wait_timeout(q, remaining).unwrap();
+                q = guard;
+            } else if q.closed {
+                return None;
+            } else {
+                q = self.cv.wait(q).unwrap();
+            }
+        }
+    }
+
+    fn drain(&self, q: &mut Queue) -> Vec<Frame> {
+        let n = q.frames.len().min(self.policy.max_frames);
+        q.frames.drain(..n).map(|(f, _)| f).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::PointCloud;
+    use std::sync::Arc;
+
+    fn frame(sensor: u32, seq: u64) -> Frame {
+        Frame {
+            sensor_id: sensor,
+            seq,
+            cloud: PointCloud::default(),
+        }
+    }
+
+    #[test]
+    fn flushes_at_max_frames() {
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..3 {
+            b.push(frame(0, i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 100,
+            max_wait: Duration::from_millis(20),
+        });
+        b.push(frame(0, 0));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(frame(1, 0));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn per_sensor_fifo_preserved() {
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 6,
+            max_wait: Duration::from_secs(1),
+        });
+        for seq in 0..3 {
+            b.push(frame(0, seq));
+            b.push(frame(1, seq));
+        }
+        let batch = b.next_batch().unwrap();
+        for sensor in [0, 1] {
+            let seqs: Vec<u64> = batch
+                .iter()
+                .filter(|f| f.sensor_id == sensor)
+                .map(|f| f.seq)
+                .collect();
+            assert_eq!(seqs, [0, 1, 2], "sensor {sensor}");
+        }
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_frames: 40,
+            max_wait: Duration::from_millis(50),
+        }));
+        let mut handles = Vec::new();
+        for s in 0..4u32 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for seq in 0..10 {
+                    b.push(frame(s, seq));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 40);
+    }
+}

@@ -1,0 +1,360 @@
+//! The split-computing execution engine: runs one frame through the
+//! pipeline under a split point, producing detections plus the full timing
+//! breakdown the paper's figures are built from.
+//!
+//! Compute runs for real (XLA on this host, rust for preprocess/proposal);
+//! measured host time is scaled by the device profile onto the virtual
+//! clock, and link time comes from the link model (DESIGN.md §3). The
+//! same engine backs the in-process simulator, both ends of the TCP
+//! transport, and every bench.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::link::LinkModel;
+use crate::metrics::SimTime;
+use crate::model::graph::{Node, NodeKind, PipelineGraph, SplitPoint, PRIMAL};
+use crate::model::manifest::Manifest;
+use crate::pointcloud::PointCloud;
+use crate::postprocess::{assemble_predictions, Detection, ProposalConfig, ProposalStage};
+use crate::runtime::XlaRuntime;
+use crate::tensor::codec::Packet;
+use crate::tensor::Tensor;
+use crate::voxel::Voxelizer;
+
+/// Which side of the split executed a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Edge,
+    Server,
+}
+
+/// Per-frame timing breakdown (all on the virtual clock).
+#[derive(Debug, Clone)]
+pub struct TimingBreakdown {
+    pub split_label: String,
+    /// (node name, device-scaled time, side)
+    pub node_times: Vec<(String, SimTime, Side)>,
+    /// wire-encode / decode cost, attributed to their side
+    pub encode_time: SimTime,
+    pub decode_time: SimTime,
+    pub uplink_bytes: usize,
+    pub downlink_bytes: usize,
+    pub uplink_time: SimTime,
+    pub downlink_time: SimTime,
+    /// paper Fig 6: start of inference → predictions back on the edge
+    pub inference_time: SimTime,
+    /// paper Fig 7: start of inference → end of edge→server transfer
+    pub edge_time: SimTime,
+}
+
+impl TimingBreakdown {
+    pub fn edge_compute(&self) -> SimTime {
+        self.node_times
+            .iter()
+            .filter(|(_, _, s)| *s == Side::Edge)
+            .map(|(_, t, _)| *t)
+            .sum()
+    }
+
+    pub fn server_compute(&self) -> SimTime {
+        self.node_times
+            .iter()
+            .filter(|(_, _, s)| *s == Side::Server)
+            .map(|(_, t, _)| *t)
+            .sum()
+    }
+
+    pub fn node_time(&self, name: &str) -> Option<SimTime> {
+        self.node_times
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, t, _)| *t)
+    }
+}
+
+/// Result of one frame.
+#[derive(Debug, Clone)]
+pub struct FrameResult {
+    pub detections: Vec<Detection>,
+    pub timing: TimingBreakdown,
+}
+
+/// The engine: everything needed to run any split of the pipeline.
+pub struct Engine {
+    runtime: Arc<XlaRuntime>,
+    graph: PipelineGraph,
+    voxelizer: Voxelizer,
+    proposal: ProposalStage,
+    link: LinkModel,
+    cfg: SystemConfig,
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest, cfg: SystemConfig) -> Result<Engine> {
+        let runtime = Arc::new(XlaRuntime::load(manifest)?);
+        Self::with_runtime(manifest, cfg, runtime)
+    }
+
+    /// Share one XLA runtime across engines (benches sweep configs without
+    /// recompiling artifacts).
+    pub fn with_runtime(
+        manifest: &Manifest,
+        cfg: SystemConfig,
+        runtime: Arc<XlaRuntime>,
+    ) -> Result<Engine> {
+        let graph = PipelineGraph::from_manifest(manifest)?;
+        let voxelizer = Voxelizer::from_config(&manifest.config);
+        let proposal = ProposalStage::new(
+            &manifest.config,
+            ProposalConfig {
+                nms_iou: cfg.nms_iou,
+                ..ProposalConfig::default()
+            },
+        );
+        let link = LinkModel::new(cfg.link.clone());
+        Ok(Engine {
+            runtime,
+            graph,
+            voxelizer,
+            proposal,
+            link,
+            cfg,
+        })
+    }
+
+    pub fn graph(&self) -> &PipelineGraph {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn link(&self) -> &LinkModel {
+        &self.link
+    }
+
+    pub fn runtime(&self) -> &Arc<XlaRuntime> {
+        &self.runtime
+    }
+
+    pub fn split(&self) -> Result<SplitPoint> {
+        self.graph.split_by_name(&self.cfg.split)
+    }
+
+    /// Execute one node against the tensor store. Returns host wall time.
+    pub fn run_node(
+        &self,
+        node: &Node,
+        store: &mut HashMap<String, Tensor>,
+    ) -> Result<std::time::Duration> {
+        let started = Instant::now();
+        match node.kind {
+            NodeKind::Preprocess => {
+                let pts = store
+                    .get(PRIMAL)
+                    .context("preprocess: no 'points' in store")?;
+                let cloud = PointCloud::from_flat(pts.data());
+                let grids = self.voxelizer.voxelize(&cloud);
+                store.insert("points_sum".into(), grids.sum);
+                store.insert("points_cnt".into(), grids.cnt);
+            }
+            NodeKind::Proposal => {
+                let cls = store.get("cls_logits").context("proposal: cls_logits")?;
+                let boxp = store.get("box_preds").context("proposal: box_preds")?;
+                let dir = store.get("dir_logits").context("proposal: dir_logits")?;
+                let props = self.proposal.run(cls, boxp, dir)?;
+                let k = props.classes.len();
+                let classes = Tensor::from_vec(
+                    &[k],
+                    props
+                        .classes
+                        .iter()
+                        .map(|&c| if c == usize::MAX { -1.0 } else { c as f32 })
+                        .collect(),
+                )?;
+                store.insert("rois".into(), props.rois);
+                store.insert("roi_classes".into(), classes);
+            }
+            NodeKind::Xla => {
+                let inputs: Vec<Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|n| {
+                        store
+                            .get(n)
+                            .cloned()
+                            .with_context(|| format!("node '{}': missing input '{n}'", node.name))
+                    })
+                    .collect::<Result<_>>()?;
+                let outputs = self.runtime.execute(&node.name, &inputs)?;
+                for (name, t) in node.outputs.iter().zip(outputs) {
+                    store.insert(name.clone(), t);
+                }
+            }
+        }
+        Ok(started.elapsed())
+    }
+
+    /// Assemble final detections from the store (runs on the edge).
+    pub fn finalize(&self, store: &HashMap<String, Tensor>) -> Result<Vec<Detection>> {
+        let scores = store.get("roi_scores").context("no roi_scores")?;
+        let boxes = store.get("roi_boxes").context("no roi_boxes")?;
+        let classes_t = store.get("roi_classes").context("no roi_classes")?;
+        let classes: Vec<usize> = classes_t
+            .data()
+            .iter()
+            .map(|&c| if c < 0.0 { usize::MAX } else { c as usize })
+            .collect();
+        Ok(assemble_predictions(
+            scores,
+            boxes,
+            &classes,
+            self.cfg.score_threshold,
+        ))
+    }
+
+    /// Run one frame at a split point on the virtual clock.
+    pub fn run_frame(&self, cloud: &PointCloud, sp: SplitPoint) -> Result<FrameResult> {
+        if sp.head_len > self.graph.len() {
+            bail!("split {:?} beyond pipeline length", sp);
+        }
+        let policy = self.cfg.codec;
+        let mut store: HashMap<String, Tensor> = HashMap::new();
+        store.insert(PRIMAL.into(), cloud.to_tensor());
+
+        let mut node_times = Vec::with_capacity(self.graph.len());
+
+        // ---- edge: head nodes
+        for node in self.graph.head_nodes(sp) {
+            let host = self.run_node(node, &mut store)?;
+            node_times.push((
+                node.name.clone(),
+                SimTime::from_duration(host).scaled(self.cfg.edge.factor_for(&node.name)),
+                Side::Edge,
+            ));
+        }
+
+        // ---- edge: encode live set, uplink
+        let live = self.graph.live_set(sp);
+        let (uplink_bytes, encode_time, decode_time) = if live.is_empty() {
+            (0, SimTime::ZERO, SimTime::ZERO)
+        } else {
+            let packet = Packet::new(
+                live.iter()
+                    .map(|n| -> Result<(String, Tensor)> {
+                        Ok((
+                            n.clone(),
+                            store
+                                .get(n)
+                                .cloned()
+                                .with_context(|| format!("live tensor '{n}' missing"))?,
+                        ))
+                    })
+                    .collect::<Result<_>>()?,
+            );
+            let t0 = Instant::now();
+            let bytes = packet.encode(policy);
+            let enc = SimTime::from_duration(t0.elapsed()).scaled(self.cfg.edge.slowdown);
+            let t1 = Instant::now();
+            let decoded = Packet::decode(&bytes)?;
+            let dec = SimTime::from_duration(t1.elapsed()).scaled(self.cfg.server.slowdown);
+            // the server sees exactly the decoded tensors (quantization
+            // round-trips through the wire, affecting tail numerics as it
+            // would in deployment)
+            for (name, t) in decoded.tensors {
+                store.insert(name, t);
+            }
+            (bytes.len(), enc, dec)
+        };
+        let uplink_time = if sp.head_len == self.graph.len() {
+            SimTime::ZERO
+        } else {
+            self.link.transfer_time(uplink_bytes)
+        };
+
+        // ---- server: tail nodes
+        for node in self.graph.tail_nodes(sp) {
+            let host = self.run_node(node, &mut store)?;
+            node_times.push((
+                node.name.clone(),
+                SimTime::from_duration(host).scaled(self.cfg.server.factor_for(&node.name)),
+                Side::Server,
+            ));
+        }
+
+        // ---- server: response back to the edge
+        let resp = self.graph.response_set(sp);
+        let (downlink_bytes, downlink_time) = if resp.is_empty() {
+            (0, SimTime::ZERO)
+        } else {
+            let packet = Packet::new(
+                resp.iter()
+                    .map(|n| (n.clone(), store.get(n).cloned().unwrap()))
+                    .collect(),
+            );
+            let bytes = packet.encode(policy).len();
+            (bytes, self.link.transfer_time(bytes))
+        };
+
+        let detections = self.finalize(&store)?;
+
+        let edge_compute: SimTime = node_times
+            .iter()
+            .filter(|(_, _, s)| *s == Side::Edge)
+            .map(|(_, t, _)| *t)
+            .sum();
+        let server_compute: SimTime = node_times
+            .iter()
+            .filter(|(_, _, s)| *s == Side::Server)
+            .map(|(_, t, _)| *t)
+            .sum();
+
+        let edge_time = edge_compute + encode_time + uplink_time;
+        let inference_time =
+            edge_time + decode_time + server_compute + downlink_time;
+
+        Ok(FrameResult {
+            detections,
+            timing: TimingBreakdown {
+                split_label: self.graph.split_label(sp),
+                node_times,
+                encode_time,
+                decode_time,
+                uplink_bytes,
+                downlink_bytes,
+                uplink_time,
+                downlink_time,
+                inference_time,
+                edge_time,
+            },
+        })
+    }
+
+    /// Convenience: run at the configured split.
+    pub fn run_frame_default(&self, cloud: &PointCloud) -> Result<FrameResult> {
+        self.run_frame(cloud, self.split()?)
+    }
+
+    /// Run the full pipeline once, unscaled, returning every intermediate
+    /// tensor and per-node host time. Feeds the adaptive split selector and
+    /// the Table I bench: one profile predicts every split analytically.
+    pub fn profile_frame(
+        &self,
+        cloud: &PointCloud,
+    ) -> Result<(HashMap<String, Tensor>, Vec<(String, std::time::Duration)>)> {
+        let mut store: HashMap<String, Tensor> = HashMap::new();
+        store.insert(PRIMAL.into(), cloud.to_tensor());
+        let mut times = Vec::with_capacity(self.graph.len());
+        for node in self.graph.nodes() {
+            let host = self.run_node(node, &mut store)?;
+            times.push((node.name.clone(), host));
+        }
+        Ok((store, times))
+    }
+}

@@ -1,0 +1,17 @@
+//! The split-computing coordinator (the paper's L3 contribution).
+//!
+//! * [`engine`] — per-frame split execution on the calibrated virtual clock
+//! * [`link`] — bandwidth/RTT link model
+//! * [`transport`] / [`remote`] — real TCP edge/server deployment
+//! * [`batcher`] — multi-LiDAR frame batching (paper §VI future work)
+//! * [`adaptive`] — analytic split-point selection (extension)
+
+pub mod adaptive;
+pub mod batcher;
+pub mod engine;
+pub mod link;
+pub mod remote;
+pub mod transport;
+
+pub use engine::{Engine, FrameResult, Side, TimingBreakdown};
+pub use link::LinkModel;

@@ -1,0 +1,271 @@
+//! Real two-process deployment: TCP edge server + edge-device client.
+//!
+//! This is the paper's Fig 1/2 topology executed for real: the head runs in
+//! the edge process, the live set crosses an actual socket, the tail runs
+//! in the server process, and predictions come back. Realtime mode —
+//! timings are wall-clock on this host (no device scaling), so the numbers
+//! demonstrate the mechanism; the calibrated virtual-clock engine produces
+//! the paper-comparable figures.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::transport::{read_message, write_message, Message};
+use crate::metrics::SimTime;
+use crate::model::graph::SplitPoint;
+use crate::pointcloud::PointCloud;
+use crate::postprocess::Detection;
+use crate::tensor::codec::Packet;
+use crate::tensor::Tensor;
+
+/// Server handle: accept loop runs on background threads until shutdown.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving. `engine` runs the tail side.
+    pub fn spawn(addr: &str, engine: Arc<Engine>) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+
+        let accept_thread = std::thread::Builder::new()
+            .name("sp-server-accept".into())
+            .spawn(move || {
+                let mut workers = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
+                            let engine = engine.clone();
+                            workers.push(std::thread::spawn(move || {
+                                let _ = handle_connection(stream, engine);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })?;
+
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One connection: a stream of Infer frames until Shutdown/EOF.
+fn handle_connection(mut stream: TcpStream, engine: Arc<Engine>) -> Result<()> {
+    loop {
+        let msg = match read_message(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // peer closed
+        };
+        match msg {
+            Message::Shutdown => return Ok(()),
+            Message::Infer {
+                request_id,
+                head_len,
+                packet,
+            } => {
+                let reply = serve_infer(&engine, head_len as usize, &packet);
+                match reply {
+                    Ok((server_nanos, bytes)) => write_message(
+                        &mut stream,
+                        &Message::InferResult {
+                            request_id,
+                            server_nanos,
+                            packet: bytes,
+                        },
+                    )?,
+                    Err(e) => write_message(
+                        &mut stream,
+                        &Message::Error {
+                            request_id,
+                            message: format!("{e:#}"),
+                        },
+                    )?,
+                }
+            }
+            other => bail!("server got unexpected {other:?}"),
+        }
+    }
+}
+
+/// Run the tail for one request. Returns (server compute nanos, response).
+fn serve_infer(engine: &Engine, head_len: usize, packet: &[u8]) -> Result<(u64, Vec<u8>)> {
+    let sp = SplitPoint { head_len };
+    let decoded = Packet::decode(packet)?;
+    let mut store: HashMap<String, Tensor> = decoded.tensors.into_iter().collect();
+
+    let t0 = Instant::now();
+    for node in engine.graph().tail_nodes(sp) {
+        engine.run_node(node, &mut store)?;
+    }
+    let server_nanos = t0.elapsed().as_nanos() as u64;
+
+    let resp = engine.graph().response_set(sp);
+    let reply = Packet::new(
+        resp.iter()
+            .map(|n| -> Result<(String, Tensor)> {
+                Ok((
+                    n.clone(),
+                    store
+                        .get(n)
+                        .cloned()
+                        .with_context(|| format!("response tensor '{n}' missing"))?,
+                ))
+            })
+            .collect::<Result<_>>()?,
+    );
+    Ok((server_nanos, reply.encode(engine.config().codec)))
+}
+
+/// Timing of one remote frame (wall-clock, realtime).
+#[derive(Debug, Clone)]
+pub struct RemoteTiming {
+    pub edge_compute: SimTime,
+    pub uplink_bytes: usize,
+    /// send → result received (uplink + server + downlink)
+    pub round_trip: SimTime,
+    pub server_compute: SimTime,
+    pub inference_time: SimTime,
+}
+
+/// Edge-device client for a remote server.
+pub struct EdgeClient {
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    next_id: u64,
+}
+
+impl EdgeClient {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        engine: Arc<Engine>,
+    ) -> Result<EdgeClient> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        Ok(EdgeClient {
+            stream,
+            engine,
+            next_id: 1,
+        })
+    }
+
+    /// Run one frame: head locally, tail on the server.
+    pub fn run_frame(
+        &mut self,
+        cloud: &PointCloud,
+        sp: SplitPoint,
+    ) -> Result<(Vec<Detection>, RemoteTiming)> {
+        let engine = self.engine.clone();
+        let graph = engine.graph();
+        let t_start = Instant::now();
+
+        let mut store: HashMap<String, Tensor> = HashMap::new();
+        store.insert(crate::model::graph::PRIMAL.into(), cloud.to_tensor());
+        for node in graph.head_nodes(sp) {
+            engine.run_node(node, &mut store)?;
+        }
+        let live = graph.live_set(sp);
+        let packet = Packet::new(
+            live.iter()
+                .map(|n| (n.clone(), store.get(n).cloned().unwrap()))
+                .collect(),
+        );
+        let bytes = packet.encode(engine.config().codec);
+        let edge_compute = SimTime::from_duration(t_start.elapsed());
+
+        let request_id = self.next_id;
+        self.next_id += 1;
+        let t_send = Instant::now();
+        write_message(
+            &mut self.stream,
+            &Message::Infer {
+                request_id,
+                head_len: sp.head_len as u8,
+                packet: bytes.clone(),
+            },
+        )?;
+        let reply = read_message(&mut self.stream)?;
+        let round_trip = SimTime::from_duration(t_send.elapsed());
+
+        let (server_nanos, resp_packet) = match reply {
+            Message::InferResult {
+                request_id: rid,
+                server_nanos,
+                packet,
+            } => {
+                if rid != request_id {
+                    bail!("response id {rid} != request {request_id}");
+                }
+                (server_nanos, packet)
+            }
+            Message::Error { message, .. } => bail!("server error: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        };
+        for (name, t) in Packet::decode(&resp_packet)?.tensors {
+            store.insert(name, t);
+        }
+        let detections = engine.finalize(&store)?;
+        let inference_time = SimTime::from_duration(t_start.elapsed());
+
+        Ok((
+            detections,
+            RemoteTiming {
+                edge_compute,
+                uplink_bytes: bytes.len(),
+                round_trip,
+                server_compute: SimTime {
+                    nanos: server_nanos as u128,
+                },
+                inference_time,
+            },
+        ))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        write_message(&mut self.stream, &Message::Shutdown)
+    }
+}

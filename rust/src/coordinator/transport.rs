@@ -1,0 +1,208 @@
+//! Wire transport: length-prefixed message frames over any byte stream.
+//!
+//! Substrate module (no tokio offline): blocking I/O + threads. The frame
+//! format is shared by the TCP edge/server pair and the in-memory loopback
+//! used in tests.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+const FRAME_MAGIC: u32 = 0x5350_4652; // "SPFR"
+/// Hard cap on a single frame (guards against corrupt length prefixes).
+const MAX_FRAME: usize = 1 << 30;
+
+/// Message types of the split-computing protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// edge → server: run the tail from `head_len` on this live set.
+    Infer {
+        request_id: u64,
+        head_len: u8,
+        packet: Vec<u8>,
+    },
+    /// server → edge: predictions plus server-side timing for metrics.
+    InferResult {
+        request_id: u64,
+        server_nanos: u64,
+        packet: Vec<u8>,
+    },
+    /// server → edge on failure.
+    Error { request_id: u64, message: String },
+    /// either direction: close the session.
+    Shutdown,
+}
+
+impl Message {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Message::Infer { .. } => 1,
+            Message::InferResult { .. } => 2,
+            Message::Error { .. } => 3,
+            Message::Shutdown => 4,
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let mut payload = Vec::new();
+    match msg {
+        Message::Infer {
+            request_id,
+            head_len,
+            packet,
+        } => {
+            payload.extend_from_slice(&request_id.to_le_bytes());
+            payload.push(*head_len);
+            payload.extend_from_slice(packet);
+        }
+        Message::InferResult {
+            request_id,
+            server_nanos,
+            packet,
+        } => {
+            payload.extend_from_slice(&request_id.to_le_bytes());
+            payload.extend_from_slice(&server_nanos.to_le_bytes());
+            payload.extend_from_slice(packet);
+        }
+        Message::Error {
+            request_id,
+            message,
+        } => {
+            payload.extend_from_slice(&request_id.to_le_bytes());
+            payload.extend_from_slice(message.as_bytes());
+        }
+        Message::Shutdown => {}
+    }
+    w.write_all(&FRAME_MAGIC.to_le_bytes())?;
+    w.write_all(&[msg.type_byte()])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame (blocking).
+pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("bad frame magic {magic:#x}");
+    }
+    let ty = head[4];
+    let len = u32::from_le_bytes(head[5..9].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+
+    let u64_at = |off: usize| -> Result<u64> {
+        payload
+            .get(off..off + 8)
+            .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+            .context("truncated frame")
+    };
+    Ok(match ty {
+        1 => Message::Infer {
+            request_id: u64_at(0)?,
+            head_len: *payload.get(8).context("truncated Infer")?,
+            packet: payload[9..].to_vec(),
+        },
+        2 => Message::InferResult {
+            request_id: u64_at(0)?,
+            server_nanos: u64_at(8)?,
+            packet: payload[16..].to_vec(),
+        },
+        3 => Message::Error {
+            request_id: u64_at(0)?,
+            message: String::from_utf8_lossy(&payload[8..]).to_string(),
+        },
+        4 => Message::Shutdown,
+        t => bail!("unknown message type {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: Message) -> Message {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg).unwrap();
+        read_message(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        for msg in [
+            Message::Infer {
+                request_id: 7,
+                head_len: 3,
+                packet: vec![1, 2, 3],
+            },
+            Message::InferResult {
+                request_id: 7,
+                server_nanos: 123_456,
+                packet: vec![9; 100],
+            },
+            Message::Error {
+                request_id: 9,
+                message: "boom".into(),
+            },
+            Message::Shutdown,
+        ] {
+            assert_eq!(roundtrip(msg.clone()), msg);
+        }
+    }
+
+    #[test]
+    fn stream_of_messages() {
+        let mut buf = Vec::new();
+        for i in 0..5u64 {
+            write_message(
+                &mut buf,
+                &Message::Infer {
+                    request_id: i,
+                    head_len: 2,
+                    packet: vec![i as u8],
+                },
+            )
+            .unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for i in 0..5u64 {
+            match read_message(&mut cur).unwrap() {
+                Message::Infer { request_id, .. } => assert_eq!(request_id, i),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Shutdown).unwrap();
+        buf[0] ^= 0x55;
+        assert!(read_message(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut buf = Vec::new();
+        write_message(
+            &mut buf,
+            &Message::Infer {
+                request_id: 1,
+                head_len: 1,
+                packet: vec![0; 64],
+            },
+        )
+        .unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_message(&mut Cursor::new(buf)).is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! # splitpoint
+//!
+//! Reproduction of *“3D Point Cloud Object Detection on Edge Devices for
+//! Split Computing”* (Noguchi & Azumi, 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the split-computing coordinator: pipeline graph
+//!   and live-set analysis ([`model::graph`]), wire codec
+//!   ([`tensor::codec`]), device/link models and edge/server nodes
+//!   ([`coordinator`]), voxelizer ([`voxel`]), synthetic LiDAR workloads
+//!   ([`pointcloud`]), proposal/NMS stage ([`postprocess`]).
+//! * **L2/L1 (build-time python)** — Voxel R-CNN modules and Pallas
+//!   kernels, AOT-lowered to HLO-text artifacts loaded by [`runtime`].
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod pointcloud;
+pub mod postprocess;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod voxel;
+
+pub use model::graph::{PipelineGraph, SplitPoint};
+pub use model::manifest::Manifest;
+pub use tensor::Tensor;

@@ -1,0 +1,277 @@
+//! splitpoint CLI — leader entrypoint for the split-computing stack.
+//!
+//! Subcommands:
+//!   run             one or more frames through a chosen split (virtual clock)
+//!   sweep           regenerate the paper's Figs 6–9 + Table I over N frames
+//!   explain-splits  print Table II (live-set analysis) for every split point
+//!   estimate        adaptive split selection: analytic cost of every split
+//!   calibrate       fit the edge slowdown + link bandwidth to paper targets
+//!   serve-server    edge-server process (TCP, realtime)
+//!   serve-edge      edge-device process: stream frames to a server (TCP)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use splitpoint::bench::paper;
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::adaptive::{self, Objective};
+use splitpoint::coordinator::remote::{EdgeClient, Server};
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::util::cli::{Args, Cli, CommandSpec, OptSpec};
+use splitpoint::Manifest;
+
+fn cli() -> Cli {
+    let common = || {
+        vec![
+            OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
+            OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
+            OptSpec { name: "split", value: Some("name"), help: "split point: raw|preprocess|vfe|conv1..conv4|bev_head|proposal|edge_only" },
+            OptSpec { name: "frames", value: Some("n"), help: "number of frames (default 5)" },
+            OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
+        ]
+    };
+    Cli {
+        bin: "splitpoint",
+        about: "Split Computing for 3D point-cloud object detection (Noguchi & Azumi 2025 reproduction)",
+        commands: vec![
+            CommandSpec { name: "run", help: "run frames through one split pattern", opts: common() },
+            CommandSpec { name: "sweep", help: "regenerate paper Figs 6-9 + Tables I/II", opts: common() },
+            CommandSpec { name: "explain-splits", help: "print Table II live-set analysis", opts: common() },
+            CommandSpec { name: "estimate", help: "adaptive split selection (analytic cost model)", opts: common() },
+            CommandSpec { name: "calibrate", help: "fit device/link constants to the paper's targets", opts: common() },
+            CommandSpec {
+                name: "serve-server",
+                help: "run the edge-server process (TCP)",
+                opts: vec![OptSpec { name: "listen", value: Some("addr"), help: "bind address (default 127.0.0.1:7070)" }],
+            },
+            CommandSpec {
+                name: "serve-edge",
+                help: "run the edge-device process against a server (TCP)",
+                opts: vec![OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" }],
+            },
+        ],
+        global_opts: vec![],
+    }
+}
+
+fn load_engine(args: &Args) -> Result<Engine> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&artifacts)?;
+    let mut cfg = match args.get("config") {
+        Some(p) => SystemConfig::load(&PathBuf::from(p))?,
+        None => SystemConfig::paper(),
+    };
+    if let Some(split) = args.get("split") {
+        cfg.split = split.to_string();
+    }
+    Engine::new(&manifest, cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let frames: usize = args.get_parse("frames")?.unwrap_or(5);
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let sp = engine.split()?;
+    let mut gen = SceneGenerator::with_seed(seed);
+    println!(
+        "running {frames} frame(s) at split '{}' (edge={} x{}, server={} x{})",
+        engine.graph().split_label(sp),
+        engine.config().edge.name,
+        engine.config().edge.slowdown,
+        engine.config().server.name,
+        engine.config().server.slowdown,
+    );
+    for i in 0..frames {
+        let scene = gen.generate();
+        let r = engine.run_frame(&scene.cloud, sp)?;
+        println!(
+            "frame {i}: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
+            scene.cloud.len(),
+            r.detections.len(),
+            r.timing.inference_time.as_millis_f64(),
+            r.timing.edge_time.as_millis_f64(),
+            r.timing.uplink_bytes as f64 / 1e6,
+            r.timing.uplink_time.as_millis_f64(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let frames: usize = args.get_parse("frames")?.unwrap_or(5);
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let splits = paper::paper_splits(&engine)?;
+    eprintln!("sweeping {} splits x {frames} frames …", splits.len());
+    let sweep = paper::run_sweep(&engine, &splits, frames, seed)?;
+    println!("{}", paper::table1_report(&sweep));
+    println!("{}", paper::table2_report(&engine));
+    println!("{}", paper::figures_report(&sweep));
+    Ok(())
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    println!("{}", paper::table2_report(&engine));
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let scene = SceneGenerator::with_seed(seed).generate();
+    let estimates = adaptive::estimate_splits(&engine, &scene.cloud)?;
+    println!("analytic cost of every split (one profile frame):\n");
+    println!(
+        "{:<18} {:>12} {:>12} {:>12}",
+        "split", "uplink MB", "edge ms", "inference ms"
+    );
+    for e in &estimates {
+        println!(
+            "{:<18} {:>12.2} {:>12.1} {:>12.1}",
+            e.label,
+            e.uplink_bytes as f64 / 1e6,
+            e.edge_time.as_millis_f64(),
+            e.inference_time.as_millis_f64()
+        );
+    }
+    let best = adaptive::choose_split(&engine, &scene.cloud, Objective::InferenceTime)?;
+    println!("\nbest for inference time: {}", best.label);
+    let best_edge = adaptive::choose_split(&engine, &scene.cloud, Objective::EdgeTime)?;
+    println!("best for edge load:      {}", best_edge.label);
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let frames: usize = args.get_parse("frames")?.unwrap_or(3);
+    let mut gen = SceneGenerator::with_seed(seed);
+
+    // measure per-module host means + the conv2 live-set size
+    let mut host: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut conv2_bytes = 0usize;
+    for _ in 0..frames {
+        let scene = gen.generate();
+        let (store, times) = engine.profile_frame(&scene.cloud)?;
+        for (name, d) in &times {
+            *host.entry(name.clone()).or_default() += d.as_secs_f64() * 1e3 / frames as f64;
+        }
+        let live = engine.graph().live_set(engine.graph().split_after("conv2")?);
+        conv2_bytes += splitpoint::tensor::codec::Packet::new(
+            live.iter().map(|n| (n.clone(), store[n].clone())).collect(),
+        )
+        .encoded_size(engine.config().codec)
+            / frames;
+    }
+
+    // paper Table I targets on the 322 ms Jetson profile (DESIGN.md §6):
+    // backbone3d's 108 ms is distributed over conv1..4 proportional to our
+    // host means (the paper doesn't break the block down).
+    let backbone_host: f64 = ["conv1", "conv2", "conv3", "conv4"]
+        .iter()
+        .map(|m| host.get(*m).copied().unwrap_or(0.0))
+        .sum();
+    let conv_factor = 322.0 * 0.3355415 / backbone_host;
+    let targets: Vec<(&str, f64)> = vec![
+        ("preprocess", 0.10),
+        ("vfe", 322.0 * 0.0016869 - 0.10),
+        ("bev_head", 322.0 * (0.0028388 + 0.0243162 + 0.0115625)),
+        ("proposal", 2.0),
+        ("roi_head", 322.0 * 0.6240541 - 2.0),
+    ];
+
+    println!("host per-module means over {frames} frame(s):");
+    for (name, ms) in &host {
+        println!("  {name:<12} {ms:>8.1} ms");
+    }
+    let bandwidth = conv2_bytes as f64 / 0.313; // paper: conv2 transfer 313 ms
+    println!("\nconv2 live-set: {:.2} MB → bandwidth {:.2} MB/s (anchors Fig 9's 313 ms)",
+        conv2_bytes as f64 / 1e6, bandwidth / 1e6);
+
+    println!("\nper-module edge factors (Jetson Table I profile / host):");
+    let mut factors: Vec<(String, f64)> = Vec::new();
+    for m in ["conv1", "conv2", "conv3", "conv4"] {
+        factors.push((m.to_string(), conv_factor));
+    }
+    for (m, target) in targets {
+        let h = host.get(m).copied().unwrap_or(1.0).max(1e-6);
+        factors.push((m.to_string(), target / h));
+    }
+    factors.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut json_factors = Vec::new();
+    for (m, f) in &factors {
+        println!("  {m:<12} {f:>8.3}");
+        json_factors.push(format!("\"{m}\": {f:.4}"));
+    }
+    println!(
+        "\nconfig snippet (server = edge / {:.1}):",
+        splitpoint::config::SERVER_SPEEDUP
+    );
+    println!(
+        "{{\"edge\": {{\"name\": \"jetson-orin-nano\", \"slowdown\": {conv_factor:.3}, \
+         \"module_factors\": {{{}}}}}, \
+         \"link\": {{\"bandwidth_bps\": {bandwidth:.0}, \"rtt_one_way\": 0.0002}}}}",
+        json_factors.join(", ")
+    );
+    Ok(())
+}
+
+fn cmd_serve_server(args: &Args) -> Result<()> {
+    let engine = Arc::new(load_engine(args)?);
+    let addr = args.get_or("listen", "127.0.0.1:7070");
+    let server = Server::spawn(addr, engine)?;
+    println!("edge-server listening on {}", server.addr());
+    println!("Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_serve_edge(args: &Args) -> Result<()> {
+    let engine = Arc::new(load_engine(args)?);
+    let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
+    let frames: usize = args.get_parse("frames")?.unwrap_or(10);
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let sp = engine.split()?;
+    let mut client = EdgeClient::connect(addr.as_str(), engine.clone())
+        .with_context(|| format!("is `splitpoint serve-server` running at {addr}?"))?;
+    let mut gen = SceneGenerator::with_seed(seed);
+    for i in 0..frames {
+        let scene = gen.generate();
+        let (dets, t) = client.run_frame(&scene.cloud, sp)?;
+        println!(
+            "frame {i}: {} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
+            dets.len(),
+            t.edge_compute.as_millis_f64(),
+            t.round_trip.as_millis_f64(),
+            t.server_compute.as_millis_f64(),
+            t.inference_time.as_millis_f64(),
+            t.uplink_bytes as f64 / 1e6,
+        );
+    }
+    client.shutdown()?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = cli.parse(&argv)?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("explain-splits") => cmd_explain(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("serve-server") => cmd_serve_server(&args),
+        Some("serve-edge") => cmd_serve_edge(&args),
+        _ => {
+            println!("{}", cli.help(None));
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Timing metrics: virtual clock, per-phase stopwatches, summary stats and
+//! report printers. Every paper figure is a view over these records.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Simulated-time durations are tracked in nanoseconds on a virtual clock
+/// so device slowdown factors and link transfer times compose exactly and
+/// deterministically (DESIGN.md §3: device profiles).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SimTime {
+    pub nanos: u128,
+}
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime { nanos: 0 };
+
+    pub fn from_duration(d: Duration) -> SimTime {
+        SimTime { nanos: d.as_nanos() }
+    }
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        SimTime {
+            nanos: (s.max(0.0) * 1e9) as u128,
+        }
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
+
+    pub fn as_millis_f64(self) -> f64 {
+        self.nanos as f64 / 1e6
+    }
+
+    pub fn scaled(self, factor: f64) -> SimTime {
+        SimTime {
+            nanos: (self.nanos as f64 * factor) as u128,
+        }
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime {
+            nanos: self.nanos.saturating_sub(other.nanos),
+        }
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime {
+            nanos: self.nanos + rhs.nanos,
+        }
+    }
+}
+
+impl std::ops::AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.nanos += rhs.nanos;
+    }
+}
+
+impl std::iter::Sum for SimTime {
+    fn sum<I: Iterator<Item = SimTime>>(iter: I) -> SimTime {
+        iter.fold(SimTime::ZERO, |a, b| a + b)
+    }
+}
+
+/// Summary statistics over a series of samples (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats::default()
+    }
+
+    pub fn push(&mut self, ms: f64) {
+        self.samples.push(ms);
+    }
+
+    pub fn push_time(&mut self, t: SimTime) {
+        self.push(t.as_millis_f64());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by linear interpolation, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (v.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Named series collector: one `Stats` per label, insertion-stable output.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Stats>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, label: &str, ms: f64) {
+        self.series.entry(label.to_string()).or_default().push(ms);
+    }
+
+    pub fn record_time(&mut self, label: &str, t: SimTime) {
+        self.record(label, t.as_millis_f64());
+    }
+
+    pub fn get(&self, label: &str) -> Option<&Stats> {
+        self.series.get(label)
+    }
+
+    pub fn labels(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    pub fn merge(&mut self, other: &Recorder) {
+        for (k, s) in &other.series {
+            let e = self.series.entry(k.clone()).or_default();
+            for &x in &s.samples {
+                e.push(x);
+            }
+        }
+    }
+
+    /// Markdown table of all series.
+    pub fn to_markdown(&self, title: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {title}\n");
+        let _ = writeln!(
+            out,
+            "| series | n | mean ms | std | p50 | p95 | p99 | min | max |"
+        );
+        let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|");
+        for (k, s) in &self.series {
+            let _ = writeln!(
+                out,
+                "| {k} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |",
+                s.count(),
+                s.mean(),
+                s.std(),
+                s.p50(),
+                s.p95(),
+                s.p99(),
+                s.min(),
+                s.max()
+            );
+        }
+        out
+    }
+
+    /// CSV (label, n, mean, p50, p95, p99).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,n,mean_ms,std_ms,p50_ms,p95_ms,p99_ms\n");
+        for (k, s) in &self.series {
+            let _ = writeln!(
+                out,
+                "{k},{},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                s.count(),
+                s.mean(),
+                s.std(),
+                s.p50(),
+                s.p95(),
+                s.p99()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_arithmetic() {
+        let a = SimTime::from_secs_f64(0.5);
+        let b = SimTime::from_secs_f64(0.25);
+        assert!(((a + b).as_secs_f64() - 0.75).abs() < 1e-12);
+        assert!((a.scaled(4.0).as_secs_f64() - 2.0).abs() < 1e-9);
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+        assert!((a.as_millis_f64() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.p50() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Stats::new();
+        s.push(0.0);
+        s.push(10.0);
+        assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 0.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recorder_merges_and_reports() {
+        let mut a = Recorder::new();
+        a.record("x", 1.0);
+        let mut b = Recorder::new();
+        b.record("x", 3.0);
+        b.record("y", 2.0);
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().count(), 2);
+        let md = a.to_markdown("t");
+        assert!(md.contains("| x | 2 |"));
+        assert!(a.to_csv().contains("y,1"));
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+}

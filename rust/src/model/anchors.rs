@@ -1,0 +1,85 @@
+//! Anchor grid generation, mirroring the L2 dense head's implicit layout.
+//!
+//! Ordering contract with `python/compile/model.py::bev_head`: anchors are
+//! enumerated (bev_row, bev_col, class, rotation) with rotation fastest —
+//! i.e. flat index = ((h * W + w) * C + cls) * R + rot.
+
+use crate::model::manifest::ModelConfig;
+
+/// One anchor box: (cx, cy, cz, l, w, h, ry) in metric space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Anchor {
+    pub center: [f32; 3],
+    pub dims: [f32; 3],
+    pub ry: f32,
+    pub class: usize,
+}
+
+/// Generate the dense anchor grid.
+pub fn generate(cfg: &ModelConfig) -> Vec<Anchor> {
+    let mut anchors =
+        Vec::with_capacity(cfg.bev_h * cfg.bev_w * cfg.anchors_per_cell);
+    let (x0, x1) = cfg.pc_range_x;
+    let (y0, y1) = cfg.pc_range_y;
+    let cell_x = (x1 - x0) / cfg.bev_w as f64;
+    let cell_y = (y1 - y0) / cfg.bev_h as f64;
+
+    for hy in 0..cfg.bev_h {
+        for wx in 0..cfg.bev_w {
+            let cy = y0 + (hy as f64 + 0.5) * cell_y;
+            let cx = x0 + (wx as f64 + 0.5) * cell_x;
+            for (cls, size) in cfg.anchor_sizes.iter().enumerate() {
+                for &rot in &cfg.anchor_rotations {
+                    anchors.push(Anchor {
+                        center: [cx as f32, cy as f32, cfg.anchor_z[cls] as f32],
+                        dims: [size[0] as f32, size[1] as f32, size[2] as f32],
+                        ry: rot as f32,
+                        class: cls,
+                    });
+                }
+            }
+        }
+    }
+    debug_assert_eq!(anchors.len(), cfg.num_anchors);
+    anchors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::test_manifest;
+
+    #[test]
+    fn count_and_order() {
+        let cfg = test_manifest().config;
+        let a = generate(&cfg);
+        assert_eq!(a.len(), cfg.num_anchors);
+        // rotation fastest: consecutive anchors differ only in ry
+        assert_eq!(a[0].center, a[1].center);
+        assert_eq!(a[0].class, a[1].class);
+        assert_ne!(a[0].ry, a[1].ry);
+        // then class (same BEV cell, class-specific z)
+        assert_eq!(a[0].center[..2], a[2].center[..2]);
+        assert_ne!(a[0].class, a[2].class);
+    }
+
+    #[test]
+    fn centers_inside_range() {
+        let cfg = test_manifest().config;
+        for a in generate(&cfg) {
+            assert!(a.center[0] as f64 >= cfg.pc_range_x.0);
+            assert!((a.center[0] as f64) <= cfg.pc_range_x.1);
+            assert!(a.center[1] as f64 >= cfg.pc_range_y.0);
+            assert!((a.center[1] as f64) <= cfg.pc_range_y.1);
+        }
+    }
+
+    #[test]
+    fn first_cell_is_grid_corner() {
+        let cfg = test_manifest().config;
+        let a = generate(&cfg);
+        let cell = 46.08 / cfg.bev_w as f64;
+        assert!((a[0].center[0] as f64 - cell * 0.5).abs() < 1e-5);
+        assert!((a[0].center[1] as f64 - (-23.04 + cell * 0.5)).abs() < 1e-4);
+    }
+}

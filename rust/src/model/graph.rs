@@ -1,0 +1,365 @@
+//! Pipeline dataflow graph and split-point liveness analysis.
+//!
+//! This is the static-analysis core of the paper's contribution: given the
+//! OpenPCDet-style ordered module list and each module's tensor I/O, compute
+//! for every split point exactly which tensors must cross the edge→server
+//! link — the paper's Table II, generalized to any cut.
+//!
+//! The graph contains two rust-executed pseudo-modules alongside the XLA
+//! artifacts: `preprocess` (point→voxel scatter, runs before VFE) and
+//! `proposal` (sigmoid + top-K + NMS between DenseHead and RoIHead, kept
+//! out of the HLO because its shapes are dynamic).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Where a node executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// rust voxelizer (`voxel::Voxelizer`)
+    Preprocess,
+    /// AOT'd XLA artifact, executed by `runtime::XlaRuntime`
+    Xla,
+    /// rust proposal stage (`postprocess`): decode + top-K + NMS
+    Proposal,
+}
+
+/// One stage of the ordered pipeline.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub kind: NodeKind,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The tensor crossing the sensor boundary into the pipeline.
+pub const PRIMAL: &str = "points";
+/// Tensors returned to the requester. `roi_classes` is produced by the rust
+/// proposal stage (class labels ride outside the RoI head, as in OpenPCDet).
+pub const FINAL_OUTPUTS: [&str; 3] = ["roi_scores", "roi_boxes", "roi_classes"];
+
+/// A split point: the first `head_len` nodes run on the edge device, the
+/// rest on the edge server. `head_len == 0` is the raw-offload baseline
+/// (ship the point cloud); `head_len == graph.len()` is edge-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SplitPoint {
+    pub head_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineGraph {
+    nodes: Vec<Node>,
+    /// tensor name -> producing node index (primal tensors absent).
+    produced_by: HashMap<String, usize>,
+}
+
+impl PipelineGraph {
+    /// Build the Voxel R-CNN pipeline graph from the artifact manifest.
+    pub fn from_manifest(m: &Manifest) -> Result<PipelineGraph> {
+        let mut nodes = vec![Node {
+            name: "preprocess".into(),
+            kind: NodeKind::Preprocess,
+            inputs: vec![PRIMAL.into()],
+            outputs: vec!["points_sum".into(), "points_cnt".into()],
+        }];
+        for spec in &m.modules {
+            // the rust proposal stage slots between bev_head and roi_head
+            if spec.name == "roi_head" {
+                nodes.push(Node {
+                    name: "proposal".into(),
+                    kind: NodeKind::Proposal,
+                    inputs: vec![
+                        "cls_logits".into(),
+                        "box_preds".into(),
+                        "dir_logits".into(),
+                    ],
+                    outputs: vec!["rois".into(), "roi_classes".into()],
+                });
+            }
+            nodes.push(Node {
+                name: spec.name.clone(),
+                kind: NodeKind::Xla,
+                inputs: spec.inputs.iter().map(|t| t.name.clone()).collect(),
+                outputs: spec.outputs.iter().map(|t| t.name.clone()).collect(),
+            });
+        }
+        Self::new(nodes)
+    }
+
+    /// Build from an explicit node list (tests, alternative models).
+    pub fn new(nodes: Vec<Node>) -> Result<PipelineGraph> {
+        let mut produced_by = HashMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            for o in &n.outputs {
+                if produced_by.insert(o.clone(), i).is_some() {
+                    bail!("tensor '{o}' produced twice");
+                }
+                if o == PRIMAL {
+                    bail!("'{PRIMAL}' is reserved for the sensor input");
+                }
+            }
+        }
+        // dataflow must be a forward DAG over the ordered list
+        for (i, n) in nodes.iter().enumerate() {
+            for inp in &n.inputs {
+                if inp == PRIMAL {
+                    continue;
+                }
+                match produced_by.get(inp) {
+                    Some(&p) if p < i => {}
+                    Some(&p) => bail!(
+                        "node '{}' consumes '{inp}' produced later (node {p})",
+                        n.name
+                    ),
+                    None => bail!("node '{}' consumes undeclared '{inp}'", n.name),
+                }
+            }
+        }
+        for f in FINAL_OUTPUTS {
+            if !produced_by.contains_key(f) {
+                bail!("graph never produces final output '{f}'");
+            }
+        }
+        Ok(PipelineGraph { nodes, produced_by })
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_index(&self, name: &str) -> Result<usize> {
+        self.nodes
+            .iter()
+            .position(|n| n.name == name)
+            .with_context(|| format!("no node named '{name}'"))
+    }
+
+    /// The split point placed immediately after `node_name`.
+    pub fn split_after(&self, node_name: &str) -> Result<SplitPoint> {
+        Ok(SplitPoint {
+            head_len: self.node_index(node_name)? + 1,
+        })
+    }
+
+    /// Raw offload: the whole pipeline runs on the server.
+    pub fn split_raw(&self) -> SplitPoint {
+        SplitPoint { head_len: 0 }
+    }
+
+    /// Edge only: no server involvement.
+    pub fn split_edge_only(&self) -> SplitPoint {
+        SplitPoint {
+            head_len: self.len(),
+        }
+    }
+
+    /// Parse a split-point name: `raw`, `edge_only`, or `after:<node>` /
+    /// bare node name.
+    pub fn split_by_name(&self, name: &str) -> Result<SplitPoint> {
+        match name {
+            "raw" => Ok(self.split_raw()),
+            "edge_only" | "edge-only" => Ok(self.split_edge_only()),
+            n => self.split_after(n.strip_prefix("after:").unwrap_or(n)),
+        }
+    }
+
+    /// Human-readable label for a split point.
+    pub fn split_label(&self, sp: SplitPoint) -> String {
+        if sp.head_len == 0 {
+            "raw".into()
+        } else if sp.head_len == self.len() {
+            "edge_only".into()
+        } else {
+            format!("after:{}", self.nodes[sp.head_len - 1].name)
+        }
+    }
+
+    /// All valid split points, raw → edge_only.
+    pub fn all_splits(&self) -> Vec<SplitPoint> {
+        (0..=self.len()).map(|h| SplitPoint { head_len: h }).collect()
+    }
+
+    /// **Table II**: tensors that must cross the edge→server link for a
+    /// split — produced on the head side (or primal) and consumed on the
+    /// tail side. Deterministic order: by producing node, then declaration.
+    pub fn live_set(&self, sp: SplitPoint) -> Vec<String> {
+        if sp.head_len >= self.len() {
+            return vec![]; // edge-only: nothing crosses
+        }
+        let mut live: Vec<String> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        // primal first
+        for tail in &self.nodes[sp.head_len..] {
+            for inp in &tail.inputs {
+                let produced_in_head = match self.produced_by.get(inp) {
+                    None => true, // primal: captured at the sensor (edge side)
+                    Some(&p) => p < sp.head_len,
+                };
+                if produced_in_head && seen.insert(inp.clone()) {
+                    live.push(inp.clone());
+                }
+            }
+        }
+        // order by producer for determinism (primal = front)
+        live.sort_by_key(|t| self.produced_by.get(t).map_or(-1, |&p| p as i64));
+        live
+    }
+
+    /// Tensors returned server→edge: the final outputs that were produced
+    /// on the server side (those already on the edge don't cross back).
+    pub fn response_set(&self, sp: SplitPoint) -> Vec<String> {
+        FINAL_OUTPUTS
+            .iter()
+            .filter(|f| {
+                self.produced_by
+                    .get(**f)
+                    .is_some_and(|&p| p >= sp.head_len)
+            })
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Nodes on the edge side of the split.
+    pub fn head_nodes(&self, sp: SplitPoint) -> &[Node] {
+        &self.nodes[..sp.head_len.min(self.len())]
+    }
+
+    /// Nodes on the server side of the split.
+    pub fn tail_nodes(&self, sp: SplitPoint) -> &[Node] {
+        &self.nodes[sp.head_len.min(self.len())..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::test_manifest;
+
+    fn graph() -> PipelineGraph {
+        PipelineGraph::from_manifest(&test_manifest()).unwrap()
+    }
+
+    #[test]
+    fn node_order_matches_openpcdet() {
+        let g = graph();
+        let names: Vec<_> = g.nodes().iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "preprocess", "vfe", "conv1", "conv2", "conv3", "conv4",
+                "bev_head", "proposal", "roi_head"
+            ]
+        );
+    }
+
+    #[test]
+    fn table2_live_sets() {
+        // Paper Table II: conv1 -> {conv1}; conv2 -> {conv2};
+        // conv3 -> {conv2, conv3}; conv4 -> {conv2, conv3, conv4}.
+        // Masks ride along for the stages whose features feed the next conv.
+        let g = graph();
+        let ls = |n: &str| g.live_set(g.split_after(n).unwrap());
+        assert_eq!(ls("conv1"), ["conv1_feat", "conv1_mask"]);
+        assert_eq!(ls("conv2"), ["conv2_feat", "conv2_mask"]);
+        assert_eq!(ls("conv3"), ["conv2_feat", "conv3_feat", "conv3_mask"]);
+        assert_eq!(ls("conv4"), ["conv2_feat", "conv3_feat", "conv4_feat"]);
+    }
+
+    #[test]
+    fn raw_and_vfe_and_edge_only() {
+        let g = graph();
+        assert_eq!(g.live_set(g.split_raw()), ["points"]);
+        assert_eq!(
+            g.live_set(g.split_after("preprocess").unwrap()),
+            ["points_sum", "points_cnt"]
+        );
+        assert_eq!(
+            g.live_set(g.split_after("vfe").unwrap()),
+            ["vfe_feat", "vfe_mask"]
+        );
+        assert!(g.live_set(g.split_edge_only()).is_empty());
+        assert!(g.response_set(g.split_edge_only()).is_empty());
+        assert_eq!(
+            g.response_set(g.split_raw()),
+            ["roi_scores", "roi_boxes", "roi_classes"]
+        );
+        // proposal on the edge: its classes stay there, only RoI-head
+        // outputs cross back
+        assert_eq!(
+            g.response_set(g.split_after("proposal").unwrap()),
+            ["roi_scores", "roi_boxes"]
+        );
+    }
+
+    #[test]
+    fn proposal_split_wires_rois_plus_roi_inputs() {
+        let g = graph();
+        let ls = g.live_set(g.split_after("proposal").unwrap());
+        assert_eq!(ls, ["conv2_feat", "conv3_feat", "conv4_feat", "rois"]);
+    }
+
+    #[test]
+    fn split_labels_roundtrip() {
+        let g = graph();
+        for sp in g.all_splits() {
+            let label = g.split_label(sp);
+            assert_eq!(g.split_by_name(&label).unwrap(), sp, "{label}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_graphs() {
+        // consumes-before-produced
+        let bad = vec![
+            Node {
+                name: "a".into(),
+                kind: NodeKind::Xla,
+                inputs: vec!["t".into()],
+                outputs: vec!["roi_scores".into(), "roi_boxes".into()],
+            },
+            Node {
+                name: "b".into(),
+                kind: NodeKind::Xla,
+                inputs: vec![PRIMAL.into()],
+                outputs: vec!["t".into()],
+            },
+        ];
+        assert!(PipelineGraph::new(bad).is_err());
+        // double production
+        let dup = vec![Node {
+            name: "a".into(),
+            kind: NodeKind::Xla,
+            inputs: vec![PRIMAL.into()],
+            outputs: vec!["x".into(), "x".into()],
+        }];
+        assert!(PipelineGraph::new(dup).is_err());
+        // missing final outputs
+        let nofinal = vec![Node {
+            name: "a".into(),
+            kind: NodeKind::Xla,
+            inputs: vec![PRIMAL.into()],
+            outputs: vec!["x".into()],
+        }];
+        assert!(PipelineGraph::new(nofinal).is_err());
+    }
+
+    #[test]
+    fn head_tail_partition() {
+        let g = graph();
+        for sp in g.all_splits() {
+            assert_eq!(g.head_nodes(sp).len() + g.tail_nodes(sp).len(), g.len());
+        }
+    }
+}

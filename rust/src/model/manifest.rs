@@ -1,0 +1,341 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One named tensor endpoint of a module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// One AOT'd module (an HLO artifact).
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub artifact: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One Backbone3D stage's geometry.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: [usize; 3],
+    pub submanifold: bool,
+    pub out_shape: [usize; 4],
+}
+
+/// Anchor-generation and model geometry constants (mirrors python config).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub pc_range_x: (f64, f64),
+    pub pc_range_y: (f64, f64),
+    pub pc_range_z: (f64, f64),
+    pub voxel_size: [f64; 3], // (z, y, x)
+    pub grid: [usize; 3],     // (D, H, W)
+    pub point_features: usize,
+    pub stages: Vec<StageSpec>,
+    pub bev_h: usize,
+    pub bev_w: usize,
+    pub num_classes: usize,
+    pub anchor_sizes: Vec<[f64; 3]>,
+    pub anchor_z: Vec<f64>,
+    pub anchor_rotations: Vec<f64>,
+    pub anchors_per_cell: usize,
+    pub num_anchors: usize,
+    pub box_code_size: usize,
+    pub num_proposals: usize,
+    pub weights_seed: u64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub use_pallas: bool,
+    pub config: ModelConfig,
+    pub modules: Vec<ModuleSpec>,
+}
+
+fn f64_pair(v: &Value) -> Result<(f64, f64)> {
+    let a = v.as_f64_vec().context("expected [f64, f64]")?;
+    if a.len() != 2 {
+        bail!("expected 2-element range");
+    }
+    Ok((a[0], a[1]))
+}
+
+fn tensor_specs(v: &Value) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .context("tensor name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Value::as_usize_vec)
+                    .context("tensor shape")?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).context("manifest.json")?;
+        let cfg = v.get("config").context("manifest missing config")?;
+
+        let stages = cfg
+            .get("stages")
+            .and_then(Value::as_arr)
+            .context("config.stages")?
+            .iter()
+            .map(|s| -> Result<StageSpec> {
+                let stride = s
+                    .get("stride")
+                    .and_then(Value::as_usize_vec)
+                    .context("stage stride")?;
+                let out = s
+                    .get("out_shape")
+                    .and_then(Value::as_usize_vec)
+                    .context("stage out_shape")?;
+                Ok(StageSpec {
+                    name: s
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .context("stage name")?
+                        .to_string(),
+                    cin: s.get("cin").and_then(Value::as_usize).context("cin")?,
+                    cout: s.get("cout").and_then(Value::as_usize).context("cout")?,
+                    stride: [stride[0], stride[1], stride[2]],
+                    submanifold: s
+                        .get("submanifold")
+                        .and_then(Value::as_bool)
+                        .unwrap_or(false),
+                    out_shape: [out[0], out[1], out[2], out[3]],
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let grid = cfg
+            .get("grid")
+            .and_then(Value::as_usize_vec)
+            .context("config.grid")?;
+        let voxel = cfg
+            .get("voxel_size")
+            .and_then(Value::as_f64_vec)
+            .context("config.voxel_size")?;
+        let anchor_sizes = cfg
+            .get("anchor_sizes")
+            .and_then(Value::as_arr)
+            .context("anchor_sizes")?
+            .iter()
+            .map(|a| {
+                let v = a.as_f64_vec().context("anchor size")?;
+                Ok([v[0], v[1], v[2]])
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let config = ModelConfig {
+            pc_range_x: f64_pair(cfg.at(&["pc_range", "x"]).context("pc_range.x")?)?,
+            pc_range_y: f64_pair(cfg.at(&["pc_range", "y"]).context("pc_range.y")?)?,
+            pc_range_z: f64_pair(cfg.at(&["pc_range", "z"]).context("pc_range.z")?)?,
+            voxel_size: [voxel[0], voxel[1], voxel[2]],
+            grid: [grid[0], grid[1], grid[2]],
+            point_features: cfg
+                .get("point_features")
+                .and_then(Value::as_usize)
+                .context("point_features")?,
+            stages,
+            bev_h: cfg.at(&["bev", "h"]).and_then(Value::as_usize).context("bev.h")?,
+            bev_w: cfg.at(&["bev", "w"]).and_then(Value::as_usize).context("bev.w")?,
+            num_classes: cfg
+                .get("num_classes")
+                .and_then(Value::as_usize)
+                .context("num_classes")?,
+            anchor_sizes,
+            anchor_z: cfg
+                .get("anchor_z")
+                .and_then(Value::as_f64_vec)
+                .context("anchor_z")?,
+            anchor_rotations: cfg
+                .get("anchor_rotations")
+                .and_then(Value::as_f64_vec)
+                .context("anchor_rotations")?,
+            anchors_per_cell: cfg
+                .get("anchors_per_cell")
+                .and_then(Value::as_usize)
+                .context("anchors_per_cell")?,
+            num_anchors: cfg
+                .get("num_anchors")
+                .and_then(Value::as_usize)
+                .context("num_anchors")?,
+            box_code_size: cfg
+                .get("box_code_size")
+                .and_then(Value::as_usize)
+                .context("box_code_size")?,
+            num_proposals: cfg
+                .get("num_proposals")
+                .and_then(Value::as_usize)
+                .context("num_proposals")?,
+            weights_seed: cfg
+                .get("weights_seed")
+                .and_then(Value::as_usize)
+                .context("weights_seed")? as u64,
+        };
+
+        let modules = v
+            .get("modules")
+            .and_then(Value::as_arr)
+            .context("manifest.modules")?
+            .iter()
+            .map(|m| -> Result<ModuleSpec> {
+                Ok(ModuleSpec {
+                    name: m
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .context("module name")?
+                        .to_string(),
+                    artifact: dir.join(
+                        m.get("artifact")
+                            .and_then(Value::as_str)
+                            .context("module artifact")?,
+                    ),
+                    sha256: m
+                        .get("sha256")
+                        .and_then(Value::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs: tensor_specs(m.get("inputs").context("module inputs")?)?,
+                    outputs: tensor_specs(m.get("outputs").context("module outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        if modules.is_empty() {
+            bail!("manifest declares no modules");
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            use_pallas: v
+                .get("use_pallas")
+                .and_then(Value::as_bool)
+                .unwrap_or(true),
+            config,
+            modules,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("module '{name}' not in manifest"))
+    }
+
+    pub fn module_names(&self) -> Vec<&str> {
+        self.modules.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A small synthetic manifest for unit tests that don't need artifacts.
+    pub(crate) fn test_manifest_json() -> String {
+        r#"{
+ "version": 1, "use_pallas": true,
+ "config": {
+  "pc_range": {"x": [0.0, 46.08], "y": [-23.04, 23.04], "z": [-3.0, 1.0]},
+  "voxel_size": [0.25, 0.36, 0.36],
+  "grid": [16, 128, 128],
+  "point_features": 4,
+  "vfe_channels": 4,
+  "stages": [
+   {"name": "conv1", "cin": 4, "cout": 16, "stride": [1,1,1], "submanifold": false, "out_shape": [16,128,128,16]},
+   {"name": "conv2", "cin": 16, "cout": 32, "stride": [2,1,1], "submanifold": false, "out_shape": [8,128,128,32]},
+   {"name": "conv3", "cin": 32, "cout": 64, "stride": [2,2,2], "submanifold": false, "out_shape": [4,64,64,64]},
+   {"name": "conv4", "cin": 64, "cout": 128, "stride": [2,2,2], "submanifold": false, "out_shape": [2,32,32,128]}
+  ],
+  "bev": {"h": 32, "w": 32, "channels": 256, "backbone_channels": 64},
+  "num_classes": 3,
+  "anchor_sizes": [[3.9,1.6,1.56],[0.8,0.6,1.73],[1.76,0.6,1.73]],
+  "anchor_z": [-1.0,-0.6,-0.6],
+  "anchor_rotations": [0.0,1.5707963],
+  "anchors_per_cell": 6,
+  "num_anchors": 6144,
+  "box_code_size": 7,
+  "num_proposals": 96,
+  "roi_grid": 4,
+  "roi_pool_scales": ["conv2","conv3","conv4"],
+  "roi_pool_channels": 32,
+  "weights_seed": 20250710
+ },
+ "modules": [
+  {"name": "vfe", "artifact": "vfe.hlo.txt", "sha256": "", "inputs": [{"name": "points_sum", "shape": [16,128,128,4]}, {"name": "points_cnt", "shape": [16,128,128,1]}], "outputs": [{"name": "vfe_feat", "shape": [16,128,128,4]}, {"name": "vfe_mask", "shape": [16,128,128,1]}]},
+  {"name": "conv1", "artifact": "conv1.hlo.txt", "sha256": "", "inputs": [{"name": "vfe_feat", "shape": [16,128,128,4]}, {"name": "vfe_mask", "shape": [16,128,128,1]}], "outputs": [{"name": "conv1_feat", "shape": [16,128,128,16]}, {"name": "conv1_mask", "shape": [16,128,128,1]}]},
+  {"name": "conv2", "artifact": "conv2.hlo.txt", "sha256": "", "inputs": [{"name": "conv1_feat", "shape": [16,128,128,16]}, {"name": "conv1_mask", "shape": [16,128,128,1]}], "outputs": [{"name": "conv2_feat", "shape": [8,128,128,32]}, {"name": "conv2_mask", "shape": [8,128,128,1]}]},
+  {"name": "conv3", "artifact": "conv3.hlo.txt", "sha256": "", "inputs": [{"name": "conv2_feat", "shape": [8,128,128,32]}, {"name": "conv2_mask", "shape": [8,128,128,1]}], "outputs": [{"name": "conv3_feat", "shape": [4,64,64,64]}, {"name": "conv3_mask", "shape": [4,64,64,1]}]},
+  {"name": "conv4", "artifact": "conv4.hlo.txt", "sha256": "", "inputs": [{"name": "conv3_feat", "shape": [4,64,64,64]}, {"name": "conv3_mask", "shape": [4,64,64,1]}], "outputs": [{"name": "conv4_feat", "shape": [2,32,32,128]}, {"name": "conv4_mask", "shape": [2,32,32,1]}]},
+  {"name": "bev_head", "artifact": "bev_head.hlo.txt", "sha256": "", "inputs": [{"name": "conv4_feat", "shape": [2,32,32,128]}], "outputs": [{"name": "cls_logits", "shape": [6144]}, {"name": "box_preds", "shape": [6144,7]}, {"name": "dir_logits", "shape": [6144,2]}]},
+  {"name": "roi_head", "artifact": "roi_head.hlo.txt", "sha256": "", "inputs": [{"name": "conv2_feat", "shape": [8,128,128,32]}, {"name": "conv3_feat", "shape": [4,64,64,64]}, {"name": "conv4_feat", "shape": [2,32,32,128]}, {"name": "rois", "shape": [96,7]}], "outputs": [{"name": "roi_scores", "shape": [96]}, {"name": "roi_boxes", "shape": [96,7]}]}
+ ]
+}"#
+        .to_string()
+    }
+
+    pub(crate) fn test_manifest() -> Manifest {
+        Manifest::parse(&test_manifest_json(), Path::new("/nonexistent")).unwrap()
+    }
+
+    #[test]
+    fn parses_test_manifest() {
+        let m = test_manifest();
+        assert_eq!(m.modules.len(), 7);
+        assert_eq!(m.config.grid, [16, 128, 128]);
+        assert_eq!(m.config.stages[1].stride, [2, 1, 1]);
+        assert_eq!(m.module("roi_head").unwrap().inputs.len(), 4);
+        assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let m = test_manifest();
+        let vfe = m.module("vfe").unwrap();
+        assert_eq!(vfe.inputs[0].numel(), 16 * 128 * 128 * 4);
+        assert_eq!(vfe.inputs[1].size_bytes(), 16 * 128 * 128 * 4);
+    }
+}

@@ -1,0 +1,5 @@
+//! Model description: artifact manifest, pipeline graph, anchors.
+
+pub mod anchors;
+pub mod graph;
+pub mod manifest;

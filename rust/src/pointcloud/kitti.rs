@@ -1,0 +1,151 @@
+//! KITTI velodyne `.bin` I/O.
+//!
+//! If a user has the real dataset, frames can be fed straight from disk
+//! (`--kitti-dir`); the synthetic generator is the default because this
+//! environment has no dataset access. The format is the raw one KITTI
+//! ships: little-endian f32 quadruples (x, y, z, reflectance).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Point, PointCloud};
+
+/// Read one scan.
+pub fn read_bin(path: &Path) -> Result<PointCloud> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 16 != 0 {
+        bail!(
+            "{}: length {} is not a multiple of 16 (x,y,z,i f32 records)",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let mut points = Vec::with_capacity(bytes.len() / 16);
+    for rec in bytes.chunks_exact(16) {
+        let f = |i: usize| f32::from_le_bytes(rec[i * 4..(i + 1) * 4].try_into().unwrap());
+        points.push(Point {
+            x: f(0),
+            y: f(1),
+            z: f(2),
+            intensity: f(3),
+        });
+    }
+    Ok(PointCloud { points })
+}
+
+/// Write one scan (used by tests and the dataset-export tool).
+pub fn write_bin(path: &Path, cloud: &PointCloud) -> Result<()> {
+    let mut f =
+        fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut buf = Vec::with_capacity(cloud.points.len() * 16);
+    for p in &cloud.points {
+        buf.extend_from_slice(&p.x.to_le_bytes());
+        buf.extend_from_slice(&p.y.to_le_bytes());
+        buf.extend_from_slice(&p.z.to_le_bytes());
+        buf.extend_from_slice(&p.intensity.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Enumerate `.bin` scans in a directory, sorted by name.
+pub fn list_scans(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut scans: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "bin"))
+        .collect();
+    scans.sort();
+    Ok(scans)
+}
+
+/// Crop a cloud to the model's metric range (KITTI scans cover 360°; the
+/// model grid is the front FoV wedge).
+pub fn crop_to_range(
+    cloud: &PointCloud,
+    x: (f64, f64),
+    y: (f64, f64),
+    z: (f64, f64),
+) -> PointCloud {
+    PointCloud {
+        points: cloud
+            .points
+            .iter()
+            .copied()
+            .filter(|p| {
+                (p.x as f64) >= x.0
+                    && (p.x as f64) < x.1
+                    && (p.y as f64) >= y.0
+                    && (p.y as f64) < y.1
+                    && (p.z as f64) >= z.0
+                    && (p.z as f64) < z.1
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("000000.bin");
+        let cloud = PointCloud {
+            points: vec![
+                Point { x: 1.5, y: -2.0, z: 0.25, intensity: 0.9 },
+                Point { x: 40.0, y: 10.0, z: -1.0, intensity: 0.1 },
+            ],
+        };
+        write_bin(&path, &cloud).unwrap();
+        let back = read_bin(&path).unwrap();
+        assert_eq!(back.points, cloud.points);
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        fs::write(&path, [0u8; 17]).unwrap();
+        assert!(read_bin(&path).is_err());
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn crop_filters() {
+        let cloud = PointCloud {
+            points: vec![
+                Point { x: 5.0, y: 0.0, z: -1.0, intensity: 0.5 },
+                Point { x: -5.0, y: 0.0, z: -1.0, intensity: 0.5 }, // behind
+                Point { x: 5.0, y: 50.0, z: -1.0, intensity: 0.5 }, // wide
+            ],
+        };
+        let c = crop_to_range(&cloud, (0.0, 46.08), (-23.04, 23.04), (-3.0, 1.0));
+        assert_eq!(c.points.len(), 1);
+    }
+
+    #[test]
+    fn list_scans_sorted() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_list");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        for name in ["2.bin", "1.bin", "x.txt"] {
+            fs::write(dir.join(name), []).unwrap();
+        }
+        let scans = list_scans(&dir).unwrap();
+        let names: Vec<_> = scans
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap())
+            .collect();
+        assert_eq!(names, ["1.bin", "2.bin"]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

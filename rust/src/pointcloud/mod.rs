@@ -1,0 +1,107 @@
+//! Point-cloud substrate: frame types, synthetic KITTI-like scene
+//! generation, and a reader for real KITTI velodyne `.bin` files.
+//!
+//! Substitution (DESIGN.md §3): the paper evaluates on KITTI scans captured
+//! by a Velodyne HDL-64E; this environment has no dataset access, so
+//! [`scene`] synthesizes scenes with KITTI-like statistics (ground plane,
+//! boxy vehicles/pedestrians/cyclists, radial ring sampling with
+//! range-dependent density). Every measured quantity in the paper's
+//! evaluation depends on the cloud only through point count and voxel
+//! occupancy, which the generator calibrates to the dataset's range.
+
+pub mod kitti;
+pub mod scene;
+
+/// One LiDAR return: metric xyz + reflectance intensity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub intensity: f32,
+}
+
+/// A single LiDAR sweep from one sensor.
+#[derive(Debug, Clone, Default)]
+pub struct PointCloud {
+    pub points: Vec<Point>,
+}
+
+impl PointCloud {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Wire size if shipped raw (the paper's Fig 8 "input point cloud data"
+    /// baseline): 4 f32 per point, KITTI's on-disk format.
+    pub fn size_bytes(&self) -> usize {
+        self.points.len() * 16
+    }
+
+    /// Flatten to an (N, 4) row-major buffer.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.points.len() * 4);
+        for p in &self.points {
+            v.extend_from_slice(&[p.x, p.y, p.z, p.intensity]);
+        }
+        v
+    }
+
+    /// Rebuild from an (N, 4) row-major buffer.
+    pub fn from_flat(data: &[f32]) -> PointCloud {
+        assert_eq!(data.len() % 4, 0, "flat cloud length must be 4N");
+        PointCloud {
+            points: data
+                .chunks_exact(4)
+                .map(|c| Point {
+                    x: c[0],
+                    y: c[1],
+                    z: c[2],
+                    intensity: c[3],
+                })
+                .collect(),
+        }
+    }
+
+    /// As a rust [`crate::Tensor`] for the wire codec (raw-offload split).
+    pub fn to_tensor(&self) -> crate::Tensor {
+        crate::Tensor::from_vec(&[self.points.len(), 4], self.to_flat())
+            .expect("flat cloud is always consistent")
+    }
+}
+
+/// A frame: one cloud plus provenance (sensor id, sequence number).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub sensor_id: u32,
+    pub seq: u64,
+    pub cloud: PointCloud,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip() {
+        let pc = PointCloud {
+            points: vec![
+                Point { x: 1.0, y: 2.0, z: 3.0, intensity: 0.5 },
+                Point { x: -1.0, y: 0.0, z: 0.25, intensity: 0.0 },
+            ],
+        };
+        let back = PointCloud::from_flat(&pc.to_flat());
+        assert_eq!(back.points, pc.points);
+        assert_eq!(pc.size_bytes(), 32);
+    }
+
+    #[test]
+    fn tensor_shape() {
+        let pc = PointCloud::from_flat(&[0.0; 40]);
+        assert_eq!(pc.to_tensor().shape(), &[10, 4]);
+    }
+}

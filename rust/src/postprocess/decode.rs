@@ -1,0 +1,96 @@
+//! Anchor-delta box decoding (SECOND/OpenPCDet residual coder) and small
+//! math helpers shared by the proposal stage.
+
+use crate::model::anchors::Anchor;
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode a 7-dof box from anchor + deltas, with direction correction from
+/// the 2-way direction classifier (OpenPCDet's `dir_offset=0` simplified).
+///
+/// Coder: dx,dy are scaled by the anchor BEV diagonal, dz by anchor height;
+/// dl,dw,dh are log-ratios (clamped for numeric safety); dry is additive.
+pub fn decode_box(anchor: &Anchor, delta: &[f32], dir_logits: &[f32]) -> [f32; 7] {
+    debug_assert_eq!(delta.len(), 7);
+    let diag = (anchor.dims[0] * anchor.dims[0] + anchor.dims[1] * anchor.dims[1]).sqrt();
+    let cx = anchor.center[0] + delta[0] * diag;
+    let cy = anchor.center[1] + delta[1] * diag;
+    let cz = anchor.center[2] + delta[2] * anchor.dims[2];
+    let clamp = |d: f32| d.clamp(-2.0, 2.0);
+    let l = anchor.dims[0] * clamp(delta[3]).exp();
+    let w = anchor.dims[1] * clamp(delta[4]).exp();
+    let h = anchor.dims[2] * clamp(delta[5]).exp();
+    let mut ry = anchor.ry + delta[6];
+    // direction classifier picks the pi-flipped orientation
+    if dir_logits.len() == 2 && dir_logits[1] > dir_logits[0] {
+        ry += std::f32::consts::PI;
+    }
+    // normalize to (-pi, pi]
+    while ry > std::f32::consts::PI {
+        ry -= 2.0 * std::f32::consts::PI;
+    }
+    while ry <= -std::f32::consts::PI {
+        ry += 2.0 * std::f32::consts::PI;
+    }
+    [cx, cy, cz, l, w, h, ry]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn anchor() -> Anchor {
+        Anchor {
+            center: [10.0, -2.0, -1.0],
+            dims: [3.9, 1.6, 1.56],
+            ry: 0.0,
+            class: 0,
+        }
+    }
+
+    #[test]
+    fn zero_delta_is_identity() {
+        let b = decode_box(&anchor(), &[0.0; 7], &[1.0, 0.0]);
+        assert_eq!(&b[..3], &[10.0, -2.0, -1.0]);
+        assert!((b[3] - 3.9).abs() < 1e-6);
+        assert_eq!(b[6], 0.0);
+    }
+
+    #[test]
+    fn direction_flip() {
+        let b = decode_box(&anchor(), &[0.0; 7], &[0.0, 1.0]);
+        assert!((b[6].abs() - std::f32::consts::PI).abs() < 1e-6);
+    }
+
+    #[test]
+    fn translation_scales_with_diagonal() {
+        let diag = (3.9f32 * 3.9 + 1.6 * 1.6).sqrt();
+        let b = decode_box(&anchor(), &[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], &[1.0, 0.0]);
+        assert!((b[0] - (10.0 + diag)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn size_deltas_clamped() {
+        let b = decode_box(&anchor(), &[0.0, 0.0, 0.0, 99.0, -99.0, 0.0, 0.0], &[1.0, 0.0]);
+        assert!((b[3] - 3.9 * 2.0f32.exp()).abs() < 1e-3);
+        assert!((b[4] - 1.6 * (-2.0f32).exp()).abs() < 1e-4);
+        assert!(b[3].is_finite() && b[4] > 0.0);
+    }
+
+    #[test]
+    fn angle_normalized() {
+        let mut a = anchor();
+        a.ry = 3.0;
+        let b = decode_box(&a, &[0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0], &[0.0, 1.0]);
+        assert!(b[6] > -std::f32::consts::PI && b[6] <= std::f32::consts::PI);
+    }
+
+    #[test]
+    fn sigmoid_range() {
+        assert!(sigmoid(-50.0) >= 0.0 && sigmoid(-50.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(50.0) <= 1.0 && sigmoid(50.0) > 1.0 - 1e-6);
+    }
+}

@@ -1,0 +1,200 @@
+//! Detection evaluation: greedy IoU matching and average precision.
+//!
+//! The paper reports no accuracy metrics (its evaluation is time/bytes),
+//! but a deployable reproduction needs the measurement capability; the
+//! split==unsplit equivalence tests also use the matcher to compare
+//! detection sets structurally.
+
+use super::nms::{bev_iou, iou_3d};
+use super::Detection;
+
+/// Ground-truth box for evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct GroundTruth {
+    pub boxx: [f32; 7],
+    pub class: usize,
+}
+
+/// Matching result for one frame.
+#[derive(Debug, Clone, Default)]
+pub struct FrameMatch {
+    /// (detection idx, gt idx, iou) pairs
+    pub matches: Vec<(usize, usize, f64)>,
+    pub unmatched_dets: Vec<usize>,
+    pub unmatched_gts: Vec<usize>,
+}
+
+/// Greedy match detections (score-sorted) to ground truth at an IoU
+/// threshold, class-aware, BEV or 3D IoU.
+pub fn match_frame(
+    dets: &[Detection],
+    gts: &[GroundTruth],
+    iou_threshold: f64,
+    use_3d: bool,
+) -> FrameMatch {
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| dets[b].score.partial_cmp(&dets[a].score).unwrap());
+
+    let mut gt_taken = vec![false; gts.len()];
+    let mut result = FrameMatch::default();
+    for &di in &order {
+        let mut best: Option<(usize, f64)> = None;
+        for (gi, gt) in gts.iter().enumerate() {
+            if gt_taken[gi] || gt.class != dets[di].class {
+                continue;
+            }
+            let iou = if use_3d {
+                iou_3d(&dets[di].boxx, &gt.boxx)
+            } else {
+                bev_iou(&dets[di].boxx, &gt.boxx)
+            };
+            if iou >= iou_threshold && best.is_none_or(|(_, b)| iou > b) {
+                best = Some((gi, iou));
+            }
+        }
+        match best {
+            Some((gi, iou)) => {
+                gt_taken[gi] = true;
+                result.matches.push((di, gi, iou));
+            }
+            None => result.unmatched_dets.push(di),
+        }
+    }
+    result.unmatched_gts = gt_taken
+        .iter()
+        .enumerate()
+        .filter(|(_, &t)| !t)
+        .map(|(i, _)| i)
+        .collect();
+    result
+}
+
+/// 11-point interpolated average precision over a set of frames
+/// (KITTI-style, simplified to a single difficulty bucket).
+pub fn average_precision(
+    frames: &[(Vec<Detection>, Vec<GroundTruth>)],
+    class: usize,
+    iou_threshold: f64,
+    use_3d: bool,
+) -> f64 {
+    // gather (score, is_tp) over all frames for this class
+    let mut scored: Vec<(f32, bool)> = Vec::new();
+    let mut total_gt = 0usize;
+    for (dets, gts) in frames {
+        let class_dets: Vec<Detection> =
+            dets.iter().copied().filter(|d| d.class == class).collect();
+        let class_gts: Vec<GroundTruth> =
+            gts.iter().copied().filter(|g| g.class == class).collect();
+        total_gt += class_gts.len();
+        let m = match_frame(&class_dets, &class_gts, iou_threshold, use_3d);
+        let matched: std::collections::HashSet<usize> =
+            m.matches.iter().map(|&(d, _, _)| d).collect();
+        for (i, d) in class_dets.iter().enumerate() {
+            scored.push((d.score, matched.contains(&i)));
+        }
+    }
+    if total_gt == 0 {
+        return 0.0;
+    }
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // precision/recall curve
+    let mut tp = 0usize;
+    let mut curve: Vec<(f64, f64)> = Vec::with_capacity(scored.len()); // (recall, precision)
+    for (i, &(_, is_tp)) in scored.iter().enumerate() {
+        if is_tp {
+            tp += 1;
+        }
+        curve.push((tp as f64 / total_gt as f64, tp as f64 / (i + 1) as f64));
+    }
+
+    // 11-point interpolation
+    let mut ap = 0.0;
+    for i in 0..11 {
+        let r = i as f64 / 10.0;
+        let p = curve
+            .iter()
+            .filter(|&&(rec, _)| rec >= r)
+            .map(|&(_, prec)| prec)
+            .fold(0.0f64, f64::max);
+        ap += p / 11.0;
+    }
+    ap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f32, score: f32, class: usize) -> Detection {
+        Detection {
+            score,
+            boxx: [cx, 0.0, 0.0, 4.0, 2.0, 1.5, 0.0],
+            class,
+        }
+    }
+
+    fn gt(cx: f32, class: usize) -> GroundTruth {
+        GroundTruth {
+            boxx: [cx, 0.0, 0.0, 4.0, 2.0, 1.5, 0.0],
+            class,
+        }
+    }
+
+    #[test]
+    fn perfect_match() {
+        let dets = vec![det(0.0, 0.9, 0), det(20.0, 0.8, 0)];
+        let gts = vec![gt(0.0, 0), gt(20.0, 0)];
+        let m = match_frame(&dets, &gts, 0.5, true);
+        assert_eq!(m.matches.len(), 2);
+        assert!(m.unmatched_dets.is_empty() && m.unmatched_gts.is_empty());
+    }
+
+    #[test]
+    fn class_aware() {
+        let dets = vec![det(0.0, 0.9, 1)];
+        let gts = vec![gt(0.0, 0)];
+        let m = match_frame(&dets, &gts, 0.5, false);
+        assert!(m.matches.is_empty());
+        assert_eq!(m.unmatched_dets, vec![0]);
+        assert_eq!(m.unmatched_gts, vec![0]);
+    }
+
+    #[test]
+    fn one_gt_one_match() {
+        // two detections on the same gt: only the higher-scored matches
+        let dets = vec![det(0.1, 0.7, 0), det(0.0, 0.9, 0)];
+        let gts = vec![gt(0.0, 0)];
+        let m = match_frame(&dets, &gts, 0.5, false);
+        assert_eq!(m.matches.len(), 1);
+        assert_eq!(m.matches[0].0, 1); // index of the 0.9 det
+        assert_eq!(m.unmatched_dets, vec![0]);
+    }
+
+    #[test]
+    fn ap_perfect_is_one() {
+        let frames = vec![(
+            vec![det(0.0, 0.9, 0), det(20.0, 0.8, 0)],
+            vec![gt(0.0, 0), gt(20.0, 0)],
+        )];
+        let ap = average_precision(&frames, 0, 0.5, true);
+        assert!((ap - 1.0).abs() < 1e-9, "{ap}");
+    }
+
+    #[test]
+    fn ap_no_dets_is_zero() {
+        let frames = vec![(vec![], vec![gt(0.0, 0)])];
+        assert_eq!(average_precision(&frames, 0, 0.5, true), 0.0);
+    }
+
+    #[test]
+    fn ap_false_positives_reduce_precision() {
+        let frames = vec![(
+            vec![det(0.0, 0.9, 0), det(100.0, 0.95, 0)], // higher-scored FP
+            vec![gt(0.0, 0)],
+        )];
+        let ap = average_precision(&frames, 0, 0.5, true);
+        assert!(ap < 0.75, "{ap}");
+        assert!(ap > 0.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Post-processing: the `proposal` pseudo-module (anchor decode + top-K +
+//! NMS between DenseHead and RoIHead) and final-prediction assembly.
+//!
+//! Kept in rust rather than HLO because proposal selection is dynamic-shape
+//! (top-K of a score-dependent set); the AOT'd RoI head takes a fixed
+//! `num_proposals` box tensor.
+
+pub mod decode;
+pub mod eval;
+pub mod nms;
+
+use anyhow::{bail, Result};
+
+use crate::model::anchors::Anchor;
+use crate::model::manifest::ModelConfig;
+use crate::tensor::Tensor;
+
+/// A scored, decoded detection box.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub score: f32,
+    /// (cx, cy, cz, l, w, h, ry)
+    pub boxx: [f32; 7],
+    pub class: usize,
+}
+
+/// Proposal-stage configuration.
+#[derive(Debug, Clone)]
+pub struct ProposalConfig {
+    pub pre_nms_top_k: usize,
+    pub nms_iou: f32,
+    pub num_proposals: usize,
+}
+
+impl Default for ProposalConfig {
+    fn default() -> Self {
+        ProposalConfig {
+            pre_nms_top_k: 512,
+            nms_iou: 0.7,
+            num_proposals: 96,
+        }
+    }
+}
+
+/// The `proposal` node: cls/box/dir maps → fixed-K RoI tensor.
+pub struct ProposalStage {
+    anchors: Vec<Anchor>,
+    cfg: ProposalConfig,
+}
+
+impl ProposalStage {
+    pub fn new(model_cfg: &ModelConfig, cfg: ProposalConfig) -> ProposalStage {
+        ProposalStage {
+            anchors: crate::model::anchors::generate(model_cfg),
+            cfg: ProposalConfig {
+                num_proposals: model_cfg.num_proposals,
+                ..cfg
+            },
+        }
+    }
+
+    /// cls_logits (A,), box_preds (A, 7), dir_logits (A, 2) → fixed-K RoIs.
+    pub fn run(
+        &self,
+        cls_logits: &Tensor,
+        box_preds: &Tensor,
+        dir_logits: &Tensor,
+    ) -> Result<Proposals> {
+        let a = self.anchors.len();
+        if cls_logits.numel() != a || box_preds.shape() != [a, 7] {
+            bail!(
+                "proposal inputs mismatch: cls {:?} box {:?} vs {a} anchors",
+                cls_logits.shape(),
+                box_preds.shape()
+            );
+        }
+
+        // 1. score + decode the top pre-NMS candidates
+        let mut idx: Vec<usize> = (0..a).collect();
+        let scores = cls_logits.data();
+        // partial top-K by score (sigmoid is monotone: sort on raw logits)
+        let k_pre = self.cfg.pre_nms_top_k.min(a);
+        idx.select_nth_unstable_by(k_pre - 1, |&i, &j| {
+            scores[j].partial_cmp(&scores[i]).unwrap()
+        });
+        idx.truncate(k_pre);
+        idx.sort_unstable_by(|&i, &j| scores[j].partial_cmp(&scores[i]).unwrap());
+
+        let dets: Vec<Detection> = idx
+            .iter()
+            .map(|&i| {
+                let delta: &[f32] = &box_preds.data()[i * 7..(i + 1) * 7];
+                let dir: &[f32] = &dir_logits.data()[i * 2..(i + 1) * 2];
+                let anchor = &self.anchors[i];
+                Detection {
+                    score: decode::sigmoid(scores[i]),
+                    boxx: decode::decode_box(anchor, delta, dir),
+                    class: anchor.class,
+                }
+            })
+            .collect();
+
+        // 2. BEV rotated NMS
+        let keep = nms::nms_bev(&dets, self.cfg.nms_iou, self.cfg.num_proposals);
+
+        // 3. fixed-K roi tensor (pad with a degenerate far-away box with
+        //    zero size so RoI pooling gathers nothing for padding slots)
+        let k = self.cfg.num_proposals;
+        let mut rois = vec![0.0f32; k * 7];
+        let mut classes = vec![usize::MAX; k];
+        let mut scores = vec![0.0f32; k];
+        for (slot, &di) in keep.iter().enumerate().take(k) {
+            rois[slot * 7..slot * 7 + 7].copy_from_slice(&dets[di].boxx);
+            classes[slot] = dets[di].class;
+            scores[slot] = dets[di].score;
+        }
+        for slot in keep.len()..k {
+            rois[slot * 7..slot * 7 + 7]
+                .copy_from_slice(&[-1e4, -1e4, -1e4, 0.0, 0.0, 0.0, 0.0]);
+        }
+        Ok(Proposals {
+            rois: Tensor::from_vec(&[k, 7], rois)?,
+            classes,
+            scores,
+        })
+    }
+}
+
+/// Fixed-K proposal set: the RoI tensor plus per-slot metadata the RoI head
+/// doesn't see (class labels ride on the rust side, paper-faithful:
+/// OpenPCDet also carries `roi_labels` outside the pooled features).
+#[derive(Debug, Clone)]
+pub struct Proposals {
+    pub rois: Tensor,
+    /// per-slot class; `usize::MAX` marks padding slots
+    pub classes: Vec<usize>,
+    /// first-stage (RPN) scores per slot
+    pub scores: Vec<f32>,
+}
+
+/// Final predictions from the RoI head outputs.
+pub fn assemble_predictions(
+    roi_scores: &Tensor,
+    roi_boxes: &Tensor,
+    classes: &[usize],
+    score_threshold: f32,
+) -> Vec<Detection> {
+    let k = roi_scores.numel();
+    let mut out = Vec::new();
+    for i in 0..k {
+        let score = decode::sigmoid(roi_scores.data()[i]);
+        let class = classes.get(i).copied().unwrap_or(0);
+        if class == usize::MAX || score < score_threshold {
+            continue;
+        }
+        let b: &[f32] = &roi_boxes.data()[i * 7..(i + 1) * 7];
+        out.push(Detection {
+            score,
+            boxx: [b[0], b[1], b[2], b[3], b[4], b[5], b[6]],
+            class,
+        });
+    }
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::test_manifest;
+
+    fn stage() -> ProposalStage {
+        ProposalStage::new(&test_manifest().config, ProposalConfig::default())
+    }
+
+    fn inputs(hot: &[usize]) -> (Tensor, Tensor, Tensor) {
+        let cfg = test_manifest().config;
+        let a = cfg.num_anchors;
+        let mut cls = vec![-8.0f32; a];
+        for &h in hot {
+            cls[h] = 4.0;
+        }
+        (
+            Tensor::from_vec(&[a], cls).unwrap(),
+            Tensor::zeros(&[a, 7]),
+            Tensor::zeros(&[a, 2]),
+        )
+    }
+
+    #[test]
+    fn output_shape_fixed_k() {
+        let s = stage();
+        let (cls, boxp, dir) = inputs(&[0, 100, 2000]);
+        let p = s.run(&cls, &boxp, &dir).unwrap();
+        assert_eq!(p.rois.shape(), &[96, 7]);
+        assert_eq!(p.classes.len(), 96);
+    }
+
+    #[test]
+    fn hot_anchors_become_first_proposals() {
+        let s = stage();
+        let (cls, boxp, dir) = inputs(&[1200]);
+        let p = s.run(&cls, &boxp, &dir).unwrap();
+        // the hot anchor decodes to itself under zero deltas
+        let a = crate::model::anchors::generate(&test_manifest().config);
+        let expect = &a[1200];
+        assert!((p.rois.data()[0] - expect.center[0]).abs() < 1e-4);
+        assert!((p.rois.data()[1] - expect.center[1]).abs() < 1e-4);
+        assert_eq!(p.classes[0], expect.class);
+        assert!(p.scores[0] > 0.9);
+    }
+
+    #[test]
+    fn padding_is_degenerate() {
+        // a pre-NMS pool smaller than K forces padding slots
+        let s = ProposalStage::new(
+            &test_manifest().config,
+            ProposalConfig {
+                pre_nms_top_k: 10,
+                ..ProposalConfig::default()
+            },
+        );
+        let (cls, boxp, dir) = inputs(&[5]);
+        let p = s.run(&cls, &boxp, &dir).unwrap();
+        // padding slots must be far away with zero size
+        let last = &p.rois.data()[95 * 7..96 * 7];
+        assert_eq!(last[3], 0.0);
+        assert!(last[0] < -9e3);
+        assert_eq!(p.classes[95], usize::MAX);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let s = stage();
+        let bad = Tensor::zeros(&[7]);
+        assert!(s.run(&bad, &Tensor::zeros(&[7, 7]), &Tensor::zeros(&[7, 2])).is_err());
+    }
+
+    #[test]
+    fn assemble_filters_and_sorts() {
+        let scores = Tensor::from_vec(&[3], vec![4.0, -6.0, 1.0]).unwrap();
+        let boxes = Tensor::zeros(&[3, 7]);
+        let dets = assemble_predictions(&scores, &boxes, &[0, 1, 2], 0.3);
+        assert_eq!(dets.len(), 2);
+        assert!(dets[0].score >= dets[1].score);
+    }
+}

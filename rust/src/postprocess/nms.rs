@@ -1,0 +1,212 @@
+//! BEV rotated-box IoU and non-maximum suppression.
+//!
+//! Exact rotated-rectangle intersection via Sutherland–Hodgman polygon
+//! clipping (the same geometry OpenPCDet's CUDA `iou3d_nms` computes),
+//! implemented as a portable rust substrate.
+
+use super::Detection;
+
+/// A BEV rectangle as its 4 corners, counter-clockwise.
+fn corners(b: &[f32; 7]) -> [[f64; 2]; 4] {
+    let (cx, cy, l, w, ry) = (b[0] as f64, b[1] as f64, b[3] as f64, b[4] as f64, b[6] as f64);
+    let (s, c) = ry.sin_cos();
+    let (hl, hw) = (l / 2.0, w / 2.0);
+    let rot = |x: f64, y: f64| [cx + c * x - s * y, cy + s * x + c * y];
+    [rot(hl, hw), rot(-hl, hw), rot(-hl, -hw), rot(hl, -hw)]
+}
+
+fn polygon_area(poly: &[[f64; 2]]) -> f64 {
+    if poly.len() < 3 {
+        return 0.0;
+    }
+    let mut a = 0.0;
+    for i in 0..poly.len() {
+        let j = (i + 1) % poly.len();
+        a += poly[i][0] * poly[j][1] - poly[j][0] * poly[i][1];
+    }
+    a.abs() / 2.0
+}
+
+/// Clip polygon `subject` by the half-plane left of edge (a→b).
+fn clip_edge(subject: &[[f64; 2]], a: [f64; 2], b: [f64; 2]) -> Vec<[f64; 2]> {
+    let inside = |p: [f64; 2]| (b[0] - a[0]) * (p[1] - a[1]) - (b[1] - a[1]) * (p[0] - a[0]) >= -1e-12;
+    let intersect = |p: [f64; 2], q: [f64; 2]| -> [f64; 2] {
+        let (x1, y1, x2, y2) = (a[0], a[1], b[0], b[1]);
+        let (x3, y3, x4, y4) = (p[0], p[1], q[0], q[1]);
+        let den = (x1 - x2) * (y3 - y4) - (y1 - y2) * (x3 - x4);
+        if den.abs() < 1e-12 {
+            return q;
+        }
+        let t = ((x1 - x3) * (y3 - y4) - (y1 - y3) * (x3 - x4)) / den;
+        [x1 + t * (x2 - x1), y1 + t * (y2 - y1)]
+    };
+    let mut out = Vec::with_capacity(subject.len() + 2);
+    for i in 0..subject.len() {
+        let cur = subject[i];
+        let prev = subject[(i + subject.len() - 1) % subject.len()];
+        match (inside(cur), inside(prev)) {
+            (true, true) => out.push(cur),
+            (true, false) => {
+                out.push(intersect(prev, cur));
+                out.push(cur);
+            }
+            (false, true) => out.push(intersect(prev, cur)),
+            (false, false) => {}
+        }
+    }
+    out
+}
+
+/// Exact BEV intersection area of two rotated boxes.
+pub fn bev_intersection(a: &[f32; 7], b: &[f32; 7]) -> f64 {
+    let ca = corners(a);
+    let cb = corners(b);
+    let mut poly: Vec<[f64; 2]> = ca.to_vec();
+    for i in 0..4 {
+        if poly.is_empty() {
+            return 0.0;
+        }
+        poly = clip_edge(&poly, cb[i], cb[(i + 1) % 4]);
+    }
+    polygon_area(&poly)
+}
+
+/// BEV IoU of two rotated boxes.
+pub fn bev_iou(a: &[f32; 7], b: &[f32; 7]) -> f64 {
+    let inter = bev_intersection(a, b);
+    let area_a = (a[3] as f64) * (a[4] as f64);
+    let area_b = (b[3] as f64) * (b[4] as f64);
+    let union = area_a + area_b - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// 3D IoU (BEV intersection × z overlap / volume union).
+pub fn iou_3d(a: &[f32; 7], b: &[f32; 7]) -> f64 {
+    let inter_bev = bev_intersection(a, b);
+    let (za0, za1) = (a[2] as f64 - a[5] as f64 / 2.0, a[2] as f64 + a[5] as f64 / 2.0);
+    let (zb0, zb1) = (b[2] as f64 - b[5] as f64 / 2.0, b[2] as f64 + b[5] as f64 / 2.0);
+    let zi = (za1.min(zb1) - za0.max(zb0)).max(0.0);
+    let inter = inter_bev * zi;
+    let vol = |x: &[f32; 7]| x[3] as f64 * x[4] as f64 * x[5] as f64;
+    let union = vol(a) + vol(b) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Greedy NMS over score-sorted detections. Returns kept indices (into
+/// `dets`), at most `max_keep`. `dets` must already be sorted by score desc.
+pub fn nms_bev(dets: &[Detection], iou_threshold: f32, max_keep: usize) -> Vec<usize> {
+    let mut keep: Vec<usize> = Vec::new();
+    'cand: for (i, d) in dets.iter().enumerate() {
+        if keep.len() == max_keep {
+            break;
+        }
+        for &k in &keep {
+            if bev_iou(&d.boxx, &dets[k].boxx) > iou_threshold as f64 {
+                continue 'cand;
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boxx(cx: f32, cy: f32, l: f32, w: f32, ry: f32) -> [f32; 7] {
+        [cx, cy, 0.0, l, w, 1.5, ry]
+    }
+
+    #[test]
+    fn identical_boxes_iou_one() {
+        let b = boxx(5.0, 5.0, 4.0, 2.0, 0.7);
+        assert!((bev_iou(&b, &b) - 1.0).abs() < 1e-9);
+        assert!((iou_3d(&b, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_boxes_iou_zero() {
+        let a = boxx(0.0, 0.0, 2.0, 2.0, 0.0);
+        let b = boxx(10.0, 0.0, 2.0, 2.0, 1.0);
+        assert_eq!(bev_iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn axis_aligned_half_overlap() {
+        // 2x2 squares offset by 1 in x: intersection 2, union 6 -> 1/3
+        let a = boxx(0.0, 0.0, 2.0, 2.0, 0.0);
+        let b = boxx(1.0, 0.0, 2.0, 2.0, 0.0);
+        assert!((bev_iou(&a, &b) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rotated_45_degrees_known_area() {
+        // unit square vs itself rotated 45°: intersection is a regular
+        // octagon with area 2(√2−1) ≈ 0.8284
+        let a = boxx(0.0, 0.0, 1.0, 1.0, 0.0);
+        let b = boxx(0.0, 0.0, 1.0, 1.0, std::f32::consts::FRAC_PI_4);
+        let inter = bev_intersection(&a, &b);
+        assert!((inter - 2.0 * (2.0f64.sqrt() - 1.0)).abs() < 1e-6, "{inter}");
+    }
+
+    #[test]
+    fn rotation_by_pi_is_same_box() {
+        let a = boxx(3.0, -2.0, 4.0, 1.8, 0.4);
+        let b = boxx(3.0, -2.0, 4.0, 1.8, 0.4 + std::f32::consts::PI);
+        assert!((bev_iou(&a, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn containment() {
+        let big = boxx(0.0, 0.0, 4.0, 4.0, 0.3);
+        let small = boxx(0.0, 0.0, 2.0, 2.0, 0.3);
+        let iou = bev_iou(&big, &small);
+        assert!((iou - 4.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn z_overlap_matters() {
+        let mut a = boxx(0.0, 0.0, 2.0, 2.0, 0.0);
+        let mut b = a;
+        a[2] = 0.0;
+        b[2] = 10.0; // far apart in z
+        assert_eq!(iou_3d(&a, &b), 0.0);
+        assert!((bev_iou(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    fn det(cx: f32, score: f32) -> Detection {
+        Detection {
+            score,
+            boxx: boxx(cx, 0.0, 4.0, 2.0, 0.0),
+            class: 0,
+        }
+    }
+
+    #[test]
+    fn nms_suppresses_overlaps() {
+        let dets = vec![det(0.0, 0.9), det(0.5, 0.8), det(10.0, 0.7)];
+        let keep = nms_bev(&dets, 0.3, 10);
+        assert_eq!(keep, vec![0, 2]);
+    }
+
+    #[test]
+    fn nms_respects_max_keep() {
+        let dets: Vec<Detection> = (0..20).map(|i| det(i as f32 * 100.0, 1.0 - i as f32 * 0.01)).collect();
+        assert_eq!(nms_bev(&dets, 0.5, 5).len(), 5);
+    }
+
+    #[test]
+    fn nms_keeps_all_disjoint() {
+        let dets: Vec<Detection> = (0..8).map(|i| det(i as f32 * 50.0, 0.5)).collect();
+        assert_eq!(nms_bev(&dets, 0.1, 100).len(), 8);
+    }
+}

@@ -1,0 +1,252 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Python never runs on this path.
+//!
+//! The crate's `PjRtClient` is `Rc`-based (not `Send`), so the runtime is a
+//! small executor service: each worker thread owns a client plus its
+//! compiled executables, and [`XlaRuntime`] (cheap to share, `Send + Sync`)
+//! dispatches execute requests over channels. One worker is the default;
+//! more give throughput for the multi-sensor batcher at the cost of
+//! per-worker compile time.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{Manifest, ModuleSpec};
+use crate::tensor::Tensor;
+
+/// Runtime statistics per module (feeds Table I).
+#[derive(Debug, Clone, Default)]
+pub struct ModuleStats {
+    pub executions: u64,
+    pub total: Duration,
+}
+
+struct Job {
+    module: String,
+    inputs: Vec<Tensor>,
+    reply: Sender<Result<Vec<Tensor>>>,
+}
+
+/// Shared handle to the executor service.
+pub struct XlaRuntime {
+    submit: Mutex<Vec<Sender<Job>>>,
+    next: Mutex<usize>,
+    stats: Mutex<HashMap<String, ModuleStats>>,
+    module_names: Vec<String>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl XlaRuntime {
+    /// Load the manifest's artifacts on one worker thread.
+    pub fn load(manifest: &Manifest) -> Result<XlaRuntime> {
+        Self::load_pooled(manifest, 1)
+    }
+
+    /// Load with `threads` independent PJRT workers.
+    pub fn load_pooled(manifest: &Manifest, threads: usize) -> Result<XlaRuntime> {
+        assert!(threads >= 1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = channel::<Job>();
+            let specs = manifest.modules.clone();
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let worker = std::thread::Builder::new()
+                .name(format!("xla-worker-{i}"))
+                .spawn(move || worker_main(specs, rx, ready_tx))
+                .context("spawning xla worker")?;
+            // surface load/compile errors synchronously
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("xla worker {i} died during load"))??;
+            senders.push(tx);
+            workers.push(worker);
+        }
+        Ok(XlaRuntime {
+            submit: Mutex::new(senders),
+            next: Mutex::new(0),
+            stats: Mutex::new(HashMap::new()),
+            module_names: manifest.modules.iter().map(|m| m.name.clone()).collect(),
+            workers: Mutex::new(workers),
+        })
+    }
+
+    pub fn has_module(&self, name: &str) -> bool {
+        self.module_names.iter().any(|m| m == name)
+    }
+
+    /// Execute a module on host tensors (round-robin across workers).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let started = Instant::now();
+        let (reply_tx, reply_rx) = channel();
+        {
+            let senders = self.submit.lock().unwrap();
+            let mut next = self.next.lock().unwrap();
+            let idx = *next % senders.len();
+            *next = next.wrapping_add(1);
+            senders[idx]
+                .send(Job {
+                    module: name.to_string(),
+                    inputs: inputs.to_vec(),
+                    reply: reply_tx,
+                })
+                .map_err(|_| anyhow!("xla worker gone"))?;
+        }
+        let out = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("xla worker dropped reply"))??;
+
+        let elapsed = started.elapsed();
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(name.to_string()).or_default();
+        s.executions += 1;
+        s.total += elapsed;
+        Ok(out)
+    }
+
+    /// Per-module accumulated timings (drives the Table I bench).
+    pub fn stats(&self) -> HashMap<String, ModuleStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+}
+
+impl Drop for XlaRuntime {
+    fn drop(&mut self) {
+        self.submit.lock().unwrap().clear(); // close channels
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------- worker
+
+struct LoadedModule {
+    spec: ModuleSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn worker_main(specs: Vec<ModuleSpec>, rx: Receiver<Job>, ready: Sender<Result<()>>) {
+    let loaded = match load_all(&specs) {
+        Ok(l) => {
+            let _ = ready.send(Ok(()));
+            l
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let result = run_module(&loaded, &job.module, &job.inputs);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn load_all(specs: &[ModuleSpec]) -> Result<HashMap<String, LoadedModule>> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+    let mut out = HashMap::new();
+    for spec in specs {
+        let path: &Path = &spec.artifact;
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        out.insert(
+            spec.name.clone(),
+            LoadedModule {
+                spec: spec.clone(),
+                exe,
+            },
+        );
+    }
+    Ok(out)
+}
+
+fn run_module(
+    loaded: &HashMap<String, LoadedModule>,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let lm = loaded
+        .get(name)
+        .with_context(|| format!("module '{name}' not loaded"))?;
+    if inputs.len() != lm.spec.inputs.len() {
+        bail!(
+            "module '{name}' wants {} inputs, got {}",
+            lm.spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (t, spec) in inputs.iter().zip(&lm.spec.inputs) {
+        if t.shape() != spec.shape.as_slice() {
+            bail!(
+                "module '{name}' input '{}' shape {:?} != manifest {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+    }
+    let literals: Vec<xla::Literal> = inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+    let result = lm
+        .exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing '{name}': {e}"))?;
+    // single device, single output buffer; modules are lowered with
+    // return_tuple=True so the buffer is a tuple of outputs
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| anyhow!("untupling '{name}' result: {e}"))?;
+    if parts.len() != lm.spec.outputs.len() {
+        bail!(
+            "module '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            lm.spec.outputs.len()
+        );
+    }
+    parts
+        .into_iter()
+        .zip(&lm.spec.outputs)
+        .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
+        .collect()
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape()))
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    Tensor::from_vec(shape, v)
+}
+
+// Exercised against real artifacts by rust/tests/integration.rs.
+
+/// Helper kept public for tests: make sure `Arc<XlaRuntime>` is shareable.
+pub fn assert_send_sync(_: &Arc<XlaRuntime>) {}

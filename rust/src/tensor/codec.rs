@@ -1,0 +1,501 @@
+//! Wire codec: how intermediate tensors cross the edge→server link.
+//!
+//! This is the byte-accounting substrate behind the paper's Fig 8/9. The
+//! occupancy masks carried through the 3D backbone (spconv semantics, see
+//! DESIGN.md §3) let feature volumes be encoded sparsely — exactly the
+//! mechanism that makes the paper's VFE transfer (1.18 MB) smaller than the
+//! raw cloud (1.84 MB) while in-network transfers balloon (7.2 / 29 MB).
+//!
+//! Formats:
+//!   * `DenseF32`    — raw row-major f32 payload
+//!   * `SparseF32`   — active-site indices (u32) + per-site channel values
+//!   * `MaskBitset`  — 1 bit per site (occupancy masks reconstruct exactly)
+//!   * `DenseQ8` / `SparseQ8` — int8 affine-quantized variants (the paper's
+//!     §VI future-work compression; ablated in the bench suite)
+//!
+//! `encode_auto` picks the smallest exact format; quantized formats are
+//! opt-in because they are lossy.
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+const MAGIC: u32 = 0x5350_5754; // "SPWT"
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    DenseF32 = 0,
+    SparseF32 = 1,
+    MaskBitset = 2,
+    DenseQ8 = 3,
+    SparseQ8 = 4,
+}
+
+impl Format {
+    fn from_u8(b: u8) -> Result<Format> {
+        Ok(match b {
+            0 => Format::DenseF32,
+            1 => Format::SparseF32,
+            2 => Format::MaskBitset,
+            3 => Format::DenseQ8,
+            4 => Format::SparseQ8,
+            _ => bail!("unknown wire format {b}"),
+        })
+    }
+
+    pub fn lossy(self) -> bool {
+        matches!(self, Format::DenseQ8 | Format::SparseQ8)
+    }
+}
+
+/// Encoding policy, part of the coordinator config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Smallest *exact* encoding (dense vs sparse vs bitset).
+    #[default]
+    Auto,
+    /// Force dense f32 (what the paper's unmodified implementation ships).
+    Dense,
+    /// Smallest encoding allowing int8 quantization (paper §VI extension).
+    AutoQuantized,
+}
+
+// ------------------------------------------------------------- primitives
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("wire truncated at {} (+{n})", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
+}
+
+// ---------------------------------------------------------- single tensor
+
+fn is_mask(t: &Tensor) -> bool {
+    t.channels() == 1 && t.data().iter().all(|&x| x == 0.0 || x == 1.0)
+}
+
+fn active_sites(t: &Tensor) -> Vec<u32> {
+    let c = t.channels().max(1);
+    t.data()
+        .chunks_exact(c)
+        .enumerate()
+        .filter(|(_, site)| site.iter().any(|&x| x != 0.0))
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+fn sparse_bytes(sites: usize, channels: usize, quantized: bool) -> usize {
+    let per_value = if quantized { 1 } else { 4 };
+    4 + sites * (4 + channels * per_value) + if quantized { 8 } else { 0 }
+}
+
+/// Size in bytes each format would need for this tensor (without header).
+pub fn payload_size(t: &Tensor, fmt: Format) -> usize {
+    let sites = active_sites(t).len();
+    match fmt {
+        Format::DenseF32 => t.size_bytes(),
+        Format::SparseF32 => sparse_bytes(sites, t.channels(), false),
+        Format::MaskBitset => t.spatial().div_ceil(8),
+        Format::DenseQ8 => 8 + t.numel(),
+        Format::SparseQ8 => sparse_bytes(sites, t.channels(), true),
+    }
+}
+
+fn choose(t: &Tensor, policy: Policy) -> Format {
+    match policy {
+        Policy::Dense => Format::DenseF32,
+        Policy::Auto => {
+            let mut best = Format::DenseF32;
+            let mut candidates = vec![Format::SparseF32];
+            if is_mask(t) {
+                candidates.push(Format::MaskBitset);
+            }
+            for f in candidates {
+                if payload_size(t, f) < payload_size(t, best) {
+                    best = f;
+                }
+            }
+            best
+        }
+        Policy::AutoQuantized => {
+            if is_mask(t) {
+                // masks quantize to themselves; bitset is already 1 bit
+                return choose(t, Policy::Auto);
+            }
+            let mut best = Format::DenseF32;
+            for f in [Format::SparseF32, Format::DenseQ8, Format::SparseQ8] {
+                if payload_size(t, f) < payload_size(t, best) {
+                    best = f;
+                }
+            }
+            best
+        }
+    }
+}
+
+fn quant_params(t: &Tensor) -> (f32, f32) {
+    // symmetric affine: x ≈ scale * q, q ∈ [-127, 127]
+    let m = t.abs_max();
+    let scale = if m == 0.0 { 1.0 } else { m / 127.0 };
+    (scale, 0.0)
+}
+
+fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
+    w.u8(name.len() as u8);
+    w.bytes(name.as_bytes());
+    w.u8(fmt as u8);
+    w.u8(t.shape().len() as u8);
+    for &d in t.shape() {
+        w.u32(d as u32);
+    }
+    match fmt {
+        Format::DenseF32 => {
+            for &x in t.data() {
+                w.f32(x);
+            }
+        }
+        Format::SparseF32 | Format::SparseQ8 => {
+            let sites = active_sites(t);
+            let c = t.channels().max(1);
+            w.u32(sites.len() as u32);
+            let (scale, _) = quant_params(t);
+            if fmt == Format::SparseQ8 {
+                w.f32(scale);
+                w.f32(0.0);
+            }
+            for &s in &sites {
+                w.u32(s);
+            }
+            for &s in &sites {
+                let site = &t.data()[s as usize * c..(s as usize + 1) * c];
+                for &x in site {
+                    if fmt == Format::SparseQ8 {
+                        w.u8(((x / scale).round().clamp(-127.0, 127.0)) as i8 as u8);
+                    } else {
+                        w.f32(x);
+                    }
+                }
+            }
+        }
+        Format::MaskBitset => {
+            let mut byte = 0u8;
+            let mut nbits = 0;
+            for &x in t.data() {
+                byte |= u8::from(x != 0.0) << nbits;
+                nbits += 1;
+                if nbits == 8 {
+                    w.u8(byte);
+                    byte = 0;
+                    nbits = 0;
+                }
+            }
+            if nbits > 0 {
+                w.u8(byte);
+            }
+        }
+        Format::DenseQ8 => {
+            let (scale, _) = quant_params(t);
+            w.f32(scale);
+            w.f32(0.0);
+            for &x in t.data() {
+                w.u8(((x / scale).round().clamp(-127.0, 127.0)) as i8 as u8);
+            }
+        }
+    }
+}
+
+fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
+    let nlen = r.u8()? as usize;
+    let name = String::from_utf8(r.take(nlen)?.to_vec()).context("tensor name")?;
+    let fmt = Format::from_u8(r.u8()?)?;
+    let ndim = r.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u32()? as usize);
+    }
+    let numel: usize = shape.iter().product();
+    let channels = shape.last().copied().unwrap_or(1).max(1);
+    let spatial = numel / channels;
+
+    let data = match fmt {
+        Format::DenseF32 => {
+            let mut v = Vec::with_capacity(numel);
+            for _ in 0..numel {
+                v.push(r.f32()?);
+            }
+            v
+        }
+        Format::SparseF32 | Format::SparseQ8 => {
+            let n = r.u32()? as usize;
+            if n > spatial {
+                bail!("sparse count {n} exceeds {spatial} sites");
+            }
+            let (scale, _) = if fmt == Format::SparseQ8 {
+                (r.f32()?, r.f32()?)
+            } else {
+                (1.0, 0.0)
+            };
+            let mut idx = Vec::with_capacity(n);
+            for _ in 0..n {
+                let i = r.u32()? as usize;
+                if i >= spatial {
+                    bail!("sparse index {i} out of {spatial}");
+                }
+                idx.push(i);
+            }
+            let mut v = vec![0.0f32; numel];
+            for &i in &idx {
+                for ch in 0..channels {
+                    v[i * channels + ch] = if fmt == Format::SparseQ8 {
+                        (r.u8()? as i8) as f32 * scale
+                    } else {
+                        r.f32()?
+                    };
+                }
+            }
+            v
+        }
+        Format::MaskBitset => {
+            let nbytes = numel.div_ceil(8);
+            let bytes = r.take(nbytes)?;
+            (0..numel)
+                .map(|i| f32::from((bytes[i / 8] >> (i % 8)) & 1))
+                .collect()
+        }
+        Format::DenseQ8 => {
+            let scale = r.f32()?;
+            let _zp = r.f32()?;
+            let mut v = Vec::with_capacity(numel);
+            for _ in 0..numel {
+                v.push((r.u8()? as i8) as f32 * scale);
+            }
+            v
+        }
+    };
+    Ok((name, Tensor::from_vec(&shape, data)?))
+}
+
+// ----------------------------------------------------------------- packet
+
+/// A named bundle of tensors crossing the link (one split boundary's live
+/// set, or the final predictions coming back).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Packet {
+    pub fn new(tensors: Vec<(String, Tensor)>) -> Packet {
+        Packet { tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    pub fn encode(&self, policy: Policy) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(MAGIC);
+        w.u8(1); // version
+        w.u32(self.tensors.len() as u32);
+        for (name, t) in &self.tensors {
+            let fmt = choose(t, policy);
+            encode_tensor(&mut w, name, t, fmt);
+        }
+        w.buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Packet> {
+        let mut r = Reader::new(bytes);
+        if r.u32()? != MAGIC {
+            bail!("bad wire magic");
+        }
+        if r.u8()? != 1 {
+            bail!("unsupported wire version");
+        }
+        let n = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            tensors.push(decode_tensor(&mut r)?);
+        }
+        if !r.done() {
+            bail!("trailing bytes in wire packet");
+        }
+        Ok(Packet { tensors })
+    }
+
+    /// Encoded size without building the buffer (bench fast-path).
+    pub fn encoded_size(&self, policy: Policy) -> usize {
+        let mut total = 4 + 1 + 4;
+        for (name, t) in &self.tensors {
+            let fmt = choose(t, policy);
+            total += 1 + name.len() + 1 + 1 + 4 * t.shape().len();
+            total += payload_size(t, fmt);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn masked_tensor(rng: &mut Rng, shape: &[usize], occupancy: f64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let c = t.channels();
+        let spatial = t.spatial();
+        for s in 0..spatial {
+            if rng.chance(occupancy) {
+                for ch in 0..c {
+                    t.data_mut()[s * c + ch] = rng.normal() as f32;
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 3], 1.0);
+        let p = Packet::new(vec![("x".into(), t.clone())]);
+        let back = Packet::decode(&p.encode(Policy::Dense)).unwrap();
+        assert_eq!(back.get("x").unwrap(), &t);
+    }
+
+    #[test]
+    fn sparse_roundtrip_exact() {
+        let mut rng = Rng::new(2);
+        let t = masked_tensor(&mut rng, &[8, 16, 16, 8], 0.1);
+        let p = Packet::new(vec![("f".into(), t.clone())]);
+        let bytes = p.encode(Policy::Auto);
+        assert!(bytes.len() < t.size_bytes() / 2, "sparse should win at 10%");
+        assert_eq!(Packet::decode(&bytes).unwrap().get("f").unwrap(), &t);
+    }
+
+    #[test]
+    fn mask_bitset_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut m = Tensor::zeros(&[8, 16, 16, 1]);
+        for x in m.data_mut() {
+            *x = f32::from(rng.chance(0.3));
+        }
+        let p = Packet::new(vec![("m".into(), m.clone())]);
+        let bytes = p.encode(Policy::Auto);
+        // bitset: 2048 bits = 256 bytes + header
+        assert!(bytes.len() < 400, "mask should bitset-encode, got {}", bytes.len());
+        assert_eq!(Packet::decode(&bytes).unwrap().get("m").unwrap(), &m);
+    }
+
+    #[test]
+    fn quantized_bounded_error() {
+        let mut rng = Rng::new(4);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 16], 0.5);
+        let p = Packet::new(vec![("q".into(), t.clone())]);
+        let back = Packet::decode(&p.encode(Policy::AutoQuantized)).unwrap();
+        let q = back.get("q").unwrap();
+        let step = t.abs_max() / 127.0;
+        assert!(t.max_abs_diff(q).unwrap() <= step * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn auto_picks_dense_when_full() {
+        let mut rng = Rng::new(5);
+        let t = masked_tensor(&mut rng, &[4, 4, 4, 2], 1.0);
+        let p = Packet::new(vec![("d".into(), t.clone())]);
+        // sparse would cost indices on top of every value: dense must win
+        assert!(p.encode(Policy::Auto).len() <= p.encode(Policy::Dense).len() + 16);
+    }
+
+    #[test]
+    fn encoded_size_matches_actual() {
+        let mut rng = Rng::new(6);
+        for occ in [0.0, 0.05, 0.5, 1.0] {
+            let t = masked_tensor(&mut rng, &[4, 8, 8, 4], occ);
+            let m = {
+                let mut m = Tensor::zeros(&[4, 8, 8, 1]);
+                for x in m.data_mut() {
+                    *x = f32::from(rng.chance(occ));
+                }
+                m
+            };
+            let p = Packet::new(vec![("f".into(), t), ("m".into(), m)]);
+            for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+                assert_eq!(p.encode(policy).len(), p.encoded_size(policy), "{policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_tensor_order_preserved() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![3.0, 4.0, 5.0]).unwrap();
+        let p = Packet::new(vec![("a".into(), a), ("b".into(), b)]);
+        let back = Packet::decode(&p.encode(Policy::Auto)).unwrap();
+        assert_eq!(back.tensors[0].0, "a");
+        assert_eq!(back.tensors[1].0, "b");
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let t = Tensor::zeros(&[4, 4]);
+        let p = Packet::new(vec![("x".into(), t)]);
+        let mut bytes = p.encode(Policy::Dense);
+        bytes[0] ^= 0xff;
+        assert!(Packet::decode(&bytes).is_err());
+        let p2 = Packet::new(vec![("y".into(), Tensor::zeros(&[2]))]);
+        let good = p2.encode(Policy::Dense);
+        assert!(Packet::decode(&good[..good.len() - 1]).is_err());
+    }
+}

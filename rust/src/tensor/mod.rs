@@ -1,0 +1,203 @@
+//! Dense f32 tensor type shared by every rust-side stage.
+//!
+//! Deliberately minimal: the heavy math lives in the AOT'd XLA modules;
+//! rust only voxelizes, routes, encodes and post-processes. Layout is
+//! row-major (last dim fastest), matching XLA's default
+//! `{n-1, ..., 1, 0}` layout so literals copy straight through.
+
+pub mod codec;
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of "spatial" sites when the last dim is channels.
+    pub fn spatial(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    /// Channel count (last dim; 1 for rank-0/1 tensors).
+    pub fn channels(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    /// Flat index for a multi-index. Debug-checked.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {idx:?} out of shape {:?} at {i}", self.shape);
+            f = f * d + x;
+        }
+        f
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let f = self.flat(idx);
+        self.data[f] = v;
+    }
+
+    /// Max |x| over the tensor (codec calibration).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Fraction of spatial sites with any non-zero channel.
+    pub fn occupancy(&self) -> f64 {
+        let c = self.channels();
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let occ = self
+            .data
+            .chunks_exact(c.max(1))
+            .filter(|site| site.iter().any(|&x| x != 0.0))
+            .count();
+        occ as f64 / self.spatial() as f64
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} to {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Largest absolute elementwise difference (∞-norm); None on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Option<f32> {
+        if self.shape != other.shape {
+            return None;
+        }
+        Some(
+            self.data
+                .iter()
+                .zip(&other.data)
+                .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs())),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_indexing_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.data()[1 * 12 + 2 * 4 + 3], 7.0);
+        assert_eq!(t.get(&[1, 2, 3]), 7.0);
+    }
+
+    #[test]
+    fn occupancy_counts_sites_not_elements() {
+        let mut t = Tensor::zeros(&[2, 2, 2]); // 4 sites, 2 channels
+        t.set(&[0, 0, 1], 5.0);
+        t.set(&[1, 1, 0], -1.0);
+        assert!((t.occupancy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let r = t.clone().reshaped(&[3, 2]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.clone().reshaped(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.0 + 1e-6]).unwrap();
+        assert!(a.allclose(&b, 1e-4, 1e-4));
+        assert!(a.max_abs_diff(&b).unwrap() < 1e-5);
+        let c = Tensor::zeros(&[3]);
+        assert_eq!(a.max_abs_diff(&c), None);
+    }
+}

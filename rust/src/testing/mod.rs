@@ -1,0 +1,73 @@
+//! Property-testing harness (proptest substitute, offline build).
+//!
+//! Seeded randomized cases without shrinking; a failing case prints its
+//! seed so `SPLITPOINT_PROP_SEED=<n>` replays it exactly.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (`SPLITPOINT_PROP_CASES` overrides).
+pub fn default_cases() -> usize {
+    std::env::var("SPLITPOINT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("SPLITPOINT_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5eed_2026);
+    let replay = std::env::var("SPLITPOINT_PROP_SEED").is_ok();
+    let n = if replay { 1 } else { cases };
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64 * 0x9e37_79b9);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}, replay with \
+                 SPLITPOINT_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 10, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPLITPOINT_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("fails", 5, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,198 @@
+//! Tiny declarative CLI parser (clap substitute, offline build).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// One option's declaration (help text only; parsing is permissive).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// One subcommand's declaration.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Application CLI description.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+    pub global_opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    /// Parse argv (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help(args.subcommand.as_deref()));
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // value-taking if the next token isn't another flag
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => {
+                                it.next().unwrap().clone()
+                            }
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.insert(key, val);
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                if !self.commands.iter().any(|c| c.name == a.as_str()) {
+                    bail!(
+                        "unknown command '{a}'; try `{} --help`",
+                        self.bin
+                    );
+                }
+                args.subcommand = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Generated help text.
+    pub fn help(&self, command: Option<&str>) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        if let Some(cmd) = command.and_then(|c| self.commands.iter().find(|x| x.name == c)) {
+            let _ = writeln!(s, "{} {} — {}\n", self.bin, cmd.name, cmd.help);
+            let _ = writeln!(s, "options:");
+            for o in cmd.opts.iter().chain(&self.global_opts) {
+                let v = o.value.map(|v| format!(" <{v}>")).unwrap_or_default();
+                let _ = writeln!(s, "  --{}{v:<18} {}", o.name, o.help);
+            }
+            return s;
+        }
+        let _ = writeln!(s, "{} — {}\n", self.bin, self.about);
+        let _ = writeln!(s, "commands:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<14} {}", c.name, c.help);
+        }
+        let _ = writeln!(s, "\nglobal options:");
+        for o in &self.global_opts {
+            let v = o.value.map(|v| format!(" <{v}>")).unwrap_or_default();
+            let _ = writeln!(s, "  --{}{v:<18} {}", o.name, o.help);
+        }
+        let _ = writeln!(s, "\nrun `{} <command> --help` for command options", self.bin);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "t",
+            about: "test",
+            commands: vec![
+                CommandSpec {
+                    name: "run",
+                    help: "run it",
+                    opts: vec![],
+                },
+                CommandSpec {
+                    name: "sweep",
+                    help: "sweep it",
+                    opts: vec![],
+                },
+            ],
+            global_opts: vec![],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        cli().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["run", "--frames", "10", "--split=conv1", "--realtime"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("frames"), Some("10"));
+        assert_eq!(a.get("split"), Some("conv1"));
+        assert_eq!(a.get("realtime"), Some("true"));
+        assert_eq!(a.get_parse::<usize>("frames").unwrap(), Some(10));
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(parse(&["frob"]).is_err());
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse(&["run", "file1", "file2"]).unwrap();
+        assert_eq!(a.positional, ["file1", "file2"]);
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse(&["run", "--frames", "ten"]).unwrap();
+        let e = a.get_parse::<usize>("frames").unwrap_err().to_string();
+        assert!(e.contains("frames"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["run", "--offset=-3.5"]).unwrap();
+        assert_eq!(a.get_parse::<f64>("offset").unwrap(), Some(-3.5));
+    }
+}

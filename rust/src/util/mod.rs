@@ -1,0 +1,5 @@
+//! Shared substrates: JSON, PRNG, CLI parsing, small helpers.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,190 @@
+//! Voxelizer: the pre-process stage (paper Fig 3, "Pre-process").
+//!
+//! Scatters a point cloud into the dense (sum, count) grids that the VFE
+//! module consumes. This runs on the edge device for every split pattern
+//! except raw offload, so it is a rust hot path: a single pass over the
+//! points, branch-light inner loop, no allocation beyond the two output
+//! grids.
+
+use crate::model::manifest::ModelConfig;
+use crate::pointcloud::PointCloud;
+use crate::tensor::Tensor;
+
+/// Point→voxel scatter for a fixed grid geometry.
+#[derive(Debug, Clone)]
+pub struct Voxelizer {
+    grid: [usize; 3], // (D, H, W)
+    origin: [f32; 3], // (x0, y0, z0)
+    inv_voxel: [f32; 3], // 1 / (vx, vy, vz)
+    features: usize,
+}
+
+/// Output of the pre-process stage.
+#[derive(Debug, Clone)]
+pub struct VoxelGrids {
+    /// (D, H, W, F) per-voxel feature sums
+    pub sum: Tensor,
+    /// (D, H, W, 1) per-voxel point counts
+    pub cnt: Tensor,
+    /// points that fell inside the grid
+    pub in_range: usize,
+}
+
+impl Voxelizer {
+    pub fn from_config(cfg: &ModelConfig) -> Voxelizer {
+        let [d, h, w] = cfg.grid;
+        // voxel_size is (z, y, x); compute from ranges to avoid drift
+        let vx = (cfg.pc_range_x.1 - cfg.pc_range_x.0) / w as f64;
+        let vy = (cfg.pc_range_y.1 - cfg.pc_range_y.0) / h as f64;
+        let vz = (cfg.pc_range_z.1 - cfg.pc_range_z.0) / d as f64;
+        Voxelizer {
+            grid: cfg.grid,
+            origin: [
+                cfg.pc_range_x.0 as f32,
+                cfg.pc_range_y.0 as f32,
+                cfg.pc_range_z.0 as f32,
+            ],
+            inv_voxel: [1.0 / vx as f32, 1.0 / vy as f32, 1.0 / vz as f32],
+            features: cfg.point_features,
+        }
+    }
+
+    pub fn grid(&self) -> [usize; 3] {
+        self.grid
+    }
+
+    /// Scatter one cloud. Points outside the range are dropped (the scene
+    /// generator pre-clips, but KITTI scans and raw-offload inputs do not).
+    pub fn voxelize(&self, cloud: &PointCloud) -> VoxelGrids {
+        let [d, h, w] = self.grid;
+        let f = self.features;
+        let mut sum = Tensor::zeros(&[d, h, w, f]);
+        let mut cnt = Tensor::zeros(&[d, h, w, 1]);
+        let sum_data = sum.data_mut();
+        let cnt_data = cnt.data_mut();
+        let [x0, y0, z0] = self.origin;
+        let [ivx, ivy, ivz] = self.inv_voxel;
+        let (df, hf, wf) = (d as f32, h as f32, w as f32);
+        let mut in_range = 0usize;
+
+        for p in &cloud.points {
+            // compute all three cell coords, then one combined bounds check
+            let fx = (p.x - x0) * ivx;
+            let fy = (p.y - y0) * ivy;
+            let fz = (p.z - z0) * ivz;
+            if fx < 0.0 || fx >= wf || fy < 0.0 || fy >= hf || fz < 0.0 || fz >= df {
+                continue;
+            }
+            let (ix, iy, iz) = (fx as usize, fy as usize, fz as usize);
+            let site = (iz * h + iy) * w + ix;
+            let base = site * f;
+            sum_data[base] += p.x;
+            sum_data[base + 1] += p.y;
+            sum_data[base + 2] += p.z;
+            if f > 3 {
+                sum_data[base + 3] += p.intensity;
+            }
+            cnt_data[site] += 1.0;
+            in_range += 1;
+        }
+
+        VoxelGrids { sum, cnt, in_range }
+    }
+
+    /// Occupied-voxel count of a scatter result.
+    pub fn occupied(grids: &VoxelGrids) -> usize {
+        grids.cnt.data().iter().filter(|&&c| c > 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::Point;
+
+    fn test_config() -> ModelConfig {
+        use crate::model::manifest::tests::test_manifest;
+        test_manifest().config
+    }
+
+    fn vox() -> Voxelizer {
+        Voxelizer::from_config(&test_config())
+    }
+
+    #[test]
+    fn scatter_places_point_in_correct_voxel() {
+        let v = vox();
+        // voxel sizes: x,y: 0.36, z: 0.25; ranges x [0,46.08], y [-23.04,..], z [-3,1]
+        let cloud = PointCloud {
+            points: vec![Point { x: 0.5, y: -23.0, z: -2.9, intensity: 0.7 }],
+        };
+        let g = v.voxelize(&cloud);
+        assert_eq!(g.in_range, 1);
+        // ix = 0.5/0.36 = 1, iy = 0.04/0.36 = 0, iz = 0.1/0.25 = 0
+        assert_eq!(g.cnt.get(&[0, 0, 1, 0]), 1.0);
+        assert_eq!(g.sum.get(&[0, 0, 1, 0]), 0.5);
+        assert_eq!(g.sum.get(&[0, 0, 1, 3]), 0.7);
+        assert_eq!(Voxelizer::occupied(&g), 1);
+    }
+
+    #[test]
+    fn out_of_range_points_dropped() {
+        let v = vox();
+        let cloud = PointCloud {
+            points: vec![
+                Point { x: -1.0, y: 0.0, z: 0.0, intensity: 0.0 },
+                Point { x: 47.0, y: 0.0, z: 0.0, intensity: 0.0 },
+                Point { x: 5.0, y: 0.0, z: 1.5, intensity: 0.0 },
+            ],
+        };
+        let g = v.voxelize(&cloud);
+        assert_eq!(g.in_range, 0);
+        assert_eq!(Voxelizer::occupied(&g), 0);
+    }
+
+    #[test]
+    fn counts_accumulate() {
+        let v = vox();
+        let p = Point { x: 10.0, y: 0.0, z: -1.0, intensity: 0.5 };
+        let cloud = PointCloud { points: vec![p; 5] };
+        let g = v.voxelize(&cloud);
+        assert_eq!(g.in_range, 5);
+        assert_eq!(Voxelizer::occupied(&g), 1);
+        let total: f32 = g.cnt.data().iter().sum();
+        assert_eq!(total, 5.0);
+        // mean recoverable: sum / cnt == x
+        let site = g.cnt.data().iter().position(|&c| c > 0.0).unwrap();
+        assert!((g.sum.data()[site * 4] / 5.0 - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn boundary_points_land_in_last_voxel() {
+        let v = vox();
+        let eps = 1e-4;
+        let cloud = PointCloud {
+            points: vec![Point {
+                x: 46.08 - eps,
+                y: 23.04 - eps,
+                z: 1.0 - eps,
+                intensity: 0.1,
+            }],
+        };
+        let g = v.voxelize(&cloud);
+        assert_eq!(g.in_range, 1);
+        assert_eq!(g.cnt.get(&[15, 127, 127, 0]), 1.0);
+    }
+
+    #[test]
+    fn synthetic_scene_occupancy_in_expected_band() {
+        // The transfer-size mechanism (Fig 8) depends on VFE occupancy being
+        // a few percent — assert the generator + voxelizer land there.
+        let v = vox();
+        let scene = crate::pointcloud::scene::SceneGenerator::with_seed(1).generate();
+        let g = v.voxelize(&scene.cloud);
+        let occ = Voxelizer::occupied(&g) as f64 / (16.0 * 128.0 * 128.0);
+        assert!(
+            (0.005..0.15).contains(&occ),
+            "VFE occupancy {occ:.4} outside the KITTI-like band"
+        );
+    }
+}

@@ -1,0 +1,252 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! The centrepiece is the split-computing correctness theorem: for every
+//! split point, the detections must equal the edge-only run — splitting is
+//! an implementation detail of *where* compute happens, never of *what* is
+//! computed.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::adaptive;
+use splitpoint::coordinator::remote::{EdgeClient, Server};
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::postprocess::Detection;
+use splitpoint::tensor::codec::Policy;
+use splitpoint::Manifest;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_manifest() -> Manifest {
+    Manifest::load(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+/// One shared engine for the whole test binary (PJRT compile is expensive).
+fn engine() -> &'static Engine {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        let manifest = load_manifest();
+        Engine::new(&manifest, SystemConfig::paper()).expect("engine")
+    })
+}
+
+fn dets_equal(a: &[Detection], b: &[Detection], tol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && (x.score - y.score).abs() <= tol
+                && x.boxx
+                    .iter()
+                    .zip(&y.boxx)
+                    .all(|(p, q)| (p - q).abs() <= tol * 10.0)
+        })
+}
+
+#[test]
+fn split_equals_unsplit_at_every_point() {
+    let e = engine();
+    let scene = SceneGenerator::with_seed(42).generate();
+    let baseline = e
+        .run_frame(&scene.cloud, e.graph().split_edge_only())
+        .expect("edge-only run");
+    assert!(!baseline.detections.is_empty(), "baseline found nothing");
+    for sp in e.graph().all_splits() {
+        let r = e.run_frame(&scene.cloud, sp).expect("split run");
+        assert!(
+            dets_equal(&r.detections, &baseline.detections, 1e-4),
+            "split '{}' diverged from edge-only ({} vs {} dets)",
+            e.graph().split_label(sp),
+            r.detections.len(),
+            baseline.detections.len()
+        );
+    }
+}
+
+#[test]
+fn timing_breakdown_is_consistent() {
+    let e = engine();
+    let scene = SceneGenerator::with_seed(7).generate();
+    for sp in e.graph().all_splits() {
+        let r = e.run_frame(&scene.cloud, sp).unwrap();
+        let t = &r.timing;
+        // inference covers edge time
+        assert!(t.inference_time >= t.edge_time, "{}", t.split_label);
+        // every node ran exactly once
+        assert_eq!(t.node_times.len(), e.graph().len());
+        // edge-only has no wire traffic; others have uplink
+        if sp.head_len == e.graph().len() {
+            assert_eq!(t.uplink_bytes, 0);
+            assert_eq!(t.uplink_time.nanos, 0);
+        } else {
+            assert!(t.uplink_bytes > 0, "{}", t.split_label);
+            assert!(t.uplink_time.nanos > 0);
+            assert!(t.downlink_bytes > 0);
+        }
+    }
+}
+
+#[test]
+fn transfer_sizes_reproduce_fig8_ordering() {
+    // the paper's Fig 8 mechanism: VFE wire < raw cloud < conv1 < conv2
+    let e = engine();
+    let scene = SceneGenerator::with_seed(11).generate();
+    let raw = scene.cloud.size_bytes();
+    let bytes = |name: &str| {
+        e.run_frame(&scene.cloud, e.graph().split_after(name).unwrap())
+            .unwrap()
+            .timing
+            .uplink_bytes
+    };
+    let vfe = bytes("vfe");
+    let conv1 = bytes("conv1");
+    let conv2 = bytes("conv2");
+    assert!(vfe < raw, "vfe {vfe} !< raw {raw}");
+    assert!(raw < conv1, "raw {raw} !< conv1 {conv1}");
+    assert!(conv1 < conv2, "conv1 {conv1} !< conv2 {conv2}");
+}
+
+#[test]
+fn quantized_codec_shrinks_wire_and_preserves_detections() {
+    let manifest = load_manifest();
+    let e = engine();
+    let mut cfg = SystemConfig::paper();
+    cfg.codec = Policy::AutoQuantized;
+    let eq = Engine::with_runtime(&manifest, cfg, e.runtime().clone()).unwrap();
+
+    let scene = SceneGenerator::with_seed(13).generate();
+    let sp = e.graph().split_after("conv1").unwrap();
+    let exact = e.run_frame(&scene.cloud, sp).unwrap();
+    let quant = eq.run_frame(&scene.cloud, sp).unwrap();
+    assert!(
+        quant.timing.uplink_bytes < exact.timing.uplink_bytes * 2 / 3,
+        "int8 should shrink the wire: {} vs {}",
+        quant.timing.uplink_bytes,
+        exact.timing.uplink_bytes
+    );
+    // lossy but close: counts may differ by threshold-straddling slots,
+    // and near-tied ranks may swap — require that most exact detections
+    // have a same-class, high-IoU counterpart in the quantized set
+    let (nq, ne) = (quant.detections.len(), exact.detections.len());
+    assert!(
+        (nq as i64 - ne as i64).unsigned_abs() as usize <= ne / 5 + 2,
+        "detection count drifted too far: {nq} vs {ne}"
+    );
+    let gts: Vec<_> = exact
+        .detections
+        .iter()
+        .map(|d| splitpoint::postprocess::eval::GroundTruth {
+            boxx: d.boxx,
+            class: d.class,
+        })
+        .collect();
+    let m = splitpoint::postprocess::eval::match_frame(&quant.detections, &gts, 0.7, false);
+    assert!(
+        m.matches.len() * 10 >= ne * 7,
+        "only {}/{} exact detections survived quantization",
+        m.matches.len(),
+        ne
+    );
+}
+
+#[test]
+fn adaptive_estimates_match_measurements() {
+    let e = engine();
+    let scene = SceneGenerator::with_seed(17).generate();
+    let estimates = adaptive::estimate_splits(e, &scene.cloud).unwrap();
+    for est in estimates {
+        let r = e.run_frame(&scene.cloud, est.split).unwrap();
+        // the additive cost model matches the engine up to host-timing
+        // noise (XLA executions vary run to run) and the encode/decode
+        // cost the analytic model omits
+        let measured = r.timing.inference_time.as_millis_f64();
+        let predicted = est.inference_time.as_millis_f64();
+        let rel = (measured - predicted).abs() / measured.max(1.0);
+        assert!(
+            rel < 0.5,
+            "split '{}': predicted {predicted:.1} ms, measured {measured:.1} ms",
+            est.label
+        );
+        assert_eq!(est.uplink_bytes, r.timing.uplink_bytes, "{}", est.label);
+    }
+}
+
+#[test]
+fn tcp_roundtrip_matches_local() {
+    let manifest = load_manifest();
+    let e = engine();
+    let shared = Arc::new(
+        Engine::with_runtime(&manifest, SystemConfig::paper(), e.runtime().clone()).unwrap(),
+    );
+    let server = Server::spawn("127.0.0.1:0", shared.clone()).unwrap();
+    let addr = server.addr();
+
+    let scene = SceneGenerator::with_seed(23).generate();
+    let sp = shared.graph().split_after("vfe").unwrap();
+    let local = shared.run_frame(&scene.cloud, sp).unwrap();
+
+    let mut client = EdgeClient::connect(addr, shared.clone()).unwrap();
+    let (dets, timing) = client.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_equal(&dets, &local.detections, 1e-4));
+    assert!(timing.uplink_bytes > 0);
+    assert!(timing.inference_time.nanos > 0);
+    client.shutdown().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn tcp_serves_multiple_clients_and_splits() {
+    let manifest = load_manifest();
+    let e = engine();
+    let shared = Arc::new(
+        Engine::with_runtime(&manifest, SystemConfig::paper(), e.runtime().clone()).unwrap(),
+    );
+    let server = Server::spawn("127.0.0.1:0", shared.clone()).unwrap();
+    let addr = server.addr();
+
+    let mut handles = Vec::new();
+    for (i, split) in ["vfe", "conv1"].iter().enumerate() {
+        let shared = shared.clone();
+        let split = split.to_string();
+        handles.push(std::thread::spawn(move || {
+            let sp = shared.graph().split_after(&split).unwrap();
+            let scene = SceneGenerator::with_seed(100 + i as u64).generate();
+            let mut client = EdgeClient::connect(addr, shared.clone()).unwrap();
+            for _ in 0..2 {
+                let (dets, _) = client.run_frame(&scene.cloud, sp).unwrap();
+                assert!(!dets.is_empty());
+            }
+            client.shutdown().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn empty_cloud_runs_cleanly() {
+    let e = engine();
+    let empty = splitpoint::pointcloud::PointCloud::default();
+    for name in ["vfe", "conv2"] {
+        let r = e
+            .run_frame(&empty, e.graph().split_after(name).unwrap())
+            .unwrap();
+        // no points -> zero grids -> the pipeline still produces K slots,
+        // all padding or low-score; no crash is the contract
+        assert!(r.timing.inference_time.nanos > 0);
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let e = engine();
+    let bad = splitpoint::Tensor::zeros(&[2, 2]);
+    assert!(e.runtime().execute("vfe", &[bad.clone(), bad]).is_err());
+    assert!(e.runtime().execute("nonexistent", &[]).is_err());
+}

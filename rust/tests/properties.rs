@@ -1,0 +1,534 @@
+//! Property-based tests over the coordinator invariants (no artifacts
+//! needed — these run on synthetic tensors and the declared module graph).
+
+use splitpoint::metrics::{SimTime, Stats};
+use splitpoint::model::graph::{Node, NodeKind, PipelineGraph, PRIMAL};
+use splitpoint::postprocess::nms::{bev_iou, nms_bev};
+use splitpoint::postprocess::Detection;
+use splitpoint::prop_assert;
+use splitpoint::tensor::codec::{Packet, Policy};
+use splitpoint::tensor::Tensor;
+use splitpoint::testing::{check, default_cases};
+use splitpoint::util::json;
+use splitpoint::util::rng::Rng;
+
+// ------------------------------------------------------------- generators
+
+fn random_shape(rng: &mut Rng) -> Vec<usize> {
+    let rank = rng.range(1, 4) as usize;
+    (0..rank).map(|_| rng.range(1, 12) as usize).collect()
+}
+
+fn random_tensor(rng: &mut Rng, occupancy: f64) -> Tensor {
+    let shape = random_shape(rng);
+    let mut t = Tensor::zeros(&shape);
+    let c = t.channels();
+    let spatial = t.spatial();
+    for s in 0..spatial {
+        if rng.chance(occupancy) {
+            for ch in 0..c {
+                t.data_mut()[s * c + ch] = rng.normal() as f32 * 3.0;
+            }
+        }
+    }
+    t
+}
+
+fn random_mask(rng: &mut Rng, occupancy: f64) -> Tensor {
+    let mut shape = random_shape(rng);
+    *shape.last_mut().unwrap() = 1;
+    let mut t = Tensor::zeros(&shape);
+    for x in t.data_mut() {
+        *x = f32::from(rng.chance(occupancy));
+    }
+    t
+}
+
+fn random_box(rng: &mut Rng) -> [f32; 7] {
+    [
+        rng.uniform(0.0, 46.0) as f32,
+        rng.uniform(-23.0, 23.0) as f32,
+        rng.uniform(-3.0, 1.0) as f32,
+        rng.uniform(0.3, 6.0) as f32,
+        rng.uniform(0.3, 3.0) as f32,
+        rng.uniform(0.3, 3.0) as f32,
+        rng.uniform(-3.15, 3.15) as f32,
+    ]
+}
+
+// ------------------------------------------------------------------ codec
+
+#[test]
+fn prop_codec_roundtrip_exact_policies() {
+    check("codec roundtrip", default_cases(), |rng| {
+        let occ = rng.f64();
+        let t = random_tensor(rng, occ);
+        let m = random_mask(rng, occ);
+        let p = Packet::new(vec![("f".into(), t.clone()), ("m".into(), m.clone())]);
+        for policy in [Policy::Auto, Policy::Dense] {
+            let back = Packet::decode(&p.encode(policy))
+                .map_err(|e| format!("decode failed: {e}"))?;
+            prop_assert!(back.get("f") == Some(&t), "feature tensor mutated ({policy:?})");
+            prop_assert!(back.get("m") == Some(&m), "mask tensor mutated ({policy:?})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_auto_never_larger_than_dense() {
+    check("auto <= dense", default_cases(), |rng| {
+        let occ = rng.f64();
+        let t = random_tensor(rng, occ);
+        let p = Packet::new(vec![("t".into(), t)]);
+        let auto = p.encode(Policy::Auto).len();
+        let dense = p.encode(Policy::Dense).len();
+        prop_assert!(auto <= dense, "auto {auto} > dense {dense}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_size_reporting_is_exact() {
+    check("encoded_size == len", default_cases(), |rng| {
+        let occ_t = rng.f64();
+        let occ_m = rng.f64();
+        let t = random_tensor(rng, occ_t);
+        let m = random_mask(rng, occ_m);
+        let p = Packet::new(vec![("a".into(), t), ("b".into(), m)]);
+        for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+            prop_assert!(
+                p.encode(policy).len() == p.encoded_size(policy),
+                "size mismatch under {policy:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_step() {
+    check("quant error bound", default_cases(), |rng| {
+        let t = random_tensor(rng, 1.0);
+        let p = Packet::new(vec![("t".into(), t.clone())]);
+        let back = Packet::decode(&p.encode(Policy::AutoQuantized))
+            .map_err(|e| format!("{e}"))?;
+        let q = back.get("t").unwrap();
+        let step = t.abs_max() / 127.0;
+        let err = t.max_abs_diff(q).unwrap();
+        prop_assert!(
+            err <= step * 0.5 + 1e-6,
+            "quant error {err} > half-step {}",
+            step * 0.5
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_bytes_monotone_in_occupancy() {
+    check("sparse monotone", default_cases(), |rng| {
+        let shape = [4usize, 8, 8, rng.range(1, 8) as usize];
+        let occ_lo = rng.f64() * 0.5;
+        let occ_hi = occ_lo + rng.f64() * 0.5;
+        // nested occupancy: hi's active set contains lo's
+        let mut lo = Tensor::zeros(&shape);
+        let mut hi = Tensor::zeros(&shape);
+        let c = lo.channels();
+        for s in 0..lo.spatial() {
+            let u = rng.f64();
+            let v = rng.normal() as f32 + 2.0;
+            if u < occ_lo {
+                for ch in 0..c {
+                    lo.data_mut()[s * c + ch] = v;
+                }
+            }
+            if u < occ_hi {
+                for ch in 0..c {
+                    hi.data_mut()[s * c + ch] = v;
+                }
+            }
+        }
+        let b_lo = Packet::new(vec![("t".into(), lo)]).encode(Policy::Auto).len();
+        let b_hi = Packet::new(vec![("t".into(), hi)]).encode(Policy::Auto).len();
+        prop_assert!(b_lo <= b_hi, "bytes not monotone: {b_lo} > {b_hi}");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------- nms
+
+#[test]
+fn prop_nms_kept_set_is_mutually_disjoint() {
+    check("nms disjoint", default_cases(), |rng| {
+        let n = rng.range(1, 40) as usize;
+        let mut dets: Vec<Detection> = (0..n)
+            .map(|_| Detection {
+                score: rng.f32(),
+                boxx: random_box(rng),
+                class: rng.below(3),
+            })
+            .collect();
+        dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let thr = (rng.f64() * 0.9) as f32 + 0.05;
+        let keep = nms_bev(&dets, thr, 100);
+        for (i, &a) in keep.iter().enumerate() {
+            for &b in &keep[i + 1..] {
+                let iou = bev_iou(&dets[a].boxx, &dets[b].boxx);
+                prop_assert!(
+                    iou <= thr as f64 + 1e-9,
+                    "kept boxes {a},{b} overlap iou={iou} > {thr}"
+                );
+            }
+        }
+        // keep order must be by descending score
+        for w in keep.windows(2) {
+            prop_assert!(
+                dets[w[0]].score >= dets[w[1]].score,
+                "keep not score-sorted"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_iou_is_symmetric_and_bounded() {
+    check("iou symmetric", default_cases(), |rng| {
+        let a = random_box(rng);
+        let b = random_box(rng);
+        let ab = bev_iou(&a, &b);
+        let ba = bev_iou(&b, &a);
+        prop_assert!((ab - ba).abs() < 1e-6, "asymmetric: {ab} vs {ba}");
+        prop_assert!((0.0..=1.0 + 1e-9).contains(&ab), "iou {ab} out of range");
+        let aa = bev_iou(&a, &a);
+        prop_assert!((aa - 1.0).abs() < 1e-6, "self-iou {aa} != 1");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- graph / liveness (T2)
+
+fn random_chain_graph(rng: &mut Rng) -> PipelineGraph {
+    // a random linear chain with occasional skip connections, modelling the
+    // conv2/3/4 -> roi_head pattern; always ends in the final outputs
+    let n = rng.range(3, 9) as usize;
+    let mut nodes = Vec::new();
+    let mut produced: Vec<String> = vec![PRIMAL.to_string()];
+    for i in 0..n {
+        let mut inputs = vec![produced.last().unwrap().clone()];
+        // random skip input from earlier
+        if produced.len() > 2 && rng.chance(0.4) {
+            let j = rng.below(produced.len() - 1);
+            if !inputs.contains(&produced[j]) {
+                inputs.push(produced[j].clone());
+            }
+        }
+        let outputs = if i == n - 1 {
+            vec![
+                "roi_scores".to_string(),
+                "roi_boxes".to_string(),
+                "roi_classes".to_string(),
+            ]
+        } else {
+            vec![format!("t{i}")]
+        };
+        produced.extend(outputs.iter().cloned());
+        nodes.push(Node {
+            name: format!("n{i}"),
+            kind: NodeKind::Xla,
+            inputs,
+            outputs,
+        });
+    }
+    PipelineGraph::new(nodes).expect("random chain is valid")
+}
+
+#[test]
+fn prop_live_set_is_exactly_the_cut_edges() {
+    check("liveness cut", default_cases(), |rng| {
+        let g = random_chain_graph(rng);
+        for sp in g.all_splits() {
+            let live = g.live_set(sp);
+            let head: std::collections::HashSet<&str> = g
+                .head_nodes(sp)
+                .iter()
+                .flat_map(|n| n.outputs.iter().map(String::as_str))
+                .chain([PRIMAL])
+                .collect();
+            let tail_needs: std::collections::HashSet<&str> = g
+                .tail_nodes(sp)
+                .iter()
+                .flat_map(|n| n.inputs.iter().map(String::as_str))
+                .collect();
+            // 1. everything in the live set is produced in the head and
+            //    consumed in the tail
+            for t in &live {
+                prop_assert!(head.contains(t.as_str()), "'{t}' not head-produced");
+                prop_assert!(tail_needs.contains(t.as_str()), "'{t}' not tail-consumed");
+            }
+            // 2. completeness: every tail-consumed head-tensor is present
+            for t in tail_needs {
+                let produced_in_tail = g
+                    .tail_nodes(sp)
+                    .iter()
+                    .any(|n| n.outputs.iter().any(|o| o == t));
+                if head.contains(t) && !produced_in_tail {
+                    prop_assert!(
+                        live.iter().any(|l| l == t),
+                        "live set missing '{t}' at split {sp:?}"
+                    );
+                }
+            }
+            // 3. no duplicates
+            let mut dedup = live.clone();
+            dedup.dedup();
+            prop_assert!(dedup.len() == live.len(), "duplicate entries in live set");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_plus_tail_nodes_partition_graph() {
+    check("split partition", default_cases(), |rng| {
+        let g = random_chain_graph(rng);
+        for sp in g.all_splits() {
+            prop_assert!(
+                g.head_nodes(sp).len() + g.tail_nodes(sp).len() == g.len(),
+                "partition broken at {sp:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ json
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+        use json::Value;
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Value::Str(
+                (0..rng.below(12))
+                    .map(|_| *rng.pick(&['a', 'π', '"', '\\', '\n', 'z', ' ']))
+                    .collect(),
+            ),
+            4 => Value::Arr((0..rng.below(5)).map(|_| random_value(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", default_cases(), |rng| {
+        let v = random_value(rng, 0);
+        let compact = json::parse(&v.to_string()).map_err(|e| format!("compact: {e}"))?;
+        prop_assert!(compact == v, "compact roundtrip mutated value");
+        let pretty = json::parse(&v.pretty()).map_err(|e| format!("pretty: {e}"))?;
+        prop_assert!(pretty == v, "pretty roundtrip mutated value");
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- metrics
+
+#[test]
+fn prop_percentiles_are_order_statistics() {
+    check("percentiles", default_cases(), |rng| {
+        let n = rng.range(1, 200) as usize;
+        let mut s = Stats::new();
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        for &x in &xs {
+            s.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        prop_assert!((s.percentile(0.0) - xs[0]).abs() < 1e-9, "p0 != min");
+        prop_assert!(
+            (s.percentile(100.0) - xs[n - 1]).abs() < 1e-9,
+            "p100 != max"
+        );
+        let p50 = s.percentile(50.0);
+        prop_assert!(p50 >= xs[0] - 1e-9 && p50 <= xs[n - 1] + 1e-9, "p50 outside range");
+        // monotone in q
+        let mut prev = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = s.percentile(q);
+            prop_assert!(v >= prev - 1e-12, "percentile not monotone at q={q}");
+            prev = v;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simtime_add_is_associative_enough() {
+    check("simtime", default_cases(), |rng| {
+        let a = SimTime::from_secs_f64(rng.f64());
+        let b = SimTime::from_secs_f64(rng.f64());
+        let c = SimTime::from_secs_f64(rng.f64());
+        let l = (a + b) + c;
+        let r = a + (b + c);
+        prop_assert!(l == r, "associativity failed");
+        prop_assert!(a + SimTime::ZERO == a, "identity failed");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- voxelizer
+
+#[test]
+fn prop_voxelizer_conserves_points() {
+    use splitpoint::pointcloud::{Point, PointCloud};
+    use splitpoint::voxel::Voxelizer;
+
+    // a config matching the python-side geometry
+    let manifest_json = include_str!("data/test_manifest.json");
+    let manifest =
+        splitpoint::Manifest::parse(manifest_json, std::path::Path::new("/nonexistent")).unwrap();
+    let vox = Voxelizer::from_config(&manifest.config);
+
+    check("voxelizer conserves", default_cases(), |rng| {
+        let n = rng.range(0, 500) as usize;
+        let points: Vec<Point> = (0..n)
+            .map(|_| Point {
+                // straddle the range boundary: ~half in range
+                x: rng.uniform(-10.0, 56.0) as f32,
+                y: rng.uniform(-33.0, 33.0) as f32,
+                z: rng.uniform(-4.0, 2.0) as f32,
+                intensity: rng.f32(),
+            })
+            .collect();
+        let cloud = PointCloud { points };
+        let g = vox.voxelize(&cloud);
+        let total_cnt: f32 = g.cnt.data().iter().sum();
+        prop_assert!(
+            total_cnt as usize == g.in_range,
+            "cnt sum {total_cnt} != in_range {}",
+            g.in_range
+        );
+        prop_assert!(g.in_range <= cloud.len(), "more scattered than given");
+        // feature sums are finite
+        prop_assert!(
+            g.sum.data().iter().all(|x| x.is_finite()),
+            "non-finite sums"
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ robustness
+
+#[test]
+fn prop_packet_decode_survives_fuzz() {
+    // arbitrary bytes must produce Err or Ok — never a panic/abort
+    check("decode fuzz", default_cases(), |rng| {
+        let n = rng.range(0, 300) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = Packet::decode(&bytes); // outcome irrelevant; no panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packet_truncation_always_errors() {
+    check("truncation", default_cases(), |rng| {
+        let occ = rng.f64();
+        let t = random_tensor(rng, occ);
+        let p = Packet::new(vec![("t".into(), t)]);
+        let bytes = p.encode(Policy::Auto);
+        if bytes.len() < 2 {
+            return Ok(());
+        }
+        let cut = 1 + rng.below(bytes.len() - 1);
+        prop_assert!(
+            Packet::decode(&bytes[..cut]).is_err(),
+            "truncated packet ({cut}/{}) decoded successfully",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packet_bitflip_never_panics() {
+    check("bitflip", default_cases(), |rng| {
+        let occ_t = rng.f64();
+        let occ_m = rng.f64();
+        let t = random_tensor(rng, occ_t);
+        let m = random_mask(rng, occ_m);
+        let p = Packet::new(vec![("a".into(), t), ("b".into(), m)]);
+        let mut bytes = p.encode(Policy::Auto);
+        let i = rng.below(bytes.len());
+        bytes[i] ^= 1 << rng.below(8);
+        let _ = Packet::decode(&bytes); // no panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cli_parser_never_panics() {
+    use splitpoint::util::cli::{Cli, CommandSpec};
+    let cli = Cli {
+        bin: "t",
+        about: "fuzz",
+        commands: vec![CommandSpec {
+            name: "run",
+            help: "",
+            opts: vec![],
+        }],
+        global_opts: vec![],
+    };
+    let tokens = [
+        "run", "--x", "--y=1", "-z", "pos", "--", "--frames", "10", "=",
+        "--=", "--a=b=c", "π", "",
+    ];
+    check("cli fuzz", default_cases(), |rng| {
+        let n = rng.range(0, 6) as usize;
+        let argv: Vec<String> = (0..n)
+            .map(|_| tokens[rng.below(tokens.len())].to_string())
+            .filter(|t| t != "-h" && t != "--help")
+            .collect();
+        let _ = cli.parse(&argv); // Err is fine; panic is not
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nms_respects_max_keep_and_empty() {
+    check("nms bounds", default_cases(), |rng| {
+        let n = rng.range(0, 30) as usize;
+        let mut dets: Vec<Detection> = (0..n)
+            .map(|_| Detection {
+                score: rng.f32(),
+                boxx: random_box(rng),
+                class: 0,
+            })
+            .collect();
+        dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let max_keep = rng.below(10);
+        let keep = nms_bev(&dets, 0.5, max_keep);
+        prop_assert!(keep.len() <= max_keep, "kept {} > {max_keep}", keep.len());
+        prop_assert!(
+            keep.len() <= dets.len(),
+            "kept more than given"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_fork_streams_are_independent() {
+    check("rng fork", 16, |rng| {
+        let mut a = rng.fork();
+        let mut b = rng.fork();
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        prop_assert!(same < 4, "forked streams collide ({same}/32)");
+        Ok(())
+    });
+}
