@@ -1,8 +1,16 @@
 //! Micro-benchmarks of the rust hot paths (perf-pass instrumentation):
-//! voxelizer scatter, wire codec encode/decode, NMS, per-module XLA
-//! execution, and the TCP frame protocol.
+//! voxelizer scatter (pooled steady state), wire codec encode/decode, NMS,
+//! per-module execution, and the whole-frame paths.
 //!
-//!   cargo bench --bench micro [-- keyword…]
+//!   cargo bench --bench micro [-- keyword…] [-- --json]
+//!
+//! `--json` additionally writes `BENCH_micro.json` at the repo root
+//! (per-bench mean/p50/p95 + throughput). The file keeps the recorded
+//! `baseline` section across runs — the first run seeds it — so the perf
+//! trajectory (`speedup_vs_baseline`) is tracked in-tree; see docs/PERF.md.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use splitpoint::bench::{print_table, run_bench, BenchConfig, BenchResult};
 use splitpoint::config::SystemConfig;
@@ -11,45 +19,56 @@ use splitpoint::pointcloud::scene::SceneGenerator;
 use splitpoint::postprocess::nms::nms_bev;
 use splitpoint::postprocess::Detection;
 use splitpoint::tensor::codec::{Packet, Policy};
+use splitpoint::util::json::{self, Value};
 use splitpoint::util::rng::Rng;
 use splitpoint::voxel::Voxelizer;
-use splitpoint::Manifest;
+use splitpoint::{Manifest, Tensor};
 
 fn want(filters: &[String], key: &str) -> bool {
     filters.is_empty() || filters.iter().any(|f| key.contains(f.as_str()))
 }
 
 fn main() -> anyhow::Result<()> {
-    let filters: Vec<String> = std::env::args()
-        .skip(1)
-        .filter(|a| !a.starts_with("--"))
-        .collect();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_out = args.iter().any(|a| a == "--json");
+    let filters: Vec<String> = args.into_iter().filter(|a| !a.starts_with("--")).collect();
     let cfg = BenchConfig::from_env();
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let mut results: Vec<BenchResult> = Vec::new();
 
     let scene = SceneGenerator::with_seed(1).generate();
 
-    // ---- voxelizer
+    // ---- voxelizer: pooled steady state (scatter + sparse clear), plus
+    // the pre-refactor behaviour measured from HEAD (`@legacy`: no pool —
+    // every frame allocates and zero-fills the dense grids)
     if want(&filters, "voxelizer") {
         let vox = Voxelizer::from_config(&manifest.config);
         results.push(run_bench("voxelizer/scatter_20k_pts", cfg, || {
             let g = vox.voxelize(&scene.cloud);
             std::hint::black_box(g.in_range);
+            vox.recycle(g);
+            None
+        }));
+        let cold = Voxelizer::from_config(&manifest.config);
+        results.push(run_bench("voxelizer/scatter_20k_pts@legacy", cfg, || {
+            let g = cold.voxelize(&scene.cloud);
+            std::hint::black_box(g.in_range);
+            // grids dropped, never recycled: fresh 4.25 MB alloc + zero
+            // per frame, like the pre-refactor scatter
             None
         }));
     }
 
-    // ---- codec
+    // ---- codec: the VFE-split live set at KITTI-like occupancy
     if want(&filters, "codec") {
         let vox = Voxelizer::from_config(&manifest.config);
         let grids = vox.voxelize(&scene.cloud);
-        let packet = Packet::new(vec![
+        let packet = Packet::from_shared(vec![
             ("sum".into(), grids.sum.clone()),
             ("cnt".into(), grids.cnt.clone()),
         ]);
         for (name, policy) in [
-            ("codec/encode_auto", Policy::Auto),
+            ("codec/encode_sparse", Policy::Auto),
             ("codec/encode_dense", Policy::Dense),
             ("codec/encode_quant", Policy::AutoQuantized),
         ] {
@@ -59,8 +78,36 @@ fn main() -> anyhow::Result<()> {
                 None
             }));
         }
+        // steady-state wire path: encode into a reused, exactly-sized buffer
+        {
+            let p = packet.clone();
+            let mut buf = Vec::new();
+            results.push(run_bench("codec/encode_sparse_reused_buf", cfg, move || {
+                p.encode_into(Policy::Auto, &mut buf);
+                std::hint::black_box(buf.len());
+                None
+            }));
+        }
+        // pre-refactor behaviour measured from HEAD: the old frame path
+        // deep-cloned every tensor into the packet and had no cached site
+        // index, so each encode rescanned the dense grids (cold caches)
+        {
+            let (sum, cnt) = (grids.sum.clone(), grids.cnt.clone());
+            // from_vec strips the cached site index: every iteration pays
+            // the deep clone + the scan-then-emit double pass, like the
+            // string-keyed engine did
+            let cold = |t: &Arc<Tensor>| Tensor::from_vec(t.shape(), t.data().to_vec()).unwrap();
+            results.push(run_bench("codec/encode_sparse@legacy", cfg, move || {
+                let p = Packet::new(vec![
+                    ("sum".into(), cold(&sum)),
+                    ("cnt".into(), cold(&cnt)),
+                ]);
+                std::hint::black_box(p.encode(Policy::Auto).len());
+                None
+            }));
+        }
         let bytes = packet.encode(Policy::Auto);
-        results.push(run_bench("codec/decode_auto", cfg, move || {
+        results.push(run_bench("codec/decode_sparse", cfg, move || {
             std::hint::black_box(Packet::decode(&bytes).unwrap().tensors.len());
             None
         }));
@@ -91,8 +138,8 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
-    // ---- per-module XLA execution + frame paths
-    if want(&filters, "xla") || want(&filters, "frame") {
+    // ---- per-module execution + whole-frame paths
+    if want(&filters, "xla") || want(&filters, "run_frame") {
         let engine = Engine::new(&manifest, SystemConfig::paper())?;
         if want(&filters, "xla") {
             let (store, _) = engine.profile_frame(&scene.cloud)?;
@@ -100,10 +147,10 @@ fn main() -> anyhow::Result<()> {
                 if node.kind != splitpoint::model::graph::NodeKind::Xla {
                     continue;
                 }
-                let inputs: Vec<_> = node
-                    .inputs
+                let inputs: Vec<Arc<Tensor>> = node
+                    .input_ids()
                     .iter()
-                    .map(|n| store[n].clone())
+                    .map(|&id| store.get(id).expect("profiled input").clone())
                     .collect();
                 let name = format!("xla/{}", node.name);
                 let rt = engine.runtime().clone();
@@ -114,10 +161,10 @@ fn main() -> anyhow::Result<()> {
                 }));
             }
         }
-        if want(&filters, "frame") {
+        if want(&filters, "run_frame") {
             for split in ["vfe", "conv1", "edge_only"] {
                 let sp = engine.graph().split_by_name(split)?;
-                let name = format!("frame/wall_{split}");
+                let name = format!("run_frame/{split}");
                 let e = &engine;
                 let cloud = scene.cloud.clone();
                 results.push(run_bench(&name, cfg, move || {
@@ -129,5 +176,83 @@ fn main() -> anyhow::Result<()> {
     }
 
     print_table("micro benches (wall-clock host ms)", &results);
+    if json_out {
+        write_json(&results, cfg, filters.is_empty())?;
+    }
+    Ok(())
+}
+
+/// Write `BENCH_micro.json`: current numbers, the tracked baseline, and
+/// per-bench speedups. The baseline is only seeded/extended by *full*
+/// (unfiltered) runs so a keyword-filtered run can never pin a partial
+/// baseline; `@legacy` benches re-measure the pre-refactor behaviour from
+/// HEAD, yielding a before/after pair in every run.
+fn write_json(results: &[BenchResult], cfg: BenchConfig, full_run: bool) -> anyhow::Result<()> {
+    let mut current: BTreeMap<String, Value> = BTreeMap::new();
+    for r in results {
+        let mean = r.stats.mean();
+        let mut e = BTreeMap::new();
+        e.insert("mean_ms".to_string(), Value::num(mean));
+        e.insert("p50_ms".to_string(), Value::num(r.stats.p50()));
+        e.insert("p95_ms".to_string(), Value::num(r.stats.p95()));
+        e.insert(
+            "throughput_per_s".to_string(),
+            Value::num(if mean > 0.0 { 1000.0 / mean } else { 0.0 }),
+        );
+        current.insert(r.name.clone(), Value::Obj(e));
+    }
+
+    let existing = std::fs::read_to_string("BENCH_micro.json")
+        .ok()
+        .and_then(|t| json::parse(&t).ok());
+    let mut baseline: BTreeMap<String, Value> = existing
+        .as_ref()
+        .and_then(|v| v.get("baseline"))
+        .and_then(Value::as_obj)
+        .cloned()
+        .unwrap_or_default();
+    if full_run {
+        // first full run seeds the baseline; later full runs only add
+        // benches the baseline has never seen
+        for (k, v) in &current {
+            baseline.entry(k.clone()).or_insert_with(|| v.clone());
+        }
+    }
+
+    let mean_of = |v: &Value| v.get("mean_ms").and_then(Value::as_f64);
+    let mut vs_baseline: BTreeMap<String, Value> = BTreeMap::new();
+    let mut vs_legacy: BTreeMap<String, Value> = BTreeMap::new();
+    for (k, cur) in &current {
+        let cm = mean_of(cur);
+        if let (Some(bm), Some(cm)) = (baseline.get(k).and_then(&mean_of), cm) {
+            if cm > 0.0 {
+                vs_baseline.insert(k.clone(), Value::num(bm / cm));
+            }
+        }
+        // "name" vs "name@legacy" measured in the same run
+        if let (Some(lm), Some(cm)) =
+            (current.get(&format!("{k}@legacy")).and_then(&mean_of), cm)
+        {
+            if cm > 0.0 {
+                vs_legacy.insert(k.clone(), Value::num(lm / cm));
+            }
+        }
+    }
+
+    let out = Value::Obj(BTreeMap::from([
+        (
+            "schema".to_string(),
+            Value::str("splitpoint-micro-bench/v1"),
+        ),
+        ("status".to_string(), Value::str("measured")),
+        ("iters".to_string(), Value::num(cfg.iters as f64)),
+        ("warmup_iters".to_string(), Value::num(cfg.warmup_iters as f64)),
+        ("baseline".to_string(), Value::Obj(baseline)),
+        ("current".to_string(), Value::Obj(current)),
+        ("speedup_vs_baseline".to_string(), Value::Obj(vs_baseline)),
+        ("speedup_vs_legacy".to_string(), Value::Obj(vs_legacy)),
+    ]));
+    std::fs::write("BENCH_micro.json", out.pretty())?;
+    eprintln!("[micro] wrote BENCH_micro.json");
     Ok(())
 }

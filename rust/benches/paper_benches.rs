@@ -6,6 +6,11 @@
 //!
 //! Environment: SPLITPOINT_BENCH_FRAMES (default 5) controls the workload;
 //! the committed EXPERIMENTS.md numbers used 10.
+//!
+//! Backend note: under the default (offline) build the modules run on the
+//! in-crate reference executor; with `--features pjrt` they run the AOT'd
+//! HLO artifacts. Virtual-clock numbers are comparable either way because
+//! the device profiles scale measured host time (see config::SystemConfig).
 
 use std::sync::Arc;
 

@@ -37,29 +37,35 @@ pub fn estimate_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitE
     let graph = engine.graph();
     let policy = cfg.codec;
 
+    // packets share the profiled tensors by refcount; encoded_size runs
+    // off each tensor's cached occupied-site index, so costing every
+    // split rescans nothing
+    let shared_packet = |ids: &[crate::model::graph::TensorId]| {
+        Packet::from_shared(
+            ids.iter()
+                .map(|&id| {
+                    (
+                        graph.tensor_name(id).to_string(),
+                        store.get(id).cloned().expect("profiled tensor present"),
+                    )
+                })
+                .collect(),
+        )
+    };
+
     let mut estimates = Vec::new();
     for sp in graph.all_splits() {
-        let live = graph.live_set(sp);
+        let live = graph.live_ids(sp);
         let uplink_bytes = if live.is_empty() {
             0
         } else {
-            Packet::new(
-                live.iter()
-                    .map(|n| (n.clone(), store[n].clone()))
-                    .collect(),
-            )
-            .encoded_size(policy)
+            shared_packet(live).encoded_size(policy)
         };
-        let resp = graph.response_set(sp);
+        let resp = graph.response_ids(sp);
         let downlink_bytes = if resp.is_empty() {
             0
         } else {
-            Packet::new(
-                resp.iter()
-                    .map(|n| (n.clone(), store[n].clone()))
-                    .collect(),
-            )
-            .encoded_size(policy)
+            shared_packet(resp).encoded_size(policy)
         };
 
         let edge_compute: SimTime = host_times[..sp.head_len]

@@ -75,30 +75,46 @@ impl Batcher {
     /// Dequeue the next batch. Blocks until the policy triggers a flush or
     /// the batcher is closed; `None` means closed-and-drained.
     pub fn next_batch(&self) -> Option<Vec<Frame>> {
+        let mut out = Vec::new();
+        if self.next_batch_into(&mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free [`Self::next_batch`]: drain the next batch into
+    /// `out` (cleared first; its capacity is reused across batches, so a
+    /// steady-state consumer loop allocates nothing). Returns `false` when
+    /// the batcher is closed and drained.
+    pub fn next_batch_into(&self, out: &mut Vec<Frame>) -> bool {
+        out.clear();
         let mut q = self.q.lock().unwrap();
         loop {
             if q.frames.len() >= self.policy.max_frames {
-                return Some(self.drain(&mut q));
+                self.drain_into(&mut q, out);
+                return true;
             }
             if let Some((_, t0)) = q.frames.front() {
                 let age = t0.elapsed();
                 if age >= self.policy.max_wait {
-                    return Some(self.drain(&mut q));
+                    self.drain_into(&mut q, out);
+                    return true;
                 }
                 let remaining = self.policy.max_wait - age;
                 let (guard, _) = self.cv.wait_timeout(q, remaining).unwrap();
                 q = guard;
             } else if q.closed {
-                return None;
+                return false;
             } else {
                 q = self.cv.wait(q).unwrap();
             }
         }
     }
 
-    fn drain(&self, q: &mut Queue) -> Vec<Frame> {
+    fn drain_into(&self, q: &mut Queue, out: &mut Vec<Frame>) {
         let n = q.frames.len().min(self.policy.max_frames);
-        q.frames.drain(..n).map(|(f, _)| f).collect()
+        out.extend(q.frames.drain(..n).map(|(f, _)| f));
     }
 }
 
@@ -173,6 +189,25 @@ mod tests {
                 .collect();
             assert_eq!(seqs, [0, 1, 2], "sensor {sensor}");
         }
+    }
+
+    #[test]
+    fn next_batch_into_reuses_buffer() {
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        let mut buf = Vec::new();
+        for round in 0..3u64 {
+            b.push(frame(0, round * 2));
+            b.push(frame(0, round * 2 + 1));
+            assert!(b.next_batch_into(&mut buf));
+            assert_eq!(buf.len(), 2);
+            assert_eq!(buf[0].seq, round * 2);
+        }
+        b.close();
+        assert!(!b.next_batch_into(&mut buf));
+        assert!(buf.is_empty(), "closed drain must clear the buffer");
     }
 
     #[test]

@@ -2,14 +2,19 @@
 //! pipeline under a split point, producing detections plus the full timing
 //! breakdown the paper's figures are built from.
 //!
-//! Compute runs for real (XLA on this host, rust for preprocess/proposal);
-//! measured host time is scaled by the device profile onto the virtual
-//! clock, and link time comes from the link model (DESIGN.md §3). The
-//! same engine backs the in-process simulator, both ends of the TCP
-//! transport, and every bench.
+//! Compute runs for real (XLA or the reference executor on this host, rust
+//! for preprocess/proposal); measured host time is scaled by the device
+//! profile onto the virtual clock, and link time comes from the link model
+//! (DESIGN.md §3). The same engine backs the in-process simulator, both
+//! ends of the TCP transport, and every bench.
+//!
+//! Zero-clone frame contract: the per-frame state is an id-indexed
+//! [`TensorStore`] of `Arc<Tensor>` slots — node I/O, wire-packet assembly
+//! and `finalize` share tensors by refcount. Steady state performs no
+//! `String` hashing, no full-tensor deep clones, and (via the voxelizer's
+//! scratch pool) no dense-grid allocation.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -17,11 +22,11 @@ use anyhow::{bail, Context, Result};
 use crate::config::SystemConfig;
 use crate::coordinator::link::LinkModel;
 use crate::metrics::SimTime;
-use crate::model::graph::{Node, NodeKind, PipelineGraph, SplitPoint, PRIMAL};
+use crate::model::graph::{NodeKind, PipelineGraph, SplitPoint, TensorId, TensorStore};
 use crate::model::manifest::Manifest;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::{assemble_predictions, Detection, ProposalConfig, ProposalStage};
-use crate::runtime::XlaRuntime;
+use crate::runtime::{ModuleId, XlaRuntime};
 use crate::tensor::codec::Packet;
 use crate::tensor::Tensor;
 use crate::voxel::Voxelizer;
@@ -92,7 +97,16 @@ pub struct Engine {
     proposal: ProposalStage,
     link: LinkModel,
     cfg: SystemConfig,
+    /// per-node module id (Xla nodes), resolved once at construction
+    node_modules: Vec<Option<ModuleId>>,
+    /// (points_sum, points_cnt) ids for scratch-pool recycling
+    scatter_ids: Option<(TensorId, TensorId)>,
+    /// reusable wire buffers (exact-size `encode_into` targets)
+    wire_buffers: Mutex<Vec<Vec<u8>>>,
 }
+
+/// Cap on pooled wire buffers (one per in-flight frame is plenty).
+const MAX_WIRE_BUFFERS: usize = 8;
 
 impl Engine {
     pub fn new(manifest: &Manifest, cfg: SystemConfig) -> Result<Engine> {
@@ -117,6 +131,19 @@ impl Engine {
             },
         );
         let link = LinkModel::new(cfg.link.clone());
+        let node_modules = graph
+            .nodes()
+            .iter()
+            .map(|node| match node.kind {
+                NodeKind::Xla => runtime.module_id(&node.name).map(Some),
+                _ => Ok(None),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let scatter_ids = graph
+            .nodes()
+            .iter()
+            .find(|n| n.kind == NodeKind::Preprocess)
+            .map(|n| (n.output_ids()[0], n.output_ids()[1]));
         Ok(Engine {
             runtime,
             graph,
@@ -124,6 +151,9 @@ impl Engine {
             proposal,
             link,
             cfg,
+            node_modules,
+            scatter_ids,
+            wire_buffers: Mutex::new(Vec::new()),
         })
     }
 
@@ -147,27 +177,36 @@ impl Engine {
         self.graph.split_by_name(&self.cfg.split)
     }
 
-    /// Execute one node against the tensor store. Returns host wall time.
+    /// A store sized for this engine's graph.
+    pub fn new_store(&self) -> TensorStore {
+        TensorStore::for_graph(&self.graph)
+    }
+
+    /// Execute node `node_idx` against the tensor store. Returns host wall
+    /// time. Inputs and outputs move through the store as `Arc` handles —
+    /// no tensor is deep-cloned on this path.
     pub fn run_node(
         &self,
-        node: &Node,
-        store: &mut HashMap<String, Tensor>,
+        node_idx: usize,
+        store: &mut TensorStore,
     ) -> Result<std::time::Duration> {
+        let node = &self.graph.nodes()[node_idx];
         let started = Instant::now();
         match node.kind {
             NodeKind::Preprocess => {
                 let pts = store
-                    .get(PRIMAL)
+                    .get(node.input_ids()[0])
                     .context("preprocess: no 'points' in store")?;
                 let cloud = PointCloud::from_flat(pts.data());
                 let grids = self.voxelizer.voxelize(&cloud);
-                store.insert("points_sum".into(), grids.sum);
-                store.insert("points_cnt".into(), grids.cnt);
+                store.insert(node.output_ids()[0], grids.sum);
+                store.insert(node.output_ids()[1], grids.cnt);
             }
             NodeKind::Proposal => {
-                let cls = store.get("cls_logits").context("proposal: cls_logits")?;
-                let boxp = store.get("box_preds").context("proposal: box_preds")?;
-                let dir = store.get("dir_logits").context("proposal: dir_logits")?;
+                let ids = node.input_ids();
+                let cls = store.get(ids[0]).context("proposal: cls_logits")?;
+                let boxp = store.get(ids[1]).context("proposal: box_preds")?;
+                let dir = store.get(ids[2]).context("proposal: dir_logits")?;
                 let props = self.proposal.run(cls, boxp, dir)?;
                 let k = props.classes.len();
                 let classes = Tensor::from_vec(
@@ -178,34 +217,50 @@ impl Engine {
                         .map(|&c| if c == usize::MAX { -1.0 } else { c as f32 })
                         .collect(),
                 )?;
-                store.insert("rois".into(), props.rois);
-                store.insert("roi_classes".into(), classes);
+                store.insert(node.output_ids()[0], Arc::new(props.rois));
+                store.insert(node.output_ids()[1], Arc::new(classes));
             }
             NodeKind::Xla => {
-                let inputs: Vec<Tensor> = node
-                    .inputs
-                    .iter()
-                    .map(|n| {
+                let module = self.node_modules[node_idx]
+                    .context("xla node without a resolved module id")?;
+                let mut inputs: Vec<Arc<Tensor>> = Vec::with_capacity(node.input_ids().len());
+                for (&id, name) in node.input_ids().iter().zip(&node.inputs) {
+                    inputs.push(
                         store
-                            .get(n)
-                            .cloned()
-                            .with_context(|| format!("node '{}': missing input '{n}'", node.name))
-                    })
-                    .collect::<Result<_>>()?;
-                let outputs = self.runtime.execute(&node.name, &inputs)?;
-                for (name, t) in node.outputs.iter().zip(outputs) {
-                    store.insert(name.clone(), t);
+                            .get(id)
+                            .with_context(|| {
+                                format!("node '{}': missing input '{name}'", node.name)
+                            })?
+                            .clone(),
+                    );
+                }
+                let outputs = self.runtime.execute_id(module, &inputs)?;
+                for (&id, t) in node.output_ids().iter().zip(outputs) {
+                    store.insert(id, Arc::new(t));
                 }
             }
         }
         Ok(started.elapsed())
     }
 
+    /// Frame teardown: take the scatter grids out of `store` and hand
+    /// them back to the voxelizer's scratch pool (no-op when a packet or
+    /// caller still shares them). Every frame driver — local, TCP client,
+    /// TCP server — calls this once the store is done.
+    pub fn reclaim_scratch(&self, store: &mut TensorStore) {
+        if let Some((sum_id, cnt_id)) = self.scatter_ids {
+            if let (Some(sum), Some(cnt)) = (store.take(sum_id), store.take(cnt_id)) {
+                self.voxelizer.recycle_parts(sum, cnt);
+            }
+        }
+    }
+
     /// Assemble final detections from the store (runs on the edge).
-    pub fn finalize(&self, store: &HashMap<String, Tensor>) -> Result<Vec<Detection>> {
-        let scores = store.get("roi_scores").context("no roi_scores")?;
-        let boxes = store.get("roi_boxes").context("no roi_boxes")?;
-        let classes_t = store.get("roi_classes").context("no roi_classes")?;
+    pub fn finalize(&self, store: &TensorStore) -> Result<Vec<Detection>> {
+        let [id_scores, id_boxes, id_classes] = self.graph.final_output_ids();
+        let scores = store.get(id_scores).context("no roi_scores")?;
+        let boxes = store.get(id_boxes).context("no roi_boxes")?;
+        let classes_t = store.get(id_classes).context("no roi_classes")?;
         let classes: Vec<usize> = classes_t
             .data()
             .iter()
@@ -225,52 +280,69 @@ impl Engine {
             bail!("split {:?} beyond pipeline length", sp);
         }
         let policy = self.cfg.codec;
-        let mut store: HashMap<String, Tensor> = HashMap::new();
-        store.insert(PRIMAL.into(), cloud.to_tensor());
+        let mut store = self.new_store();
+        store.insert(self.graph.primal_id(), Arc::new(cloud.to_tensor()));
 
         let mut node_times = Vec::with_capacity(self.graph.len());
 
         // ---- edge: head nodes
-        for node in self.graph.head_nodes(sp) {
-            let host = self.run_node(node, &mut store)?;
+        for idx in 0..sp.head_len {
+            let host = self.run_node(idx, &mut store)?;
+            let name = &self.graph.nodes()[idx].name;
             node_times.push((
-                node.name.clone(),
-                SimTime::from_duration(host).scaled(self.cfg.edge.factor_for(&node.name)),
+                name.clone(),
+                SimTime::from_duration(host).scaled(self.cfg.edge.factor_for(name)),
                 Side::Edge,
             ));
         }
 
         // ---- edge: encode live set, uplink
-        let live = self.graph.live_set(sp);
+        let live = self.graph.live_ids(sp);
         let (uplink_bytes, encode_time, decode_time) = if live.is_empty() {
             (0, SimTime::ZERO, SimTime::ZERO)
         } else {
-            let packet = Packet::new(
-                live.iter()
-                    .map(|n| -> Result<(String, Tensor)> {
-                        Ok((
-                            n.clone(),
-                            store
-                                .get(n)
-                                .cloned()
-                                .with_context(|| format!("live tensor '{n}' missing"))?,
-                        ))
-                    })
-                    .collect::<Result<_>>()?,
-            );
+            let mut tensors = Vec::with_capacity(live.len());
+            for &id in live {
+                let name = self.graph.tensor_name(id);
+                tensors.push((
+                    name.to_string(),
+                    store
+                        .get(id)
+                        .with_context(|| format!("live tensor '{name}' missing"))?
+                        .clone(),
+                ));
+            }
+            let packet = Packet::from_shared(tensors);
+            // encode into a pooled, exactly-presized buffer — the
+            // steady-state wire path allocates nothing
+            let mut buf = self
+                .wire_buffers
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_default();
             let t0 = Instant::now();
-            let bytes = packet.encode(policy);
+            packet.encode_into(policy, &mut buf);
             let enc = SimTime::from_duration(t0.elapsed()).scaled(self.cfg.edge.slowdown);
             let t1 = Instant::now();
-            let decoded = Packet::decode(&bytes)?;
+            let decoded = Packet::decode(&buf)?;
             let dec = SimTime::from_duration(t1.elapsed()).scaled(self.cfg.server.slowdown);
+            let wire_len = buf.len();
+            {
+                let mut pool = self.wire_buffers.lock().unwrap();
+                if pool.len() < MAX_WIRE_BUFFERS {
+                    pool.push(buf);
+                }
+            }
             // the server sees exactly the decoded tensors (quantization
             // round-trips through the wire, affecting tail numerics as it
-            // would in deployment)
-            for (name, t) in decoded.tensors {
-                store.insert(name, t);
+            // would in deployment); order is the live-set order, so ids
+            // line up without any name lookups
+            for (&id, (name, t)) in live.iter().zip(decoded.tensors) {
+                debug_assert_eq!(self.graph.tensor_name(id), name.as_str());
+                store.insert(id, t);
             }
-            (bytes.len(), enc, dec)
+            (wire_len, enc, dec)
         };
         let uplink_time = if sp.head_len == self.graph.len() {
             SimTime::ZERO
@@ -279,30 +351,41 @@ impl Engine {
         };
 
         // ---- server: tail nodes
-        for node in self.graph.tail_nodes(sp) {
-            let host = self.run_node(node, &mut store)?;
+        for idx in sp.head_len..self.graph.len() {
+            let host = self.run_node(idx, &mut store)?;
+            let name = &self.graph.nodes()[idx].name;
             node_times.push((
-                node.name.clone(),
-                SimTime::from_duration(host).scaled(self.cfg.server.factor_for(&node.name)),
+                name.clone(),
+                SimTime::from_duration(host).scaled(self.cfg.server.factor_for(name)),
                 Side::Server,
             ));
         }
 
         // ---- server: response back to the edge
-        let resp = self.graph.response_set(sp);
+        let resp = self.graph.response_ids(sp);
         let (downlink_bytes, downlink_time) = if resp.is_empty() {
             (0, SimTime::ZERO)
         } else {
-            let packet = Packet::new(
+            let packet = Packet::from_shared(
                 resp.iter()
-                    .map(|n| (n.clone(), store.get(n).cloned().unwrap()))
+                    .map(|&id| {
+                        (
+                            self.graph.tensor_name(id).to_string(),
+                            store.get(id).cloned().expect("response tensor produced"),
+                        )
+                    })
                     .collect(),
             );
-            let bytes = packet.encode(policy).len();
+            // only the byte count matters on the virtual clock; the exact
+            // size calculator skips building the buffer entirely
+            let bytes = packet.encoded_size(policy);
             (bytes, self.link.transfer_time(bytes))
         };
 
         let detections = self.finalize(&store)?;
+
+        // ---- teardown: hand the scatter grids back to the scratch pool
+        self.reclaim_scratch(&mut store);
 
         let edge_compute: SimTime = node_times
             .iter()
@@ -347,13 +430,13 @@ impl Engine {
     pub fn profile_frame(
         &self,
         cloud: &PointCloud,
-    ) -> Result<(HashMap<String, Tensor>, Vec<(String, std::time::Duration)>)> {
-        let mut store: HashMap<String, Tensor> = HashMap::new();
-        store.insert(PRIMAL.into(), cloud.to_tensor());
+    ) -> Result<(TensorStore, Vec<(String, std::time::Duration)>)> {
+        let mut store = self.new_store();
+        store.insert(self.graph.primal_id(), Arc::new(cloud.to_tensor()));
         let mut times = Vec::with_capacity(self.graph.len());
-        for node in self.graph.nodes() {
-            let host = self.run_node(node, &mut store)?;
-            times.push((node.name.clone(), host));
+        for idx in 0..self.graph.len() {
+            let host = self.run_node(idx, &mut store)?;
+            times.push((self.graph.nodes()[idx].name.clone(), host));
         }
         Ok((store, times))
     }

@@ -6,8 +6,12 @@
 //! timings are wall-clock on this host (no device scaling), so the numbers
 //! demonstrate the mechanism; the calibrated virtual-clock engine produces
 //! the paper-comparable figures.
+//!
+//! Wire packets are self-describing (tensor names), so each process
+//! resolves names to its graph's interned ids once per request at the
+//! boundary; everything inside the frame then runs on the id-indexed
+//! store, sharing tensors by refcount.
 
-use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -22,7 +26,6 @@ use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::Detection;
 use crate::tensor::codec::Packet;
-use crate::tensor::Tensor;
 
 /// Server handle: accept loop runs on background threads until shutdown.
 pub struct Server {
@@ -133,31 +136,44 @@ fn handle_connection(mut stream: TcpStream, engine: Arc<Engine>) -> Result<()> {
 
 /// Run the tail for one request. Returns (server compute nanos, response).
 fn serve_infer(engine: &Engine, head_len: usize, packet: &[u8]) -> Result<(u64, Vec<u8>)> {
-    let sp = SplitPoint { head_len };
+    let graph = engine.graph();
+    let start = head_len.min(graph.len());
+    let sp = SplitPoint { head_len: start };
     let decoded = Packet::decode(packet)?;
-    let mut store: HashMap<String, Tensor> = decoded.tensors.into_iter().collect();
+    let mut store = engine.new_store();
+    for (name, t) in decoded.tensors {
+        let id = graph
+            .tensor_id(&name)
+            .with_context(|| format!("wire tensor '{name}' not in this pipeline"))?;
+        store.insert(id, t);
+    }
 
     let t0 = Instant::now();
-    for node in engine.graph().tail_nodes(sp) {
-        engine.run_node(node, &mut store)?;
+    for idx in start..graph.len() {
+        engine.run_node(idx, &mut store)?;
     }
     let server_nanos = t0.elapsed().as_nanos() as u64;
 
-    let resp = engine.graph().response_set(sp);
-    let reply = Packet::new(
-        resp.iter()
-            .map(|n| -> Result<(String, Tensor)> {
+    let reply = Packet::from_shared(
+        graph
+            .response_ids(sp)
+            .iter()
+            .map(|&id| -> Result<_> {
                 Ok((
-                    n.clone(),
+                    graph.tensor_name(id).to_string(),
                     store
-                        .get(n)
+                        .get(id)
                         .cloned()
-                        .with_context(|| format!("response tensor '{n}' missing"))?,
+                        .with_context(|| {
+                            format!("response tensor '{}' missing", graph.tensor_name(id))
+                        })?,
                 ))
             })
             .collect::<Result<_>>()?,
     );
-    Ok((server_nanos, reply.encode(engine.config().codec)))
+    let bytes = reply.encode(engine.config().codec);
+    engine.reclaim_scratch(&mut store);
+    Ok((server_nanos, bytes))
 }
 
 /// Timing of one remote frame (wall-clock, realtime).
@@ -203,29 +219,42 @@ impl EdgeClient {
         let graph = engine.graph();
         let t_start = Instant::now();
 
-        let mut store: HashMap<String, Tensor> = HashMap::new();
-        store.insert(crate::model::graph::PRIMAL.into(), cloud.to_tensor());
-        for node in graph.head_nodes(sp) {
-            engine.run_node(node, &mut store)?;
+        let mut store = engine.new_store();
+        store.insert(graph.primal_id(), Arc::new(cloud.to_tensor()));
+        for idx in 0..sp.head_len.min(graph.len()) {
+            engine.run_node(idx, &mut store)?;
         }
-        let live = graph.live_set(sp);
-        let packet = Packet::new(
-            live.iter()
-                .map(|n| (n.clone(), store.get(n).cloned().unwrap()))
-                .collect(),
+        let packet = Packet::from_shared(
+            graph
+                .live_ids(sp)
+                .iter()
+                .map(|&id| -> Result<_> {
+                    Ok((
+                        graph.tensor_name(id).to_string(),
+                        store
+                            .get(id)
+                            .cloned()
+                            .with_context(|| {
+                                format!("live tensor '{}' missing", graph.tensor_name(id))
+                            })?,
+                    ))
+                })
+                .collect::<Result<_>>()?,
         );
         let bytes = packet.encode(engine.config().codec);
+        drop(packet); // release shared grids so frame teardown can recycle
         let edge_compute = SimTime::from_duration(t_start.elapsed());
 
         let request_id = self.next_id;
         self.next_id += 1;
         let t_send = Instant::now();
+        let uplink_bytes = bytes.len();
         write_message(
             &mut self.stream,
             &Message::Infer {
                 request_id,
                 head_len: sp.head_len as u8,
-                packet: bytes.clone(),
+                packet: bytes,
             },
         )?;
         let reply = read_message(&mut self.stream)?;
@@ -246,16 +275,20 @@ impl EdgeClient {
             other => bail!("unexpected reply {other:?}"),
         };
         for (name, t) in Packet::decode(&resp_packet)?.tensors {
-            store.insert(name, t);
+            let id = graph
+                .tensor_id(&name)
+                .with_context(|| format!("response tensor '{name}' not in this pipeline"))?;
+            store.insert(id, t);
         }
         let detections = engine.finalize(&store)?;
+        engine.reclaim_scratch(&mut store);
         let inference_time = SimTime::from_duration(t_start.elapsed());
 
         Ok((
             detections,
             RemoteTiming {
                 edge_compute,
-                uplink_bytes: bytes.len(),
+                uplink_bytes,
                 round_trip,
                 server_compute: SimTime {
                     nanos: server_nanos as u128,

@@ -31,6 +31,6 @@ pub mod testing;
 pub mod util;
 pub mod voxel;
 
-pub use model::graph::{PipelineGraph, SplitPoint};
+pub use model::graph::{PipelineGraph, SplitPoint, TensorId, TensorStore};
 pub use model::manifest::Manifest;
 pub use tensor::Tensor;

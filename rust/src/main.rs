@@ -160,9 +160,17 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         for (name, d) in &times {
             *host.entry(name.clone()).or_default() += d.as_secs_f64() * 1e3 / frames as f64;
         }
-        let live = engine.graph().live_set(engine.graph().split_after("conv2")?);
-        conv2_bytes += splitpoint::tensor::codec::Packet::new(
-            live.iter().map(|n| (n.clone(), store[n].clone())).collect(),
+        let graph = engine.graph();
+        let live = graph.live_ids(graph.split_after("conv2")?);
+        conv2_bytes += splitpoint::tensor::codec::Packet::from_shared(
+            live.iter()
+                .map(|&id| {
+                    (
+                        graph.tensor_name(id).to_string(),
+                        store.get(id).cloned().expect("profiled tensor present"),
+                    )
+                })
+                .collect(),
         )
         .encoded_size(engine.config().codec)
             / frames;

@@ -9,12 +9,19 @@
 //! artifacts: `preprocess` (point→voxel scatter, runs before VFE) and
 //! `proposal` (sigmoid + top-K + NMS between DenseHead and RoIHead, kept
 //! out of the HLO because its shapes are dynamic).
+//!
+//! Every tensor name is interned to a dense [`TensorId`] at build time and
+//! the per-split live/response sets are precomputed as id lists, so the
+//! per-frame execution path ([`crate::coordinator::engine`]) indexes a
+//! [`TensorStore`] slot vector instead of hashing `String`s.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::manifest::Manifest;
+use crate::tensor::Tensor;
 
 /// Where a node executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,6 +34,17 @@ pub enum NodeKind {
     Proposal,
 }
 
+/// Dense id of an interned tensor name (graph-scoped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+impl TensorId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// One stage of the ordered pipeline.
 #[derive(Debug, Clone)]
 pub struct Node {
@@ -34,6 +52,38 @@ pub struct Node {
     pub kind: NodeKind,
     pub inputs: Vec<String>,
     pub outputs: Vec<String>,
+    input_ids: Vec<TensorId>,
+    output_ids: Vec<TensorId>,
+}
+
+impl Node {
+    /// Build a node from its declared I/O. Tensor ids are assigned when
+    /// the node list is handed to [`PipelineGraph::new`].
+    pub fn new(
+        name: impl Into<String>,
+        kind: NodeKind,
+        inputs: Vec<String>,
+        outputs: Vec<String>,
+    ) -> Node {
+        Node {
+            name: name.into(),
+            kind,
+            inputs,
+            outputs,
+            input_ids: Vec::new(),
+            output_ids: Vec::new(),
+        }
+    }
+
+    /// Interned input ids, aligned with `inputs`.
+    pub fn input_ids(&self) -> &[TensorId] {
+        &self.input_ids
+    }
+
+    /// Interned output ids, aligned with `outputs`.
+    pub fn output_ids(&self) -> &[TensorId] {
+        &self.output_ids
+    }
 }
 
 /// The tensor crossing the sensor boundary into the pipeline.
@@ -53,45 +103,55 @@ pub struct SplitPoint {
 #[derive(Debug, Clone)]
 pub struct PipelineGraph {
     nodes: Vec<Node>,
-    /// tensor name -> producing node index (primal tensors absent).
-    produced_by: HashMap<String, usize>,
+    /// id -> name (id 0 is always the primal).
+    tensor_names: Vec<String>,
+    /// name -> id; only used at build time and by cross-process decoders.
+    tensor_ids: HashMap<String, TensorId>,
+    /// id -> producing node index (-1 for the primal).
+    producer: Vec<i64>,
+    /// precomputed live set per head_len (0..=len), as ids.
+    live_ids: Vec<Vec<TensorId>>,
+    /// precomputed response set per head_len (0..=len), as ids.
+    response_ids: Vec<Vec<TensorId>>,
+    /// ids of FINAL_OUTPUTS, in declaration order.
+    final_ids: [TensorId; 3],
 }
 
 impl PipelineGraph {
     /// Build the Voxel R-CNN pipeline graph from the artifact manifest.
     pub fn from_manifest(m: &Manifest) -> Result<PipelineGraph> {
-        let mut nodes = vec![Node {
-            name: "preprocess".into(),
-            kind: NodeKind::Preprocess,
-            inputs: vec![PRIMAL.into()],
-            outputs: vec!["points_sum".into(), "points_cnt".into()],
-        }];
+        let mut nodes = vec![Node::new(
+            "preprocess",
+            NodeKind::Preprocess,
+            vec![PRIMAL.into()],
+            vec!["points_sum".into(), "points_cnt".into()],
+        )];
         for spec in &m.modules {
             // the rust proposal stage slots between bev_head and roi_head
             if spec.name == "roi_head" {
-                nodes.push(Node {
-                    name: "proposal".into(),
-                    kind: NodeKind::Proposal,
-                    inputs: vec![
+                nodes.push(Node::new(
+                    "proposal",
+                    NodeKind::Proposal,
+                    vec![
                         "cls_logits".into(),
                         "box_preds".into(),
                         "dir_logits".into(),
                     ],
-                    outputs: vec!["rois".into(), "roi_classes".into()],
-                });
+                    vec!["rois".into(), "roi_classes".into()],
+                ));
             }
-            nodes.push(Node {
-                name: spec.name.clone(),
-                kind: NodeKind::Xla,
-                inputs: spec.inputs.iter().map(|t| t.name.clone()).collect(),
-                outputs: spec.outputs.iter().map(|t| t.name.clone()).collect(),
-            });
+            nodes.push(Node::new(
+                spec.name.clone(),
+                NodeKind::Xla,
+                spec.inputs.iter().map(|t| t.name.clone()).collect(),
+                spec.outputs.iter().map(|t| t.name.clone()).collect(),
+            ));
         }
         Self::new(nodes)
     }
 
     /// Build from an explicit node list (tests, alternative models).
-    pub fn new(nodes: Vec<Node>) -> Result<PipelineGraph> {
+    pub fn new(mut nodes: Vec<Node>) -> Result<PipelineGraph> {
         let mut produced_by = HashMap::new();
         for (i, n) in nodes.iter().enumerate() {
             for o in &n.outputs {
@@ -124,7 +184,87 @@ impl PipelineGraph {
                 bail!("graph never produces final output '{f}'");
             }
         }
-        Ok(PipelineGraph { nodes, produced_by })
+
+        // ---- intern every tensor name to a dense id (primal first)
+        let mut tensor_names: Vec<String> = vec![PRIMAL.to_string()];
+        let mut tensor_ids: HashMap<String, TensorId> = HashMap::new();
+        tensor_ids.insert(PRIMAL.to_string(), TensorId(0));
+        let mut intern = |name: &str,
+                          names: &mut Vec<String>,
+                          ids: &mut HashMap<String, TensorId>| {
+            if let Some(&id) = ids.get(name) {
+                return id;
+            }
+            let id = TensorId(names.len() as u32);
+            names.push(name.to_string());
+            ids.insert(name.to_string(), id);
+            id
+        };
+        for n in nodes.iter_mut() {
+            n.input_ids = n
+                .inputs
+                .iter()
+                .map(|t| intern(t, &mut tensor_names, &mut tensor_ids))
+                .collect();
+            n.output_ids = n
+                .outputs
+                .iter()
+                .map(|t| intern(t, &mut tensor_names, &mut tensor_ids))
+                .collect();
+        }
+        let mut producer = vec![-1i64; tensor_names.len()];
+        for (i, n) in nodes.iter().enumerate() {
+            for id in &n.output_ids {
+                producer[id.index()] = i as i64;
+            }
+        }
+
+        // ---- precompute per-split live and response sets (paper Table II)
+        let len = nodes.len();
+        let mut live_ids = Vec::with_capacity(len + 1);
+        let mut response_ids = Vec::with_capacity(len + 1);
+        let final_id = |name: &str| tensor_ids[name];
+        let finals = [
+            final_id(FINAL_OUTPUTS[0]),
+            final_id(FINAL_OUTPUTS[1]),
+            final_id(FINAL_OUTPUTS[2]),
+        ];
+        for h in 0..=len {
+            let mut live: Vec<TensorId> = Vec::new();
+            if h < len {
+                let mut seen = vec![false; tensor_names.len()];
+                for tail in &nodes[h..] {
+                    for &inp in &tail.input_ids {
+                        let in_head = producer[inp.index()] < h as i64;
+                        if in_head && !seen[inp.index()] {
+                            seen[inp.index()] = true;
+                            live.push(inp);
+                        }
+                    }
+                }
+                // order by producer for determinism (primal = front);
+                // stable sort preserves first-seen order within a producer
+                live.sort_by_key(|id| producer[id.index()]);
+            }
+            live_ids.push(live);
+            response_ids.push(
+                finals
+                    .iter()
+                    .copied()
+                    .filter(|id| producer[id.index()] >= h as i64)
+                    .collect(),
+            );
+        }
+
+        Ok(PipelineGraph {
+            nodes,
+            tensor_names,
+            tensor_ids,
+            producer,
+            live_ids,
+            response_ids,
+            final_ids: finals,
+        })
     }
 
     pub fn nodes(&self) -> &[Node] {
@@ -137,6 +277,31 @@ impl PipelineGraph {
 
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
+    }
+
+    /// Number of interned tensors (the slot count of a [`TensorStore`]).
+    pub fn tensor_count(&self) -> usize {
+        self.tensor_names.len()
+    }
+
+    /// Interned id of a tensor name, if the graph declares it.
+    pub fn tensor_id(&self, name: &str) -> Option<TensorId> {
+        self.tensor_ids.get(name).copied()
+    }
+
+    /// Name of an interned tensor id.
+    pub fn tensor_name(&self, id: TensorId) -> &str {
+        &self.tensor_names[id.index()]
+    }
+
+    /// Id of the sensor-input tensor (`points`).
+    pub fn primal_id(&self) -> TensorId {
+        TensorId(0)
+    }
+
+    /// Ids of [`FINAL_OUTPUTS`], in declaration order.
+    pub fn final_output_ids(&self) -> [TensorId; 3] {
+        self.final_ids
     }
 
     pub fn node_index(&self, name: &str) -> Result<usize> {
@@ -191,44 +356,46 @@ impl PipelineGraph {
         (0..=self.len()).map(|h| SplitPoint { head_len: h }).collect()
     }
 
-    /// **Table II**: tensors that must cross the edge→server link for a
-    /// split — produced on the head side (or primal) and consumed on the
-    /// tail side. Deterministic order: by producing node, then declaration.
-    pub fn live_set(&self, sp: SplitPoint) -> Vec<String> {
-        if sp.head_len >= self.len() {
-            return vec![]; // edge-only: nothing crosses
-        }
-        let mut live: Vec<String> = Vec::new();
-        let mut seen = std::collections::HashSet::new();
-        // primal first
-        for tail in &self.nodes[sp.head_len..] {
-            for inp in &tail.inputs {
-                let produced_in_head = match self.produced_by.get(inp) {
-                    None => true, // primal: captured at the sensor (edge side)
-                    Some(&p) => p < sp.head_len,
-                };
-                if produced_in_head && seen.insert(inp.clone()) {
-                    live.push(inp.clone());
-                }
-            }
-        }
-        // order by producer for determinism (primal = front)
-        live.sort_by_key(|t| self.produced_by.get(t).map_or(-1, |&p| p as i64));
-        live
+    /// **Table II** as interned ids, precomputed at build time: tensors
+    /// that must cross the edge→server link for a split — produced on the
+    /// head side (or primal) and consumed on the tail side. Deterministic
+    /// order: by producing node, then declaration.
+    pub fn live_ids(&self, sp: SplitPoint) -> &[TensorId] {
+        self.live_ids
+            .get(sp.head_len)
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
     }
 
-    /// Tensors returned server→edge: the final outputs that were produced
-    /// on the server side (those already on the edge don't cross back).
-    pub fn response_set(&self, sp: SplitPoint) -> Vec<String> {
-        FINAL_OUTPUTS
+    /// [`Self::live_ids`] resolved to names (reports, cross-process wire).
+    pub fn live_set(&self, sp: SplitPoint) -> Vec<String> {
+        self.live_ids(sp)
             .iter()
-            .filter(|f| {
-                self.produced_by
-                    .get(**f)
-                    .is_some_and(|&p| p >= sp.head_len)
-            })
-            .map(|s| s.to_string())
+            .map(|&id| self.tensor_name(id).to_string())
             .collect()
+    }
+
+    /// Tensors returned server→edge, as precomputed ids: the final outputs
+    /// produced on the server side (those already on the edge don't cross
+    /// back).
+    pub fn response_ids(&self, sp: SplitPoint) -> &[TensorId] {
+        self.response_ids
+            .get(sp.head_len.min(self.len()))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// [`Self::response_ids`] resolved to names.
+    pub fn response_set(&self, sp: SplitPoint) -> Vec<String> {
+        self.response_ids(sp)
+            .iter()
+            .map(|&id| self.tensor_name(id).to_string())
+            .collect()
+    }
+
+    /// Producing node index of a tensor id (-1 for the primal).
+    pub fn producer_of(&self, id: TensorId) -> i64 {
+        self.producer[id.index()]
     }
 
     /// Nodes on the edge side of the split.
@@ -239,6 +406,52 @@ impl PipelineGraph {
     /// Nodes on the server side of the split.
     pub fn tail_nodes(&self, sp: SplitPoint) -> &[Node] {
         &self.nodes[sp.head_len.min(self.len())..]
+    }
+}
+
+// -------------------------------------------------------------- the store
+
+/// Per-frame tensor store: one refcounted slot per interned tensor id.
+/// Replaces the `HashMap<String, Tensor>` of the stringly-typed engine —
+/// no hashing, no deep clones; tensors flow between nodes, packets and
+/// finalize as `Arc<Tensor>`.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    slots: Vec<Option<Arc<Tensor>>>,
+}
+
+impl TensorStore {
+    /// An empty store sized for `graph`.
+    pub fn for_graph(graph: &PipelineGraph) -> TensorStore {
+        TensorStore {
+            slots: vec![None; graph.tensor_count()],
+        }
+    }
+
+    pub fn insert(&mut self, id: TensorId, t: Arc<Tensor>) {
+        self.slots[id.index()] = Some(t);
+    }
+
+    pub fn get(&self, id: TensorId) -> Option<&Arc<Tensor>> {
+        self.slots.get(id.index()).and_then(Option::as_ref)
+    }
+
+    /// Remove and return a slot (frame teardown hands buffers back to
+    /// pools through here).
+    pub fn take(&mut self, id: TensorId) -> Option<Arc<Tensor>> {
+        self.slots.get_mut(id.index()).and_then(Option::take)
+    }
+
+    /// Clear every slot, keeping the allocation for the next frame.
+    pub fn clear(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+
+    /// Number of occupied slots.
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
     }
 }
 
@@ -320,38 +533,87 @@ mod tests {
     }
 
     #[test]
+    fn interned_ids_are_consistent() {
+        let g = graph();
+        assert_eq!(g.tensor_name(g.primal_id()), PRIMAL);
+        for (i, n) in g.nodes().iter().enumerate() {
+            assert_eq!(n.input_ids().len(), n.inputs.len(), "node {i}");
+            assert_eq!(n.output_ids().len(), n.outputs.len(), "node {i}");
+            for (name, &id) in n.inputs.iter().zip(n.input_ids()) {
+                assert_eq!(g.tensor_name(id), name);
+                assert_eq!(g.tensor_id(name), Some(id));
+            }
+            for (name, &id) in n.outputs.iter().zip(n.output_ids()) {
+                assert_eq!(g.tensor_name(id), name);
+                assert_eq!(g.producer_of(id), i as i64);
+            }
+        }
+        assert_eq!(g.tensor_id("no_such_tensor"), None);
+    }
+
+    #[test]
+    fn live_ids_match_live_names_at_every_split() {
+        let g = graph();
+        for sp in g.all_splits() {
+            let by_id: Vec<&str> =
+                g.live_ids(sp).iter().map(|&id| g.tensor_name(id)).collect();
+            let by_name = g.live_set(sp);
+            assert_eq!(by_id, by_name, "{}", g.split_label(sp));
+            let resp_id: Vec<&str> = g
+                .response_ids(sp)
+                .iter()
+                .map(|&id| g.tensor_name(id))
+                .collect();
+            assert_eq!(resp_id, g.response_set(sp), "{}", g.split_label(sp));
+        }
+    }
+
+    #[test]
+    fn store_slots_roundtrip() {
+        let g = graph();
+        let mut store = TensorStore::for_graph(&g);
+        assert_eq!(store.occupied(), 0);
+        let id = g.tensor_id("vfe_feat").unwrap();
+        let t = Arc::new(Tensor::zeros(&[2, 2]));
+        store.insert(id, t.clone());
+        assert_eq!(store.occupied(), 1);
+        assert!(Arc::ptr_eq(store.get(id).unwrap(), &t));
+        let back = store.take(id).unwrap();
+        assert!(Arc::ptr_eq(&back, &t));
+        assert!(store.get(id).is_none());
+        store.insert(id, t);
+        store.clear();
+        assert_eq!(store.occupied(), 0);
+    }
+
+    #[test]
     fn rejects_malformed_graphs() {
         // consumes-before-produced
         let bad = vec![
-            Node {
-                name: "a".into(),
-                kind: NodeKind::Xla,
-                inputs: vec!["t".into()],
-                outputs: vec!["roi_scores".into(), "roi_boxes".into()],
-            },
-            Node {
-                name: "b".into(),
-                kind: NodeKind::Xla,
-                inputs: vec![PRIMAL.into()],
-                outputs: vec!["t".into()],
-            },
+            Node::new(
+                "a",
+                NodeKind::Xla,
+                vec!["t".into()],
+                vec!["roi_scores".into(), "roi_boxes".into()],
+            ),
+            Node::new("b", NodeKind::Xla, vec![PRIMAL.into()], vec!["t".into()]),
         ];
         assert!(PipelineGraph::new(bad).is_err());
         // double production
-        let dup = vec![Node {
-            name: "a".into(),
-            kind: NodeKind::Xla,
-            inputs: vec![PRIMAL.into()],
-            outputs: vec!["x".into(), "x".into()],
-        }];
+        let dup = vec![Node::new(
+            "a",
+            NodeKind::Xla,
+            vec![PRIMAL.into()],
+            vec!["x".into(), "x".into()],
+        )];
         assert!(PipelineGraph::new(dup).is_err());
         // missing final outputs
-        let nofinal = vec![Node {
-            name: "a".into(),
-            kind: NodeKind::Xla,
-            inputs: vec![PRIMAL.into()],
-            outputs: vec!["x".into()],
-        }];
+        let nofinal = vec![Node::new(
+            "a",
+            NodeKind::Xla,
+            vec![PRIMAL.into()],
+            vec!["x".into()],
+        )];
         assert!(PipelineGraph::new(nofinal).is_err());
     }
 

@@ -56,6 +56,11 @@ pub struct ModelConfig {
     pub stages: Vec<StageSpec>,
     pub bev_h: usize,
     pub bev_w: usize,
+    /// MapToBEV channel count (last stage's D * C); input width of the
+    /// 2D backbone.
+    pub bev_channels: usize,
+    /// Backbone2D working width.
+    pub bev_backbone_channels: usize,
     pub num_classes: usize,
     pub anchor_sizes: Vec<[f64; 3]>,
     pub anchor_z: Vec<f64>,
@@ -64,6 +69,16 @@ pub struct ModelConfig {
     pub num_anchors: usize,
     pub box_code_size: usize,
     pub num_proposals: usize,
+    /// RoI grid side length (G; G^3 sample points per RoI per scale).
+    pub roi_grid: usize,
+    /// Backbone scales pooled by the RoI head, in concat order.
+    pub roi_pool_scales: Vec<String>,
+    /// Per-scale projection width before the shared point MLP.
+    pub roi_pool_channels: usize,
+    /// Shared per-grid-point MLP width (the RoI head's compute bulk).
+    pub roi_mlp: usize,
+    /// Post-pool FC width.
+    pub roi_fc: usize,
     pub weights_seed: u64,
 }
 
@@ -167,6 +182,15 @@ impl Manifest {
             })
             .collect::<Result<Vec<_>>>()?;
 
+        // Derived fallbacks keep older manifests (without the explicit bev
+        // channel / roi keys) parsing: MapToBEV folds the last stage's
+        // depth into channels, and the RoI defaults mirror
+        // python/compile/config.py.
+        let last_stage = stages.last();
+        let bev_channels_default = last_stage
+            .map(|s| s.out_shape[0] * s.out_shape[3])
+            .unwrap_or(0);
+
         let config = ModelConfig {
             pc_range_x: f64_pair(cfg.at(&["pc_range", "x"]).context("pc_range.x")?)?,
             pc_range_y: f64_pair(cfg.at(&["pc_range", "y"]).context("pc_range.y")?)?,
@@ -180,6 +204,14 @@ impl Manifest {
             stages,
             bev_h: cfg.at(&["bev", "h"]).and_then(Value::as_usize).context("bev.h")?,
             bev_w: cfg.at(&["bev", "w"]).and_then(Value::as_usize).context("bev.w")?,
+            bev_channels: cfg
+                .at(&["bev", "channels"])
+                .and_then(Value::as_usize)
+                .unwrap_or(bev_channels_default),
+            bev_backbone_channels: cfg
+                .at(&["bev", "backbone_channels"])
+                .and_then(Value::as_usize)
+                .unwrap_or(64),
             num_classes: cfg
                 .get("num_classes")
                 .and_then(Value::as_usize)
@@ -209,6 +241,28 @@ impl Manifest {
                 .get("num_proposals")
                 .and_then(Value::as_usize)
                 .context("num_proposals")?,
+            roi_grid: cfg
+                .get("roi_grid")
+                .and_then(Value::as_usize)
+                .unwrap_or(6),
+            roi_pool_scales: cfg
+                .get("roi_pool_scales")
+                .and_then(Value::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Value::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_else(|| {
+                    vec!["conv2".to_string(), "conv3".to_string(), "conv4".to_string()]
+                }),
+            roi_pool_channels: cfg
+                .get("roi_pool_channels")
+                .and_then(Value::as_usize)
+                .unwrap_or(16),
+            roi_mlp: cfg.get("roi_mlp").and_then(Value::as_usize).unwrap_or(128),
+            roi_fc: cfg.get("roi_fc").and_then(Value::as_usize).unwrap_or(128),
             weights_seed: cfg
                 .get("weights_seed")
                 .and_then(Value::as_usize)
@@ -329,6 +383,19 @@ pub(crate) mod tests {
         assert_eq!(m.config.stages[1].stride, [2, 1, 1]);
         assert_eq!(m.module("roi_head").unwrap().inputs.len(), 4);
         assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn parses_bev_and_roi_geometry() {
+        let m = test_manifest();
+        assert_eq!(m.config.bev_channels, 256);
+        assert_eq!(m.config.bev_backbone_channels, 64);
+        assert_eq!(m.config.roi_grid, 4);
+        assert_eq!(m.config.roi_pool_scales, ["conv2", "conv3", "conv4"]);
+        assert_eq!(m.config.roi_pool_channels, 32);
+        // unspecified widths fall back to the python config defaults
+        assert_eq!(m.config.roi_mlp, 128);
+        assert_eq!(m.config.roi_fc, 128);
     }
 
     #[test]

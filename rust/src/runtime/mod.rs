@@ -1,26 +1,34 @@
-//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them.
+//! Module runtime: executes the pipeline's compute modules.
 //!
-//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`. Python never runs on this path.
+//! Two backends behind one dispatcher:
 //!
-//! The crate's `PjRtClient` is `Rc`-based (not `Send`), so the runtime is a
-//! small executor service: each worker thread owns a client plus its
-//! compiled executables, and [`XlaRuntime`] (cheap to share, `Send + Sync`)
-//! dispatches execute requests over channels. One worker is the default;
-//! more give throughput for the multi-sensor batcher at the cost of
-//! per-worker compile time.
+//! * **reference** (default) — the in-crate deterministic port of
+//!   `python/compile/kernels/ref.py` ([`reference`]); runs inline on the
+//!   caller thread, fully offline.
+//! * **pjrt** (`--features pjrt`, needs the `xla` crate) — loads the AOT'd
+//!   HLO-text artifacts and executes them on a pool of PJRT worker threads
+//!   ([`pjrt`]).
+//!
+//! Hot-path contract: modules are addressed by dense [`ModuleId`] (resolved
+//! once at engine construction), inputs flow as `&[Arc<Tensor>]` (no deep
+//! copies into the backend), and per-module stats are indexed slots — the
+//! steady-state execute path performs no `String` hashing or cloning.
+
+pub mod reference;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::collections::HashMap;
-use std::path::Path;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::model::manifest::{Manifest, ModuleSpec};
 use crate::tensor::Tensor;
+
+/// Dense id of a manifest module (aligned with `manifest.modules` order).
+pub type ModuleId = usize;
 
 /// Runtime statistics per module (feeds Table I).
 #[derive(Debug, Clone, Default)]
@@ -29,224 +37,204 @@ pub struct ModuleStats {
     pub total: Duration,
 }
 
-struct Job {
-    module: String,
-    inputs: Vec<Tensor>,
-    reply: Sender<Result<Vec<Tensor>>>,
+enum Backend {
+    Reference(reference::ReferenceModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtPool),
 }
 
-/// Shared handle to the executor service.
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Reference(_) => write!(f, "Backend::Reference"),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => write!(f, "Backend::Pjrt"),
+        }
+    }
+}
+
+/// Shared handle to the module executor (`Send + Sync`; clone the `Arc`).
+#[derive(Debug)]
 pub struct XlaRuntime {
-    submit: Mutex<Vec<Sender<Job>>>,
-    next: Mutex<usize>,
-    stats: Mutex<HashMap<String, ModuleStats>>,
-    module_names: Vec<String>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    backend: Backend,
+    specs: Vec<ModuleSpec>,
+    /// per-module accumulated stats, indexed by [`ModuleId`]
+    stats: Mutex<Vec<ModuleStats>>,
 }
 
 impl XlaRuntime {
-    /// Load the manifest's artifacts on one worker thread.
+    /// Load the manifest's modules on the default backend.
     pub fn load(manifest: &Manifest) -> Result<XlaRuntime> {
         Self::load_pooled(manifest, 1)
     }
 
-    /// Load with `threads` independent PJRT workers.
+    /// Load with `threads` workers. The reference backend executes inline
+    /// on the caller thread (scaling comes from callers, e.g. the
+    /// multi-LiDAR worker pool), so `threads` only shapes the PJRT pool.
     pub fn load_pooled(manifest: &Manifest, threads: usize) -> Result<XlaRuntime> {
         assert!(threads >= 1);
-        let mut senders = Vec::with_capacity(threads);
-        let mut workers = Vec::with_capacity(threads);
-        for i in 0..threads {
-            let (tx, rx) = channel::<Job>();
-            let specs = manifest.modules.clone();
-            let (ready_tx, ready_rx) = channel::<Result<()>>();
-            let worker = std::thread::Builder::new()
-                .name(format!("xla-worker-{i}"))
-                .spawn(move || worker_main(specs, rx, ready_tx))
-                .context("spawning xla worker")?;
-            // surface load/compile errors synchronously
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow!("xla worker {i} died during load"))??;
-            senders.push(tx);
-            workers.push(worker);
-        }
+        #[cfg(feature = "pjrt")]
+        let backend = Backend::Pjrt(pjrt::PjrtPool::load(manifest, threads)?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend = {
+            let _ = threads;
+            Backend::Reference(reference::ReferenceModel::new(manifest)?)
+        };
         Ok(XlaRuntime {
-            submit: Mutex::new(senders),
-            next: Mutex::new(0),
-            stats: Mutex::new(HashMap::new()),
-            module_names: manifest.modules.iter().map(|m| m.name.clone()).collect(),
-            workers: Mutex::new(workers),
+            backend,
+            specs: manifest.modules.clone(),
+            stats: Mutex::new(vec![ModuleStats::default(); manifest.modules.len()]),
         })
     }
 
     pub fn has_module(&self, name: &str) -> bool {
-        self.module_names.iter().any(|m| m == name)
+        self.specs.iter().any(|m| m.name == name)
     }
 
-    /// Execute a module on host tensors (round-robin across workers).
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let started = Instant::now();
-        let (reply_tx, reply_rx) = channel();
-        {
-            let senders = self.submit.lock().unwrap();
-            let mut next = self.next.lock().unwrap();
-            let idx = *next % senders.len();
-            *next = next.wrapping_add(1);
-            senders[idx]
-                .send(Job {
-                    module: name.to_string(),
-                    inputs: inputs.to_vec(),
-                    reply: reply_tx,
-                })
-                .map_err(|_| anyhow!("xla worker gone"))?;
-        }
-        let out = reply_rx
-            .recv()
-            .map_err(|_| anyhow!("xla worker dropped reply"))??;
+    /// Resolve a module name to its dense id (do this once, not per frame).
+    pub fn module_id(&self, name: &str) -> Result<ModuleId> {
+        self.specs
+            .iter()
+            .position(|m| m.name == name)
+            .with_context(|| format!("module '{name}' not loaded"))
+    }
 
+    /// Execute a module by name (convenience path for benches and tests;
+    /// the engine resolves ids at construction and calls
+    /// [`Self::execute_id`]).
+    pub fn execute(&self, name: &str, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+        self.execute_id(self.module_id(name)?, inputs)
+    }
+
+    /// Execute module `id` on shared host tensors. Inputs are validated
+    /// against the manifest shapes, passed to the backend by reference —
+    /// never deep-cloned — and outputs come back as fresh tensors.
+    pub fn execute_id(&self, id: ModuleId, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .specs
+            .get(id)
+            .with_context(|| format!("module id {id} out of range"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "module '{}' wants {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+            if t.shape() != ispec.shape.as_slice() {
+                bail!(
+                    "module '{}' input '{}' shape {:?} != manifest {:?}",
+                    spec.name,
+                    ispec.name,
+                    t.shape(),
+                    ispec.shape
+                );
+            }
+        }
+
+        let started = Instant::now();
+        let out = match &self.backend {
+            Backend::Reference(m) => m.execute(id, inputs)?,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.execute(spec, inputs)?,
+        };
+        if out.len() != spec.outputs.len() {
+            bail!(
+                "module '{}' returned {} outputs, manifest says {}",
+                spec.name,
+                out.len(),
+                spec.outputs.len()
+            );
+        }
         let elapsed = started.elapsed();
-        let mut stats = self.stats.lock().unwrap();
-        let s = stats.entry(name.to_string()).or_default();
-        s.executions += 1;
-        s.total += elapsed;
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let s = &mut stats[id];
+            s.executions += 1;
+            s.total += elapsed;
+        }
         Ok(out)
     }
 
-    /// Per-module accumulated timings (drives the Table I bench).
+    /// Per-module accumulated timings (drives the Table I bench). Only
+    /// modules that actually executed appear, matching the old map-based
+    /// semantics.
     pub fn stats(&self) -> HashMap<String, ModuleStats> {
-        self.stats.lock().unwrap().clone()
+        let stats = self.stats.lock().unwrap();
+        self.specs
+            .iter()
+            .zip(stats.iter())
+            .filter(|(_, s)| s.executions > 0)
+            .map(|(m, s)| (m.name.clone(), s.clone()))
+            .collect()
     }
 
     pub fn reset_stats(&self) {
-        self.stats.lock().unwrap().clear();
-    }
-}
-
-impl Drop for XlaRuntime {
-    fn drop(&mut self) {
-        self.submit.lock().unwrap().clear(); // close channels
-        for w in self.workers.lock().unwrap().drain(..) {
-            let _ = w.join();
+        for s in self.stats.lock().unwrap().iter_mut() {
+            *s = ModuleStats::default();
         }
     }
 }
-
-// ---------------------------------------------------------------- worker
-
-struct LoadedModule {
-    spec: ModuleSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-fn worker_main(specs: Vec<ModuleSpec>, rx: Receiver<Job>, ready: Sender<Result<()>>) {
-    let loaded = match load_all(&specs) {
-        Ok(l) => {
-            let _ = ready.send(Ok(()));
-            l
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    while let Ok(job) = rx.recv() {
-        let result = run_module(&loaded, &job.module, &job.inputs);
-        let _ = job.reply.send(result);
-    }
-}
-
-fn load_all(specs: &[ModuleSpec]) -> Result<HashMap<String, LoadedModule>> {
-    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-    let mut out = HashMap::new();
-    for spec in specs {
-        let path: &Path = &spec.artifact;
-        if !path.exists() {
-            bail!("artifact {} missing — run `make artifacts`", path.display());
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-        out.insert(
-            spec.name.clone(),
-            LoadedModule {
-                spec: spec.clone(),
-                exe,
-            },
-        );
-    }
-    Ok(out)
-}
-
-fn run_module(
-    loaded: &HashMap<String, LoadedModule>,
-    name: &str,
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
-    let lm = loaded
-        .get(name)
-        .with_context(|| format!("module '{name}' not loaded"))?;
-    if inputs.len() != lm.spec.inputs.len() {
-        bail!(
-            "module '{name}' wants {} inputs, got {}",
-            lm.spec.inputs.len(),
-            inputs.len()
-        );
-    }
-    for (t, spec) in inputs.iter().zip(&lm.spec.inputs) {
-        if t.shape() != spec.shape.as_slice() {
-            bail!(
-                "module '{name}' input '{}' shape {:?} != manifest {:?}",
-                spec.name,
-                t.shape(),
-                spec.shape
-            );
-        }
-    }
-    let literals: Vec<xla::Literal> = inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-    let result = lm
-        .exe
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow!("executing '{name}': {e}"))?;
-    // single device, single output buffer; modules are lowered with
-    // return_tuple=True so the buffer is a tuple of outputs
-    let tuple = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
-    let parts = tuple
-        .to_tuple()
-        .map_err(|e| anyhow!("untupling '{name}' result: {e}"))?;
-    if parts.len() != lm.spec.outputs.len() {
-        bail!(
-            "module '{name}' returned {} outputs, manifest says {}",
-            parts.len(),
-            lm.spec.outputs.len()
-        );
-    }
-    parts
-        .into_iter()
-        .zip(&lm.spec.outputs)
-        .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
-        .collect()
-}
-
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape()))
-}
-
-fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
-    Tensor::from_vec(shape, v)
-}
-
-// Exercised against real artifacts by rust/tests/integration.rs.
 
 /// Helper kept public for tests: make sure `Arc<XlaRuntime>` is shareable.
 pub fn assert_send_sync(_: &Arc<XlaRuntime>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::test_manifest;
+
+    fn runtime() -> XlaRuntime {
+        XlaRuntime::load(&test_manifest()).unwrap()
+    }
+
+    #[test]
+    fn module_ids_are_stable_and_named() {
+        let rt = runtime();
+        assert!(rt.has_module("vfe"));
+        assert!(!rt.has_module("nope"));
+        assert_eq!(rt.module_id("vfe").unwrap(), 0);
+        assert_eq!(rt.module_id("roi_head").unwrap(), 6);
+        assert!(rt.module_id("nope").is_err());
+    }
+
+    #[test]
+    fn execute_validates_shapes_and_counts() {
+        let rt = runtime();
+        let bad = Arc::new(Tensor::zeros(&[2, 2]));
+        assert!(rt.execute("vfe", &[bad.clone(), bad.clone()]).is_err());
+        assert!(rt.execute("vfe", &[bad]).is_err());
+        assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_track_executions_by_module() {
+        let rt = runtime();
+        let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+        let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+        let out = rt.execute("vfe", &[sum, cnt]).unwrap();
+        assert_eq!(out.len(), 2);
+        let stats = rt.stats();
+        assert_eq!(stats["vfe"].executions, 1);
+        assert!(!stats.contains_key("conv1"), "untouched modules excluded");
+        rt.reset_stats();
+        assert!(rt.stats().is_empty());
+    }
+
+    #[test]
+    fn runtime_is_shareable() {
+        let rt = Arc::new(runtime());
+        assert_send_sync(&rt);
+        let rt2 = rt.clone();
+        std::thread::spawn(move || {
+            let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+            let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+            rt2.execute("vfe", &[sum, cnt]).unwrap();
+        })
+        .join()
+        .unwrap();
+        assert_eq!(rt.stats()["vfe"].executions, 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! PJRT backend: loads the AOT'd HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Python never runs on this path.
+//!
+//! The crate's `PjRtClient` is `Rc`-based (not `Send`), so the pool is a
+//! small executor service: each worker thread owns a client plus its
+//! compiled executables, and [`PjrtPool`] dispatches execute requests over
+//! channels. Jobs carry `Arc<Tensor>` handles (refcount bumps, no tensor
+//! copies) and workers are picked by a lock-free atomic round-robin.
+//!
+//! Only compiled with `--features pjrt` (requires the `xla` dependency,
+//! which the offline build environment cannot resolve — see Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::manifest::{Manifest, ModuleSpec};
+use crate::tensor::Tensor;
+
+struct Job {
+    module: String,
+    inputs: Vec<Arc<Tensor>>,
+    reply: Sender<Result<Vec<Tensor>>>,
+}
+
+/// Pool of PJRT worker threads, one compiled module set each.
+pub struct PjrtPool {
+    submit: Vec<Sender<Job>>,
+    next: AtomicUsize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PjrtPool {
+    /// Load the manifest's artifacts on `threads` independent workers.
+    pub fn load(manifest: &Manifest, threads: usize) -> Result<PjrtPool> {
+        assert!(threads >= 1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = channel::<Job>();
+            let specs = manifest.modules.clone();
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let worker = std::thread::Builder::new()
+                .name(format!("xla-worker-{i}"))
+                .spawn(move || worker_main(specs, rx, ready_tx))
+                .context("spawning xla worker")?;
+            // surface load/compile errors synchronously
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("xla worker {i} died during load"))??;
+            senders.push(tx);
+            workers.push(worker);
+        }
+        Ok(PjrtPool {
+            submit: senders,
+            next: AtomicUsize::new(0),
+            workers: Mutex::new(workers),
+        })
+    }
+
+    /// Execute a module (atomic round-robin across workers; inputs travel
+    /// as refcounted handles).
+    pub fn execute(&self, spec: &ModuleSpec, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = channel();
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.submit.len();
+        self.submit[idx]
+            .send(Job {
+                module: spec.name.clone(),
+                inputs: inputs.to_vec(), // Arc clones: refcount bumps only
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("xla worker gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("xla worker dropped reply"))?
+    }
+}
+
+impl Drop for PjrtPool {
+    fn drop(&mut self) {
+        self.submit.clear(); // close channels
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------- worker
+
+struct LoadedModule {
+    spec: ModuleSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn worker_main(specs: Vec<ModuleSpec>, rx: Receiver<Job>, ready: Sender<Result<()>>) {
+    let loaded = match load_all(&specs) {
+        Ok(l) => {
+            let _ = ready.send(Ok(()));
+            l
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let result = run_module(&loaded, &job.module, &job.inputs);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn load_all(specs: &[ModuleSpec]) -> Result<HashMap<String, LoadedModule>> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+    let mut out = HashMap::new();
+    for spec in specs {
+        let path: &Path = &spec.artifact;
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        out.insert(
+            spec.name.clone(),
+            LoadedModule {
+                spec: spec.clone(),
+                exe,
+            },
+        );
+    }
+    Ok(out)
+}
+
+fn run_module(
+    loaded: &HashMap<String, LoadedModule>,
+    name: &str,
+    inputs: &[Arc<Tensor>],
+) -> Result<Vec<Tensor>> {
+    let lm = loaded
+        .get(name)
+        .with_context(|| format!("module '{name}' not loaded"))?;
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| tensor_to_literal(t))
+        .collect::<Result<_>>()?;
+    let result = lm
+        .exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing '{name}': {e}"))?;
+    // single device, single output buffer; modules are lowered with
+    // return_tuple=True so the buffer is a tuple of outputs
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| anyhow!("untupling '{name}' result: {e}"))?;
+    if parts.len() != lm.spec.outputs.len() {
+        bail!(
+            "module '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            lm.spec.outputs.len()
+        );
+    }
+    parts
+        .into_iter()
+        .zip(&lm.spec.outputs)
+        .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
+        .collect()
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape()))
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    Tensor::from_vec(shape, v)
+}

@@ -15,6 +15,14 @@
 //!
 //! `encode_auto` picks the smallest exact format; quantized formats are
 //! opt-in because they are lossy.
+//!
+//! Perf contract (see docs/PERF.md): packets hold `Arc<Tensor>` so frame
+//! assembly never deep-copies; format choice and sparse emission run off
+//! the tensor's cached occupied-site index (no rescans of dense grids);
+//! `encode_into` writes into a caller-owned, exactly-presized buffer so a
+//! steady-state encode performs no allocation beyond the first frame.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -62,14 +70,12 @@ pub enum Policy {
 
 // ------------------------------------------------------------- primitives
 
-struct Writer {
-    buf: Vec<u8>,
+/// Byte writer over a caller-owned buffer (reused across frames).
+struct Writer<'a> {
+    buf: &'a mut Vec<u8>,
 }
 
-impl Writer {
-    fn new() -> Writer {
-        Writer { buf: Vec::new() }
-    }
+impl Writer<'_> {
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
@@ -81,6 +87,16 @@ impl Writer {
     }
     fn bytes(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
+    }
+    /// Append `n` zero bytes, returning their start offset.
+    fn zeros(&mut self, n: usize) -> usize {
+        let start = self.buf.len();
+        self.buf.resize(start + n, 0);
+        start
+    }
+    /// Set bit `bit` (LSB-first) inside the region starting at `start`.
+    fn set_bit(&mut self, start: usize, bit: usize) {
+        self.buf[start + bit / 8] |= 1 << (bit % 8);
     }
 }
 
@@ -117,18 +133,13 @@ impl<'a> Reader<'a> {
 
 // ---------------------------------------------------------- single tensor
 
+/// Masks are single-channel tensors whose non-zero values are all exactly
+/// 1 — checked over the occupied-site index only, never the dense buffer.
 fn is_mask(t: &Tensor) -> bool {
-    t.channels() == 1 && t.data().iter().all(|&x| x == 0.0 || x == 1.0)
-}
-
-fn active_sites(t: &Tensor) -> Vec<u32> {
-    let c = t.channels().max(1);
-    t.data()
-        .chunks_exact(c)
-        .enumerate()
-        .filter(|(_, site)| site.iter().any(|&x| x != 0.0))
-        .map(|(i, _)| i as u32)
-        .collect()
+    t.channels() == 1
+        && t.site_index()
+            .iter()
+            .all(|&s| t.data()[s as usize] == 1.0)
 }
 
 fn sparse_bytes(sites: usize, channels: usize, quantized: bool) -> usize {
@@ -138,13 +149,12 @@ fn sparse_bytes(sites: usize, channels: usize, quantized: bool) -> usize {
 
 /// Size in bytes each format would need for this tensor (without header).
 pub fn payload_size(t: &Tensor, fmt: Format) -> usize {
-    let sites = active_sites(t).len();
     match fmt {
         Format::DenseF32 => t.size_bytes(),
-        Format::SparseF32 => sparse_bytes(sites, t.channels(), false),
+        Format::SparseF32 => sparse_bytes(t.site_index().len(), t.channels(), false),
         Format::MaskBitset => t.spatial().div_ceil(8),
         Format::DenseQ8 => 8 + t.numel(),
-        Format::SparseQ8 => sparse_bytes(sites, t.channels(), true),
+        Format::SparseQ8 => sparse_bytes(t.site_index().len(), t.channels(), true),
     }
 }
 
@@ -153,14 +163,11 @@ fn choose(t: &Tensor, policy: Policy) -> Format {
         Policy::Dense => Format::DenseF32,
         Policy::Auto => {
             let mut best = Format::DenseF32;
-            let mut candidates = vec![Format::SparseF32];
-            if is_mask(t) {
-                candidates.push(Format::MaskBitset);
+            if payload_size(t, Format::SparseF32) < payload_size(t, best) {
+                best = Format::SparseF32;
             }
-            for f in candidates {
-                if payload_size(t, f) < payload_size(t, best) {
-                    best = f;
-                }
+            if is_mask(t) && payload_size(t, Format::MaskBitset) < payload_size(t, best) {
+                best = Format::MaskBitset;
             }
             best
         }
@@ -202,7 +209,8 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
             }
         }
         Format::SparseF32 | Format::SparseQ8 => {
-            let sites = active_sites(t);
+            // single pass over the occupied-site index — no dense rescan
+            let sites = t.site_index();
             let c = t.channels().max(1);
             w.u32(sites.len() as u32);
             let (scale, _) = quant_params(t);
@@ -210,11 +218,12 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
                 w.f32(scale);
                 w.f32(0.0);
             }
-            for &s in &sites {
+            for &s in sites {
                 w.u32(s);
             }
-            for &s in &sites {
-                let site = &t.data()[s as usize * c..(s as usize + 1) * c];
+            let data = t.data();
+            for &s in sites {
+                let site = &data[s as usize * c..(s as usize + 1) * c];
                 for &x in site {
                     if fmt == Format::SparseQ8 {
                         w.u8(((x / scale).round().clamp(-127.0, 127.0)) as i8 as u8);
@@ -225,19 +234,10 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
             }
         }
         Format::MaskBitset => {
-            let mut byte = 0u8;
-            let mut nbits = 0;
-            for &x in t.data() {
-                byte |= u8::from(x != 0.0) << nbits;
-                nbits += 1;
-                if nbits == 8 {
-                    w.u8(byte);
-                    byte = 0;
-                    nbits = 0;
-                }
-            }
-            if nbits > 0 {
-                w.u8(byte);
+            // set bits straight from the site index into a zeroed region
+            let start = w.zeros(t.spatial().div_ceil(8));
+            for &s in t.site_index() {
+                w.set_bit(start, s as usize);
             }
         }
         Format::DenseQ8 => {
@@ -264,13 +264,13 @@ fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
     let channels = shape.last().copied().unwrap_or(1).max(1);
     let spatial = numel / channels;
 
-    let data = match fmt {
+    let tensor = match fmt {
         Format::DenseF32 => {
             let mut v = Vec::with_capacity(numel);
             for _ in 0..numel {
                 v.push(r.f32()?);
             }
-            v
+            Tensor::from_vec(&shape, v)?
         }
         Format::SparseF32 | Format::SparseQ8 => {
             let n = r.u32()? as usize;
@@ -283,31 +283,62 @@ fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
                 (1.0, 0.0)
             };
             let mut idx = Vec::with_capacity(n);
+            let mut ascending = true;
+            let mut prev: i64 = -1;
             for _ in 0..n {
                 let i = r.u32()? as usize;
                 if i >= spatial {
                     bail!("sparse index {i} out of {spatial}");
                 }
+                if (i as i64) <= prev {
+                    ascending = false; // foreign encoder; don't seed cache
+                }
+                prev = i as i64;
                 idx.push(i);
             }
             let mut v = vec![0.0f32; numel];
+            // decode values and rebuild the occupied-site index in the
+            // same pass, so downstream consumers never rescan the grid
+            let mut sites: Vec<u32> = Vec::with_capacity(n);
             for &i in &idx {
+                let mut nonzero = false;
                 for ch in 0..channels {
-                    v[i * channels + ch] = if fmt == Format::SparseQ8 {
+                    let x = if fmt == Format::SparseQ8 {
                         (r.u8()? as i8) as f32 * scale
                     } else {
                         r.f32()?
                     };
+                    nonzero |= x != 0.0;
+                    v[i * channels + ch] = x;
+                }
+                if nonzero {
+                    sites.push(i as u32);
                 }
             }
-            v
+            if ascending {
+                Tensor::from_vec_with_sites(&shape, v, sites)?
+            } else {
+                Tensor::from_vec(&shape, v)?
+            }
         }
         Format::MaskBitset => {
             let nbytes = numel.div_ceil(8);
             let bytes = r.take(nbytes)?;
-            (0..numel)
-                .map(|i| f32::from((bytes[i / 8] >> (i % 8)) & 1))
-                .collect()
+            let mut sites: Vec<u32> = Vec::new();
+            let v: Vec<f32> = (0..numel)
+                .map(|i| {
+                    let bit = (bytes[i / 8] >> (i % 8)) & 1;
+                    if bit == 1 {
+                        sites.push(i as u32);
+                    }
+                    f32::from(bit)
+                })
+                .collect();
+            if channels == 1 {
+                Tensor::from_vec_with_sites(&shape, v, sites)?
+            } else {
+                Tensor::from_vec(&shape, v)?
+            }
         }
         Format::DenseQ8 => {
             let scale = r.f32()?;
@@ -316,23 +347,35 @@ fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
             for _ in 0..numel {
                 v.push((r.u8()? as i8) as f32 * scale);
             }
-            v
+            Tensor::from_vec(&shape, v)?
         }
     };
-    Ok((name, Tensor::from_vec(&shape, data)?))
+    Ok((name, tensor))
 }
 
 // ----------------------------------------------------------------- packet
 
 /// A named bundle of tensors crossing the link (one split boundary's live
-/// set, or the final predictions coming back).
+/// set, or the final predictions coming back). Tensors are shared by
+/// refcount — assembling a packet from a frame store never deep-copies.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packet {
-    pub tensors: Vec<(String, Tensor)>,
+    pub tensors: Vec<(String, Arc<Tensor>)>,
 }
 
 impl Packet {
+    /// Build from owned tensors (tests, decoders, one-off callers).
     pub fn new(tensors: Vec<(String, Tensor)>) -> Packet {
+        Packet {
+            tensors: tensors
+                .into_iter()
+                .map(|(n, t)| (n, Arc::new(t)))
+                .collect(),
+        }
+    }
+
+    /// Build from shared tensors (the zero-copy frame hot path).
+    pub fn from_shared(tensors: Vec<(String, Arc<Tensor>)>) -> Packet {
         Packet { tensors }
     }
 
@@ -340,19 +383,33 @@ impl Packet {
         self.tensors
             .iter()
             .find(|(n, _)| n == name)
-            .map(|(_, t)| t)
+            .map(|(_, t)| t.as_ref())
     }
 
     pub fn encode(&self, policy: Policy) -> Vec<u8> {
-        let mut w = Writer::new();
-        w.u32(MAGIC);
-        w.u8(1); // version
-        w.u32(self.tensors.len() as u32);
-        for (name, t) in &self.tensors {
-            let fmt = choose(t, policy);
-            encode_tensor(&mut w, name, t, fmt);
+        let mut buf = Vec::new();
+        self.encode_into(policy, &mut buf);
+        buf
+    }
+
+    /// Encode into a caller-owned buffer, cleared and presized to the
+    /// exact encoded length (steady-state reuse allocates nothing once the
+    /// buffer has grown to the working-set size).
+    pub fn encode_into(&self, policy: Policy, buf: &mut Vec<u8>) {
+        buf.clear();
+        let exact = self.encoded_size(policy);
+        buf.reserve(exact);
+        {
+            let mut w = Writer { buf: &mut *buf };
+            w.u32(MAGIC);
+            w.u8(1); // version
+            w.u32(self.tensors.len() as u32);
+            for (name, t) in &self.tensors {
+                let fmt = choose(t, policy);
+                encode_tensor(&mut w, name, t, fmt);
+            }
         }
-        w.buf
+        debug_assert_eq!(buf.len(), exact, "encoded_size drifted from encoder");
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Packet> {
@@ -366,7 +423,8 @@ impl Packet {
         let n = r.u32()? as usize;
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            tensors.push(decode_tensor(&mut r)?);
+            let (name, t) = decode_tensor(&mut r)?;
+            tensors.push((name, Arc::new(t)));
         }
         if !r.done() {
             bail!("trailing bytes in wire packet");
@@ -374,7 +432,8 @@ impl Packet {
         Ok(Packet { tensors })
     }
 
-    /// Encoded size without building the buffer (bench fast-path).
+    /// Encoded size without building the buffer (bench fast-path; also the
+    /// exact presize for `encode_into`).
     pub fn encoded_size(&self, policy: Policy) -> usize {
         let mut total = 4 + 1 + 4;
         for (name, t) in &self.tensors {
@@ -421,7 +480,10 @@ mod tests {
         let p = Packet::new(vec![("f".into(), t.clone())]);
         let bytes = p.encode(Policy::Auto);
         assert!(bytes.len() < t.size_bytes() / 2, "sparse should win at 10%");
-        assert_eq!(Packet::decode(&bytes).unwrap().get("f").unwrap(), &t);
+        let back = Packet::decode(&bytes).unwrap();
+        assert_eq!(back.get("f").unwrap(), &t);
+        // decode rebuilds the occupied-site index in the same pass
+        assert_eq!(back.get("f").unwrap().site_index(), t.site_index());
     }
 
     #[test]
@@ -497,5 +559,30 @@ mod tests {
         let p2 = Packet::new(vec![("y".into(), Tensor::zeros(&[2]))]);
         let good = p2.encode(Policy::Dense);
         assert!(Packet::decode(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn shared_and_owned_packets_encode_identically() {
+        let mut rng = Rng::new(7);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 4], 0.2);
+        let owned = Packet::new(vec![("t".into(), t.clone())]);
+        let shared = Packet::from_shared(vec![("t".into(), Arc::new(t))]);
+        for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+            assert_eq!(owned.encode(policy), shared.encode(policy), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut rng = Rng::new(8);
+        let mut buf = Vec::new();
+        for occ in [0.8, 0.1, 0.0, 0.4] {
+            let t = masked_tensor(&mut rng, &[4, 8, 8, 2], occ);
+            let p = Packet::new(vec![("t".into(), t.clone())]);
+            p.encode_into(Policy::Auto, &mut buf);
+            assert_eq!(buf, p.encode(Policy::Auto));
+            let back = Packet::decode(&buf).unwrap();
+            assert_eq!(back.get("t").unwrap(), &t);
+        }
     }
 }

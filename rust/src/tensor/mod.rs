@@ -1,19 +1,46 @@
 //! Dense f32 tensor type shared by every rust-side stage.
 //!
-//! Deliberately minimal: the heavy math lives in the AOT'd XLA modules;
-//! rust only voxelizes, routes, encodes and post-processes. Layout is
-//! row-major (last dim fastest), matching XLA's default
-//! `{n-1, ..., 1, 0}` layout so literals copy straight through.
+//! Deliberately minimal: the heavy math lives in the AOT'd XLA modules (or
+//! the in-crate reference executor); rust only voxelizes, routes, encodes
+//! and post-processes. Layout is row-major (last dim fastest), matching
+//! XLA's default `{n-1, ..., 1, 0}` layout so literals copy straight
+//! through.
+//!
+//! Tensors carry a lazily-built **occupied-site index** (ascending flat
+//! site indices whose channel vector is non-zero). The voxelizer seeds it
+//! during the scatter pass and the sparse wire codec decodes straight into
+//! it, so the per-frame hot path never rescans a dense grid to find the
+//! active set. Any mutable access invalidates the index.
 
 pub mod codec;
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{bail, Result};
 
-/// A dense row-major f32 tensor.
-#[derive(Debug, Clone, PartialEq)]
+/// A dense row-major f32 tensor with a cached occupied-site index.
+#[derive(Debug, Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
     data: Vec<f32>,
+    /// Ascending flat *site* indices (sites = all dims but the channel
+    /// dim) with at least one non-zero channel. Lazy; see module docs.
+    sites: OnceLock<Arc<Vec<u32>>>,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
+}
+
+fn compute_sites(channels: usize, data: &[f32]) -> Vec<u32> {
+    let c = channels.max(1);
+    data.chunks_exact(c)
+        .enumerate()
+        .filter(|(_, site)| site.iter().any(|&x| x != 0.0))
+        .map(|(i, _)| i as u32)
+        .collect()
 }
 
 impl Tensor {
@@ -21,6 +48,7 @@ impl Tensor {
         Tensor {
             shape: shape.to_vec(),
             data: vec![0.0; shape.iter().product()],
+            sites: OnceLock::new(),
         }
     }
 
@@ -37,13 +65,34 @@ impl Tensor {
         Ok(Tensor {
             shape: shape.to_vec(),
             data,
+            sites: OnceLock::new(),
         })
+    }
+
+    /// Like [`Tensor::from_vec`] but with the occupied-site index already
+    /// known (ascending, exact). Producers that walk their active set
+    /// anyway (voxelizer scatter, sparse decode, the reference executor)
+    /// seed the cache so consumers never rescan the dense buffer.
+    pub fn from_vec_with_sites(
+        shape: &[usize],
+        data: Vec<f32>,
+        sites: Vec<u32>,
+    ) -> Result<Tensor> {
+        let t = Tensor::from_vec(shape, data)?;
+        debug_assert_eq!(
+            sites,
+            compute_sites(t.channels(), t.data()),
+            "seeded site index is not the exact active set"
+        );
+        let _ = t.sites.set(Arc::new(sites));
+        Ok(t)
     }
 
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
             shape: vec![],
             data: vec![v],
+            sites: OnceLock::new(),
         }
     }
 
@@ -64,6 +113,7 @@ impl Tensor {
     }
 
     pub fn data_mut(&mut self) -> &mut [f32] {
+        self.sites.take(); // mutation invalidates the site index
         &mut self.data
     }
 
@@ -102,7 +152,35 @@ impl Tensor {
 
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let f = self.flat(idx);
+        self.sites.take();
         self.data[f] = v;
+    }
+
+    /// The occupied-site index: ascending flat site indices with any
+    /// non-zero channel. Computed once and cached; seeded by producers
+    /// that already know the active set.
+    pub fn site_index(&self) -> &[u32] {
+        self.sites
+            .get_or_init(|| Arc::new(compute_sites(self.channels(), &self.data)))
+            .as_slice()
+    }
+
+    /// Shared handle to the site index (pool recycling keeps it alive
+    /// while the buffer is being cleared).
+    pub fn site_index_arc(&self) -> Arc<Vec<u32>> {
+        self.site_index();
+        self.sites.get().expect("initialized above").clone()
+    }
+
+    /// Seed the site index on an already-built tensor (no-op if a cache
+    /// exists). `sites` must be the exact ascending active set.
+    pub(crate) fn seed_sites(&self, sites: Vec<u32>) {
+        debug_assert_eq!(
+            sites,
+            compute_sites(self.channels(), &self.data),
+            "seeded site index is not the exact active set"
+        );
+        let _ = self.sites.set(Arc::new(sites));
     }
 
     /// Max |x| over the tensor (codec calibration).
@@ -112,16 +190,11 @@ impl Tensor {
 
     /// Fraction of spatial sites with any non-zero channel.
     pub fn occupancy(&self) -> f64 {
-        let c = self.channels();
-        if self.data.is_empty() {
+        let spatial = self.spatial();
+        if spatial == 0 || self.data.is_empty() {
             return 0.0;
         }
-        let occ = self
-            .data
-            .chunks_exact(c.max(1))
-            .filter(|site| site.iter().any(|&x| x != 0.0))
-            .count();
-        occ as f64 / self.spatial() as f64
+        self.site_index().len() as f64 / spatial as f64
     }
 
     /// Reinterpret with a new shape of the same element count.
@@ -131,16 +204,19 @@ impl Tensor {
             bail!("cannot reshape {:?} to {:?}", self.shape, shape);
         }
         self.shape = shape.to_vec();
+        self.sites.take(); // channel dim may have changed
         Ok(self)
     }
 
+    /// Symmetric allclose: |a - b| <= atol + rtol * max(|a|, |b|), so
+    /// `a.allclose(b) == b.allclose(a)` for every (rtol, atol).
     pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
         self.shape == other.shape
             && self
                 .data
                 .iter()
                 .zip(&other.data)
-                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * b.abs())
+                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * a.abs().max(b.abs()))
     }
 
     /// Largest absolute elementwise difference (∞-norm); None on shape mismatch.
@@ -165,7 +241,7 @@ mod tests {
     fn flat_indexing_row_major() {
         let mut t = Tensor::zeros(&[2, 3, 4]);
         t.set(&[1, 2, 3], 7.0);
-        assert_eq!(t.data()[1 * 12 + 2 * 4 + 3], 7.0);
+        assert_eq!(t.data()[12 + 2 * 4 + 3], 7.0);
         assert_eq!(t.get(&[1, 2, 3]), 7.0);
     }
 
@@ -199,5 +275,40 @@ mod tests {
         assert!(a.max_abs_diff(&b).unwrap() < 1e-5);
         let c = Tensor::zeros(&[3]);
         assert_eq!(a.max_abs_diff(&c), None);
+    }
+
+    #[test]
+    fn allclose_is_symmetric() {
+        // regression: rtol used to scale only |b|, making the relation
+        // asymmetric around zero on one side
+        let a = Tensor::from_vec(&[1], vec![100.0]).unwrap();
+        let b = Tensor::from_vec(&[1], vec![100.0 + 5e-3]).unwrap();
+        assert_eq!(a.allclose(&b, 1e-4, 0.0), b.allclose(&a, 1e-4, 0.0));
+        let z = Tensor::from_vec(&[1], vec![0.0]).unwrap();
+        let s = Tensor::from_vec(&[1], vec![1e-3]).unwrap();
+        assert_eq!(z.allclose(&s, 1e-2, 0.0), s.allclose(&z, 1e-2, 0.0));
+    }
+
+    #[test]
+    fn site_index_tracks_mutation() {
+        let mut t = Tensor::zeros(&[2, 2, 3]); // 4 sites, 3 channels
+        assert!(t.site_index().is_empty());
+        t.set(&[1, 0, 2], 4.0);
+        assert_eq!(t.site_index(), &[2]);
+        t.set(&[0, 1, 0], -1.0);
+        assert_eq!(t.site_index(), &[1, 2]);
+        t.data_mut().fill(0.0);
+        assert!(t.site_index().is_empty());
+    }
+
+    #[test]
+    fn seeded_site_index_is_used() {
+        let t =
+            Tensor::from_vec_with_sites(&[2, 2], vec![0.0, 0.0, 1.0, 0.5], vec![1]).unwrap();
+        assert_eq!(t.site_index(), &[1]);
+        assert!((t.occupancy() - 0.5).abs() < 1e-12);
+        // clones share the cached index
+        let c = t.clone();
+        assert_eq!(c.site_index(), &[1]);
     }
 }

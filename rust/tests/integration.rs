@@ -246,7 +246,23 @@ fn empty_cloud_runs_cleanly() {
 #[test]
 fn runtime_rejects_bad_shapes() {
     let e = engine();
-    let bad = splitpoint::Tensor::zeros(&[2, 2]);
+    let bad = Arc::new(splitpoint::Tensor::zeros(&[2, 2]));
     assert!(e.runtime().execute("vfe", &[bad.clone(), bad]).is_err());
     assert!(e.runtime().execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn voxel_scratch_pool_recycles_after_frames() {
+    // the engine hands points_sum/points_cnt back to the voxelizer pool at
+    // frame teardown unless a packet still shares them; either way the
+    // next frame's results are identical (covered by
+    // split_equals_unsplit_at_every_point running the same cloud through
+    // many splits, which reuses pooled grids after the first frame)
+    let e = engine();
+    let scene = SceneGenerator::with_seed(31).generate();
+    let sp = e.graph().split_after("vfe").unwrap();
+    let a = e.run_frame(&scene.cloud, sp).unwrap();
+    let b = e.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_equal(&a.detections, &b.detections, 0.0), "frames must be deterministic");
+    assert_eq!(a.timing.uplink_bytes, b.timing.uplink_bytes);
 }

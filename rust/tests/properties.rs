@@ -234,12 +234,7 @@ fn random_chain_graph(rng: &mut Rng) -> PipelineGraph {
             vec![format!("t{i}")]
         };
         produced.extend(outputs.iter().cloned());
-        nodes.push(Node {
-            name: format!("n{i}"),
-            kind: NodeKind::Xla,
-            inputs,
-            outputs,
-        });
+        nodes.push(Node::new(format!("n{i}"), NodeKind::Xla, inputs, outputs));
     }
     PipelineGraph::new(nodes).expect("random chain is valid")
 }
@@ -285,6 +280,180 @@ fn prop_live_set_is_exactly_the_cut_edges() {
             dedup.dedup();
             prop_assert!(dedup.len() == live.len(), "duplicate entries in live set");
         }
+        Ok(())
+    });
+}
+
+/// The pre-refactor string-keyed live-set algorithm, kept verbatim as the
+/// reference semantics: first-seen tail-consumption order, then a stable
+/// sort by producing node (primal first).
+fn string_keyed_live_set(g: &PipelineGraph, head_len: usize) -> Vec<String> {
+    let mut produced_by: std::collections::HashMap<&str, usize> = Default::default();
+    for (i, n) in g.nodes().iter().enumerate() {
+        for o in &n.outputs {
+            produced_by.insert(o.as_str(), i);
+        }
+    }
+    if head_len >= g.len() {
+        return vec![];
+    }
+    let mut live: Vec<String> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for tail in &g.nodes()[head_len..] {
+        for inp in &tail.inputs {
+            let produced_in_head = match produced_by.get(inp.as_str()) {
+                None => true, // primal
+                Some(&p) => p < head_len,
+            };
+            if produced_in_head && seen.insert(inp.clone()) {
+                live.push(inp.clone());
+            }
+        }
+    }
+    live.sort_by_key(|t| produced_by.get(t.as_str()).map_or(-1, |&p| p as i64));
+    live
+}
+
+#[test]
+fn prop_interned_live_sets_match_string_keyed_semantics() {
+    // the id-interned, build-time-precomputed live sets must reproduce the
+    // stringly-typed per-frame computation exactly — names AND order
+    check("interned == string-keyed", default_cases(), |rng| {
+        let g = random_chain_graph(rng);
+        for sp in g.all_splits() {
+            let reference = string_keyed_live_set(&g, sp.head_len);
+            prop_assert!(
+                g.live_set(sp) == reference,
+                "live_set diverged at {sp:?}: {:?} vs {reference:?}",
+                g.live_set(sp)
+            );
+            let by_id: Vec<String> = g
+                .live_ids(sp)
+                .iter()
+                .map(|&id| g.tensor_name(id).to_string())
+                .collect();
+            prop_assert!(
+                by_id == reference,
+                "live_ids diverged at {sp:?}: {by_id:?} vs {reference:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_id_store_packets_encode_byte_identical_to_owned() {
+    use splitpoint::model::graph::TensorStore;
+    use std::sync::Arc;
+    // frame packets assembled from the Arc slot store must produce the
+    // same bytes as the old deep-cloning string-keyed assembly
+    check("store packet bytes", default_cases().min(24), |rng| {
+        let g = random_chain_graph(rng);
+        let mut store = TensorStore::for_graph(&g);
+        let mut owned: Vec<(String, Tensor)> = Vec::new();
+        for idx in 0..g.tensor_count() {
+            let id = splitpoint::model::graph::TensorId(idx as u32);
+            let occ = rng.f64();
+            let t = random_tensor(rng, occ);
+            owned.push((g.tensor_name(id).to_string(), t.clone()));
+            store.insert(id, Arc::new(t));
+        }
+        for sp in g.all_splits() {
+            let live = g.live_ids(sp);
+            if live.is_empty() {
+                continue;
+            }
+            let shared = Packet::from_shared(
+                live.iter()
+                    .map(|&id| {
+                        (
+                            g.tensor_name(id).to_string(),
+                            store.get(id).cloned().unwrap(),
+                        )
+                    })
+                    .collect(),
+            );
+            let cloned = Packet::new(
+                g.live_set(sp)
+                    .into_iter()
+                    .map(|n| {
+                        let t = owned.iter().find(|(on, _)| *on == n).unwrap().1.clone();
+                        (n, t)
+                    })
+                    .collect(),
+            );
+            for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+                let a = shared.encode(policy);
+                let b = cloned.encode(policy);
+                prop_assert!(a == b, "bytes diverged at {sp:?} under {policy:?}");
+                // a second encode runs off the now-cached site index and
+                // must be byte-stable
+                prop_assert!(
+                    shared.encode(policy) == a,
+                    "cached re-encode diverged at {sp:?} under {policy:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_roundtrips_through_reused_buffer() {
+    // one wire buffer reused across frames of wildly varying size/format
+    let mut buf = Vec::new();
+    check("encode_into reuse", default_cases(), |rng| {
+        let occ_t = rng.f64();
+        let occ_m = rng.f64();
+        let t = random_tensor(rng, occ_t);
+        let m = random_mask(rng, occ_m);
+        let p = Packet::new(vec![("f".into(), t.clone()), ("m".into(), m.clone())]);
+        let policy = *rng.pick(&[Policy::Auto, Policy::Dense, Policy::AutoQuantized]);
+        p.encode_into(policy, &mut buf);
+        prop_assert!(buf == p.encode(policy), "encode_into != encode ({policy:?})");
+        let back = Packet::decode(&buf).map_err(|e| format!("decode: {e}"))?;
+        if policy != Policy::AutoQuantized {
+            prop_assert!(back.get("f") == Some(&t), "tensor mutated through reuse");
+            prop_assert!(back.get("m") == Some(&m), "mask mutated through reuse");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_voxelizer_matches_fresh() {
+    use splitpoint::pointcloud::{Point, PointCloud};
+    use splitpoint::voxel::Voxelizer;
+
+    let manifest_json = include_str!("data/test_manifest.json");
+    let manifest =
+        splitpoint::Manifest::parse(manifest_json, std::path::Path::new("/nonexistent")).unwrap();
+    let pooled = Voxelizer::from_config(&manifest.config);
+
+    check("pooled voxelizer", 16, |rng| {
+        let cloud = PointCloud {
+            points: (0..rng.range(0, 800) as usize)
+                .map(|_| Point {
+                    x: rng.uniform(-5.0, 50.0) as f32,
+                    y: rng.uniform(-30.0, 30.0) as f32,
+                    z: rng.uniform(-4.0, 2.0) as f32,
+                    intensity: rng.f32(),
+                })
+                .collect(),
+        };
+        // `pooled` recycles its grids between cases; a fresh voxelizer
+        // never sees a dirty buffer
+        let fresh = Voxelizer::from_config(&manifest.config);
+        let a = pooled.voxelize(&cloud);
+        let b = fresh.voxelize(&cloud);
+        prop_assert!(a.in_range == b.in_range, "in_range diverged");
+        prop_assert!(*a.sum == *b.sum, "pooled sum grid diverged");
+        prop_assert!(*a.cnt == *b.cnt, "pooled cnt grid diverged");
+        prop_assert!(
+            a.cnt.site_index() == b.cnt.site_index(),
+            "occupied-site index diverged"
+        );
+        pooled.recycle(a);
         Ok(())
     });
 }

@@ -1,0 +1,205 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides the subset of `anyhow`'s API the workspace actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` macros. Errors are a chain of strings — no
+//! downcasting, no backtraces — which is all the coordinator needs for its
+//! diagnostics. Swapping back to the real crate is a one-line Cargo change;
+//! no call sites would have to move.
+
+use std::fmt;
+
+/// A string-chained error. Display prints the outermost message; the
+/// alternate form (`{:#}`) and Debug print the whole chain separated by
+/// `": "`, matching how `anyhow` renders context chains inline.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.fmt_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.fmt_chain(f)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps the blanket `From` below coherent (same trick as `anyhow`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // flatten the std error chain into our string chain
+        let mut msgs = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().expect("at least one message"));
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>` with the same default error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(context).context_under(e))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(f()).context_under(e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+impl Error {
+    /// Attach `cause` (any displayable error) underneath `self`.
+    fn context_under<E: fmt::Display>(self, cause: E) -> Error {
+        Error {
+            msg: self.msg,
+            // `{:#}` preserves the full chain when `cause` is an `Error`
+            source: Some(Box::new(Error::msg(format!("{cause:#}")))),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(format!("{e}").contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains_render_alternate() {
+        let base: Result<(), String> = Err("inner".to_string());
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        let m = anyhow!("x = {}", 42);
+        assert_eq!(format!("{m}"), "x = 42");
+        fn bails() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert!(bails().is_err());
+    }
+
+    #[test]
+    fn chain_lists_outermost_first() {
+        let e = Error::msg("a").context("b").context("c");
+        assert_eq!(e.chain(), ["c", "b", "a"]);
+    }
+}
