@@ -160,6 +160,31 @@ fn main() -> anyhow::Result<()> {
                     None
                 }));
             }
+            // the in-flight handle API: two independent executions of the
+            // same module overlapped on worker threads (vs the blocking
+            // xla/vfe number above, back to back)
+            {
+                let vfe = engine
+                    .graph()
+                    .nodes()
+                    .iter()
+                    .find(|n| n.name == "vfe")
+                    .expect("vfe node");
+                let inputs: Vec<Arc<Tensor>> = vfe
+                    .input_ids()
+                    .iter()
+                    .map(|&id| store.get(id).expect("profiled input").clone())
+                    .collect();
+                let rt = engine.runtime().clone();
+                results.push(run_bench("xla/vfe_inflight_pair", cfg, move || {
+                    let a = splitpoint::runtime::XlaRuntime::submit(&rt, "vfe", inputs.clone())
+                        .unwrap();
+                    let b = splitpoint::runtime::XlaRuntime::submit(&rt, "vfe", inputs.clone())
+                        .unwrap();
+                    std::hint::black_box(a.wait().unwrap().len() + b.wait().unwrap().len());
+                    None
+                }));
+            }
         }
         if want(&filters, "run_frame") {
             for split in ["vfe", "conv1", "edge_only"] {
@@ -172,6 +197,52 @@ fn main() -> anyhow::Result<()> {
                     None
                 }));
             }
+        }
+    }
+
+    // ---- pipelined multi-frame execution: 16-frame streams through the
+    // staged scheduler. The serial run_frame loop *is* the pre-pipeline
+    // behaviour, measured from HEAD as the `@legacy` twin, so
+    // `speedup_vs_legacy["pipeline/stream_16_frames"]` reads directly as
+    // the pipelined-over-serial throughput ratio (target ≥1.2x at depth 2;
+    // see docs/PERF.md).
+    if want(&filters, "pipeline") {
+        use splitpoint::coordinator::pipeline::{self, PipelineConfig};
+        let engine = Arc::new(Engine::new(&manifest, SystemConfig::paper())?);
+        let sp = engine.graph().split_after("vfe")?;
+        let clouds: Vec<_> = (0..16)
+            .map(|i| SceneGenerator::with_seed(100 + i as u64).generate().cloud)
+            .collect();
+        {
+            let e = engine.clone();
+            let cl = clouds.clone();
+            results.push(run_bench("pipeline/stream_16_frames@legacy", cfg, move || {
+                for c in &cl {
+                    std::hint::black_box(e.run_frame(c, sp).unwrap().detections.len());
+                }
+                None
+            }));
+        }
+        for (name, depth) in [
+            ("pipeline/stream_16_frames", 2),
+            ("pipeline/stream_16_frames@depth4", 4),
+        ] {
+            let e = engine.clone();
+            let cl = clouds.clone();
+            results.push(run_bench(name, cfg, move || {
+                let (res, _report) = pipeline::run_stream(
+                    e.clone(),
+                    sp,
+                    &cl,
+                    PipelineConfig {
+                        depth,
+                        tail_workers: 2,
+                    },
+                )
+                .unwrap();
+                std::hint::black_box(res.len());
+                None
+            }));
         }
     }
 

@@ -4,6 +4,7 @@
 //! paper-figure bench (`rust/benches/`) is built on this.
 
 pub mod paper;
+pub mod regression;
 
 use std::time::Instant;
 

@@ -1,0 +1,360 @@
+//! Perf-regression gate over `BENCH_micro.json` (the CI lane's checker).
+//!
+//! The bench binary preserves the committed `baseline` section verbatim and
+//! writes this run's numbers under `current`, so one file carries the whole
+//! before/after pair. This module compares the two and fails the gate when
+//! any tracked bench regresses beyond the threshold.
+//!
+//! Policy:
+//!
+//! * the compared statistic is `p50_ms` when both sides carry it (medians
+//!   shrug off one noisy outlier iteration on shared CI runners), falling
+//!   back to `mean_ms`;
+//! * `@legacy` benches are exempt — they re-create *deliberately slow*
+//!   pre-refactor behaviour as an in-run comparison anchor, so a "regression"
+//!   there is meaningless;
+//! * benches present in only one of the two sections never fail the gate
+//!   (new benches join the baseline on the next full run); they are listed
+//!   in the report instead.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Value};
+
+/// One bench compared against its baseline.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    pub baseline_ms: f64,
+    pub current_ms: f64,
+    /// current / baseline — above 1.0 is slower
+    pub ratio: f64,
+}
+
+/// Outcome of gating one `BENCH_micro.json` against its own baseline.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// every bench compared, sorted worst-ratio first
+    pub checked: Vec<Comparison>,
+    /// the subset whose ratio exceeds 1 + threshold
+    pub regressions: Vec<Comparison>,
+    /// benches in `current` with no baseline entry (will seed next run)
+    pub unbaselined: Vec<String>,
+    /// baseline benches that produced no `current` number this run —
+    /// renamed, crashed, or filtered out; their regression coverage is
+    /// gone until the baseline is re-recorded, so the report flags them
+    pub missing_from_current: Vec<String>,
+    /// `@legacy` benches excluded from gating
+    pub exempt: Vec<String>,
+    pub threshold: f64,
+    /// true when the committed file had no baseline at all (first
+    /// measurement hasn't happened yet) — the gate passes vacuously
+    pub baseline_missing: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Markdown report (the CI artifact).
+    pub fn to_markdown(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "## perf gate (threshold {:.0}%)\n", self.threshold * 100.0);
+        if self.baseline_missing {
+            let _ = writeln!(
+                out,
+                "no committed baseline — seeding run, gate passes vacuously. \
+                 Commit the freshly written `BENCH_micro.json` to arm the gate."
+            );
+            return out;
+        }
+        let _ = writeln!(
+            out,
+            "**{}** — {} bench(es) checked, {} regression(s)\n",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.checked.len(),
+            self.regressions.len()
+        );
+        let _ = writeln!(out, "| bench | baseline ms | current ms | ratio | verdict |");
+        let _ = writeln!(out, "|---|---|---|---|---|");
+        for c in &self.checked {
+            let verdict = if c.ratio > 1.0 + self.threshold {
+                "REGRESSED"
+            } else if c.ratio < 1.0 - self.threshold {
+                "improved"
+            } else {
+                "ok"
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {:.3} | {:.3} | {:.2}x | {verdict} |",
+                c.name, c.baseline_ms, c.current_ms, c.ratio
+            );
+        }
+        if !self.unbaselined.is_empty() {
+            let _ = writeln!(
+                out,
+                "\nnot yet baselined (seed on next full run): {}",
+                self.unbaselined.join(", ")
+            );
+        }
+        if !self.missing_from_current.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n**WARNING** — baselined benches with no current measurement \
+                 (renamed, crashed, or filtered; coverage lost): {}",
+                self.missing_from_current.join(", ")
+            );
+        }
+        if !self.exempt.is_empty() {
+            let _ = writeln!(
+                out,
+                "\nexempt `@legacy` re-creations: {}",
+                self.exempt.join(", ")
+            );
+        }
+        out
+    }
+}
+
+/// The statistic a bench entry is judged on: p50 when present (robust to a
+/// single noisy iteration), else mean.
+fn tracked_stat(entry: &Value) -> Option<f64> {
+    entry
+        .get("p50_ms")
+        .and_then(Value::as_f64)
+        .or_else(|| entry.get("mean_ms").and_then(Value::as_f64))
+}
+
+/// Compare `current` against `baseline`. `threshold` is fractional: 0.15
+/// fails any bench whose tracked statistic grew by more than 15%.
+pub fn compare(
+    baseline: &BTreeMap<String, Value>,
+    current: &BTreeMap<String, Value>,
+    threshold: f64,
+) -> GateReport {
+    let mut report = GateReport {
+        threshold,
+        baseline_missing: baseline.is_empty(),
+        ..GateReport::default()
+    };
+    for (name, cur) in current {
+        if name.contains("@legacy") {
+            report.exempt.push(name.clone());
+            continue;
+        }
+        let cur_ms = tracked_stat(cur).filter(|v| *v > 0.0);
+        let base_ms = baseline
+            .get(name)
+            .and_then(tracked_stat)
+            .filter(|v| *v > 0.0);
+        match (base_ms, cur_ms) {
+            (Some(base_ms), Some(cur_ms)) => report.checked.push(Comparison {
+                name: name.clone(),
+                baseline_ms: base_ms,
+                current_ms: cur_ms,
+                ratio: cur_ms / base_ms,
+            }),
+            (None, Some(_)) => report.unbaselined.push(name.clone()),
+            // a baselined bench whose current entry carries no usable
+            // number (missing or non-positive stat) has lost its coverage
+            // just as surely as one that vanished — flag it
+            (_, None) if baseline.contains_key(name) => {
+                report.missing_from_current.push(name.clone())
+            }
+            (_, None) => {}
+        }
+    }
+    for name in baseline.keys() {
+        if !name.contains("@legacy") && !current.contains_key(name) {
+            report.missing_from_current.push(name.clone());
+        }
+    }
+    report
+        .checked
+        .sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap_or(std::cmp::Ordering::Equal));
+    report.regressions = report
+        .checked
+        .iter()
+        .filter(|c| c.ratio > 1.0 + threshold)
+        .cloned()
+        .collect();
+    report
+}
+
+fn section(doc: &Value, key: &str) -> BTreeMap<String, Value> {
+    doc.get(key)
+        .and_then(Value::as_obj)
+        .cloned()
+        .unwrap_or_default()
+}
+
+fn parse_doc(text: &str) -> Result<Value> {
+    match json::parse(text) {
+        Ok(v) => Ok(v),
+        Err(e) => bail!("bench json does not parse: {e}"),
+    }
+}
+
+/// Gate a whole `BENCH_micro.json` document (its own `current` vs its own
+/// committed `baseline`). Note: the bench binary seeds missing baseline
+/// entries from `current` when it writes the file, so for a fresh CI run
+/// prefer [`gate_against`] with the *committed* file as the baseline side —
+/// otherwise brand-new benches gate vacuously against themselves.
+pub fn gate_file(text: &str, threshold: f64) -> Result<GateReport> {
+    let doc = parse_doc(text)?;
+    Ok(compare(
+        &section(&doc, "baseline"),
+        &section(&doc, "current"),
+        threshold,
+    ))
+}
+
+/// Gate a freshly measured document against a *separately committed*
+/// baseline document (its `baseline` section). This is what CI does: copy
+/// `BENCH_micro.json` before the bench run, then compare the rewritten
+/// file's `current` against the pristine copy's `baseline`.
+pub fn gate_against(baseline_text: &str, current_text: &str, threshold: f64) -> Result<GateReport> {
+    let base_doc = parse_doc(baseline_text)?;
+    let cur_doc = parse_doc(current_text)?;
+    Ok(compare(
+        &section(&base_doc, "baseline"),
+        &section(&cur_doc, "current"),
+        threshold,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(baseline: &[(&str, f64)], current: &[(&str, f64)]) -> String {
+        let entry = |ms: f64| format!("{{\"mean_ms\": {ms}, \"p50_ms\": {ms}}}");
+        let section = |pairs: &[(&str, f64)]| {
+            pairs
+                .iter()
+                .map(|(k, v)| format!("\"{k}\": {}", entry(*v)))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        format!(
+            "{{\"baseline\": {{{}}}, \"current\": {{{}}}}}",
+            section(baseline),
+            section(current)
+        )
+    }
+
+    #[test]
+    fn identical_numbers_pass() {
+        let text = doc(&[("a", 1.0), ("b", 2.0)], &[("a", 1.0), ("b", 2.0)]);
+        let gate = gate_file(&text, 0.15).unwrap();
+        assert!(gate.passed());
+        assert_eq!(gate.checked.len(), 2);
+        assert!(!gate.baseline_missing);
+    }
+
+    #[test]
+    fn synthetic_regression_fails_the_gate() {
+        // 16% slower on one tracked bench: beyond the 15% threshold
+        let text = doc(&[("a", 1.0), ("b", 2.0)], &[("a", 1.16), ("b", 2.0)]);
+        let gate = gate_file(&text, 0.15).unwrap();
+        assert!(!gate.passed());
+        assert_eq!(gate.regressions.len(), 1);
+        assert_eq!(gate.regressions[0].name, "a");
+        assert!(gate.to_markdown().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn regression_within_threshold_passes() {
+        let text = doc(&[("a", 1.0)], &[("a", 1.10)]);
+        assert!(gate_file(&text, 0.15).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_baseline_is_a_seeding_pass() {
+        let text = "{\"baseline\": {}, \"current\": {\"a\": {\"mean_ms\": 1.0}}}";
+        let gate = gate_file(text, 0.15).unwrap();
+        assert!(gate.passed());
+        assert!(gate.baseline_missing);
+        assert!(gate.to_markdown().contains("seeding run"));
+    }
+
+    #[test]
+    fn legacy_benches_are_exempt_and_new_benches_reported() {
+        let text = doc(
+            &[("codec/encode_sparse", 1.0)],
+            &[
+                ("codec/encode_sparse", 1.0),
+                // 10x "regression" on a legacy re-creation: ignored
+                ("codec/encode_sparse@legacy", 10.0),
+                // brand-new bench: listed, not gated
+                ("pipeline/stream_16_frames", 5.0),
+            ],
+        );
+        let gate = gate_file(&text, 0.15).unwrap();
+        assert!(gate.passed());
+        assert_eq!(gate.exempt, ["codec/encode_sparse@legacy"]);
+        assert_eq!(gate.unbaselined, ["pipeline/stream_16_frames"]);
+    }
+
+    #[test]
+    fn worst_ratio_sorts_first_and_p50_preferred() {
+        let text = "{\"baseline\": {\
+            \"a\": {\"mean_ms\": 1.0, \"p50_ms\": 1.0},\
+            \"b\": {\"mean_ms\": 1.0}},\
+          \"current\": {\
+            \"a\": {\"mean_ms\": 9.0, \"p50_ms\": 1.2},\
+            \"b\": {\"mean_ms\": 1.3}}}";
+        let gate = gate_file(text, 0.15).unwrap();
+        // a is judged on p50 (1.2x) not mean (9x); b on mean (1.3x)
+        assert_eq!(gate.checked[0].name, "b");
+        assert!((gate.checked[0].ratio - 1.3).abs() < 1e-9);
+        assert!((gate.checked[1].ratio - 1.2).abs() < 1e-9);
+        assert_eq!(gate.regressions.len(), 2);
+    }
+
+    #[test]
+    fn garbage_file_is_an_error() {
+        assert!(gate_file("not json", 0.15).is_err());
+    }
+
+    #[test]
+    fn vanished_benches_are_flagged_not_gated() {
+        // 'gone' has a baseline but produced no current number this run
+        let text = doc(&[("a", 1.0), ("gone", 2.0)], &[("a", 1.0)]);
+        let gate = gate_file(&text, 0.15).unwrap();
+        assert!(gate.passed());
+        assert_eq!(gate.missing_from_current, ["gone"]);
+        assert!(gate.to_markdown().contains("coverage lost"));
+    }
+
+    #[test]
+    fn zeroed_current_stat_counts_as_lost_coverage() {
+        // 'a' is present in current but its tracked stat is 0.0 — a timing
+        // bug, not a measurement; it must not silently vanish from the gate
+        let text = doc(&[("a", 1.0), ("b", 1.0)], &[("a", 0.0), ("b", 1.0)]);
+        let gate = gate_file(&text, 0.15).unwrap();
+        assert!(gate.passed());
+        assert_eq!(gate.missing_from_current, ["a"]);
+        assert_eq!(gate.checked.len(), 1);
+    }
+
+    #[test]
+    fn gate_against_uses_committed_baseline_not_self_seeded() {
+        // committed file: baseline pins 'a' at 1.0
+        let committed = doc(&[("a", 1.0)], &[("a", 1.0)]);
+        // fresh run rewrote the file: the bench binary seeded 'new' into
+        // baseline from its own first measurement, and 'a' regressed 20%
+        let fresh = doc(&[("a", 1.0), ("new", 5.0)], &[("a", 1.2), ("new", 5.0)]);
+        let gate = gate_against(&committed, &fresh, 0.15).unwrap();
+        assert!(!gate.passed());
+        assert_eq!(gate.regressions[0].name, "a");
+        // 'new' is reported as unbaselined (no committed entry), not
+        // vacuously compared against its own run
+        assert_eq!(gate.unbaselined, ["new"]);
+    }
+}

@@ -1,0 +1,72 @@
+//! CI perf-regression gate: compare the fresh `current` section of
+//! `BENCH_micro.json` against the committed `baseline` and exit non-zero
+//! on a regression.
+//!
+//!   cargo run --release --bin perf-guard -- \
+//!       [--file BENCH_micro.json] [--baseline-file COMMITTED.json] \
+//!       [--threshold 0.15] [--report BENCH_diff.md]
+//!
+//! Run it right after `cargo bench --bench micro -- --json`. Pass
+//! `--baseline-file` a pristine copy of the *committed* file (CI copies it
+//! before the bench run): the bench binary seeds missing baseline entries
+//! into the file it rewrites, so gating a fresh file against itself would
+//! let brand-new benches gate vacuously. Without `--baseline-file`, the
+//! measured file's own baseline section is used. With no committed
+//! baseline at all the gate passes vacuously ("seeding run") — commit the
+//! freshly written `BENCH_micro.json` to arm it.
+
+use splitpoint::bench::regression;
+
+fn main() -> anyhow::Result<()> {
+    let mut file = "BENCH_micro.json".to_string();
+    let mut baseline_file: Option<String> = None;
+    let mut threshold = 0.15f64;
+    let mut report_path: Option<String> = None;
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut value = || {
+            it.next()
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("{a} needs a value"))
+        };
+        match a.as_str() {
+            "--file" => file = value()?,
+            "--baseline-file" => baseline_file = Some(value()?),
+            "--threshold" => {
+                let raw = value()?;
+                threshold = raw.parse().map_err(|_| {
+                    anyhow::anyhow!("--threshold: cannot parse '{raw}' (want e.g. 0.15)")
+                })?;
+            }
+            "--report" => report_path = Some(value()?),
+            other => anyhow::bail!("unknown argument '{other}'"),
+        }
+    }
+
+    let read = |path: &str| {
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))
+    };
+    let current_text = read(&file)?;
+    let gate = match &baseline_file {
+        Some(b) => regression::gate_against(&read(b)?, &current_text, threshold)?,
+        None => regression::gate_file(&current_text, threshold)?,
+    };
+    let md = gate.to_markdown();
+    println!("{md}");
+    if let Some(path) = report_path {
+        std::fs::write(&path, &md)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    }
+    if !gate.passed() {
+        eprintln!(
+            "[perf-guard] FAIL: {} bench(es) regressed more than {:.0}%",
+            gate.regressions.len(),
+            threshold * 100.0
+        );
+        std::process::exit(1);
+    }
+    eprintln!("[perf-guard] pass");
+    Ok(())
+}

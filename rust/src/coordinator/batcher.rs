@@ -116,6 +116,25 @@ impl Batcher {
         let n = q.frames.len().min(self.policy.max_frames);
         out.extend(q.frames.drain(..n).map(|(f, _)| f));
     }
+
+    /// Bridge to the staged scheduler: drain batches into `pipeline` until
+    /// this batcher closes (or the pipeline does), preserving batch order.
+    /// Returns the number of frames forwarded. The pipeline's input queue
+    /// applies backpressure, so a slow engine throttles the drain instead
+    /// of ballooning in-flight frames.
+    pub fn drain_into_pipeline(&self, pipeline: &crate::coordinator::Pipeline) -> usize {
+        let mut batch = Vec::new();
+        let mut forwarded = 0;
+        while self.next_batch_into(&mut batch) {
+            for frame in batch.drain(..) {
+                if pipeline.submit(frame.cloud).is_err() {
+                    return forwarded;
+                }
+                forwarded += 1;
+            }
+        }
+        forwarded
+    }
 }
 
 #[cfg(test)]

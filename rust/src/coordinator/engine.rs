@@ -13,6 +13,14 @@
 //! and `finalize` share tensors by refcount. Steady state performs no
 //! `String` hashing, no full-tensor deep clones, and (via the voxelizer's
 //! scratch pool) no dense-grid allocation.
+//!
+//! Staged frame contract: [`Engine::run_frame`] is literally the
+//! composition of three stage functions — [`Engine::head_stage`]
+//! (edge compute + wire encode), [`Engine::transfer_stage`] (link +
+//! decode) and [`Engine::tail_stage`] (server compute + response +
+//! finalize). The multi-frame pipeline ([`crate::coordinator::pipeline`])
+//! runs the same three functions on separate worker threads, so pipelined
+//! output is byte-identical to serial execution *by construction*.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -87,6 +95,53 @@ impl TimingBreakdown {
 pub struct FrameResult {
     pub detections: Vec<Detection>,
     pub timing: TimingBreakdown,
+}
+
+/// Output of [`Engine::head_stage`]: the head ran on the edge and the live
+/// set is encoded into a pooled wire buffer. Opaque to callers — hand it to
+/// [`Engine::transfer_stage`], or ship [`HeadFrame::take_wire`] over a real
+/// socket (the TCP edge client does).
+#[derive(Debug)]
+pub struct HeadFrame {
+    sp: SplitPoint,
+    store: TensorStore,
+    node_times: Vec<(String, SimTime, Side)>,
+    /// encoded live-set packet (`None` when the live set is empty, i.e.
+    /// edge-only execution)
+    wire: Option<Vec<u8>>,
+    encode_time: SimTime,
+}
+
+impl HeadFrame {
+    /// Encoded wire bytes, if the split ships anything.
+    pub fn wire(&self) -> Option<&[u8]> {
+        self.wire.as_deref()
+    }
+
+    /// Take the wire buffer out (for transports that consume the bytes)
+    /// leaving the rest of the frame intact.
+    pub fn take_wire(&mut self) -> Option<Vec<u8>> {
+        self.wire.take()
+    }
+
+    /// Decompose into the per-frame store (the edge keeps it to finalize
+    /// once the server responds) and the edge-side timing rows.
+    pub fn into_store(self) -> (TensorStore, Vec<(String, SimTime, Side)>) {
+        (self.store, self.node_times)
+    }
+}
+
+/// Output of [`Engine::transfer_stage`]: the packet crossed the (virtual)
+/// link and was decoded back into the store. Feed to [`Engine::tail_stage`].
+#[derive(Debug)]
+pub struct TransferredFrame {
+    sp: SplitPoint,
+    store: TensorStore,
+    node_times: Vec<(String, SimTime, Side)>,
+    encode_time: SimTime,
+    decode_time: SimTime,
+    uplink_bytes: usize,
+    uplink_time: SimTime,
 }
 
 /// The engine: everything needed to run any split of the pipeline.
@@ -274,18 +329,18 @@ impl Engine {
         ))
     }
 
-    /// Run one frame at a split point on the virtual clock.
-    pub fn run_frame(&self, cloud: &PointCloud, sp: SplitPoint) -> Result<FrameResult> {
+    /// Stage 1 — edge side of one frame: run the head nodes and encode the
+    /// live set into a pooled wire buffer. The returned [`HeadFrame`] feeds
+    /// [`Engine::transfer_stage`]; the TCP edge client sends its wire bytes
+    /// over a real socket instead.
+    pub fn head_stage(&self, cloud: &PointCloud, sp: SplitPoint) -> Result<HeadFrame> {
         if sp.head_len > self.graph.len() {
             bail!("split {:?} beyond pipeline length", sp);
         }
-        let policy = self.cfg.codec;
         let mut store = self.new_store();
         store.insert(self.graph.primal_id(), Arc::new(cloud.to_tensor()));
 
         let mut node_times = Vec::with_capacity(self.graph.len());
-
-        // ---- edge: head nodes
         for idx in 0..sp.head_len {
             let host = self.run_node(idx, &mut store)?;
             let name = &self.graph.nodes()[idx].name;
@@ -296,10 +351,10 @@ impl Engine {
             ));
         }
 
-        // ---- edge: encode live set, uplink
+        // ---- edge: encode the live set
         let live = self.graph.live_ids(sp);
-        let (uplink_bytes, encode_time, decode_time) = if live.is_empty() {
-            (0, SimTime::ZERO, SimTime::ZERO)
+        let (wire, encode_time) = if live.is_empty() {
+            (None, SimTime::ZERO)
         } else {
             let mut tensors = Vec::with_capacity(live.len());
             for &id in live {
@@ -322,33 +377,84 @@ impl Engine {
                 .pop()
                 .unwrap_or_default();
             let t0 = Instant::now();
-            packet.encode_into(policy, &mut buf);
+            packet.encode_into(self.cfg.codec, &mut buf);
             let enc = SimTime::from_duration(t0.elapsed()).scaled(self.cfg.edge.slowdown);
-            let t1 = Instant::now();
-            let decoded = Packet::decode(&buf)?;
-            let dec = SimTime::from_duration(t1.elapsed()).scaled(self.cfg.server.slowdown);
-            let wire_len = buf.len();
-            {
-                let mut pool = self.wire_buffers.lock().unwrap();
-                if pool.len() < MAX_WIRE_BUFFERS {
-                    pool.push(buf);
+            (Some(buf), enc)
+        };
+
+        Ok(HeadFrame {
+            sp,
+            store,
+            node_times,
+            wire,
+            encode_time,
+        })
+    }
+
+    /// Stage 2 — the wire crossing: charge the uplink on the virtual clock
+    /// and decode the packet into the store. The server sees exactly the
+    /// decoded tensors (quantization round-trips through the wire,
+    /// affecting tail numerics as it would in deployment).
+    pub fn transfer_stage(&self, head: HeadFrame) -> Result<TransferredFrame> {
+        let HeadFrame {
+            sp,
+            mut store,
+            node_times,
+            wire,
+            encode_time,
+        } = head;
+        let (uplink_bytes, decode_time) = match wire {
+            None => (0, SimTime::ZERO),
+            Some(buf) => {
+                let t1 = Instant::now();
+                let decoded = Packet::decode(&buf)?;
+                let dec =
+                    SimTime::from_duration(t1.elapsed()).scaled(self.cfg.server.slowdown);
+                let wire_len = buf.len();
+                {
+                    let mut pool = self.wire_buffers.lock().unwrap();
+                    if pool.len() < MAX_WIRE_BUFFERS {
+                        pool.push(buf);
+                    }
                 }
+                // order is the live-set order, so ids line up without any
+                // name lookups
+                for (&id, (name, t)) in self.graph.live_ids(sp).iter().zip(decoded.tensors) {
+                    debug_assert_eq!(self.graph.tensor_name(id), name.as_str());
+                    store.insert(id, t);
+                }
+                (wire_len, dec)
             }
-            // the server sees exactly the decoded tensors (quantization
-            // round-trips through the wire, affecting tail numerics as it
-            // would in deployment); order is the live-set order, so ids
-            // line up without any name lookups
-            for (&id, (name, t)) in live.iter().zip(decoded.tensors) {
-                debug_assert_eq!(self.graph.tensor_name(id), name.as_str());
-                store.insert(id, t);
-            }
-            (wire_len, enc, dec)
         };
         let uplink_time = if sp.head_len == self.graph.len() {
             SimTime::ZERO
         } else {
             self.link.transfer_time(uplink_bytes)
         };
+        Ok(TransferredFrame {
+            sp,
+            store,
+            node_times,
+            encode_time,
+            decode_time,
+            uplink_bytes,
+            uplink_time,
+        })
+    }
+
+    /// Stage 3 — server side: run the tail nodes, price the response
+    /// downlink, assemble detections and hand scratch grids back to the
+    /// pool.
+    pub fn tail_stage(&self, frame: TransferredFrame) -> Result<FrameResult> {
+        let TransferredFrame {
+            sp,
+            mut store,
+            mut node_times,
+            encode_time,
+            decode_time,
+            uplink_bytes,
+            uplink_time,
+        } = frame;
 
         // ---- server: tail nodes
         for idx in sp.head_len..self.graph.len() {
@@ -378,7 +484,7 @@ impl Engine {
             );
             // only the byte count matters on the virtual clock; the exact
             // size calculator skips building the buffer entirely
-            let bytes = packet.encoded_size(policy);
+            let bytes = packet.encoded_size(self.cfg.codec);
             (bytes, self.link.transfer_time(bytes))
         };
 
@@ -417,6 +523,16 @@ impl Engine {
                 edge_time,
             },
         })
+    }
+
+    /// Run one frame at a split point on the virtual clock: the serial
+    /// composition of the three stage functions. The pipelined engine runs
+    /// the identical stages on worker threads, so its per-frame output is
+    /// byte-identical to this path.
+    pub fn run_frame(&self, cloud: &PointCloud, sp: SplitPoint) -> Result<FrameResult> {
+        let head = self.head_stage(cloud, sp)?;
+        let transferred = self.transfer_stage(head)?;
+        self.tail_stage(transferred)
     }
 
     /// Convenience: run at the configured split.

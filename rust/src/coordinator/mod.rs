@@ -2,6 +2,8 @@
 //!
 //! * [`engine`] — per-frame split execution on the calibrated virtual clock
 //! * [`link`] — bandwidth/RTT link model
+//! * [`pipeline`] — staged multi-frame scheduler: overlap preprocess(N+1)
+//!   with transfer/tail(N) on bounded worker queues
 //! * [`transport`] / [`remote`] — real TCP edge/server deployment
 //! * [`batcher`] — multi-LiDAR frame batching (paper §VI future work)
 //! * [`adaptive`] — analytic split-point selection (extension)
@@ -10,8 +12,10 @@ pub mod adaptive;
 pub mod batcher;
 pub mod engine;
 pub mod link;
+pub mod pipeline;
 pub mod remote;
 pub mod transport;
 
-pub use engine::{Engine, FrameResult, Side, TimingBreakdown};
+pub use engine::{Engine, FrameResult, HeadFrame, Side, TimingBreakdown, TransferredFrame};
 pub use link::LinkModel;
+pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};

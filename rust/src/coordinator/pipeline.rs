@@ -1,0 +1,612 @@
+//! Pipelined multi-frame execution: overlap preprocess(N+1) with
+//! transfer/tail(N).
+//!
+//! [`Engine::run_frame`] is the serial composition of three stage
+//! functions (head → transfer → tail; see `coordinator::engine`). This
+//! module runs the *same* three functions on dedicated worker threads
+//! connected by bounded queues, so while frame N's tail executes on the
+//! (virtual) server, frame N+1's voxelization and head compute already run
+//! on the edge — the head/tail overlap SC-MII and PointSplit exploit to
+//! keep both sides of a split busy.
+//!
+//! Invariants, pinned by `rust/tests/pipeline.rs`:
+//!
+//! * **Byte-identity** — pipelined per-frame output (detections, wire byte
+//!   counts) is identical to serial `run_frame`, because both paths execute
+//!   the identical stage functions on the identical inputs.
+//! * **Submission order** — results come back in submission order at any
+//!   depth and tail-worker count (a reorder buffer holds early finishers).
+//! * **Bounded in-flight work** — every inter-stage queue holds at most
+//!   `depth` frames; [`Pipeline::submit`] blocks when the pipeline is full
+//!   (backpressure), and `close` never deadlocks: queued frames drain,
+//!   blocked producers wake with an error. Note the bound covers frames
+//!   *inside* the stages: completed results park in the (unbounded)
+//!   reorder buffer until the consumer takes them, so a consumer that
+//!   stops draining while frames keep being submitted accumulates
+//!   finished `FrameResult`s — drain concurrently, as [`run_stream`]
+//!   does. (Keeping the output side unbounded is what makes shutdown
+//!   unconditionally deadlock-free: workers can always finish and exit.)
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::engine::{Engine, FrameResult};
+use crate::metrics::{OccupancyHist, Recorder};
+use crate::model::graph::SplitPoint;
+use crate::pointcloud::PointCloud;
+
+// --------------------------------------------------------- bounded queue
+
+/// A blocking MPMC queue with a hard capacity — the backpressure primitive
+/// between pipeline stages.
+///
+/// `push` blocks while full and fails once the queue is closed; `pop`
+/// blocks while empty and returns `None` once the queue is closed *and*
+/// drained. `close` wakes every waiter, so no thread can sleep through a
+/// shutdown.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Returns the item
+    /// back if the queue is (or becomes, while blocked) closed.
+    pub fn push(&self, item: T) -> std::result::Result<(), T> {
+        let mut q = self.state.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(item);
+            }
+            if q.items.len() < self.cap {
+                q.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking while empty. Returns the item plus the queue
+    /// depth *after* the pop (the occupancy sample the pipeline records);
+    /// `None` once closed and drained.
+    pub fn pop(&self) -> Option<(T, usize)> {
+        let mut q = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                let depth = q.items.len();
+                self.not_full.notify_one();
+                return Some((item, depth));
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// No more pushes; queued items still drain. Wakes all waiters.
+    pub fn close(&self) {
+        let mut q = self.state.lock().unwrap();
+        q.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// -------------------------------------------------------- reorder buffer
+
+/// Restores submission order: stage workers complete frames as they
+/// finish; the consumer always receives seq 0, 1, 2, …
+#[derive(Debug)]
+struct Reorder {
+    state: Mutex<ReorderState>,
+    ready: Condvar,
+}
+
+#[derive(Debug)]
+struct ReorderState {
+    results: BTreeMap<u64, Result<FrameResult>>,
+    next: u64,
+    /// set once every stage worker has exited — every submitted frame has
+    /// its entry by then
+    producers_done: bool,
+}
+
+impl Reorder {
+    fn new() -> Reorder {
+        Reorder {
+            state: Mutex::new(ReorderState {
+                results: BTreeMap::new(),
+                next: 0,
+                producers_done: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, seq: u64, result: Result<FrameResult>) {
+        let mut s = self.state.lock().unwrap();
+        s.results.insert(seq, result);
+        self.ready.notify_all();
+    }
+
+    fn finish(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.producers_done = true;
+        self.ready.notify_all();
+    }
+
+    /// Blocks until the next-in-order frame completes; `None` once the
+    /// pipeline is closed and fully drained.
+    fn next(&self) -> Option<Result<FrameResult>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let seq = s.next;
+            if let Some(r) = s.results.remove(&seq) {
+                s.next += 1;
+                return Some(r);
+            }
+            if s.producers_done {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+}
+
+// ------------------------------------------------------------- pipeline
+
+/// Pipeline shape. `depth` bounds every inter-stage queue (total in-flight
+/// frames ≈ 3·depth + workers); `tail_workers` parallelizes the dominant
+/// tail stage — per-frame tails are independent, and the reorder buffer
+/// keeps delivery in submission order.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    pub depth: usize,
+    pub tail_workers: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            depth: 2,
+            tail_workers: 1,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn with_depth(depth: usize) -> PipelineConfig {
+        PipelineConfig {
+            depth,
+            ..PipelineConfig::default()
+        }
+    }
+}
+
+/// Per-stage service latency and queue occupancy, sampled live by the
+/// stage workers.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    /// service time per stage: `stage/head`, `stage/transfer`, `stage/tail`
+    pub stage_latency: Recorder,
+    /// depth observed at each dequeue: `queue/input`, `queue/transfer`,
+    /// `queue/tail`
+    pub queue_occupancy: BTreeMap<String, OccupancyHist>,
+    /// frames fully completed (delivered to the reorder buffer)
+    pub frames: usize,
+}
+
+impl PipelineReport {
+    /// Markdown rendering: stage latency table + occupancy table.
+    pub fn to_markdown(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = self.stage_latency.to_markdown("pipeline stage latency");
+        let _ = writeln!(out, "\n### queue occupancy at dequeue\n");
+        let _ = writeln!(out, "| queue | samples | mean depth | max | ≥1 waiting |");
+        let _ = writeln!(out, "|---|---|---|---|---|");
+        for (name, h) in &self.queue_occupancy {
+            let _ = writeln!(
+                out,
+                "| {name} | {} | {:.2} | {} | {:.0}% |",
+                h.count(),
+                h.mean(),
+                h.max(),
+                h.fraction_at_least(1) * 100.0
+            );
+        }
+        out
+    }
+}
+
+#[derive(Debug, Default)]
+struct PipelineShared {
+    latency: Mutex<Recorder>,
+    occupancy: Mutex<BTreeMap<String, OccupancyHist>>,
+    frames: AtomicUsize,
+}
+
+impl PipelineShared {
+    fn record_latency(&self, label: &str, since: Instant) {
+        self.latency
+            .lock()
+            .unwrap()
+            .record(label, since.elapsed().as_secs_f64() * 1e3);
+    }
+
+    fn record_occupancy(&self, queue: &str, depth: usize) {
+        self.occupancy
+            .lock()
+            .unwrap()
+            .entry(queue.to_string())
+            .or_default()
+            .record(depth);
+    }
+}
+
+/// The staged multi-frame scheduler. Spawn once per stream; submit frames
+/// (blocking on backpressure), close, and drain results in submission
+/// order. All methods take `&self`, so a feeder thread and a collector
+/// thread can share one `Pipeline` by reference.
+pub struct Pipeline {
+    input: Arc<BoundedQueue<(u64, PointCloud)>>,
+    reorder: Arc<Reorder>,
+    shared: Arc<PipelineShared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    /// next sequence number; held across the submit push so sequence
+    /// numbers are dense and ordered even with concurrent submitters (a
+    /// failed push consumes no seq, so the reorder stream has no gaps)
+    next_seq: Mutex<u64>,
+}
+
+impl Pipeline {
+    /// Spawn the stage workers: one head, one transfer, `tail_workers`
+    /// tails. Frames flow head → transfer → tail through bounded queues of
+    /// `depth` entries each; a stage error routes that frame's `Err`
+    /// straight to the output without stalling later frames.
+    pub fn spawn(engine: Arc<Engine>, sp: SplitPoint, cfg: PipelineConfig) -> Result<Pipeline> {
+        if sp.head_len > engine.graph().len() {
+            bail!("split {:?} beyond pipeline length", sp);
+        }
+        let depth = cfg.depth.max(1);
+        let tail_workers = cfg.tail_workers.max(1);
+
+        let input: Arc<BoundedQueue<(u64, PointCloud)>> = Arc::new(BoundedQueue::new(depth));
+        let q_transfer = Arc::new(BoundedQueue::new(depth));
+        let q_tail = Arc::new(BoundedQueue::new(depth));
+        let reorder = Arc::new(Reorder::new());
+        let shared = Arc::new(PipelineShared::default());
+        let mut threads = Vec::with_capacity(2 + tail_workers);
+
+        // ---- stage 1: head (voxelize + head nodes + wire encode)
+        {
+            let (input, out) = (input.clone(), q_transfer.clone());
+            let (engine, reorder, shared) = (engine.clone(), reorder.clone(), shared.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sp-pipe-head".into())
+                    .spawn(move || {
+                        while let Some(((seq, cloud), depth_seen)) = input.pop() {
+                            shared.record_occupancy("queue/input", depth_seen);
+                            let t0 = Instant::now();
+                            match engine.head_stage(&cloud, sp) {
+                                Ok(head) => {
+                                    shared.record_latency("stage/head", t0);
+                                    // defensive: only this worker closes
+                                    // `out`, so the push cannot fail today;
+                                    // an error completion still beats a
+                                    // panic, which would hang the drain
+                                    if out.push((seq, head)).is_err() {
+                                        reorder.complete(
+                                            seq,
+                                            Err(anyhow!("pipeline closed mid-frame")),
+                                        );
+                                    }
+                                }
+                                Err(e) => {
+                                    shared.record_latency("stage/head", t0);
+                                    reorder.complete(seq, Err(e));
+                                }
+                            }
+                        }
+                        out.close();
+                    })?,
+            );
+        }
+
+        // ---- stage 2: transfer (virtual uplink + wire decode)
+        {
+            let (input, out) = (q_transfer.clone(), q_tail.clone());
+            let (engine, reorder, shared) = (engine.clone(), reorder.clone(), shared.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sp-pipe-transfer".into())
+                    .spawn(move || {
+                        while let Some(((seq, head), depth_seen)) = input.pop() {
+                            shared.record_occupancy("queue/transfer", depth_seen);
+                            let t0 = Instant::now();
+                            match engine.transfer_stage(head) {
+                                Ok(frame) => {
+                                    shared.record_latency("stage/transfer", t0);
+                                    // defensive; see the head worker
+                                    if out.push((seq, frame)).is_err() {
+                                        reorder.complete(
+                                            seq,
+                                            Err(anyhow!("pipeline closed mid-frame")),
+                                        );
+                                    }
+                                }
+                                Err(e) => {
+                                    shared.record_latency("stage/transfer", t0);
+                                    reorder.complete(seq, Err(e));
+                                }
+                            }
+                        }
+                        out.close();
+                    })?,
+            );
+        }
+
+        // ---- stage 3: tail × W (server nodes + finalize), reordered
+        let live_tails = Arc::new(AtomicUsize::new(tail_workers));
+        for w in 0..tail_workers {
+            let input = q_tail.clone();
+            let (engine, reorder, shared) = (engine.clone(), reorder.clone(), shared.clone());
+            let live_tails = live_tails.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("sp-pipe-tail-{w}"))
+                    .spawn(move || {
+                        while let Some(((seq, frame), depth_seen)) = input.pop() {
+                            shared.record_occupancy("queue/tail", depth_seen);
+                            let t0 = Instant::now();
+                            let result = engine.tail_stage(frame);
+                            shared.record_latency("stage/tail", t0);
+                            shared.frames.fetch_add(1, Ordering::Relaxed);
+                            reorder.complete(seq, result);
+                        }
+                        // the head and transfer workers have already
+                        // exited (their output queues closed before the
+                        // tail queue drained), so the last tail worker
+                        // seals the stream
+                        if live_tails.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            reorder.finish();
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Pipeline {
+            input,
+            reorder,
+            shared,
+            threads: Mutex::new(threads),
+            next_seq: Mutex::new(0),
+        })
+    }
+
+    /// Submit a frame, blocking while the input queue is at capacity
+    /// (backpressure). Returns the frame's sequence number; results come
+    /// back in submission order via [`Pipeline::next_result`]. Errors if
+    /// the pipeline is closed.
+    pub fn submit(&self, cloud: PointCloud) -> Result<u64> {
+        let mut next = self.next_seq.lock().unwrap();
+        let seq = *next;
+        match self.input.push((seq, cloud)) {
+            Ok(()) => {
+                *next += 1;
+                Ok(seq)
+            }
+            Err(_) => Err(anyhow!("pipeline is closed")),
+        }
+    }
+
+    /// No more frames; queued frames still drain. Idempotent.
+    pub fn close(&self) {
+        self.input.close();
+    }
+
+    /// Next frame result in submission order. Blocks until the frame
+    /// completes; `None` once the pipeline is closed and drained. (With no
+    /// outstanding frame and the pipeline still open, this blocks until
+    /// another thread submits or closes — interleave with `submit`, or run
+    /// the feeder on its own thread as [`run_stream`] does.)
+    pub fn next_result(&self) -> Option<Result<FrameResult>> {
+        self.reorder.next()
+    }
+
+    /// Frames submitted so far.
+    pub fn submitted(&self) -> u64 {
+        *self.next_seq.lock().unwrap()
+    }
+
+    /// Snapshot of per-stage latency and queue occupancy.
+    pub fn report(&self) -> PipelineReport {
+        PipelineReport {
+            stage_latency: self.shared.latency.lock().unwrap().clone(),
+            queue_occupancy: self.shared.occupancy.lock().unwrap().clone(),
+            frames: self.shared.frames.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // close + join is always safe: completed results park in the
+        // (unbounded) reorder buffer, so no stage worker can block forever
+        self.input.close();
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Run a whole frame stream through a pipeline: a feeder thread submits
+/// every cloud (cloning out of the slice) while the caller's thread drains
+/// results in submission order. Returns the per-frame results plus the
+/// stage report.
+pub fn run_stream(
+    engine: Arc<Engine>,
+    sp: SplitPoint,
+    clouds: &[PointCloud],
+    cfg: PipelineConfig,
+) -> Result<(Vec<FrameResult>, PipelineReport)> {
+    let pipeline = Pipeline::spawn(engine, sp, cfg)?;
+    let mut out = Vec::with_capacity(clouds.len());
+    std::thread::scope(|s| -> Result<()> {
+        let p = &pipeline;
+        s.spawn(move || {
+            for cloud in clouds {
+                if p.submit(cloud.clone()).is_err() {
+                    break;
+                }
+            }
+            p.close();
+        });
+        for _ in 0..clouds.len() {
+            match p.next_result() {
+                Some(r) => out.push(r?),
+                None => bail!("pipeline ended before delivering every frame"),
+            }
+        }
+        Ok(())
+    })?;
+    let report = pipeline.report();
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn queue_passes_items_in_order_with_occupancy() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        for i in 0..3 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 3);
+        assert!(!q.is_empty());
+        let (a, d0) = q.pop().unwrap();
+        assert_eq!((a, d0), (0, 2));
+        let (b, d1) = q.pop().unwrap();
+        assert_eq!((b, d1), (1, 1));
+        q.close();
+        assert_eq!(q.pop(), Some((2, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_rejects_push_after_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.close();
+        assert_eq!(q.push(7), Err(7));
+    }
+
+    #[test]
+    fn queue_blocked_producer_wakes_on_close() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(1));
+        // give the producer time to block on the full queue
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(producer.join().unwrap(), Err(1));
+        // the queued item still drains
+        assert_eq!(q.pop(), Some((0, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_blocked_consumer_wakes_on_close() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_bounds_depth() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(0u32).unwrap();
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        // capacity held at 2 while the producer blocks
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().map(|(v, _)| v), Some(0));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.pop().map(|(v, _)| v), Some(1));
+        assert_eq!(q.pop().map(|(v, _)| v), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn reorder_restores_submission_order() {
+        let r = Reorder::new();
+        let fake = |_seq: u64| -> Result<FrameResult> { Err(anyhow!("sentinel")) };
+        r.complete(2, fake(2));
+        r.complete(0, fake(0));
+        r.complete(1, fake(1));
+        r.finish();
+        for _ in 0..3 {
+            assert!(r.next().unwrap().is_err());
+        }
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn report_markdown_lists_queues() {
+        let mut report = PipelineReport::default();
+        report
+            .queue_occupancy
+            .entry("queue/input".into())
+            .or_default()
+            .record(1);
+        let md = report.to_markdown();
+        assert!(md.contains("queue/input"));
+        assert!(md.contains("queue occupancy"));
+    }
+}

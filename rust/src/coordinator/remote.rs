@@ -257,31 +257,8 @@ impl EdgeClient {
                 packet: bytes,
             },
         )?;
-        let reply = read_message(&mut self.stream)?;
-        let round_trip = SimTime::from_duration(t_send.elapsed());
-
-        let (server_nanos, resp_packet) = match reply {
-            Message::InferResult {
-                request_id: rid,
-                server_nanos,
-                packet,
-            } => {
-                if rid != request_id {
-                    bail!("response id {rid} != request {request_id}");
-                }
-                (server_nanos, packet)
-            }
-            Message::Error { message, .. } => bail!("server error: {message}"),
-            other => bail!("unexpected reply {other:?}"),
-        };
-        for (name, t) in Packet::decode(&resp_packet)?.tensors {
-            let id = graph
-                .tensor_id(&name)
-                .with_context(|| format!("response tensor '{name}' not in this pipeline"))?;
-            store.insert(id, t);
-        }
-        let detections = engine.finalize(&store)?;
-        engine.reclaim_scratch(&mut store);
+        let (detections, server_nanos, round_trip) =
+            receive_reply(&mut self.stream, &engine, request_id, &mut store, t_send)?;
         let inference_time = SimTime::from_duration(t_start.elapsed());
 
         Ok((
@@ -301,4 +278,214 @@ impl EdgeClient {
     pub fn shutdown(mut self) -> Result<()> {
         write_message(&mut self.stream, &Message::Shutdown)
     }
+
+    /// Pipelined streaming: overlap the local head compute of frame N+1
+    /// with the server round trip of frame N.
+    ///
+    /// A writer thread runs [`Engine::head_stage`] per frame and sends the
+    /// wire packet; this thread receives responses and finalizes, in
+    /// submission order (the server processes one connection's requests
+    /// sequentially, so replies are FIFO). `depth` caps in-flight frames:
+    /// `depth <= 1` degenerates to the serial [`EdgeClient::run_frame`]
+    /// loop. Per-frame `round_trip` now includes queueing — at the server,
+    /// and on the client side whenever backpressure stalls the writer
+    /// before the request reaches the socket — which is the point:
+    /// latency is traded for the throughput that overlap buys.
+    pub fn run_stream(
+        &mut self,
+        clouds: &[PointCloud],
+        sp: SplitPoint,
+        depth: usize,
+    ) -> Result<Vec<(Vec<Detection>, RemoteTiming)>> {
+        if depth <= 1 {
+            return clouds.iter().map(|c| self.run_frame(c, sp)).collect();
+        }
+        let engine = self.engine.clone();
+        let mut write_stream = self.stream.try_clone()?;
+        let first_id = self.next_id;
+        self.next_id += clouds.len() as u64;
+        // the channel bounds in-flight requests: the writer blocks sending
+        // the pending record once `depth` frames are outstanding
+        let (tx, rx) = std::sync::mpsc::sync_channel::<PendingRequest>(depth.max(1));
+
+        // scoped writer thread: borrows `clouds` directly (no up-front
+        // deep copy of the whole stream) and is always joined before this
+        // function returns
+        let (read_all, write_res) = std::thread::scope(|scope| {
+            let writer = scope.spawn(move || -> Result<()> {
+                let sent = send_stream(&engine, &mut write_stream, clouds, sp, first_id, &tx);
+                if sent.is_err() {
+                    // unblock the reader, which would otherwise wait on a
+                    // reply that will never be sent
+                    let _ = write_stream.shutdown(std::net::Shutdown::Both);
+                }
+                sent
+            });
+            let read_all = self.recv_stream(&rx);
+            // drop the receiver before joining: a writer blocked on a full
+            // channel fails its send and exits
+            drop(rx);
+            if read_all.is_err() {
+                // unblock a writer stuck in a socket write: with the reader
+                // gone the TCP windows can back up and block it forever
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            }
+            let write_res = writer
+                .join()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("edge writer thread panicked")));
+            (read_all, write_res)
+        });
+        let frames = match (read_all, write_res) {
+            (Ok(frames), Ok(())) => frames,
+            // reader finished but the writer failed — the write error is
+            // the only cause
+            (Ok(_), Err(w)) => return Err(w),
+            // reader failed, writer fine (e.g. a server Error reply)
+            (Err(r), Ok(())) => return Err(r),
+            // both failed: either side's shutdown fails the other, so keep
+            // both causes visible instead of guessing the root
+            (Err(r), Err(w)) => {
+                return Err(anyhow::anyhow!(
+                    "pipelined stream failed — reader: {r:#}; writer: {w:#}"
+                ))
+            }
+        };
+        if frames.len() != clouds.len() {
+            bail!(
+                "stream ended early: {} of {} frames completed",
+                frames.len(),
+                clouds.len()
+            );
+        }
+        Ok(frames)
+    }
+
+    /// Reader half of the pipelined stream: for every pending request (in
+    /// FIFO order) receive the server's reply, decode the response tensors
+    /// into the request's store and finalize. Ends when the writer drops
+    /// its sender and the channel drains.
+    fn recv_stream(
+        &mut self,
+        rx: &std::sync::mpsc::Receiver<PendingRequest>,
+    ) -> Result<Vec<(Vec<Detection>, RemoteTiming)>> {
+        let engine = self.engine.clone();
+        let mut out = Vec::new();
+        while let Ok(mut pending) = rx.recv() {
+            let (detections, server_nanos, round_trip) = receive_reply(
+                &mut self.stream,
+                &engine,
+                pending.request_id,
+                &mut pending.store,
+                pending.t_send,
+            )?;
+            out.push((
+                detections,
+                RemoteTiming {
+                    edge_compute: pending.edge_compute,
+                    uplink_bytes: pending.uplink_bytes,
+                    round_trip,
+                    server_compute: SimTime {
+                        nanos: server_nanos as u128,
+                    },
+                    inference_time: SimTime::from_duration(pending.t_start.elapsed()),
+                },
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// Receive and apply one server reply for `expected_id` (shared by the
+/// serial and pipelined clients, which the tests assert are equivalent):
+/// match the `InferResult`, decode the response tensors into `store`,
+/// finalize, reclaim scratch. Returns the detections, the server's
+/// self-reported compute nanos and the send→receive round trip.
+fn receive_reply(
+    stream: &mut TcpStream,
+    engine: &Engine,
+    expected_id: u64,
+    store: &mut crate::model::graph::TensorStore,
+    t_send: Instant,
+) -> Result<(Vec<Detection>, u64, SimTime)> {
+    let reply = read_message(stream)?;
+    let round_trip = SimTime::from_duration(t_send.elapsed());
+    let (server_nanos, resp_packet) = match reply {
+        Message::InferResult {
+            request_id: rid,
+            server_nanos,
+            packet,
+        } => {
+            if rid != expected_id {
+                bail!("response id {rid} != request {expected_id}");
+            }
+            (server_nanos, packet)
+        }
+        Message::Error { message, .. } => bail!("server error: {message}"),
+        other => bail!("unexpected reply {other:?}"),
+    };
+    let graph = engine.graph();
+    for (name, t) in Packet::decode(&resp_packet)?.tensors {
+        let id = graph
+            .tensor_id(&name)
+            .with_context(|| format!("response tensor '{name}' not in this pipeline"))?;
+        store.insert(id, t);
+    }
+    let detections = engine.finalize(store)?;
+    engine.reclaim_scratch(store);
+    Ok((detections, server_nanos, round_trip))
+}
+
+/// Writer half of the pipelined stream: head compute + send for every
+/// cloud, in order. The pending record goes onto the bounded channel
+/// *before* the socket write, so the channel capacity caps in-flight
+/// frames and the reader always has the store a reply refers to.
+fn send_stream(
+    engine: &Engine,
+    stream: &mut TcpStream,
+    clouds: &[PointCloud],
+    sp: SplitPoint,
+    first_id: u64,
+    tx: &std::sync::mpsc::SyncSender<PendingRequest>,
+) -> Result<()> {
+    let codec = engine.config().codec;
+    for (i, cloud) in clouds.iter().enumerate() {
+        let request_id = first_id + i as u64;
+        let t_start = Instant::now();
+        let mut head = engine.head_stage(cloud, sp)?;
+        let bytes = head
+            .take_wire()
+            .unwrap_or_else(|| Packet::from_shared(Vec::new()).encode(codec));
+        let (store, _) = head.into_store();
+        let pending = PendingRequest {
+            request_id,
+            store,
+            edge_compute: SimTime::from_duration(t_start.elapsed()),
+            uplink_bytes: bytes.len(),
+            t_start,
+            t_send: Instant::now(),
+        };
+        if tx.send(pending).is_err() {
+            return Ok(()); // reader bailed; stop quietly
+        }
+        write_message(
+            stream,
+            &Message::Infer {
+                request_id,
+                head_len: sp.head_len as u8,
+                packet: bytes,
+            },
+        )?;
+    }
+    Ok(())
+}
+
+/// A request in flight on the pipelined edge client: everything the reader
+/// needs to finalize the frame once the server replies.
+struct PendingRequest {
+    request_id: u64,
+    store: crate::model::graph::TensorStore,
+    edge_compute: SimTime,
+    uplink_bytes: usize,
+    t_start: Instant,
+    t_send: Instant,
 }

@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 use splitpoint::bench::paper;
 use splitpoint::config::SystemConfig;
 use splitpoint::coordinator::adaptive::{self, Objective};
+use splitpoint::coordinator::pipeline;
 use splitpoint::coordinator::remote::{EdgeClient, Server};
 use splitpoint::coordinator::Engine;
 use splitpoint::pointcloud::scene::SceneGenerator;
@@ -31,6 +32,7 @@ fn cli() -> Cli {
             OptSpec { name: "split", value: Some("name"), help: "split point: raw|preprocess|vfe|conv1..conv4|bev_head|proposal|edge_only" },
             OptSpec { name: "frames", value: Some("n"), help: "number of frames (default 5)" },
             OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
+            OptSpec { name: "pipeline-depth", value: Some("n"), help: "staged pipeline depth; 1 = serial (default 1)" },
         ]
     };
     Cli {
@@ -50,7 +52,12 @@ fn cli() -> Cli {
             CommandSpec {
                 name: "serve-edge",
                 help: "run the edge-device process against a server (TCP)",
-                opts: vec![OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" }],
+                opts: vec![
+                    OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" },
+                    OptSpec { name: "frames", value: Some("n"), help: "number of frames to stream (default 10)" },
+                    OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
+                    OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N) (default 1 = serial)" },
+                ],
             },
         ],
         global_opts: vec![],
@@ -74,28 +81,57 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let frames: usize = args.get_parse("frames")?.unwrap_or(5);
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
     let sp = engine.split()?;
     let mut gen = SceneGenerator::with_seed(seed);
+    let depth_note = if depth > 1 {
+        format!(", pipeline depth {depth}")
+    } else {
+        String::new()
+    };
     println!(
-        "running {frames} frame(s) at split '{}' (edge={} x{}, server={} x{})",
+        "running {frames} frame(s) at split '{}' (edge={} x{}, server={} x{}{depth_note})",
         engine.graph().split_label(sp),
         engine.config().edge.name,
         engine.config().edge.slowdown,
         engine.config().server.name,
         engine.config().server.slowdown,
     );
-    for i in 0..frames {
-        let scene = gen.generate();
-        let r = engine.run_frame(&scene.cloud, sp)?;
+    let print_frame = |i: usize, pts: usize, r: &splitpoint::coordinator::FrameResult| {
         println!(
             "frame {i}: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
-            scene.cloud.len(),
+            pts,
             r.detections.len(),
             r.timing.inference_time.as_millis_f64(),
             r.timing.edge_time.as_millis_f64(),
             r.timing.uplink_bytes as f64 / 1e6,
             r.timing.uplink_time.as_millis_f64(),
         );
+    };
+    if depth > 1 {
+        let clouds: Vec<_> = (0..frames).map(|_| gen.generate().cloud).collect();
+        let t0 = std::time::Instant::now();
+        let (results, report) = pipeline::run_stream(
+            Arc::new(engine),
+            sp,
+            &clouds,
+            pipeline::PipelineConfig::with_depth(depth),
+        )?;
+        let wall = t0.elapsed().as_secs_f64();
+        for (i, r) in results.iter().enumerate() {
+            print_frame(i, clouds[i].len(), r);
+        }
+        println!(
+            "\npipelined {frames} frames in {wall:.2} s -> {:.2} frames/s wall",
+            frames as f64 / wall.max(1e-9)
+        );
+        println!("\n{}", report.to_markdown());
+    } else {
+        for i in 0..frames {
+            let scene = gen.generate();
+            let r = engine.run_frame(&scene.cloud, sp)?;
+            print_frame(i, scene.cloud.len(), &r);
+        }
     }
     Ok(())
 }
@@ -244,22 +280,39 @@ fn cmd_serve_edge(args: &Args) -> Result<()> {
     let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
     let frames: usize = args.get_parse("frames")?.unwrap_or(10);
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
     let sp = engine.split()?;
     let mut client = EdgeClient::connect(addr.as_str(), engine.clone())
         .with_context(|| format!("is `splitpoint serve-server` running at {addr}?"))?;
     let mut gen = SceneGenerator::with_seed(seed);
-    for i in 0..frames {
-        let scene = gen.generate();
-        let (dets, t) = client.run_frame(&scene.cloud, sp)?;
+    let print_frame = |i: usize, dets: usize, t: &splitpoint::coordinator::remote::RemoteTiming| {
         println!(
-            "frame {i}: {} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
-            dets.len(),
+            "frame {i}: {dets} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
             t.edge_compute.as_millis_f64(),
             t.round_trip.as_millis_f64(),
             t.server_compute.as_millis_f64(),
             t.inference_time.as_millis_f64(),
             t.uplink_bytes as f64 / 1e6,
         );
+    };
+    if depth > 1 {
+        let clouds: Vec<_> = (0..frames).map(|_| gen.generate().cloud).collect();
+        let t0 = std::time::Instant::now();
+        let results = client.run_stream(&clouds, sp, depth)?;
+        let wall = t0.elapsed().as_secs_f64();
+        for (i, (dets, t)) in results.iter().enumerate() {
+            print_frame(i, dets.len(), t);
+        }
+        println!(
+            "\npipelined {frames} frames at depth {depth} in {wall:.2} s -> {:.2} frames/s wall",
+            frames as f64 / wall.max(1e-9)
+        );
+    } else {
+        for i in 0..frames {
+            let scene = gen.generate();
+            let (dets, t) = client.run_frame(&scene.cloud, sp)?;
+            print_frame(i, dets.len(), &t);
+        }
     }
     client.shutdown()?;
     Ok(())

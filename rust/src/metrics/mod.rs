@@ -146,6 +146,74 @@ impl Stats {
     }
 }
 
+/// Exact histogram over small non-negative integer observations — queue
+/// depths, in-flight frame counts. The pipelined engine records one sample
+/// per dequeue, so `fraction_at_least(1)` reads directly as "how often the
+/// next frame was already waiting", i.e. how saturated a stage ran.
+#[derive(Debug, Clone, Default)]
+pub struct OccupancyHist {
+    /// counts[v] = number of samples observing exactly depth v
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl OccupancyHist {
+    pub fn new() -> OccupancyHist {
+        OccupancyHist::default()
+    }
+
+    pub fn record(&mut self, value: usize) {
+        if self.counts.len() <= value {
+            self.counts.resize(value + 1, 0);
+        }
+        self.counts[value] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Per-depth sample counts (index = observed depth).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let weighted: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(v, &n)| v as u64 * n)
+            .sum();
+        weighted as f64 / self.total as f64
+    }
+
+    /// Largest depth ever observed.
+    pub fn max(&self) -> usize {
+        self.counts
+            .iter()
+            .rposition(|&n| n > 0)
+            .unwrap_or(0)
+    }
+
+    /// Fraction of samples with depth >= `v` (in [0, 1]).
+    pub fn fraction_at_least(&self, v: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let at_least: u64 = self.counts.iter().skip(v).sum();
+        at_least as f64 / self.total as f64
+    }
+}
+
 /// Named series collector: one `Stats` per label, insertion-stable output.
 #[derive(Debug, Clone, Default)]
 pub struct Recorder {
@@ -284,5 +352,23 @@ mod tests {
         let s = Stats::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn occupancy_hist_counts_and_moments() {
+        let mut h = OccupancyHist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.fraction_at_least(1), 0.0);
+        for v in [0, 0, 1, 2, 2, 2] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.counts(), &[2, 1, 3]);
+        assert!((h.mean() - 7.0 / 6.0).abs() < 1e-12);
+        assert_eq!(h.max(), 2);
+        assert!((h.fraction_at_least(1) - 4.0 / 6.0).abs() < 1e-12);
+        assert!((h.fraction_at_least(3)).abs() < 1e-12);
     }
 }

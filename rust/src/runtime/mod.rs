@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::manifest::{Manifest, ModuleSpec};
 use crate::tensor::Tensor;
@@ -158,6 +158,41 @@ impl XlaRuntime {
         Ok(out)
     }
 
+    /// Submit a module execution without blocking the caller: the job runs
+    /// on its own worker thread and the returned [`InflightJob`] is waited
+    /// on whenever the output is actually needed. This is the overlap
+    /// primitive for callers that want two modules in flight at once (the
+    /// staged pipeline overlaps whole *stages* instead, which is cheaper —
+    /// its worker threads live for the stream, not per job). Associated
+    /// function because the job needs an owned `Arc` to outlive the caller.
+    /// Errors if the worker thread cannot be spawned (thread/pid pressure).
+    pub fn submit_id(
+        rt: &Arc<XlaRuntime>,
+        id: ModuleId,
+        inputs: Vec<Arc<Tensor>>,
+    ) -> Result<InflightJob> {
+        let module = rt
+            .specs
+            .get(id)
+            .map(|s| s.name.clone())
+            .unwrap_or_else(|| format!("#{id}"));
+        let rt = rt.clone();
+        let handle = std::thread::Builder::new()
+            .name("sp-inflight".into())
+            .spawn(move || rt.execute_id(id, &inputs))
+            .with_context(|| format!("spawning in-flight worker for '{module}'"))?;
+        Ok(InflightJob { handle, module })
+    }
+
+    /// Name-resolving convenience for [`XlaRuntime::submit_id`].
+    pub fn submit(
+        rt: &Arc<XlaRuntime>,
+        name: &str,
+        inputs: Vec<Arc<Tensor>>,
+    ) -> Result<InflightJob> {
+        Self::submit_id(rt, rt.module_id(name)?, inputs)
+    }
+
     /// Per-module accumulated timings (drives the Table I bench). Only
     /// modules that actually executed appear, matching the old map-based
     /// semantics.
@@ -174,6 +209,35 @@ impl XlaRuntime {
     pub fn reset_stats(&self) {
         for s in self.stats.lock().unwrap().iter_mut() {
             *s = ModuleStats::default();
+        }
+    }
+}
+
+/// A module execution in flight: the handle to a job submitted with
+/// [`XlaRuntime::submit_id`]. Dropping without waiting detaches the job
+/// (it still completes and its stats are recorded).
+#[derive(Debug)]
+pub struct InflightJob {
+    handle: std::thread::JoinHandle<Result<Vec<Tensor>>>,
+    module: String,
+}
+
+impl InflightJob {
+    /// Module name this job executes (diagnostics).
+    pub fn module(&self) -> &str {
+        &self.module
+    }
+
+    /// True once the job's worker has finished (never blocks).
+    pub fn is_finished(&self) -> bool {
+        self.handle.is_finished()
+    }
+
+    /// Block until the job completes and take its outputs.
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        match self.handle.join() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow!("in-flight job for module '{}' panicked", self.module)),
         }
     }
 }
@@ -221,6 +285,40 @@ mod tests {
         assert!(!stats.contains_key("conv1"), "untouched modules excluded");
         rt.reset_stats();
         assert!(rt.stats().is_empty());
+    }
+
+    #[test]
+    fn inflight_job_matches_blocking_execute() {
+        let rt = Arc::new(runtime());
+        let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+        let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+        let blocking = rt.execute("vfe", &[sum.clone(), cnt.clone()]).unwrap();
+        let job = XlaRuntime::submit(&rt, "vfe", vec![sum, cnt]).unwrap();
+        assert_eq!(job.module(), "vfe");
+        let out = job.wait().unwrap();
+        assert_eq!(out.len(), blocking.len());
+        for (a, b) in out.iter().zip(&blocking) {
+            assert_eq!(a, b, "in-flight output diverged from blocking execute");
+        }
+        assert_eq!(rt.stats()["vfe"].executions, 2);
+    }
+
+    #[test]
+    fn inflight_jobs_overlap_and_report_errors() {
+        let rt = Arc::new(runtime());
+        let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+        let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+        let jobs: Vec<_> = (0..3)
+            .map(|_| XlaRuntime::submit(&rt, "vfe", vec![sum.clone(), cnt.clone()]).unwrap())
+            .collect();
+        for job in jobs {
+            assert_eq!(job.wait().unwrap().len(), 2);
+        }
+        assert_eq!(rt.stats()["vfe"].executions, 3);
+        // shape errors surface at wait, not at submit
+        let bad = XlaRuntime::submit(&rt, "vfe", vec![Arc::new(Tensor::zeros(&[2, 2]))]);
+        assert!(bad.unwrap().wait().is_err());
+        assert!(XlaRuntime::submit(&rt, "nonexistent", Vec::new()).is_err());
     }
 
     #[test]

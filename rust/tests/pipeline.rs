@@ -1,0 +1,323 @@
+//! Pipelined multi-frame execution invariants (require `make artifacts`).
+//!
+//! The contract under test: the staged pipeline is an *execution schedule*,
+//! never a semantic change. At every depth and tail-worker count, pipelined
+//! output must be byte-identical to the serial `run_frame` path — same
+//! detections bit for bit, same wire byte counts — and frames must complete
+//! in submission order. Shutdown must drain, never deadlock.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::batcher::{BatchPolicy, Batcher};
+use splitpoint::coordinator::pipeline::{run_stream, Pipeline, PipelineConfig};
+use splitpoint::coordinator::remote::{EdgeClient, Server};
+use splitpoint::coordinator::{Engine, FrameResult};
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::{Frame, PointCloud};
+use splitpoint::postprocess::Detection;
+use splitpoint::testing::{check, default_cases};
+use splitpoint::util::rng::Rng;
+use splitpoint::{prop_assert, Manifest};
+
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            let manifest =
+                Manifest::load(&dir).expect("run `make artifacts` before cargo test");
+            Arc::new(Engine::new(&manifest, SystemConfig::paper()).expect("engine"))
+        })
+        .clone()
+}
+
+fn clouds(seed0: u64, n: usize) -> Vec<PointCloud> {
+    (0..n)
+        .map(|i| SceneGenerator::with_seed(seed0 + i as u64).generate().cloud)
+        .collect()
+}
+
+/// Bit-exact detection equality — the pipeline may not perturb a single
+/// mantissa bit relative to serial execution.
+fn dets_bitwise_equal(a: &[Detection], b: &[Detection]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && x.score.to_bits() == y.score.to_bits()
+                && x.boxx
+                    .iter()
+                    .zip(&y.boxx)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+fn frames_identical(a: &FrameResult, b: &FrameResult) -> bool {
+    dets_bitwise_equal(&a.detections, &b.detections)
+        && a.timing.uplink_bytes == b.timing.uplink_bytes
+        && a.timing.downlink_bytes == b.timing.downlink_bytes
+        && a.timing.split_label == b.timing.split_label
+        && a.timing.node_times.len() == b.timing.node_times.len()
+}
+
+#[test]
+fn pipelined_equals_serial_at_depths_1_to_4() {
+    let e = engine();
+    let sp = e.graph().split_after("vfe").unwrap();
+    let stream = clouds(500, 6);
+    let serial: Vec<FrameResult> = stream
+        .iter()
+        .map(|c| e.run_frame(c, sp).unwrap())
+        .collect();
+    for depth in 1..=4usize {
+        for tail_workers in [1, 2] {
+            let (piped, report) = run_stream(
+                e.clone(),
+                sp,
+                &stream,
+                PipelineConfig {
+                    depth,
+                    tail_workers,
+                },
+            )
+            .unwrap();
+            assert_eq!(piped.len(), serial.len());
+            for (i, (p, s)) in piped.iter().zip(&serial).enumerate() {
+                assert!(
+                    frames_identical(p, s),
+                    "frame {i} diverged at depth {depth}, tail_workers {tail_workers}: \
+                     {} vs {} dets",
+                    p.detections.len(),
+                    s.detections.len()
+                );
+            }
+            assert_eq!(report.frames, stream.len());
+            // every stage saw every frame
+            for stage in ["stage/head", "stage/transfer", "stage/tail"] {
+                assert_eq!(
+                    report.stage_latency.get(stage).map(|s| s.count()),
+                    Some(stream.len()),
+                    "{stage} at depth {depth}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_equals_serial_on_random_streams() {
+    let e = engine();
+    let splits = e.graph().all_splits();
+    // full-frame property: keep the case count modest, the deterministic
+    // depth sweep above covers the schedule matrix exhaustively
+    let cases = default_cases().min(6).max(3);
+    check("pipelined == serial", cases, |rng: &mut Rng| {
+        let sp = *rng.pick(&splits);
+        let n = rng.range(1, 3) as usize;
+        let stream = clouds(1000 + rng.below(1000) as u64, n);
+        let depth = rng.range(1, 4) as usize;
+        let tail_workers = rng.range(1, 2) as usize;
+        let (piped, _) = run_stream(
+            e.clone(),
+            sp,
+            &stream,
+            PipelineConfig {
+                depth,
+                tail_workers,
+            },
+        )
+        .map_err(|err| format!("pipeline failed: {err:#}"))?;
+        for (i, cloud) in stream.iter().enumerate() {
+            let serial = e
+                .run_frame(cloud, sp)
+                .map_err(|err| format!("serial failed: {err:#}"))?;
+            prop_assert!(
+                frames_identical(&piped[i], &serial),
+                "frame {i} diverged at split '{}' depth {depth} tails {tail_workers}",
+                e.graph().split_label(sp)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn results_arrive_in_submission_order_with_parallel_tails() {
+    let e = engine();
+    let sp = e.graph().split_after("vfe").unwrap();
+    let stream = clouds(700, 8);
+    // serial references, one per distinct frame
+    let serial: Vec<FrameResult> = stream
+        .iter()
+        .map(|c| e.run_frame(c, sp).unwrap())
+        .collect();
+    let pipeline = Pipeline::spawn(
+        e.clone(),
+        sp,
+        PipelineConfig {
+            depth: 3,
+            tail_workers: 2,
+        },
+    )
+    .unwrap();
+    std::thread::scope(|s| {
+        let p = &pipeline;
+        let stream = &stream;
+        s.spawn(move || {
+            for (i, cloud) in stream.iter().enumerate() {
+                let seq = p.submit(cloud.clone()).unwrap();
+                assert_eq!(seq, i as u64, "sequence numbers are dense");
+            }
+            p.close();
+        });
+        // frame i's result must match frame i's serial run — out-of-order
+        // delivery would pair result j with reference i and mismatch
+        for reference in serial.iter() {
+            let got = p.next_result().expect("stream ended early").unwrap();
+            assert!(frames_identical(&got, reference), "out-of-order delivery");
+        }
+        assert!(p.next_result().is_none(), "drained pipeline yields None");
+    });
+    assert_eq!(pipeline.submitted(), stream.len() as u64);
+}
+
+#[test]
+fn close_without_frames_drains_immediately() {
+    let e = engine();
+    let sp = e.graph().split_after("vfe").unwrap();
+    for depth in 1..=4usize {
+        let pipeline =
+            Pipeline::spawn(e.clone(), sp, PipelineConfig::with_depth(depth)).unwrap();
+        pipeline.close();
+        assert!(pipeline.next_result().is_none(), "depth {depth}");
+        assert!(pipeline.submit(PointCloud::default()).is_err());
+    }
+}
+
+#[test]
+fn queued_frames_drain_in_order_after_close_at_every_depth() {
+    let e = engine();
+    let sp = e.graph().split_after("conv1").unwrap();
+    let stream = clouds(900, 4);
+    let serial: Vec<FrameResult> = stream
+        .iter()
+        .map(|c| e.run_frame(c, sp).unwrap())
+        .collect();
+    for depth in 1..=4usize {
+        let pipeline =
+            Pipeline::spawn(e.clone(), sp, PipelineConfig::with_depth(depth)).unwrap();
+        std::thread::scope(|s| {
+            let p = &pipeline;
+            let stream = &stream;
+            s.spawn(move || {
+                for cloud in stream.iter() {
+                    p.submit(cloud.clone()).unwrap();
+                }
+                // close with frames still queued/in flight: they must all
+                // drain — close is a "no more input" signal, not an abort
+                p.close();
+            });
+            for (i, reference) in serial.iter().enumerate() {
+                let got = p
+                    .next_result()
+                    .unwrap_or_else(|| panic!("depth {depth}: lost frame {i}"))
+                    .unwrap();
+                assert!(frames_identical(&got, reference), "depth {depth} frame {i}");
+            }
+            assert!(p.next_result().is_none());
+        });
+    }
+}
+
+#[test]
+fn empty_cloud_flows_through_the_pipeline() {
+    let e = engine();
+    let sp = e.graph().split_after("vfe").unwrap();
+    let stream = vec![PointCloud::default(), clouds(42, 1).remove(0)];
+    let (results, _) = run_stream(e.clone(), sp, &stream, PipelineConfig::default()).unwrap();
+    assert_eq!(results.len(), 2);
+    let serial = e.run_frame(&stream[1], sp).unwrap();
+    assert!(frames_identical(&results[1], &serial));
+}
+
+#[test]
+fn batcher_feeds_the_pipeline_in_order() {
+    let e = engine();
+    let sp = e.graph().split_after("vfe").unwrap();
+    let stream = clouds(800, 5);
+    let serial: Vec<FrameResult> = stream
+        .iter()
+        .map(|c| e.run_frame(c, sp).unwrap())
+        .collect();
+
+    let batcher = Arc::new(Batcher::new(BatchPolicy {
+        max_frames: 2,
+        max_wait: Duration::from_millis(5),
+    }));
+    let pipeline =
+        Pipeline::spawn(e.clone(), sp, PipelineConfig::with_depth(2)).unwrap();
+
+    std::thread::scope(|s| {
+        let p = &pipeline;
+        let b = batcher.clone();
+        let drain = s.spawn(move || b.drain_into_pipeline(p));
+        for (seq, cloud) in stream.iter().enumerate() {
+            batcher.push(Frame {
+                sensor_id: 0,
+                seq: seq as u64,
+                cloud: cloud.clone(),
+            });
+        }
+        batcher.close();
+        let forwarded = drain.join().unwrap();
+        assert_eq!(forwarded, stream.len());
+        pipeline.close();
+        for (i, reference) in serial.iter().enumerate() {
+            let got = p.next_result().expect("lost frame").unwrap();
+            assert!(frames_identical(&got, reference), "frame {i} out of order");
+        }
+        assert!(p.next_result().is_none());
+    });
+}
+
+#[test]
+fn tcp_pipelined_stream_matches_serial_client() {
+    let e = engine();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir).unwrap();
+    let shared = Arc::new(
+        Engine::with_runtime(&manifest, SystemConfig::paper(), e.runtime().clone()).unwrap(),
+    );
+    let server = Server::spawn("127.0.0.1:0", shared.clone()).unwrap();
+    let addr = server.addr();
+    let sp = shared.graph().split_after("vfe").unwrap();
+    let stream = clouds(600, 5);
+
+    // serial reference over its own connection
+    let mut serial_client = EdgeClient::connect(addr, shared.clone()).unwrap();
+    let serial: Vec<Vec<Detection>> = stream
+        .iter()
+        .map(|c| serial_client.run_frame(c, sp).unwrap().0)
+        .collect();
+    serial_client.shutdown().unwrap();
+
+    // pipelined stream at depth 3: same detections, same order
+    let mut client = EdgeClient::connect(addr, shared.clone()).unwrap();
+    let results = client.run_stream(&stream, sp, 3).unwrap();
+    assert_eq!(results.len(), stream.len());
+    for (i, ((dets, timing), reference)) in results.iter().zip(&serial).enumerate() {
+        assert!(
+            dets_bitwise_equal(dets, reference),
+            "frame {i} diverged over the pipelined socket"
+        );
+        assert!(timing.uplink_bytes > 0);
+        assert!(timing.inference_time.nanos > 0);
+    }
+    // depth 1 degenerates to the serial loop
+    let one = client.run_stream(&stream[..2], sp, 1).unwrap();
+    assert!(dets_bitwise_equal(&one[0].0, &serial[0]));
+    client.shutdown().unwrap();
+    server.shutdown();
+}
