@@ -1,13 +1,18 @@
 //! Micro-benchmarks of the rust hot paths (perf-pass instrumentation):
 //! voxelizer scatter (pooled steady state), wire codec encode/decode, NMS,
-//! per-module execution, and the whole-frame paths.
+//! per-module execution (scalar `@legacy` vs gather-GEMM), and the
+//! whole-frame paths.
 //!
-//!   cargo bench --bench micro [-- keyword…] [-- --json]
+//!   cargo bench --bench micro [-- keyword…] [-- --json] \
+//!       [-- --threads N|max] [-- --out FILE]
 //!
-//! `--json` additionally writes `BENCH_micro.json` at the repo root
-//! (per-bench mean/p50/p95 + throughput). The file keeps the recorded
-//! `baseline` section across runs — the first run seeds it — so the perf
-//! trajectory (`speedup_vs_baseline`) is tracked in-tree; see docs/PERF.md.
+//! `--json` additionally writes `BENCH_micro.json` (or `--out FILE`) at
+//! the repo root (per-bench mean/p50/p95 + throughput). The file keeps
+//! the recorded `baseline` section across runs — the first full
+//! single-threaded run seeds it — so the perf trajectory
+//! (`speedup_vs_baseline`) is tracked in-tree; see docs/PERF.md.
+//! `--threads` sizes the executor's kernel worker pool (outputs are
+//! bit-identical at any count; only the clock moves).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -18,7 +23,9 @@ use splitpoint::coordinator::Engine;
 use splitpoint::pointcloud::scene::SceneGenerator;
 use splitpoint::postprocess::nms::nms_bev;
 use splitpoint::postprocess::Detection;
+use splitpoint::runtime::reference::ReferenceModel;
 use splitpoint::tensor::codec::{Packet, Policy};
+use splitpoint::util::cli::parse_threads;
 use splitpoint::util::json::{self, Value};
 use splitpoint::util::rng::Rng;
 use splitpoint::voxel::Voxelizer;
@@ -29,9 +36,33 @@ fn want(filters: &[String], key: &str) -> bool {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let json_out = args.iter().any(|a| a == "--json");
-    let filters: Vec<String> = args.into_iter().filter(|a| !a.starts_with("--")).collect();
+    let mut json_out = false;
+    let mut threads = 1usize;
+    let mut out_path = "BENCH_micro.json".to_string();
+    let mut filters: Vec<String> = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        // accept both `--flag value` and `--flag=value`
+        let (flag, inline) = match a.split_once('=') {
+            Some((f, v)) => (f.to_string(), Some(v.to_string())),
+            None => (a.clone(), None),
+        };
+        let mut value = |name: &str| -> anyhow::Result<String> {
+            match inline.clone() {
+                Some(v) => Ok(v),
+                None => it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("{name} needs a value")),
+            }
+        };
+        match flag.as_str() {
+            "--json" => json_out = true,
+            "--threads" => threads = parse_threads(Some(&value("--threads")?))?,
+            "--out" => out_path = value("--out")?,
+            s if s.starts_with("--") => {} // tolerate harness flags
+            s => filters.push(s.to_string()),
+        }
+    }
     let cfg = BenchConfig::from_env();
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let mut results: Vec<BenchResult> = Vec::new();
@@ -106,6 +137,35 @@ fn main() -> anyhow::Result<()> {
                 None
             }));
         }
+        // the delta/varint run-length site index (wire v2) vs the raw-u32
+        // v1 framing re-created in-run as its `@legacy` twin; the byte
+        // counts are printed once since the win is size as much as time
+        {
+            let (p, p_legacy) = (packet.clone(), packet.clone());
+            let mut buf = Vec::new();
+            results.push(run_bench("codec/encode_sparse_delta", cfg, move || {
+                p.encode_into(Policy::Auto, &mut buf);
+                std::hint::black_box(buf.len());
+                None
+            }));
+            let mut buf1 = Vec::new();
+            results.push(run_bench("codec/encode_sparse_delta@legacy", cfg, move || {
+                p_legacy
+                    .encode_versioned_into(Policy::Auto, 1, &mut buf1)
+                    .unwrap();
+                std::hint::black_box(buf1.len());
+                None
+            }));
+            let mut v1 = Vec::new();
+            packet.encode_versioned_into(Policy::Auto, 1, &mut v1)?;
+            let v2 = packet.encode(Policy::Auto);
+            eprintln!(
+                "[micro] sparse VFE live set: v2 delta index {} B vs v1 raw index {} B ({:.1}% smaller)",
+                v2.len(),
+                v1.len(),
+                (1.0 - v2.len() as f64 / v1.len() as f64) * 100.0
+            );
+        }
         let bytes = packet.encode(Policy::Auto);
         results.push(run_bench("codec/decode_sparse", cfg, move || {
             std::hint::black_box(Packet::decode(&bytes).unwrap().tensors.len());
@@ -138,9 +198,51 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
+    // ---- gather-GEMM kernel stages vs their scalar `@legacy` twins: the
+    // perf-gate's canonical before/after pair (targets in docs/PERF.md:
+    // ≥1.5x at --threads max, ≥1.15x single-threaded from layout/blocking)
+    if want(&filters, "runtime") {
+        let engine = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
+        let (store, _) = engine.profile_frame(&scene.cloud)?;
+        let legacy = ReferenceModel::new(&manifest)?;
+        for module in ["conv1", "bev_head"] {
+            let node = engine
+                .graph()
+                .nodes()
+                .iter()
+                .find(|n| n.name == module)
+                .expect("manifest module");
+            let inputs: Vec<Arc<Tensor>> = node
+                .input_ids()
+                .iter()
+                .map(|&id| store.get(id).expect("profiled input").clone())
+                .collect();
+            let bench_name = if module == "bev_head" {
+                "runtime/bev_head".to_string()
+            } else {
+                "runtime/conv_stage".to_string()
+            };
+            {
+                let rt = engine.runtime().clone();
+                let module = module.to_string();
+                let inputs = inputs.clone();
+                results.push(run_bench(&bench_name, cfg, move || {
+                    std::hint::black_box(rt.execute(&module, &inputs).unwrap().len());
+                    None
+                }));
+            }
+            let idx = legacy.module_index(module).expect("legacy module");
+            let lm = &legacy;
+            results.push(run_bench(&format!("{bench_name}@legacy"), cfg, move || {
+                std::hint::black_box(lm.execute_legacy(idx, &inputs).unwrap().len());
+                None
+            }));
+        }
+    }
+
     // ---- per-module execution + whole-frame paths
     if want(&filters, "xla") || want(&filters, "run_frame") {
-        let engine = Engine::new(&manifest, SystemConfig::paper())?;
+        let engine = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
         if want(&filters, "xla") {
             let (store, _) = engine.profile_frame(&scene.cloud)?;
             for node in engine.graph().nodes() {
@@ -208,17 +310,26 @@ fn main() -> anyhow::Result<()> {
     // see docs/PERF.md).
     if want(&filters, "pipeline") {
         use splitpoint::coordinator::pipeline::{self, PipelineConfig};
-        let engine = Arc::new(Engine::new(&manifest, SystemConfig::paper())?);
+        // split the worker budget with the two tail stages so kernel and
+        // stage parallelism compose (the CLI does the same arithmetic)
+        let engine = Arc::new(Engine::new_threaded(
+            &manifest,
+            SystemConfig::paper(),
+            PipelineConfig::kernel_threads_for(threads, 2),
+        )?);
         let sp = engine.graph().split_after("vfe")?;
         let clouds: Vec<_> = (0..16)
             .map(|i| SceneGenerator::with_seed(100 + i as u64).generate().cloud)
             .collect();
         {
-            let e = engine.clone();
+            // the serial twin gets the FULL thread budget (no tail workers
+            // to share with) so speedup_vs_legacy isolates stage overlap
+            // instead of comparing against a kernel-handicapped baseline
+            let serial = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
             let cl = clouds.clone();
             results.push(run_bench("pipeline/stream_16_frames@legacy", cfg, move || {
                 for c in &cl {
-                    std::hint::black_box(e.run_frame(c, sp).unwrap().detections.len());
+                    std::hint::black_box(serial.run_frame(c, sp).unwrap().detections.len());
                 }
                 None
             }));
@@ -248,17 +359,23 @@ fn main() -> anyhow::Result<()> {
 
     print_table("micro benches (wall-clock host ms)", &results);
     if json_out {
-        write_json(&results, cfg, filters.is_empty())?;
+        write_json(&results, cfg, filters.is_empty(), threads, &out_path)?;
     }
     Ok(())
 }
 
-/// Write `BENCH_micro.json`: current numbers, the tracked baseline, and
+/// Write the bench JSON: current numbers, the tracked baseline, and
 /// per-bench speedups. The baseline is only seeded/extended by *full*
 /// (unfiltered) runs so a keyword-filtered run can never pin a partial
 /// baseline; `@legacy` benches re-measure the pre-refactor behaviour from
 /// HEAD, yielding a before/after pair in every run.
-fn write_json(results: &[BenchResult], cfg: BenchConfig, full_run: bool) -> anyhow::Result<()> {
+fn write_json(
+    results: &[BenchResult],
+    cfg: BenchConfig,
+    full_run: bool,
+    threads: usize,
+    out_path: &str,
+) -> anyhow::Result<()> {
     let mut current: BTreeMap<String, Value> = BTreeMap::new();
     for r in results {
         let mean = r.stats.mean();
@@ -273,7 +390,7 @@ fn write_json(results: &[BenchResult], cfg: BenchConfig, full_run: bool) -> anyh
         current.insert(r.name.clone(), Value::Obj(e));
     }
 
-    let existing = std::fs::read_to_string("BENCH_micro.json")
+    let existing = std::fs::read_to_string(out_path)
         .ok()
         .and_then(|t| json::parse(&t).ok());
     let mut baseline: BTreeMap<String, Value> = existing
@@ -318,12 +435,13 @@ fn write_json(results: &[BenchResult], cfg: BenchConfig, full_run: bool) -> anyh
         ("status".to_string(), Value::str("measured")),
         ("iters".to_string(), Value::num(cfg.iters as f64)),
         ("warmup_iters".to_string(), Value::num(cfg.warmup_iters as f64)),
+        ("threads".to_string(), Value::num(threads as f64)),
         ("baseline".to_string(), Value::Obj(baseline)),
         ("current".to_string(), Value::Obj(current)),
         ("speedup_vs_baseline".to_string(), Value::Obj(vs_baseline)),
         ("speedup_vs_legacy".to_string(), Value::Obj(vs_legacy)),
     ]));
-    std::fs::write("BENCH_micro.json", out.pretty())?;
-    eprintln!("[micro] wrote BENCH_micro.json");
+    std::fs::write(out_path, out.pretty())?;
+    eprintln!("[micro] wrote {out_path}");
     Ok(())
 }

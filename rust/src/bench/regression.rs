@@ -50,13 +50,15 @@ pub struct GateReport {
     pub exempt: Vec<String>,
     pub threshold: f64,
     /// true when the committed file had no baseline at all (first
-    /// measurement hasn't happened yet) — the gate passes vacuously
+    /// measurement hasn't happened yet). This **fails** the gate: an
+    /// unmeasured tree must not green-light — the run's own output is the
+    /// seed to commit.
     pub baseline_missing: bool,
 }
 
 impl GateReport {
     pub fn passed(&self) -> bool {
-        self.regressions.is_empty()
+        self.regressions.is_empty() && !self.baseline_missing
     }
 
     /// Markdown report (the CI artifact).
@@ -67,8 +69,12 @@ impl GateReport {
         if self.baseline_missing {
             let _ = writeln!(
                 out,
-                "no committed baseline — seeding run, gate passes vacuously. \
-                 Commit the freshly written `BENCH_micro.json` to arm the gate."
+                "**FAIL** — no committed baseline: the tree is unmeasured, so there is \
+                 nothing to gate against and a pass here would be vacuous. Seed now: \
+                 take the freshly measured `BENCH_micro.json` this run just wrote \
+                 (CI uploads it as the `BENCH_micro` artifact), commit it at the repo \
+                 root, and the gate arms on the next run. Locally: \
+                 `cargo bench --bench micro -- --json && git add BENCH_micro.json`."
             );
             return out;
         }
@@ -275,12 +281,18 @@ mod tests {
     }
 
     #[test]
-    fn missing_baseline_is_a_seeding_pass() {
+    fn missing_baseline_fails_with_seed_instructions() {
+        // an empty committed baseline must NOT green-light an unmeasured
+        // tree: the gate fails and the report says exactly how to seed
         let text = "{\"baseline\": {}, \"current\": {\"a\": {\"mean_ms\": 1.0}}}";
         let gate = gate_file(text, 0.15).unwrap();
-        assert!(gate.passed());
+        assert!(!gate.passed(), "vacuous pass on an unmeasured tree");
         assert!(gate.baseline_missing);
-        assert!(gate.to_markdown().contains("seeding run"));
+        assert!(gate.regressions.is_empty(), "not a regression, a seed gap");
+        let md = gate.to_markdown();
+        assert!(md.contains("FAIL"));
+        assert!(md.contains("Seed now"));
+        assert!(md.contains("BENCH_micro.json"));
     }
 
     #[test]

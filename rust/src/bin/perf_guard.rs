@@ -12,8 +12,9 @@
 //! into the file it rewrites, so gating a fresh file against itself would
 //! let brand-new benches gate vacuously. Without `--baseline-file`, the
 //! measured file's own baseline section is used. With no committed
-//! baseline at all the gate passes vacuously ("seeding run") — commit the
-//! freshly written `BENCH_micro.json` to arm it.
+//! baseline at all the gate **fails** — an unmeasured tree must not
+//! green-light; commit the freshly written `BENCH_micro.json` (CI uploads
+//! it as an artifact on every run, pass or fail) to seed and arm it.
 
 use splitpoint::bench::regression;
 
@@ -60,11 +61,19 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
     }
     if !gate.passed() {
-        eprintln!(
-            "[perf-guard] FAIL: {} bench(es) regressed more than {:.0}%",
-            gate.regressions.len(),
-            threshold * 100.0
-        );
+        if gate.baseline_missing {
+            eprintln!(
+                "[perf-guard] FAIL: no committed baseline — commit the freshly \
+                 measured BENCH_micro.json (uploaded as the BENCH_micro CI \
+                 artifact) to seed and arm the gate"
+            );
+        } else {
+            eprintln!(
+                "[perf-guard] FAIL: {} bench(es) regressed more than {:.0}%",
+                gate.regressions.len(),
+                threshold * 100.0
+            );
+        }
         std::process::exit(1);
     }
     eprintln!("[perf-guard] pass");

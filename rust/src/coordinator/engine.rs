@@ -165,7 +165,21 @@ const MAX_WIRE_BUFFERS: usize = 8;
 
 impl Engine {
     pub fn new(manifest: &Manifest, cfg: SystemConfig) -> Result<Engine> {
-        let runtime = Arc::new(XlaRuntime::load(manifest)?);
+        Self::new_threaded(manifest, cfg, 1)
+    }
+
+    /// Engine whose module kernels parallelize over `threads` pool workers
+    /// (`0` = all available cores; the CLI's `--threads` knob). Outputs are
+    /// bit-identical at any thread count; when combined with the staged
+    /// pipeline, size this against `tail_workers` via
+    /// [`crate::coordinator::pipeline::PipelineConfig::kernel_threads_for`]
+    /// so the two levels of parallelism compose instead of oversubscribing.
+    pub fn new_threaded(
+        manifest: &Manifest,
+        cfg: SystemConfig,
+        threads: usize,
+    ) -> Result<Engine> {
+        let runtime = Arc::new(XlaRuntime::load_pooled(manifest, threads)?);
         Self::with_runtime(manifest, cfg, runtime)
     }
 

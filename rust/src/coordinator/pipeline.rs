@@ -218,6 +218,16 @@ impl PipelineConfig {
             ..PipelineConfig::default()
         }
     }
+
+    /// Split one total worker budget (the CLI's `--threads`) between this
+    /// pipeline's concurrent tail stages and the per-execute kernel pool,
+    /// so stage-level and kernel-level parallelism compose instead of
+    /// oversubscribing: `tail_workers` tails each drive kernels on
+    /// `total / tail_workers` pool threads (min 1). The division is purely
+    /// a scheduling decision — outputs are bit-identical either way.
+    pub fn kernel_threads_for(total_threads: usize, tail_workers: usize) -> usize {
+        (total_threads.max(1) / tail_workers.max(1)).max(1)
+    }
 }
 
 /// Per-stage service latency and queue occupancy, sampled live by the
@@ -595,6 +605,16 @@ mod tests {
             assert!(r.next().unwrap().is_err());
         }
         assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn kernel_threads_compose_with_tail_workers() {
+        // budget / tails, floored, never below one kernel thread
+        assert_eq!(PipelineConfig::kernel_threads_for(8, 2), 4);
+        assert_eq!(PipelineConfig::kernel_threads_for(8, 3), 2);
+        assert_eq!(PipelineConfig::kernel_threads_for(1, 4), 1);
+        assert_eq!(PipelineConfig::kernel_threads_for(0, 0), 1);
+        assert_eq!(PipelineConfig::kernel_threads_for(6, 1), 6);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use splitpoint::coordinator::pipeline;
 use splitpoint::coordinator::remote::{EdgeClient, Server};
 use splitpoint::coordinator::Engine;
 use splitpoint::pointcloud::scene::SceneGenerator;
-use splitpoint::util::cli::{Args, Cli, CommandSpec, OptSpec};
+use splitpoint::util::cli::{parse_threads, Args, Cli, CommandSpec, OptSpec};
 use splitpoint::Manifest;
 
 fn cli() -> Cli {
@@ -33,6 +33,8 @@ fn cli() -> Cli {
             OptSpec { name: "frames", value: Some("n"), help: "number of frames (default 5)" },
             OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
             OptSpec { name: "pipeline-depth", value: Some("n"), help: "staged pipeline depth; 1 = serial (default 1)" },
+            OptSpec { name: "tail-workers", value: Some("n"), help: "parallel tail stages when pipelined (default 1)" },
+            OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads; bit-identical at any count (default 1)" },
         ]
     };
     Cli {
@@ -47,7 +49,10 @@ fn cli() -> Cli {
             CommandSpec {
                 name: "serve-server",
                 help: "run the edge-server process (TCP)",
-                opts: vec![OptSpec { name: "listen", value: Some("addr"), help: "bind address (default 127.0.0.1:7070)" }],
+                opts: vec![
+                    OptSpec { name: "listen", value: Some("addr"), help: "bind address (default 127.0.0.1:7070)" },
+                    OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the server tail (default 1)" },
+                ],
             },
             CommandSpec {
                 name: "serve-edge",
@@ -57,6 +62,7 @@ fn cli() -> Cli {
                     OptSpec { name: "frames", value: Some("n"), help: "number of frames to stream (default 10)" },
                     OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
                     OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N) (default 1 = serial)" },
+                    OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the edge head (default 1)" },
                 ],
             },
         ],
@@ -74,7 +80,19 @@ fn load_engine(args: &Args) -> Result<Engine> {
     if let Some(split) = args.get("split") {
         cfg.split = split.to_string();
     }
-    Engine::new(&manifest, cfg)
+    // one worker budget (`--threads`) serves both levels of parallelism:
+    // when the staged pipeline runs W tail stages concurrently, each
+    // execute's kernel pool gets threads/W so the two levels compose
+    // instead of oversubscribing the host
+    let threads = parse_threads(args.get("threads"))?;
+    let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
+    let tail_workers: usize = if depth > 1 {
+        args.get_parse("tail-workers")?.unwrap_or(1)
+    } else {
+        1
+    };
+    let kernel = pipeline::PipelineConfig::kernel_threads_for(threads, tail_workers);
+    Engine::new_threaded(&manifest, cfg, kernel)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -82,12 +100,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let frames: usize = args.get_parse("frames")?.unwrap_or(5);
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
     let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
+    let tail_workers: usize = args.get_parse("tail-workers")?.unwrap_or(1);
     let sp = engine.split()?;
     let mut gen = SceneGenerator::with_seed(seed);
+    let kernel_threads = engine.runtime().threads();
     let depth_note = if depth > 1 {
-        format!(", pipeline depth {depth}")
+        format!(", pipeline depth {depth} x{tail_workers} tails, {kernel_threads} kernel thread(s)")
     } else {
-        String::new()
+        format!(", {kernel_threads} kernel thread(s)")
     };
     println!(
         "running {frames} frame(s) at split '{}' (edge={} x{}, server={} x{}{depth_note})",
@@ -115,7 +135,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             Arc::new(engine),
             sp,
             &clouds,
-            pipeline::PipelineConfig::with_depth(depth),
+            pipeline::PipelineConfig {
+                depth,
+                tail_workers,
+            },
         )?;
         let wall = t0.elapsed().as_secs_f64();
         for (i, r) in results.iter().enumerate() {

@@ -14,6 +14,7 @@
 //! copies into the backend), and per-module stats are indexed slots — the
 //! steady-state execute path performs no `String` hashing or cloning.
 
+pub mod pool;
 pub mod reference;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -57,6 +58,8 @@ impl std::fmt::Debug for Backend {
 #[derive(Debug)]
 pub struct XlaRuntime {
     backend: Backend,
+    /// worker threads backing the kernel pool (reference) / job pool (PJRT)
+    kernel_threads: usize,
     specs: Vec<ModuleSpec>,
     /// per-module accumulated stats, indexed by [`ModuleId`]
     stats: Mutex<Vec<ModuleStats>>,
@@ -68,23 +71,43 @@ impl XlaRuntime {
         Self::load_pooled(manifest, 1)
     }
 
-    /// Load with `threads` workers. The reference backend executes inline
-    /// on the caller thread (scaling comes from callers, e.g. the
-    /// multi-LiDAR worker pool), so `threads` only shapes the PJRT pool.
+    /// Load with `threads` workers (`0` = all available cores). On the
+    /// reference backend the threads form the shared kernel
+    /// [`pool::WorkerPool`] that the gather-GEMM conv/linear stages
+    /// parallelize over; on PJRT they size the executable worker pool.
+    /// Outputs are bit-identical at any thread count (see
+    /// `runtime::reference`).
     pub fn load_pooled(manifest: &Manifest, threads: usize) -> Result<XlaRuntime> {
-        assert!(threads >= 1);
+        let threads = pool::resolve_threads(threads).max(1);
         #[cfg(feature = "pjrt")]
         let backend = Backend::Pjrt(pjrt::PjrtPool::load(manifest, threads)?);
         #[cfg(not(feature = "pjrt"))]
-        let backend = {
-            let _ = threads;
-            Backend::Reference(reference::ReferenceModel::new(manifest)?)
-        };
+        let backend = Backend::Reference(reference::ReferenceModel::new_pooled(
+            manifest,
+            Arc::new(pool::WorkerPool::new(threads)),
+        )?);
         Ok(XlaRuntime {
             backend,
+            kernel_threads: threads,
             specs: manifest.modules.clone(),
             stats: Mutex::new(vec![ModuleStats::default(); manifest.modules.len()]),
         })
+    }
+
+    /// Worker threads backing this runtime's kernels.
+    pub fn threads(&self) -> usize {
+        self.kernel_threads
+    }
+
+    /// (count, reserved bytes) of the reference backend's pooled kernel
+    /// scratch arenas; `(0, 0)` on PJRT. The steady-state no-growth
+    /// property test (`rust/tests/executor.rs`) reads this.
+    pub fn scratch_stats(&self) -> (usize, usize) {
+        match &self.backend {
+            Backend::Reference(m) => m.pool().scratch_stats(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => (0, 0),
+        }
     }
 
     pub fn has_module(&self, name: &str) -> bool {

@@ -1,0 +1,241 @@
+//! Shared worker pool + per-worker scratch arenas for the reference
+//! executor's parallel kernels.
+//!
+//! The pool is deliberately simple: a parallel region hands out at most
+//! `threads` pre-partitioned jobs (each owning a disjoint `&mut` slice of
+//! the output buffer), [`WorkerPool::scatter`] runs them on scoped OS
+//! threads, and the region joins before returning. Work is partitioned by
+//! the *caller* — never stolen — so every output element is computed by
+//! exactly one worker with the same per-element operation order as the
+//! single-threaded path. That is the whole `threads=N == threads=1`
+//! bit-identity argument: parallelism only interleaves independent output
+//! rows, it never re-associates a float reduction.
+//!
+//! Region setup is O(threads) thread spawns (tens of µs); the kernels
+//! behind it run for milliseconds, so no persistent thread + unsafe
+//! closure-smuggling machinery is warranted. Single-job regions run inline
+//! on the caller with zero overhead, which is also the `threads=1` path.
+//!
+//! Scratch buffers (patch/accumulator matrices for the gather-GEMM
+//! kernels) come from a take/recycle arena mirroring the voxelizer's grid
+//! pool: workers pop a [`Scratch`], grow it to the kernel's working-set
+//! size once, and push it back, so steady-state kernel execution performs
+//! no allocation (pinned by `rust/tests/executor.rs`).
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+/// Cap on pooled scratch arenas: enough for every worker of a few
+/// concurrently executing regions (pipeline tail workers × kernel
+/// threads), while bounding memory if a caller leaks regions.
+const MAX_SCRATCH: usize = 32;
+
+/// Reusable per-worker kernel buffer: `patch` holds the gathered
+/// neighborhood matrix of the tile being processed (the kernels
+/// accumulate in place in the output buffer, so one matrix suffices).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub patch: Vec<f32>,
+}
+
+impl Scratch {
+    /// Grow `patch` to at least `len` elements and return it. Contents are
+    /// unspecified — gather passes must overwrite every element they read.
+    pub fn patch_mut(&mut self, len: usize) -> &mut [f32] {
+        if self.patch.len() < len {
+            self.patch.resize(len, 0.0);
+        }
+        &mut self.patch[..len]
+    }
+
+    /// Bytes currently reserved by this arena.
+    pub fn capacity_bytes(&self) -> usize {
+        self.patch.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Resolve a requested thread count: `0` means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Fixed-width worker pool for the reference executor's kernels.
+#[derive(Debug)]
+pub struct WorkerPool {
+    threads: usize,
+    scratch: Mutex<Vec<Scratch>>,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` workers (`0` = all available cores).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool {
+            threads: resolve_threads(threads).max(1),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `0..n` into at most `parts` contiguous, non-empty,
+    /// near-equal ranges (first `n % parts` ranges get one extra item).
+    pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let parts = parts.clamp(1, n);
+        let base = n / parts;
+        let extra = n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        for i in 0..parts {
+            let len = base + usize::from(i < extra);
+            out.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, n);
+        out
+    }
+
+    /// Run `f(job_index, job)` for every job, in parallel. Callers
+    /// pre-partition their work into at most [`WorkerPool::threads`] jobs,
+    /// each owning whatever `&mut` output slice it needs — disjointness is
+    /// enforced by construction (the jobs are built with `split_at_mut`).
+    /// A single job runs inline on the caller's thread with no spawn.
+    pub fn scatter<T, F>(&self, jobs: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        let mut jobs = jobs;
+        if jobs.is_empty() {
+            return;
+        }
+        if jobs.len() == 1 {
+            f(0, jobs.pop().expect("one job"));
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            let mut iter = jobs.into_iter().enumerate();
+            let (first_idx, first_job) = iter.next().expect("at least two jobs");
+            for (i, job) in iter {
+                scope.spawn(move || f(i, job));
+            }
+            // the caller's thread is worker 0, not an idle joiner
+            f(first_idx, first_job);
+        });
+    }
+
+    /// Pop a scratch arena (or a fresh empty one). Pair with
+    /// [`WorkerPool::recycle`] so its buffers' capacity is reused by the
+    /// next region instead of reallocated.
+    pub fn scratch(&self) -> Scratch {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Hand a scratch arena back to the pool.
+    pub fn recycle(&self, s: Scratch) {
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < MAX_SCRATCH {
+            pool.push(s);
+        }
+    }
+
+    /// (pooled arena count, total reserved bytes) — the steady-state
+    /// no-growth property test reads this.
+    pub fn scratch_stats(&self) -> (usize, usize) {
+        let pool = self.scratch.lock().unwrap();
+        (pool.len(), pool.iter().map(Scratch::capacity_bytes).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        for (n, parts) in [(0, 4), (1, 4), (7, 3), (8, 3), (100, 7), (3, 8)] {
+            let ranges = WorkerPool::partition(n, parts);
+            let mut covered = 0usize;
+            let mut expect_start = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect_start, "ranges must be contiguous");
+                assert!(r.end > r.start, "no empty ranges");
+                covered += r.len();
+                expect_start = r.end;
+            }
+            assert_eq!(covered, n, "n={n} parts={parts}");
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn scatter_runs_every_job_with_disjoint_slices() {
+        let pool = WorkerPool::new(4);
+        let n = 103usize;
+        let mut out = vec![0u32; n];
+        let ranges = WorkerPool::partition(n, pool.threads());
+        let mut jobs: Vec<(Range<usize>, &mut [u32])> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [u32] = out.as_mut_slice();
+        for r in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+            rest = tail;
+            jobs.push((r, chunk));
+        }
+        pool.scatter(jobs, |_w, (range, chunk)| {
+            for (i, slot) in range.zip(chunk.iter_mut()) {
+                *slot = i as u32 * 3;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32 * 3);
+        }
+    }
+
+    #[test]
+    fn scatter_single_job_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let caller = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        pool.scatter(vec![()], |w, ()| {
+            assert_eq!(w, 0);
+            assert_eq!(std::thread::current().id(), caller);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scratch_recycles_capacity() {
+        let pool = WorkerPool::new(2);
+        let mut s = pool.scratch();
+        assert_eq!(s.patch_mut(1024).len(), 1024);
+        let bytes = s.capacity_bytes();
+        assert!(bytes >= 4096);
+        pool.recycle(s);
+        assert_eq!(pool.scratch_stats(), (1, bytes));
+        // taking it back drains the pool; capacity survives the roundtrip
+        let again = pool.scratch();
+        assert_eq!(pool.scratch_stats().0, 0);
+        assert_eq!(again.capacity_bytes(), bytes);
+        pool.recycle(again);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_cores() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.threads() >= 1);
+        assert_eq!(pool.threads(), resolve_threads(0));
+    }
+}

@@ -20,20 +20,65 @@
 //! occupied output sites from the mask's cached site index and seeds the
 //! site index of everything it produces, so the per-frame path never
 //! rescans a dense grid.
+//!
+//! # Parallel gather-GEMM kernels
+//!
+//! The heavy stages run as **cache-blocked gather-GEMM** on a shared
+//! [`WorkerPool`]:
+//!
+//! * each sparse 3D conv stage gathers the 3×3×3 neighborhood of a tile of
+//!   active output sites into a contiguous `(TILE × 27·cin)` patch matrix
+//!   (absent / masked-off taps zero-filled), then hits a blocked
+//!   `(TILE × 27·cin) @ (27·cin × cout)` micro-kernel — every weight row
+//!   is streamed once per tile instead of once per site, and the inner
+//!   loop is a branch-free axpy over the contiguous `cout` row;
+//! * `conv2d` (BEV backbone) and the `linear` towers use the same tiling;
+//! * work is partitioned over site/row ranges across the pool's threads.
+//!
+//! The `(27·cin × cout)` GEMM operand is exactly the weight storage layout
+//! (`init_weights` draws kernels tap-major with `cout` contiguous), so the
+//! SIMD/autovec-friendly cout-major operand is materialized once at
+//! [`ReferenceModel::new`] time and never re-transposed per call.
+//!
+//! **Bit-identity:** tiling and thread partitioning only interleave
+//! *independent output rows* — the per-output-element operation order is
+//! unchanged from the scalar kernels (ascending tap × channel, zero
+//! activations skipped), so `threads=N == threads=1` and the gather-GEMM
+//! path equals the pre-refactor scalar path bit-for-bit (pinned by the
+//! tests below and `rust/tests/executor.rs`). The scalar kernels survive
+//! as [`ReferenceModel::execute_legacy`], the measured `@legacy` bench
+//! anchors (docs/PERF.md).
+//!
+//! Patch/accumulator buffers come from the pool's per-worker scratch
+//! arenas, so steady-state kernel execution allocates nothing beyond the
+//! output tensors themselves.
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::manifest::{Manifest, ModelConfig, ModuleSpec, StageSpec};
+use crate::runtime::pool::{Scratch, WorkerPool};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Sites/rows per gather-GEMM tile: enough rows to amortize each weight
+/// cache line 8×, small enough that a tile's patch + accumulators stay in
+/// L1 for every stage geometry.
+const TILE: usize = 8;
+
+/// Below this many fused multiply-adds a parallel region costs more in
+/// thread spawns than it saves; run inline on the caller instead. Purely a
+/// scheduling decision — results are identical either way.
+const PAR_MIN_WORK: usize = 1 << 15;
 
 // ---------------------------------------------------------------- weights
 
 #[derive(Debug, Clone)]
 struct Conv3dW {
-    /// (3, 3, 3, cin, cout) row-major
+    /// (3, 3, 3, cin, cout) row-major — i.e. tap-major `(27·cin × cout)`,
+    /// exactly the GEMM operand the blocked kernel streams.
     w: Vec<f32>,
     b: Vec<f32>,
     cin: usize,
@@ -42,7 +87,7 @@ struct Conv3dW {
 
 #[derive(Debug, Clone)]
 struct Conv2dW {
-    /// (3, 3, cin, cout) row-major
+    /// (3, 3, cin, cout) row-major — tap-major `(9·cin × cout)`
     w: Vec<f32>,
     b: Vec<f32>,
     cin: usize,
@@ -164,12 +209,89 @@ fn init_weights(cfg: &ModelConfig) -> Result<Weights> {
     })
 }
 
-// ----------------------------------------------------------- dense kernels
+// ---------------------------------------------------- job partition helper
 
-/// `out[n, cout] = x[n, cin] @ w + b`, optional ReLU. Inner loop is an
-/// axpy over the contiguous cout row, skipping zero activations (post-ReLU
-/// inputs are sparse-ish).
-fn linear(x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
+/// Split `out` into per-range `&mut` chunks of `row_width` elements per
+/// item, pairing each range with its slice. The jobs are disjoint by
+/// construction, so a parallel region can own them without aliasing.
+fn row_jobs<'a>(
+    out: &'a mut [f32],
+    ranges: &[Range<usize>],
+    row_width: usize,
+) -> Vec<(Range<usize>, &'a mut [f32])> {
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = out;
+    for r in ranges {
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * row_width);
+        rest = tail;
+        jobs.push((r.clone(), chunk));
+    }
+    jobs
+}
+
+// ---------------------------------------------------------- linear kernels
+
+/// `out[n, cout] = x[n, cin] @ w + b`, optional ReLU — row-tiled and
+/// parallelized over row ranges. Per-row operation order matches
+/// [`scalar_linear`] exactly (ascending `cin`, zero activations skipped),
+/// so the output is bit-identical at any tile size or thread count.
+fn linear(pool: &WorkerPool, x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
+    let (cin, cout) = (lw.cin, lw.cout);
+    debug_assert_eq!(x.len(), n * cin);
+    let mut out = vec![0.0f32; n * cout];
+    let parts = if n * cin * cout < PAR_MIN_WORK {
+        1
+    } else {
+        pool.threads()
+    };
+    let ranges = WorkerPool::partition(n, parts);
+    let jobs = row_jobs(&mut out, &ranges, cout);
+    pool.scatter(jobs, |_w, (rows, chunk)| {
+        linear_rows(x, rows, lw, relu, chunk);
+    });
+    out
+}
+
+/// The tiled row micro-kernel behind [`linear`]: each weight row is
+/// streamed once per `TILE` output rows instead of once per row.
+fn linear_rows(x: &[f32], rows: Range<usize>, lw: &LinW, relu: bool, chunk: &mut [f32]) {
+    let (cin, cout) = (lw.cin, lw.cout);
+    let r0 = rows.start;
+    let nrows = rows.len();
+    let mut t0 = 0usize;
+    while t0 < nrows {
+        let tl = TILE.min(nrows - t0);
+        let acc = &mut chunk[t0 * cout..(t0 + tl) * cout];
+        for arow in acc.chunks_exact_mut(cout) {
+            arow.copy_from_slice(&lw.b);
+        }
+        for ci in 0..cin {
+            let wrow = &lw.w[ci * cout..(ci + 1) * cout];
+            for t in 0..tl {
+                let xv = x[(r0 + t0 + t) * cin + ci];
+                if xv == 0.0 {
+                    continue;
+                }
+                let arow = &mut acc[t * cout..(t + 1) * cout];
+                for (a, &wv) in arow.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+        }
+        if relu {
+            for a in acc.iter_mut() {
+                if *a < 0.0 {
+                    *a = 0.0;
+                }
+            }
+        }
+        t0 += tl;
+    }
+}
+
+/// Pre-gather-GEMM scalar linear (one row at a time, weight rows reloaded
+/// per row). Kept verbatim as the `@legacy` bench anchor.
+fn scalar_linear(x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
     let (cin, cout) = (lw.cin, lw.cout);
     debug_assert_eq!(x.len(), n * cin);
     let mut out = vec![0.0f32; n * cout];
@@ -197,9 +319,100 @@ fn linear(x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
     out
 }
 
+// ---------------------------------------------------------- conv2d kernels
+
 /// Fused 3x3 2D conv (stride 1, SAME) + bias + ReLU over an (H, W, Cin)
-/// buffer — `ref.py::conv2d_ref`.
-fn conv2d_relu(x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
+/// buffer — `ref.py::conv2d_ref` as a parallel gather-GEMM: output rows
+/// are partitioned across the pool; each worker gathers pixel tiles into a
+/// patch matrix (border taps zero-filled) and runs the blocked
+/// `(TILE × 9·cin) @ (9·cin × cout)` micro-kernel in place.
+fn conv2d_relu(pool: &WorkerPool, x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
+    let (cin, cout) = (cw.cin, cw.cout);
+    debug_assert_eq!(x.len(), h * w * cin);
+    let mut out = vec![0.0f32; h * w * cout];
+    let parts = if h * w * 9 * cin * cout < PAR_MIN_WORK {
+        1
+    } else {
+        pool.threads()
+    };
+    let ranges = WorkerPool::partition(h, parts);
+    let jobs = row_jobs(&mut out, &ranges, w * cout);
+    pool.scatter(jobs, |_wk, (oys, chunk)| {
+        let mut scratch = pool.scratch();
+        conv2d_rows(x, h, w, cw, oys, chunk, &mut scratch);
+        pool.recycle(scratch);
+    });
+    out
+}
+
+fn conv2d_rows(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cw: &Conv2dW,
+    oys: Range<usize>,
+    chunk: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let (cin, cout) = (cw.cin, cw.cout);
+    let k_total = 9 * cin;
+    let patch = scratch.patch_mut(TILE * k_total);
+    for oy in oys.clone() {
+        let crow = oy - oys.start;
+        let mut ox0 = 0usize;
+        while ox0 < w {
+            let tl = TILE.min(w - ox0);
+            // ---- gather: branchy border handling happens once per tile,
+            // leaving the GEMM inner loop branch-free
+            for t in 0..tl {
+                let ox = ox0 + t;
+                let prow = &mut patch[t * k_total..(t + 1) * k_total];
+                for ky in 0..3usize {
+                    let iy = oy as i64 + ky as i64 - 1;
+                    for kx in 0..3usize {
+                        let ix = ox as i64 + kx as i64 - 1;
+                        let tap = (ky * 3 + kx) * cin;
+                        let dst = &mut prow[tap..tap + cin];
+                        if iy >= 0 && iy < h as i64 && ix >= 0 && ix < w as i64 {
+                            let s = (iy as usize * w + ix as usize) * cin;
+                            dst.copy_from_slice(&x[s..s + cin]);
+                        } else {
+                            dst.fill(0.0);
+                        }
+                    }
+                }
+            }
+            // ---- blocked GEMM straight into the output rows
+            let acc = &mut chunk[(crow * w + ox0) * cout..(crow * w + ox0 + tl) * cout];
+            for arow in acc.chunks_exact_mut(cout) {
+                arow.copy_from_slice(&cw.b);
+            }
+            for kk in 0..k_total {
+                let wrow = &cw.w[kk * cout..(kk + 1) * cout];
+                for t in 0..tl {
+                    let xv = patch[t * k_total + kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let arow = &mut acc[t * cout..(t + 1) * cout];
+                    for (a, &wv) in arow.iter_mut().zip(wrow) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            for a in acc.iter_mut() {
+                if *a < 0.0 {
+                    *a = 0.0;
+                }
+            }
+            ox0 += tl;
+        }
+    }
+}
+
+/// Pre-gather-GEMM scalar conv2d. Kept verbatim as the `@legacy` bench
+/// anchor behind `runtime/bev_head@legacy`.
+fn scalar_conv2d_relu(x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
     let (cin, cout) = (cw.cin, cw.cout);
     debug_assert_eq!(x.len(), h * w * cin);
     let mut out = vec![0.0f32; h * w * cout];
@@ -217,8 +430,7 @@ fn conv2d_relu(x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
                     if ix < 0 || ix >= w as i64 {
                         continue;
                     }
-                    let xrow =
-                        &x[(iy as usize * w + ix as usize) * cin..][..cin];
+                    let xrow = &x[(iy as usize * w + ix as usize) * cin..][..cin];
                     let wbase = (ky * 3 + kx) * cin * cout;
                     for (ci, &xv) in xrow.iter().enumerate() {
                         if xv == 0.0 {
@@ -241,6 +453,268 @@ fn conv2d_relu(x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
     out
 }
 
+// ---------------------------------------------------------- conv3d kernels
+
+/// The sparse 3D gather-GEMM worker kernel: process `sites` (a contiguous
+/// ascending slice of the active output list) in tiles — gather each
+/// tile's 3×3×3 neighborhoods into the scratch patch matrix (absent or
+/// masked-off taps zero-filled), then run the blocked GEMM into `chunk`,
+/// the caller's disjoint interval of the output buffer starting at row
+/// `base_row`. Nonzero post-ReLU sites are appended to `out_sites`
+/// (ascending, since `sites` is).
+#[allow(clippy::too_many_arguments)]
+fn conv3d_sites(
+    fd: &[f32],
+    md: &[f32],
+    dims_in: (usize, usize, usize),
+    dims_out: (usize, usize),
+    stride: [usize; 3],
+    cw: &Conv3dW,
+    sites: &[u32],
+    base_row: usize,
+    chunk: &mut [f32],
+    out_sites: &mut Vec<u32>,
+    scratch: &mut Scratch,
+) {
+    let (d_in, h_in, w_in) = dims_in;
+    let (h_out, w_out) = dims_out;
+    let (cin, cout) = (cw.cin, cw.cout);
+    let [sz, sy, sx] = stride;
+    let k_total = 27 * cin;
+    let patch = scratch.patch_mut(TILE * k_total);
+    let mut i = 0usize;
+    while i < sites.len() {
+        let tl = TILE.min(sites.len() - i);
+        let tile = &sites[i..i + tl];
+        // ---- gather
+        for (t, &o) in tile.iter().enumerate() {
+            let oi = o as usize;
+            let oz = oi / (h_out * w_out);
+            let oy = (oi / w_out) % h_out;
+            let ox = oi % w_out;
+            let prow = &mut patch[t * k_total..(t + 1) * k_total];
+            for dz in 0..3usize {
+                let z = (oz * sz + dz) as i64 - 1;
+                for dy in 0..3usize {
+                    let y = (oy * sy + dy) as i64 - 1;
+                    for dx in 0..3usize {
+                        let x = (ox * sx + dx) as i64 - 1;
+                        let tap = ((dz * 3 + dy) * 3 + dx) * cin;
+                        let dst = &mut prow[tap..tap + cin];
+                        let inside = z >= 0
+                            && z < d_in as i64
+                            && y >= 0
+                            && y < h_in as i64
+                            && x >= 0
+                            && x < w_in as i64;
+                        if inside {
+                            let s = (z as usize * h_in + y as usize) * w_in + x as usize;
+                            if md[s] != 0.0 {
+                                dst.copy_from_slice(&fd[s * cin..(s + 1) * cin]);
+                                continue;
+                            }
+                        }
+                        dst.fill(0.0);
+                    }
+                }
+            }
+        }
+        // ---- bias init + blocked GEMM (weight rows stream once per tile)
+        for &o in tile {
+            let off = (o as usize - base_row) * cout;
+            chunk[off..off + cout].copy_from_slice(&cw.b);
+        }
+        for kk in 0..k_total {
+            let wrow = &cw.w[kk * cout..(kk + 1) * cout];
+            for (t, &o) in tile.iter().enumerate() {
+                let xv = patch[t * k_total + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let off = (o as usize - base_row) * cout;
+                let arow = &mut chunk[off..off + cout];
+                for (a, &wv) in arow.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+        }
+        // ---- ReLU + output-site tracking
+        for &o in tile {
+            let off = (o as usize - base_row) * cout;
+            let arow = &mut chunk[off..off + cout];
+            let mut nonzero = false;
+            for a in arow.iter_mut() {
+                if *a < 0.0 {
+                    *a = 0.0;
+                } else if *a > 0.0 {
+                    nonzero = true;
+                }
+            }
+            if nonzero {
+                out_sites.push(o);
+            }
+        }
+        i += tl;
+    }
+}
+
+/// Pre-gather-GEMM scalar 3D conv over the active set. Kept verbatim as
+/// the `@legacy` bench anchor behind `runtime/conv_stage@legacy`.
+#[allow(clippy::too_many_arguments)]
+fn scalar_conv3d(
+    fd: &[f32],
+    md: &[f32],
+    dims_in: (usize, usize, usize),
+    dims_out: (usize, usize),
+    stride: [usize; 3],
+    cw: &Conv3dW,
+    active: &[u32],
+    out: &mut [f32],
+    out_sites: &mut Vec<u32>,
+) {
+    let (d_in, h_in, w_in) = dims_in;
+    let (h_out, w_out) = dims_out;
+    let (cin, cout) = (cw.cin, cw.cout);
+    let [sz, sy, sx] = stride;
+    for &o in active {
+        let oi = o as usize;
+        let oz = oi / (h_out * w_out);
+        let oy = (oi / w_out) % h_out;
+        let ox = oi % w_out;
+        let acc = &mut out[oi * cout..(oi + 1) * cout];
+        acc.copy_from_slice(&cw.b);
+        for dz in 0..3usize {
+            let z = (oz * sz + dz) as i64 - 1;
+            if z < 0 || z >= d_in as i64 {
+                continue;
+            }
+            for dy in 0..3usize {
+                let y = (oy * sy + dy) as i64 - 1;
+                if y < 0 || y >= h_in as i64 {
+                    continue;
+                }
+                for dx in 0..3usize {
+                    let x = (ox * sx + dx) as i64 - 1;
+                    if x < 0 || x >= w_in as i64 {
+                        continue;
+                    }
+                    let s = (z as usize * h_in + y as usize) * w_in + x as usize;
+                    if md[s] == 0.0 {
+                        continue; // input is zero off the active set
+                    }
+                    let xrow = &fd[s * cin..(s + 1) * cin];
+                    let wbase = ((dz * 3 + dy) * 3 + dx) * cin * cout;
+                    for (ci, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &cw.w[wbase + ci * cout..wbase + (ci + 1) * cout];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+        let mut nonzero = false;
+        for a in acc.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            } else if *a > 0.0 {
+                nonzero = true;
+            }
+        }
+        if nonzero {
+            out_sites.push(o);
+        }
+    }
+}
+
+// --------------------------------------------------------- roi pool kernel
+
+/// Per-scale context for the RoI grid pool, resolved once per call.
+struct RoiScale<'a> {
+    proj: &'a LinW,
+    fdata: &'a [f32],
+    fd_d: usize,
+    fd_h: usize,
+    fd_w: usize,
+    fc: usize,
+    vz: f32,
+    vy: f32,
+    vx: f32,
+}
+
+/// Grid-pool + per-scale projection for a contiguous range of RoIs,
+/// writing into `chunk` (that range's rows of the concatenated pooled
+/// matrix). Each destination slice is computed independently, so the
+/// ki-parallel loop order is value-identical to the original scale-outer
+/// nest.
+#[allow(clippy::too_many_arguments)]
+fn roi_pool_rows(
+    scales: &[RoiScale<'_>],
+    rd: &[f32],
+    lin: &[f32],
+    origin: (f32, f32, f32),
+    g: usize,
+    pc: usize,
+    concat_c: usize,
+    kis: Range<usize>,
+    chunk: &mut [f32],
+) {
+    let g3 = g * g * g;
+    let (x0, y0, z0) = origin;
+    for ki in kis.clone() {
+        let krel = ki - kis.start;
+        let r = &rd[ki * 7..ki * 7 + 7];
+        let (cx, cy, cz) = (r[0], r[1], r[2]);
+        let (bl, bw, bh) = (r[3], r[4], r[5]);
+        let (cos, sin) = (r[6].cos(), r[6].sin());
+        for (si, sc) in scales.iter().enumerate() {
+            for gi in 0..g3 {
+                let dz = lin[gi / (g * g)];
+                let dy = lin[(gi / g) % g];
+                let dx = lin[gi % g];
+                // rotate the box-frame offset into world space
+                let (ox, oy, oz) = (dx * bl, dy * bw, dz * bh);
+                let px = ox * cos - oy * sin + cx;
+                let py = ox * sin + oy * cos + cy;
+                let pz = oz + cz;
+                let ix = ((px - x0) / sc.vx).floor();
+                let iy = ((py - y0) / sc.vy).floor();
+                let iz = ((pz - z0) / sc.vz).floor();
+                let valid = ix >= 0.0
+                    && ix < sc.fd_w as f32
+                    && iy >= 0.0
+                    && iy < sc.fd_h as f32
+                    && iz >= 0.0
+                    && iz < sc.fd_d as f32;
+                let dst_base = (krel * g3 + gi) * concat_c + si * pc;
+                let dest = &mut chunk[dst_base..dst_base + pc];
+                dest.copy_from_slice(&sc.proj.b);
+                if valid {
+                    let flat = (iz as usize * sc.fd_h + iy as usize) * sc.fd_w + ix as usize;
+                    let xrow = &sc.fdata[flat * sc.fc..(flat + 1) * sc.fc];
+                    for (ci, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &sc.proj.w[ci * pc..(ci + 1) * pc];
+                        for (a, &wv) in dest.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+                for a in dest.iter_mut() {
+                    if *a < 0.0 {
+                        *a = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------- the model
 
 /// Deterministic reference executor over a manifest's module set.
@@ -249,15 +723,35 @@ pub struct ReferenceModel {
     cfg: ModelConfig,
     specs: Vec<ModuleSpec>,
     weights: Weights,
+    pool: Arc<WorkerPool>,
 }
 
 impl ReferenceModel {
+    /// Single-threaded model (kernels run inline on the caller).
     pub fn new(manifest: &Manifest) -> Result<ReferenceModel> {
+        Self::new_pooled(manifest, Arc::new(WorkerPool::new(1)))
+    }
+
+    /// Model whose kernels parallelize over `pool`'s worker threads. The
+    /// pool is shared — the engine hands the same pool to every module, and
+    /// callers size it against the pipeline's tail workers (docs/PERF.md).
+    pub fn new_pooled(manifest: &Manifest, pool: Arc<WorkerPool>) -> Result<ReferenceModel> {
         Ok(ReferenceModel {
             cfg: manifest.config.clone(),
             specs: manifest.modules.clone(),
             weights: init_weights(&manifest.config)?,
+            pool,
         })
+    }
+
+    /// The kernel worker pool (tests read its scratch stats).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Dense index of a module by name (aligned with the manifest order).
+    pub fn module_index(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
     }
 
     /// Execute module `idx` (aligned with the manifest's module order).
@@ -266,7 +760,7 @@ impl ReferenceModel {
         let spec = &self.specs[idx];
         match spec.name.as_str() {
             "vfe" => self.vfe(spec, &inputs[0], &inputs[1]),
-            "bev_head" => self.bev_head(spec, &inputs[0]),
+            "bev_head" => self.bev_head(spec, &inputs[0], false),
             "roi_head" => self.roi_head(spec, inputs),
             name => {
                 let (si, stage) = self
@@ -278,7 +772,48 @@ impl ReferenceModel {
                     .with_context(|| {
                         format!("reference backend has no implementation for '{name}'")
                     })?;
-                self.conv_stage(spec, stage, &self.weights.stages[si], &inputs[0], &inputs[1])
+                self.conv_stage(
+                    spec,
+                    stage,
+                    &self.weights.stages[si],
+                    &inputs[0],
+                    &inputs[1],
+                    false,
+                )
+            }
+        }
+    }
+
+    /// Execute module `idx` through the pre-gather-GEMM scalar kernels.
+    /// Bench-only: the `runtime/*@legacy` micro-bench twins re-measure the
+    /// single-threaded triple-loop behaviour from HEAD so
+    /// `speedup_vs_legacy` is a true in-run before/after pair
+    /// (docs/PERF.md). Only the restructured modules (3D conv stages and
+    /// `bev_head`) carry a legacy path; occupancy propagation is shared, so
+    /// the twin isolates exactly the kernel difference.
+    pub fn execute_legacy(&self, idx: usize, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .specs
+            .get(idx)
+            .with_context(|| format!("module id {idx} out of range"))?;
+        match spec.name.as_str() {
+            "bev_head" => self.bev_head(spec, &inputs[0], true),
+            name => {
+                let (si, stage) = self
+                    .cfg
+                    .stages
+                    .iter()
+                    .enumerate()
+                    .find(|(_, s)| s.name == name)
+                    .with_context(|| format!("no legacy scalar kernel for module '{name}'"))?;
+                self.conv_stage(
+                    spec,
+                    stage,
+                    &self.weights.stages[si],
+                    &inputs[0],
+                    &inputs[1],
+                    true,
+                )
             }
         }
     }
@@ -322,7 +857,9 @@ impl ReferenceModel {
 
     /// One Backbone3D stage — `model.py::conv_stage`: occupancy propagation
     /// (subsample or dilate) followed by the fused 3x3x3 conv + bias + ReLU
-    /// evaluated only at active output sites.
+    /// evaluated only at active output sites. `legacy` selects the scalar
+    /// per-site kernel instead of the parallel gather-GEMM (bench anchor);
+    /// both produce bit-identical outputs.
     fn conv_stage(
         &self,
         spec: &ModuleSpec,
@@ -330,6 +867,7 @@ impl ReferenceModel {
         cw: &Conv3dW,
         feat: &Tensor,
         mask: &Tensor,
+        legacy: bool,
     ) -> Result<Vec<Tensor>> {
         let in_shape = feat.shape();
         if in_shape.len() != 4 {
@@ -422,56 +960,68 @@ impl ReferenceModel {
         let md = mask.data();
         let mut out = vec![0.0f32; out_spatial * cout];
         let mut out_sites: Vec<u32> = Vec::with_capacity(active.len());
-        for &o in &active {
-            let oi = o as usize;
-            let oz = oi / (h_out * w_out);
-            let oy = (oi / w_out) % h_out;
-            let ox = oi % w_out;
-            let acc = &mut out[oi * cout..(oi + 1) * cout];
-            acc.copy_from_slice(&cw.b);
-            for dz in 0..3usize {
-                let z = (oz * sz + dz) as i64 - 1;
-                if z < 0 || z >= d_in as i64 {
-                    continue;
+
+        if legacy {
+            scalar_conv3d(
+                fd,
+                md,
+                (d_in, h_in, w_in),
+                (h_out, w_out),
+                [sz, sy, sx],
+                cw,
+                &active,
+                &mut out,
+                &mut out_sites,
+            );
+        } else if !active.is_empty() {
+            let pool = self.pool.as_ref();
+            let parts = if active.len() * 27 * cin * cout < PAR_MIN_WORK {
+                1
+            } else {
+                pool.threads()
+            };
+            let ranges = WorkerPool::partition(active.len(), parts);
+            let mut site_lists: Vec<Vec<u32>> = ranges.iter().map(|_| Vec::new()).collect();
+            {
+                // chunk the active list across workers: the list is
+                // ascending, so each chunk's output rows form a disjoint
+                // interval of `out`, carved out with split_at_mut
+                let mut jobs: Vec<(Range<usize>, usize, &mut [f32], &mut Vec<u32>)> =
+                    Vec::with_capacity(ranges.len());
+                let mut rest: &mut [f32] = out.as_mut_slice();
+                let mut row_cursor = 0usize;
+                for (r, sites_out) in ranges.iter().zip(site_lists.iter_mut()) {
+                    let first_row = active[r.start] as usize;
+                    let last_row = active[r.end - 1] as usize;
+                    let skip = (first_row - row_cursor) * cout;
+                    let (_gap, tail) = std::mem::take(&mut rest).split_at_mut(skip);
+                    let (chunk, tail) =
+                        tail.split_at_mut((last_row + 1 - first_row) * cout);
+                    rest = tail;
+                    row_cursor = last_row + 1;
+                    jobs.push((r.clone(), first_row, chunk, sites_out));
                 }
-                for dy in 0..3usize {
-                    let y = (oy * sy + dy) as i64 - 1;
-                    if y < 0 || y >= h_in as i64 {
-                        continue;
-                    }
-                    for dx in 0..3usize {
-                        let x = (ox * sx + dx) as i64 - 1;
-                        if x < 0 || x >= w_in as i64 {
-                            continue;
-                        }
-                        let s = (z as usize * h_in + y as usize) * w_in + x as usize;
-                        if md[s] == 0.0 {
-                            continue; // input is zero off the active set
-                        }
-                        let xrow = &fd[s * cin..(s + 1) * cin];
-                        let wbase = ((dz * 3 + dy) * 3 + dx) * cin * cout;
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            let wrow = &cw.w[wbase + ci * cout..wbase + (ci + 1) * cout];
-                            for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                *a += xv * wv;
-                            }
-                        }
-                    }
-                }
+                let active_ref: &[u32] = &active;
+                pool.scatter(jobs, |_wk, (sites_r, base_row, chunk, sites_out)| {
+                    let mut scratch = pool.scratch();
+                    conv3d_sites(
+                        fd,
+                        md,
+                        (d_in, h_in, w_in),
+                        (h_out, w_out),
+                        [sz, sy, sx],
+                        cw,
+                        &active_ref[sites_r],
+                        base_row,
+                        chunk,
+                        sites_out,
+                        &mut scratch,
+                    );
+                    pool.recycle(scratch);
+                });
             }
-            let mut nonzero = false;
-            for a in acc.iter_mut() {
-                if *a < 0.0 {
-                    *a = 0.0;
-                } else if *a > 0.0 {
-                    nonzero = true;
-                }
-            }
-            if nonzero {
-                out_sites.push(o);
+            for l in site_lists {
+                out_sites.extend(l);
             }
         }
 
@@ -481,8 +1031,9 @@ impl ReferenceModel {
         ])
     }
 
-    /// MapToBEV + Backbone2D + DenseHead — `model.py::bev_head`.
-    fn bev_head(&self, spec: &ModuleSpec, feat: &Tensor) -> Result<Vec<Tensor>> {
+    /// MapToBEV + Backbone2D + DenseHead — `model.py::bev_head`. `legacy`
+    /// selects the scalar kernels (bench anchor); outputs are identical.
+    fn bev_head(&self, spec: &ModuleSpec, feat: &Tensor, legacy: bool) -> Result<Vec<Tensor>> {
         let shape = feat.shape();
         if shape.len() != 4 {
             bail!("bev_head wants a rank-4 input");
@@ -490,7 +1041,11 @@ impl ReferenceModel {
         let (d, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
         let bevc = d * c;
         if bevc != self.weights.bev_block1.cin {
-            bail!("bev_head channel mismatch: {} vs {}", bevc, self.weights.bev_block1.cin);
+            bail!(
+                "bev_head channel mismatch: {} vs {}",
+                bevc,
+                self.weights.bev_block1.cin
+            );
         }
         // map_to_bev: (D, H, W, C) -> (H, W, D*C)
         let fd = feat.data();
@@ -504,13 +1059,26 @@ impl ReferenceModel {
                 }
             }
         }
-        let x = conv2d_relu(&x, h, w, &self.weights.bev_block1);
-        let x = conv2d_relu(&x, h, w, &self.weights.bev_block2);
+        let pool = self.pool.as_ref();
+        let x = if legacy {
+            let x1 = scalar_conv2d_relu(&x, h, w, &self.weights.bev_block1);
+            scalar_conv2d_relu(&x1, h, w, &self.weights.bev_block2)
+        } else {
+            let x1 = conv2d_relu(pool, &x, h, w, &self.weights.bev_block1);
+            conv2d_relu(pool, &x1, h, w, &self.weights.bev_block2)
+        };
 
         let hw = h * w;
-        let cls = linear(&x, hw, &self.weights.bev_cls, false);
-        let boxp = linear(&x, hw, &self.weights.bev_box, false);
-        let dir = linear(&x, hw, &self.weights.bev_dir, false);
+        let head = |lw: &LinW| {
+            if legacy {
+                scalar_linear(&x, hw, lw, false)
+            } else {
+                linear(pool, &x, hw, lw, false)
+            }
+        };
+        let cls = head(&self.weights.bev_cls);
+        let boxp = head(&self.weights.bev_box);
+        let dir = head(&self.weights.bev_dir);
         Ok(vec![
             Tensor::from_vec(&spec.outputs[0].shape, cls)?,
             Tensor::from_vec(&spec.outputs[1].shape, boxp)?,
@@ -519,9 +1087,12 @@ impl ReferenceModel {
     }
 
     /// Voxel RoI pooling + refinement — `model.py::roi_head` /
-    /// `ref.py::roi_pool_ref`.
+    /// `ref.py::roi_pool_ref`. The grid-pool gather parallelizes over RoIs
+    /// (each RoI's rows of the pooled matrix are contiguous) and the MLP /
+    /// FC towers ride the parallel [`linear`] kernel.
     fn roi_head(&self, spec: &ModuleSpec, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
         let cfg = &self.cfg;
+        let pool = self.pool.as_ref();
         let rois = inputs
             .last()
             .context("roi_head wants the roi tensor last")?;
@@ -547,7 +1118,9 @@ impl ReferenceModel {
             .map(|i| (i as f32 + 0.5) / g as f32 - 0.5)
             .collect();
 
-        let mut xcat = vec![0.0f32; k * g3 * concat_c];
+        // per-scale contexts, resolved once (weights, feature volume,
+        // voxel geometry)
+        let mut scales_ctx: Vec<RoiScale> = Vec::with_capacity(cfg.roi_pool_scales.len());
         for (si, scale) in cfg.roi_pool_scales.iter().enumerate() {
             let feat_name = format!("{scale}_feat");
             let fi = spec
@@ -558,65 +1131,49 @@ impl ReferenceModel {
             let feat = &inputs[fi];
             let fs = feat.shape();
             let (fd_d, fd_h, fd_w, fc) = (fs[0], fs[1], fs[2], fs[3]);
-            let (vz, vy, vx) = (
-                (z1 - z0) / fd_d as f32,
-                (y1 - y0) / fd_h as f32,
-                (x1 - x0) / fd_w as f32,
-            );
-            let proj = &self.weights.roi_proj[si];
-            let fdata = feat.data();
-            for ki in 0..k {
-                let r = &rd[ki * 7..ki * 7 + 7];
-                let (cx, cy, cz) = (r[0], r[1], r[2]);
-                let (bl, bw, bh) = (r[3], r[4], r[5]);
-                let (cos, sin) = (r[6].cos(), r[6].sin());
-                for gi in 0..g3 {
-                    let dz = lin[gi / (g * g)];
-                    let dy = lin[(gi / g) % g];
-                    let dx = lin[gi % g];
-                    // rotate the box-frame offset into world space
-                    let (ox, oy, oz) = (dx * bl, dy * bw, dz * bh);
-                    let px = ox * cos - oy * sin + cx;
-                    let py = ox * sin + oy * cos + cy;
-                    let pz = oz + cz;
-                    let ix = ((px - x0) / vx).floor();
-                    let iy = ((py - y0) / vy).floor();
-                    let iz = ((pz - z0) / vz).floor();
-                    let valid = ix >= 0.0
-                        && ix < fd_w as f32
-                        && iy >= 0.0
-                        && iy < fd_h as f32
-                        && iz >= 0.0
-                        && iz < fd_d as f32;
-                    let dst_base = (ki * g3 + gi) * concat_c + si * pc;
-                    let dest = &mut xcat[dst_base..dst_base + pc];
-                    dest.copy_from_slice(&proj.b);
-                    if valid {
-                        let flat =
-                            (iz as usize * fd_h + iy as usize) * fd_w + ix as usize;
-                        let xrow = &fdata[flat * fc..(flat + 1) * fc];
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            let wrow = &proj.w[ci * pc..(ci + 1) * pc];
-                            for (a, &wv) in dest.iter_mut().zip(wrow) {
-                                *a += xv * wv;
-                            }
-                        }
-                    }
-                    for a in dest.iter_mut() {
-                        if *a < 0.0 {
-                            *a = 0.0;
-                        }
-                    }
-                }
-            }
+            scales_ctx.push(RoiScale {
+                proj: &self.weights.roi_proj[si],
+                fdata: feat.data(),
+                fd_d,
+                fd_h,
+                fd_w,
+                fc,
+                vz: (z1 - z0) / fd_d as f32,
+                vy: (y1 - y0) / fd_h as f32,
+                vx: (x1 - x0) / fd_w as f32,
+            });
+        }
+
+        let mut xcat = vec![0.0f32; k * g3 * concat_c];
+        if k > 0 {
+            // each grid point costs ~cin·pc fused multiply-adds per scale;
+            // concat_c = scales·pc is a close enough work proxy
+            let parts = if k * g3 * concat_c < PAR_MIN_WORK {
+                1
+            } else {
+                pool.threads()
+            };
+            let ranges = WorkerPool::partition(k, parts);
+            let jobs = row_jobs(&mut xcat, &ranges, g3 * concat_c);
+            let scales_ref: &[RoiScale] = &scales_ctx;
+            pool.scatter(jobs, |_w, (kis, chunk)| {
+                roi_pool_rows(
+                    scales_ref,
+                    rd,
+                    &lin,
+                    (x0, y0, z0),
+                    g,
+                    pc,
+                    concat_c,
+                    kis,
+                    chunk,
+                );
+            });
         }
 
         // shared per-grid-point MLP (the head's compute bulk)
-        let h1 = linear(&xcat, k * g3, &self.weights.roi_mlp1, true);
-        let h2 = linear(&h1, k * g3, &self.weights.roi_mlp2, true);
+        let h1 = linear(pool, &xcat, k * g3, &self.weights.roi_mlp1, true);
+        let h2 = linear(pool, &h1, k * g3, &self.weights.roi_mlp2, true);
 
         // permutation-invariant pool over the grid: [mean || max]
         let mlp = self.weights.roi_mlp2.cout;
@@ -640,10 +1197,10 @@ impl ReferenceModel {
             }
         }
 
-        let f1 = linear(&pooled, k, &self.weights.roi_fc1, true);
-        let f2 = linear(&f1, k, &self.weights.roi_fc2, true);
-        let cls = linear(&f2, k, &self.weights.roi_cls, false);
-        let reg = linear(&f2, k, &self.weights.roi_reg, false);
+        let f1 = linear(pool, &pooled, k, &self.weights.roi_fc1, true);
+        let f2 = linear(pool, &f1, k, &self.weights.roi_fc2, true);
+        let cls = linear(pool, &f2, k, &self.weights.roi_cls, false);
+        let reg = linear(pool, &f2, k, &self.weights.roi_reg, false);
 
         // residual decode in the RoI local frame (Voxel R-CNN style)
         let mut boxes = vec![0.0f32; k * 7];
@@ -676,6 +1233,11 @@ mod tests {
         ReferenceModel::new(&test_manifest()).unwrap()
     }
 
+    fn model_threaded(threads: usize) -> ReferenceModel {
+        ReferenceModel::new_pooled(&test_manifest(), Arc::new(WorkerPool::new(threads)))
+            .unwrap()
+    }
+
     fn module_idx(m: &ReferenceModel, name: &str) -> usize {
         m.specs.iter().position(|s| s.name == name).unwrap()
     }
@@ -686,6 +1248,28 @@ mod tests {
             t.data_mut()[i] = v;
         }
         Arc::new(t)
+    }
+
+    /// A random KITTI-ish sparse (feat, mask) pair for a conv stage input.
+    fn random_stage_input(
+        shape: &[usize],
+        occupancy: f64,
+        seed: u64,
+    ) -> (Arc<Tensor>, Arc<Tensor>) {
+        let mut rng = Rng::new(seed);
+        let c = shape[3];
+        let spatial: usize = shape[..3].iter().product();
+        let mut feat = Tensor::zeros(shape);
+        let mut mask = Tensor::zeros(&[shape[0], shape[1], shape[2], 1]);
+        for s in 0..spatial {
+            if rng.chance(occupancy) {
+                mask.data_mut()[s] = 1.0;
+                for ch in 0..c {
+                    feat.data_mut()[s * c + ch] = (rng.normal() as f32).abs();
+                }
+            }
+        }
+        (Arc::new(feat), Arc::new(mask))
     }
 
     #[test]
@@ -867,5 +1451,73 @@ mod tests {
         assert!(out[1].data().iter().all(|x| x.is_finite()));
         // padding boxes keep zero size after the exp residual
         assert_eq!(out[1].data()[95 * 7 + 3], 0.0);
+    }
+
+    #[test]
+    fn gather_gemm_matches_legacy_scalar_kernels_bitwise() {
+        let m = model();
+        // conv1 (regular, stride 1) on a realistic sparse input
+        let (feat, mask) = random_stage_input(&[16, 128, 128, 4], 0.02, 7);
+        let idx = module_idx(&m, "conv1");
+        let new = m.execute(idx, &[feat.clone(), mask.clone()]).unwrap();
+        let old = m.execute_legacy(idx, &[feat, mask]).unwrap();
+        assert_eq!(new, old, "conv1 gather-GEMM diverged from scalar kernel");
+        assert_eq!(new[0].site_index(), old[0].site_index());
+
+        // conv3 (strided 2,2,2) exercises the strided gather path
+        let (feat, mask) = random_stage_input(&[8, 128, 128, 32], 0.01, 8);
+        let idx3 = module_idx(&m, "conv3");
+        let new = m.execute(idx3, &[feat.clone(), mask.clone()]).unwrap();
+        let old = m.execute_legacy(idx3, &[feat, mask]).unwrap();
+        assert_eq!(new, old, "conv3 gather-GEMM diverged from scalar kernel");
+
+        // bev_head: conv2d + linear towers
+        let mut f4 = Tensor::zeros(&[2, 32, 32, 128]);
+        let mut rng = Rng::new(9);
+        for x in f4.data_mut().iter_mut() {
+            if rng.chance(0.3) {
+                *x = rng.normal() as f32;
+            }
+        }
+        let f4 = Arc::new(f4);
+        let bidx = module_idx(&m, "bev_head");
+        let new = m.execute(bidx, &[f4.clone()]).unwrap();
+        let old = m.execute_legacy(bidx, &[f4]).unwrap();
+        assert_eq!(new, old, "bev_head gather-GEMM diverged from scalar kernel");
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical_per_module() {
+        let m1 = model_threaded(1);
+        let m4 = model_threaded(4);
+        let (feat, mask) = random_stage_input(&[16, 128, 128, 4], 0.02, 11);
+        let idx = module_idx(&m1, "conv1");
+        let a = m1.execute(idx, &[feat.clone(), mask.clone()]).unwrap();
+        let b = m4.execute(idx, &[feat, mask]).unwrap();
+        assert_eq!(a, b, "conv1 diverged across thread counts");
+        assert_eq!(a[0].site_index(), b[0].site_index());
+
+        let mut f4 = Tensor::zeros(&[2, 32, 32, 128]);
+        let mut rng = Rng::new(13);
+        for x in f4.data_mut().iter_mut() {
+            if rng.chance(0.25) {
+                *x = rng.normal() as f32;
+            }
+        }
+        let f4 = Arc::new(f4);
+        let bidx = module_idx(&m1, "bev_head");
+        assert_eq!(
+            m1.execute(bidx, &[f4.clone()]).unwrap(),
+            m4.execute(bidx, &[f4]).unwrap(),
+            "bev_head diverged across thread counts"
+        );
+    }
+
+    #[test]
+    fn legacy_path_exists_only_for_restructured_modules() {
+        let m = model();
+        let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+        let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+        assert!(m.execute_legacy(module_idx(&m, "vfe"), &[sum, cnt]).is_err());
     }
 }

@@ -8,13 +8,22 @@
 //!
 //! Formats:
 //!   * `DenseF32`    — raw row-major f32 payload
-//!   * `SparseF32`   — active-site indices (u32) + per-site channel values
+//!   * `SparseF32`   — active-site index + per-site channel values
 //!   * `MaskBitset`  — 1 bit per site (occupancy masks reconstruct exactly)
 //!   * `DenseQ8` / `SparseQ8` — int8 affine-quantized variants (the paper's
 //!     §VI future-work compression; ablated in the bench suite)
 //!
 //! `encode_auto` picks the smallest exact format; quantized formats are
 //! opt-in because they are lossy.
+//!
+//! **Wire version 2** (the current framing) delta + run-length encodes the
+//! sorted sparse site index: occupied sites on real scans are
+//! near-contiguous (points fill surfaces, so runs along the fastest grid
+//! axis are long), so instead of 4 bytes per site the index is a varint
+//! run list — `(gap-from-previous, run_length)` pairs — that costs a
+//! couple of bytes per *run* (paper §VI compression direction). Version 1
+//! packets (raw little-endian u32 per site) still decode; see
+//! [`Packet::encode_versioned_into`].
 //!
 //! Perf contract (see docs/PERF.md): packets hold `Arc<Tensor>` so frame
 //! assembly never deep-copies; format choice and sparse emission run off
@@ -29,6 +38,10 @@ use anyhow::{bail, Context, Result};
 use super::Tensor;
 
 const MAGIC: u32 = 0x5350_5754; // "SPWT"
+
+/// Current wire framing: delta/varint run-length site indices. Version 1
+/// (raw u32 indices) remains decodable for old senders.
+pub const WIRE_VERSION: u8 = 2;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Format {
@@ -98,6 +111,24 @@ impl Writer<'_> {
     fn set_bit(&mut self, start: usize, bit: usize) {
         self.buf[start + bit / 8] |= 1 << (bit % 8);
     }
+    /// LEB128 unsigned varint (7 bits per byte, high bit = continue).
+    fn varint(&mut self, mut v: u32) {
+        while v >= 0x80 {
+            self.buf.push((v as u8 & 0x7f) | 0x80);
+            v >>= 7;
+        }
+        self.buf.push(v as u8);
+    }
+}
+
+/// Encoded length of one LEB128 varint.
+fn varint_len(mut v: u32) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
 }
 
 struct Reader<'a> {
@@ -129,6 +160,109 @@ impl<'a> Reader<'a> {
     fn done(&self) -> bool {
         self.pos == self.b.len()
     }
+    fn varint(&mut self) -> Result<u32> {
+        let mut v: u32 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            // the 5th byte holds only 4 usable bits; anything above would
+            // be silently truncated by the shift — corrupt input, bail
+            if shift >= 32 || (shift == 28 && (b & 0x7f) > 0x0f) {
+                bail!("varint overflows 32 bits at {}", self.pos);
+            }
+            v |= ((b & 0x7f) as u32) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+}
+
+// ----------------------------------------------- delta/RLE site index (v2)
+
+/// Walk an ascending site list as maximal runs of consecutive indices,
+/// calling `f(gap_from_cursor, run_len)` per run (cursor = one past the
+/// previous run's end, starting at 0).
+fn for_each_site_run(sites: &[u32], mut f: impl FnMut(u32, u32)) {
+    let mut cursor: u32 = 0;
+    let mut i = 0usize;
+    while i < sites.len() {
+        let start = sites[i];
+        let mut len: u32 = 1;
+        while i + (len as usize) < sites.len() && sites[i + len as usize] == start + len {
+            len += 1;
+        }
+        f(start - cursor, len);
+        cursor = start + len;
+        i += len as usize;
+    }
+}
+
+/// Exact byte cost of the site-index block at `version` plus the v2 run
+/// count, in a **single walk** — the one source of truth for index
+/// sizing (v1: 4-byte count + raw u32 per site; the v1 run count is 0,
+/// it has no run framing).
+fn site_index_cost(sites: &[u32], version: u8) -> (usize, u32) {
+    if version < 2 {
+        return (4 + sites.len() * 4, 0);
+    }
+    let mut runs: u32 = 0;
+    let mut run_bytes = 0usize;
+    for_each_site_run(sites, |gap, len| {
+        runs += 1;
+        run_bytes += varint_len(gap) + varint_len(len - 1);
+    });
+    (
+        varint_len(sites.len() as u32) + varint_len(runs) + run_bytes,
+        runs,
+    )
+}
+
+/// v2 site-index block: varint site count, varint run count, then per run
+/// `(varint gap-from-cursor, varint run_len - 1)`. Ascending by
+/// construction, so decoders always seed the occupied-site cache.
+/// `n_runs` comes from the tensor's [`plan`] so emission is a single walk.
+fn encode_site_index(w: &mut Writer, sites: &[u32], n_runs: u32) {
+    w.varint(sites.len() as u32);
+    w.varint(n_runs);
+    let mut emitted: u32 = 0;
+    for_each_site_run(sites, |gap, len| {
+        w.varint(gap);
+        w.varint(len - 1);
+        emitted += 1;
+    });
+    debug_assert_eq!(emitted, n_runs, "plan's run count drifted from emission");
+}
+
+fn decode_site_index(r: &mut Reader, spatial: usize) -> Result<Vec<usize>> {
+    let n = r.varint()? as usize;
+    if n > spatial {
+        bail!("sparse count {n} exceeds {spatial} sites");
+    }
+    let n_runs = r.varint()? as usize;
+    if n_runs > n {
+        bail!("sparse run count {n_runs} exceeds site count {n}");
+    }
+    let mut idx: Vec<usize> = Vec::with_capacity(n);
+    let mut cursor: u64 = 0;
+    for _ in 0..n_runs {
+        let gap = r.varint()? as u64;
+        let len = r.varint()? as u64 + 1;
+        let start = cursor + gap;
+        let end = start + len;
+        if end > spatial as u64 || idx.len() + len as usize > n {
+            bail!("sparse run [{start}, {end}) out of range");
+        }
+        for s in start..end {
+            idx.push(s as usize);
+        }
+        cursor = end;
+    }
+    if idx.len() != n {
+        bail!("sparse runs cover {} of {n} sites", idx.len());
+    }
+    Ok(idx)
 }
 
 // ---------------------------------------------------------- single tensor
@@ -142,48 +276,86 @@ fn is_mask(t: &Tensor) -> bool {
             .all(|&s| t.data()[s as usize] == 1.0)
 }
 
-fn sparse_bytes(sites: usize, channels: usize, quantized: bool) -> usize {
-    let per_value = if quantized { 1 } else { 4 };
-    4 + sites * (4 + channels * per_value) + if quantized { 8 } else { 0 }
-}
-
-/// Size in bytes each format would need for this tensor (without header).
-pub fn payload_size(t: &Tensor, fmt: Format) -> usize {
+/// Payload bytes `fmt` needs given a precomputed sparse index cost —
+/// shared by [`plan`] and [`payload_size`] so wire sizes have one source
+/// of truth.
+fn format_payload(t: &Tensor, fmt: Format, index_bytes: usize, value_count: usize) -> usize {
     match fmt {
         Format::DenseF32 => t.size_bytes(),
-        Format::SparseF32 => sparse_bytes(t.site_index().len(), t.channels(), false),
+        Format::SparseF32 => index_bytes + value_count * 4,
         Format::MaskBitset => t.spatial().div_ceil(8),
         Format::DenseQ8 => 8 + t.numel(),
-        Format::SparseQ8 => sparse_bytes(t.site_index().len(), t.channels(), true),
+        Format::SparseQ8 => 8 + index_bytes + value_count,
     }
 }
 
-fn choose(t: &Tensor, policy: Policy) -> Format {
-    match policy {
-        Policy::Dense => Format::DenseF32,
+/// Size in bytes `fmt` would need for this tensor at the current wire
+/// version (without header). Reporting/analysis helper; the encoder's hot
+/// path computes this through the single-walk [`plan`].
+pub fn payload_size(t: &Tensor, fmt: Format) -> usize {
+    let sites = t.site_index();
+    let (index_bytes, _) = site_index_cost(sites, WIRE_VERSION);
+    format_payload(t, fmt, index_bytes, sites.len() * t.channels())
+}
+
+/// Per-tensor encode plan: smallest format at the framing `version`
+/// actually being written (v1 costs 4 bytes/site of index where v2 costs
+/// a few bytes per run, so the dense/sparse crossover point differs),
+/// its exact payload size, and the v2 run count so emission doesn't
+/// re-count. Computed in a **single walk** over the cached site index —
+/// the index cost is shared by both sparse candidates, keeping the wire
+/// hot path at one sizing walk per tensor per pass.
+#[derive(Debug, Clone, Copy)]
+struct TensorPlan {
+    fmt: Format,
+    payload: usize,
+    n_runs: u32,
+}
+
+fn plan(t: &Tensor, policy: Policy, version: u8) -> TensorPlan {
+    if policy == Policy::Dense {
+        // no format choice to make — don't walk the site index at all
+        return TensorPlan {
+            fmt: Format::DenseF32,
+            payload: t.size_bytes(),
+            n_runs: 0,
+        };
+    }
+    let sites = t.site_index();
+    let (index_bytes, n_runs) = site_index_cost(sites, version);
+    let values = sites.len() * t.channels();
+    let size_of = |fmt: Format| format_payload(t, fmt, index_bytes, values);
+    let best_of = |candidates: &[Format]| -> Format {
+        let mut best = Format::DenseF32;
+        for &f in candidates {
+            if size_of(f) < size_of(best) {
+                best = f;
+            }
+        }
+        best
+    };
+    let fmt = match policy {
+        Policy::Dense => unreachable!("handled above"),
         Policy::Auto => {
-            let mut best = Format::DenseF32;
-            if payload_size(t, Format::SparseF32) < payload_size(t, best) {
-                best = Format::SparseF32;
+            if is_mask(t) {
+                best_of(&[Format::SparseF32, Format::MaskBitset])
+            } else {
+                best_of(&[Format::SparseF32])
             }
-            if is_mask(t) && payload_size(t, Format::MaskBitset) < payload_size(t, best) {
-                best = Format::MaskBitset;
-            }
-            best
         }
         Policy::AutoQuantized => {
             if is_mask(t) {
                 // masks quantize to themselves; bitset is already 1 bit
-                return choose(t, Policy::Auto);
+                best_of(&[Format::SparseF32, Format::MaskBitset])
+            } else {
+                best_of(&[Format::SparseF32, Format::DenseQ8, Format::SparseQ8])
             }
-            let mut best = Format::DenseF32;
-            for f in [Format::SparseF32, Format::DenseQ8, Format::SparseQ8] {
-                if payload_size(t, f) < payload_size(t, best) {
-                    best = f;
-                }
-            }
-            best
         }
+    };
+    TensorPlan {
+        fmt,
+        payload: size_of(fmt),
+        n_runs,
     }
 }
 
@@ -194,7 +366,8 @@ fn quant_params(t: &Tensor) -> (f32, f32) {
     (scale, 0.0)
 }
 
-fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
+fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, plan: TensorPlan, version: u8) {
+    let fmt = plan.fmt;
     w.u8(name.len() as u8);
     w.bytes(name.as_bytes());
     w.u8(fmt as u8);
@@ -212,14 +385,24 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
             // single pass over the occupied-site index — no dense rescan
             let sites = t.site_index();
             let c = t.channels().max(1);
-            w.u32(sites.len() as u32);
             let (scale, _) = quant_params(t);
-            if fmt == Format::SparseQ8 {
-                w.f32(scale);
-                w.f32(0.0);
-            }
-            for &s in sites {
-                w.u32(s);
+            if version >= 2 {
+                // v2: quant params, then the delta/varint run-length index
+                if fmt == Format::SparseQ8 {
+                    w.f32(scale);
+                    w.f32(0.0);
+                }
+                encode_site_index(w, sites, plan.n_runs);
+            } else {
+                // v1 framing: u32 count, quant params, raw u32 indices
+                w.u32(sites.len() as u32);
+                if fmt == Format::SparseQ8 {
+                    w.f32(scale);
+                    w.f32(0.0);
+                }
+                for &s in sites {
+                    w.u32(s);
+                }
             }
             let data = t.data();
             for &s in sites {
@@ -251,7 +434,7 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, fmt: Format) {
     }
 }
 
-fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
+fn decode_tensor(r: &mut Reader, version: u8) -> Result<(String, Tensor)> {
     let nlen = r.u8()? as usize;
     let name = String::from_utf8(r.take(nlen)?.to_vec()).context("tensor name")?;
     let fmt = Format::from_u8(r.u8()?)?;
@@ -273,33 +456,44 @@ fn decode_tensor(r: &mut Reader) -> Result<(String, Tensor)> {
             Tensor::from_vec(&shape, v)?
         }
         Format::SparseF32 | Format::SparseQ8 => {
-            let n = r.u32()? as usize;
-            if n > spatial {
-                bail!("sparse count {n} exceeds {spatial} sites");
-            }
-            let (scale, _) = if fmt == Format::SparseQ8 {
-                (r.f32()?, r.f32()?)
+            let (idx, ascending, scale) = if version >= 2 {
+                let (scale, _) = if fmt == Format::SparseQ8 {
+                    (r.f32()?, r.f32()?)
+                } else {
+                    (1.0, 0.0)
+                };
+                // runs are ascending by construction
+                (decode_site_index(r, spatial)?, true, scale)
             } else {
-                (1.0, 0.0)
+                let n = r.u32()? as usize;
+                if n > spatial {
+                    bail!("sparse count {n} exceeds {spatial} sites");
+                }
+                let (scale, _) = if fmt == Format::SparseQ8 {
+                    (r.f32()?, r.f32()?)
+                } else {
+                    (1.0, 0.0)
+                };
+                let mut idx = Vec::with_capacity(n);
+                let mut ascending = true;
+                let mut prev: i64 = -1;
+                for _ in 0..n {
+                    let i = r.u32()? as usize;
+                    if i >= spatial {
+                        bail!("sparse index {i} out of {spatial}");
+                    }
+                    if (i as i64) <= prev {
+                        ascending = false; // foreign encoder; don't seed cache
+                    }
+                    prev = i as i64;
+                    idx.push(i);
+                }
+                (idx, ascending, scale)
             };
-            let mut idx = Vec::with_capacity(n);
-            let mut ascending = true;
-            let mut prev: i64 = -1;
-            for _ in 0..n {
-                let i = r.u32()? as usize;
-                if i >= spatial {
-                    bail!("sparse index {i} out of {spatial}");
-                }
-                if (i as i64) <= prev {
-                    ascending = false; // foreign encoder; don't seed cache
-                }
-                prev = i as i64;
-                idx.push(i);
-            }
             let mut v = vec![0.0f32; numel];
             // decode values and rebuild the occupied-site index in the
             // same pass, so downstream consumers never rescan the grid
-            let mut sites: Vec<u32> = Vec::with_capacity(n);
+            let mut sites: Vec<u32> = Vec::with_capacity(idx.len());
             for &i in &idx {
                 let mut nonzero = false;
                 for ch in 0..channels {
@@ -394,22 +588,43 @@ impl Packet {
 
     /// Encode into a caller-owned buffer, cleared and presized to the
     /// exact encoded length (steady-state reuse allocates nothing once the
-    /// buffer has grown to the working-set size).
+    /// buffer has grown to the working-set size). Writes the current
+    /// [`WIRE_VERSION`] framing.
     pub fn encode_into(&self, policy: Policy, buf: &mut Vec<u8>) {
+        self.encode_versioned_into(policy, WIRE_VERSION, buf)
+            .expect("WIRE_VERSION is always encodable");
+    }
+
+    /// [`Packet::encode_into`] with an explicit wire version: 1 = legacy
+    /// raw-u32 site indices, 2 = delta/varint run-length. Decoders accept
+    /// both; new senders use the default. Public for cross-version tests,
+    /// the `codec/encode_sparse_delta@legacy` bench twin, and senders that
+    /// must interoperate with v1-only peers — an unknown version (e.g.
+    /// from a future peer's handshake) is a recoverable error, not a
+    /// panic.
+    pub fn encode_versioned_into(
+        &self,
+        policy: Policy,
+        version: u8,
+        buf: &mut Vec<u8>,
+    ) -> Result<()> {
+        if version != 1 && version != WIRE_VERSION {
+            bail!("unsupported encode version {version} (supported: 1, {WIRE_VERSION})");
+        }
         buf.clear();
-        let exact = self.encoded_size(policy);
+        let exact = self.encoded_size_versioned(policy, version);
         buf.reserve(exact);
         {
             let mut w = Writer { buf: &mut *buf };
             w.u32(MAGIC);
-            w.u8(1); // version
+            w.u8(version);
             w.u32(self.tensors.len() as u32);
             for (name, t) in &self.tensors {
-                let fmt = choose(t, policy);
-                encode_tensor(&mut w, name, t, fmt);
+                encode_tensor(&mut w, name, t, plan(t, policy, version), version);
             }
         }
         debug_assert_eq!(buf.len(), exact, "encoded_size drifted from encoder");
+        Ok(())
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Packet> {
@@ -417,13 +632,14 @@ impl Packet {
         if r.u32()? != MAGIC {
             bail!("bad wire magic");
         }
-        if r.u8()? != 1 {
-            bail!("unsupported wire version");
+        let version = r.u8()?;
+        if version != 1 && version != WIRE_VERSION {
+            bail!("unsupported wire version {version}");
         }
         let n = r.u32()? as usize;
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            let (name, t) = decode_tensor(&mut r)?;
+            let (name, t) = decode_tensor(&mut r, version)?;
             tensors.push((name, Arc::new(t)));
         }
         if !r.done() {
@@ -435,11 +651,14 @@ impl Packet {
     /// Encoded size without building the buffer (bench fast-path; also the
     /// exact presize for `encode_into`).
     pub fn encoded_size(&self, policy: Policy) -> usize {
+        self.encoded_size_versioned(policy, WIRE_VERSION)
+    }
+
+    fn encoded_size_versioned(&self, policy: Policy, version: u8) -> usize {
         let mut total = 4 + 1 + 4;
         for (name, t) in &self.tensors {
-            let fmt = choose(t, policy);
             total += 1 + name.len() + 1 + 1 + 4 * t.shape().len();
-            total += payload_size(t, fmt);
+            total += plan(t, policy, version).payload;
         }
         total
     }
@@ -569,6 +788,113 @@ mod tests {
         let shared = Packet::from_shared(vec![("t".into(), Arc::new(t))]);
         for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
             assert_eq!(owned.encode(policy), shared.encode(policy), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn varint_roundtrips_across_widths() {
+        for v in [0u32, 1, 127, 128, 129, 16383, 16384, 1 << 21, u32::MAX] {
+            let mut buf = Vec::new();
+            Writer { buf: &mut buf }.varint(v);
+            assert_eq!(buf.len(), varint_len(v));
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v, "varint {v}");
+            assert!(r.done());
+        }
+    }
+
+    #[test]
+    fn site_runs_partition_the_index() {
+        let sites = [0u32, 1, 2, 7, 9, 10, 500];
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        for_each_site_run(&sites, |gap, len| runs.push((gap, len)));
+        // cursor: 0 -> 3 -> 8 -> 11 -> 501
+        assert_eq!(runs, [(0, 3), (4, 1), (1, 2), (489, 1)]);
+        let (v2_bytes, n_runs) = site_index_cost(&sites, 2);
+        assert_eq!(n_runs, 4);
+        let (v1_bytes, v1_runs) = site_index_cost(&sites, 1);
+        assert_eq!((v1_bytes, v1_runs), (4 + sites.len() * 4, 0));
+        assert!(v2_bytes < v1_bytes, "delta framing beats v1: {v2_bytes} vs {v1_bytes}");
+    }
+
+    #[test]
+    fn delta_index_roundtrip_property() {
+        // occupancies from empty to full, mixing long runs and singletons
+        let mut rng = Rng::new(9);
+        for occ in [0.0, 0.01, 0.1, 0.5, 0.95, 1.0] {
+            let t = masked_tensor(&mut rng, &[8, 16, 16, 4], occ);
+            let m = {
+                let mut m = Tensor::zeros(&[8, 16, 16, 1]);
+                for x in m.data_mut() {
+                    *x = f32::from(rng.chance(occ));
+                }
+                m
+            };
+            let p = Packet::new(vec![("f".into(), t.clone()), ("m".into(), m.clone())]);
+            for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+                let bytes = p.encode(policy);
+                assert_eq!(bytes.len(), p.encoded_size(policy), "{policy:?} occ {occ}");
+                let back = Packet::decode(&bytes).unwrap();
+                if policy == Policy::AutoQuantized {
+                    continue; // lossy; covered by quantized_bounded_error
+                }
+                assert_eq!(back.get("f").unwrap(), &t, "{policy:?} occ {occ}");
+                assert_eq!(back.get("m").unwrap(), &m);
+                // the rebuilt site cache is exact
+                assert_eq!(back.get("f").unwrap().site_index(), t.site_index());
+            }
+        }
+    }
+
+    #[test]
+    fn v1_framing_still_decodes_and_v2_is_smaller_on_runs() {
+        // near-contiguous occupancy, like the fastest axis of a real scan
+        let mut t = Tensor::zeros(&[4, 8, 32, 2]);
+        for s in 0..(4 * 8 * 32) {
+            if s % 40 < 25 {
+                t.data_mut()[s * 2] = 1.5;
+                t.data_mut()[s * 2 + 1] = -0.5;
+            }
+        }
+        let p = Packet::new(vec![("t".into(), t.clone())]);
+        let mut v1 = Vec::new();
+        p.encode_versioned_into(Policy::Auto, 1, &mut v1).unwrap();
+        let v2 = p.encode(Policy::Auto);
+        // unknown versions are a recoverable error, not a panic
+        assert!(p
+            .encode_versioned_into(Policy::Auto, 3, &mut Vec::new())
+            .is_err());
+        assert_eq!(Packet::decode(&v1).unwrap().get("t").unwrap(), &t);
+        assert_eq!(Packet::decode(&v2).unwrap().get("t").unwrap(), &t);
+        assert!(
+            v2.len() < v1.len(),
+            "delta framing should shrink run-heavy indices: v2 {} vs v1 {}",
+            v2.len(),
+            v1.len()
+        );
+        // v1 decode also seeds the (ascending) site cache
+        assert_eq!(
+            Packet::decode(&v1).unwrap().get("t").unwrap().site_index(),
+            t.site_index()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_version_and_bad_runs() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 0.0, 2.0, 0.0]).unwrap();
+        let p = Packet::new(vec![("t".into(), t)]);
+        let mut bytes = p.encode(Policy::Dense);
+        bytes[4] = 9; // version byte
+        assert!(Packet::decode(&bytes).is_err());
+        // truncating inside a sparse v2 index errors instead of panicking
+        let sparse = {
+            let mut t = Tensor::zeros(&[64, 1]);
+            t.data_mut()[3] = 1.0;
+            t.data_mut()[60] = 2.0;
+            Packet::new(vec![("s".into(), t)]).encode(Policy::Auto)
+        };
+        for cut in 6..sparse.len() {
+            let _ = Packet::decode(&sparse[..cut]); // must not panic
         }
     }
 

@@ -39,6 +39,21 @@ impl Args {
     }
 }
 
+/// Parse a `--threads` value: a positive integer, or `max` / `auto` / `0`
+/// for all available cores (resolved by [`crate::runtime::pool::resolve_threads`],
+/// the single source of truth). `None` (flag absent) means 1 — the
+/// single-threaded kernels, bit-identical to every other thread count.
+pub fn parse_threads(v: Option<&str>) -> Result<usize> {
+    match v {
+        None => Ok(1),
+        Some("max") | Some("auto") | Some("0") => Ok(crate::runtime::pool::resolve_threads(0)),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => bail!("--threads: want a positive integer, 'max', or 'auto'; got '{s}'"),
+        },
+    }
+}
+
 /// One option's declaration (help text only; parsing is permissive).
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -194,5 +209,19 @@ mod tests {
     fn negative_number_as_value() {
         let a = parse(&["run", "--offset=-3.5"]).unwrap();
         assert_eq!(a.get_parse::<f64>("offset").unwrap(), Some(-3.5));
+    }
+
+    #[test]
+    fn threads_parses_counts_and_max() {
+        assert_eq!(parse_threads(None).unwrap(), 1);
+        assert_eq!(parse_threads(Some("3")).unwrap(), 3);
+        let all = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(parse_threads(Some("max")).unwrap(), all);
+        assert_eq!(parse_threads(Some("auto")).unwrap(), all);
+        assert_eq!(parse_threads(Some("0")).unwrap(), all);
+        assert!(parse_threads(Some("-2")).is_err());
+        assert!(parse_threads(Some("many")).is_err());
     }
 }

@@ -1,0 +1,181 @@
+//! Parallel reference-executor equivalence suite (PR 3 contract):
+//!
+//! * `threads ∈ {1, 2, 4}` produce **byte-identical** module outputs and
+//!   end-to-end detections across every manifest split point — the worker
+//!   pool partitions independent output rows, it never re-associates a
+//!   float reduction, so parallelism is scheduling, not semantics;
+//! * the kernel scratch arenas stop growing after warmup — steady-state
+//!   execution allocates nothing for patch/accumulator buffers.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::Engine;
+use splitpoint::model::graph::NodeKind;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::postprocess::Detection;
+use splitpoint::tensor::Tensor;
+use splitpoint::Manifest;
+
+fn load_manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).expect("artifact manifest")
+}
+
+/// Bitwise equality — not allclose. Thread count must not move a single
+/// ULP.
+fn dets_identical(a: &[Detection], b: &[Detection]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && x.score.to_bits() == y.score.to_bits()
+                && x.boxx
+                    .iter()
+                    .zip(&y.boxx)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+#[test]
+fn thread_counts_produce_byte_identical_module_outputs() {
+    let manifest = load_manifest();
+    let scene = SceneGenerator::with_seed(42).generate();
+    let e1 = Engine::new_threaded(&manifest, SystemConfig::paper(), 1).unwrap();
+    let (store, _) = e1.profile_frame(&scene.cloud).unwrap();
+    for threads in [2usize, 4] {
+        let en = Engine::new_threaded(&manifest, SystemConfig::paper(), threads).unwrap();
+        assert_eq!(en.runtime().threads(), threads);
+        for node in e1.graph().nodes() {
+            if node.kind != NodeKind::Xla {
+                continue;
+            }
+            let inputs: Vec<Arc<Tensor>> = node
+                .input_ids()
+                .iter()
+                .map(|&id| store.get(id).expect("profiled input").clone())
+                .collect();
+            let a = e1.runtime().execute(&node.name, &inputs).unwrap();
+            let b = en.runtime().execute(&node.name, &inputs).unwrap();
+            assert_eq!(
+                a, b,
+                "module '{}' diverged between threads=1 and threads={threads}",
+                node.name
+            );
+            for (ta, tb) in a.iter().zip(&b) {
+                assert_eq!(
+                    ta.site_index(),
+                    tb.site_index(),
+                    "site index of '{}' diverged at threads={threads}",
+                    node.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_counts_produce_identical_detections_at_every_split() {
+    let manifest = load_manifest();
+    let scene = SceneGenerator::with_seed(7).generate();
+    let e1 = Engine::new_threaded(&manifest, SystemConfig::paper(), 1).unwrap();
+    let engines: Vec<Engine> = [2usize, 4]
+        .iter()
+        .map(|&t| Engine::new_threaded(&manifest, SystemConfig::paper(), t).unwrap())
+        .collect();
+    for sp in e1.graph().all_splits() {
+        let base = e1.run_frame(&scene.cloud, sp).unwrap();
+        for (en, t) in engines.iter().zip([2usize, 4]) {
+            let r = en.run_frame(&scene.cloud, sp).unwrap();
+            assert!(
+                dets_identical(&r.detections, &base.detections),
+                "split '{}': detections diverged between threads=1 and threads={t}",
+                e1.graph().split_label(sp)
+            );
+            // the wire crossing is identical too: same tensors, same codec
+            assert_eq!(
+                r.timing.uplink_bytes,
+                base.timing.uplink_bytes,
+                "split '{}' wire bytes diverged at threads={t}",
+                e1.graph().split_label(sp)
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_threaded_engine_matches_serial() {
+    use splitpoint::coordinator::pipeline::{self, PipelineConfig};
+    let manifest = load_manifest();
+    let engine =
+        Arc::new(Engine::new_threaded(&manifest, SystemConfig::paper(), 2).unwrap());
+    let sp = engine.graph().split_after("vfe").unwrap();
+    let clouds: Vec<_> = (0..4)
+        .map(|i| SceneGenerator::with_seed(200 + i).generate().cloud)
+        .collect();
+    let serial: Vec<_> = clouds
+        .iter()
+        .map(|c| engine.run_frame(c, sp).unwrap())
+        .collect();
+    let (piped, _report) = pipeline::run_stream(
+        engine.clone(),
+        sp,
+        &clouds,
+        PipelineConfig {
+            depth: 2,
+            tail_workers: 2,
+        },
+    )
+    .unwrap();
+    assert_eq!(piped.len(), serial.len());
+    for (p, s) in piped.iter().zip(&serial) {
+        assert!(
+            dets_identical(&p.detections, &s.detections),
+            "kernel threads + pipeline tails must stay bit-identical to serial"
+        );
+    }
+}
+
+#[test]
+fn scratch_arena_does_not_grow_in_steady_state() {
+    let manifest = load_manifest();
+    let engine = Engine::new_threaded(&manifest, SystemConfig::paper(), 2).unwrap();
+    let scene = SceneGenerator::with_seed(31).generate();
+    let (store, _) = engine.profile_frame(&scene.cloud).unwrap();
+    // the scratch-using modules: every 3D conv stage + the BEV backbone
+    let kernel_nodes: Vec<(String, Vec<Arc<Tensor>>)> = engine
+        .graph()
+        .nodes()
+        .iter()
+        .filter(|n| n.kind == NodeKind::Xla && n.name != "vfe" && n.name != "roi_head")
+        .map(|n| {
+            let inputs = n
+                .input_ids()
+                .iter()
+                .map(|&id| store.get(id).expect("profiled input").clone())
+                .collect();
+            (n.name.clone(), inputs)
+        })
+        .collect();
+    assert!(!kernel_nodes.is_empty());
+    let one_frame = |i: usize| {
+        for (name, inputs) in &kernel_nodes {
+            let out = engine.runtime().execute(name, inputs).unwrap();
+            assert!(!out.is_empty(), "frame {i}: '{name}' produced nothing");
+        }
+    };
+    for i in 0..5 {
+        one_frame(i); // warmup: arenas grow to the working-set size
+    }
+    let warm = engine.runtime().scratch_stats();
+    assert!(warm.0 >= 1, "no arenas pooled after warmup");
+    assert!(warm.1 > 0, "pooled arenas hold no capacity");
+    for i in 5..100 {
+        one_frame(i);
+    }
+    assert_eq!(
+        engine.runtime().scratch_stats(),
+        warm,
+        "kernel scratch arenas grew after warmup (steady state must not allocate)"
+    );
+}
