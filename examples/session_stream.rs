@@ -1,0 +1,48 @@
+//! The `SplitSession` facade end-to-end: one builder assembles the frame
+//! source, transport, and split policy that `main.rs` used to hand-wire
+//! per subcommand.
+//!
+//! Streams synthetic scenes through the depth-2 staged pipeline under an
+//! *adaptive* split policy: every few frames the session re-costs every
+//! split from the live EWMA bandwidth estimate (fed by the transport's own
+//! observed transfers) and switches — with hysteresis — when a different
+//! split wins. Swap `.synthetic(...)` for `.source_spec(Some("kitti:<dir>"),
+//! ...)` to stream real KITTI `.bin` scans instead.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example session_stream
+//! ```
+
+use anyhow::Result;
+
+use splitpoint::coordinator::adaptive::Objective;
+use splitpoint::coordinator::session::{Adaptive, SplitSession};
+
+fn main() -> Result<()> {
+    let mut session = SplitSession::builder()
+        .artifacts("artifacts")
+        .synthetic(7, 24)
+        .policy(Box::new(Adaptive::new(Objective::InferenceTime).every(6)))
+        .pipeline_depth(2)
+        .build()?;
+
+    println!("{}\n", session.describe());
+
+    let report = session.run_with(|f| {
+        println!(
+            "frame {:>2} [{}]: {:>5} pts, {:>2} dets | inference {:>7.1} ms, uplink {:>6.2} MB",
+            f.seq,
+            f.split_label,
+            f.points,
+            f.output.detections.len(),
+            f.output.inference_time.as_millis_f64(),
+            f.output.uplink_bytes as f64 / 1e6,
+        );
+    })?;
+
+    println!("\n{}", report.summary());
+    if let Some(md) = &report.transport_report {
+        println!("\n{md}");
+    }
+    Ok(())
+}

@@ -18,9 +18,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use splitpoint::bench::{print_table, run_bench, BenchConfig, BenchResult};
-use splitpoint::config::SystemConfig;
-use splitpoint::coordinator::Engine;
+use splitpoint::coordinator::SplitSession;
 use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::ReplaySource;
 use splitpoint::postprocess::nms::nms_bev;
 use splitpoint::postprocess::Detection;
 use splitpoint::runtime::reference::ReferenceModel;
@@ -202,7 +202,7 @@ fn main() -> anyhow::Result<()> {
     // perf-gate's canonical before/after pair (targets in docs/PERF.md:
     // ≥1.5x at --threads max, ≥1.15x single-threaded from layout/blocking)
     if want(&filters, "runtime") {
-        let engine = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
+        let engine = SplitSession::builder().threads(threads).build_engine()?;
         let (store, _) = engine.profile_frame(&scene.cloud)?;
         let legacy = ReferenceModel::new(&manifest)?;
         for module in ["conv1", "bev_head"] {
@@ -242,7 +242,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- per-module execution + whole-frame paths
     if want(&filters, "xla") || want(&filters, "run_frame") {
-        let engine = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
+        let engine = SplitSession::builder().threads(threads).build_engine()?;
         if want(&filters, "xla") {
             let (store, _) = engine.profile_frame(&scene.cloud)?;
             for node in engine.graph().nodes() {
@@ -311,12 +311,12 @@ fn main() -> anyhow::Result<()> {
     if want(&filters, "pipeline") {
         use splitpoint::coordinator::pipeline::{self, PipelineConfig};
         // split the worker budget with the two tail stages so kernel and
-        // stage parallelism compose (the CLI does the same arithmetic)
-        let engine = Arc::new(Engine::new_threaded(
-            &manifest,
-            SystemConfig::paper(),
-            PipelineConfig::kernel_threads_for(threads, 2),
-        )?);
+        // stage parallelism compose (the builder does the same arithmetic)
+        let engine = SplitSession::builder()
+            .threads(threads)
+            .pipeline_depth(2)
+            .tail_workers(2)
+            .build_engine()?;
         let sp = engine.graph().split_after("vfe")?;
         let clouds: Vec<_> = (0..16)
             .map(|i| SceneGenerator::with_seed(100 + i as u64).generate().cloud)
@@ -325,7 +325,7 @@ fn main() -> anyhow::Result<()> {
             // the serial twin gets the FULL thread budget (no tail workers
             // to share with) so speedup_vs_legacy isolates stage overlap
             // instead of comparing against a kernel-handicapped baseline
-            let serial = Engine::new_threaded(&manifest, SystemConfig::paper(), threads)?;
+            let serial = SplitSession::builder().threads(threads).build_engine()?;
             let cl = clouds.clone();
             results.push(run_bench("pipeline/stream_16_frames@legacy", cfg, move || {
                 for c in &cl {
@@ -355,6 +355,34 @@ fn main() -> anyhow::Result<()> {
                 None
             }));
         }
+    }
+
+    // ---- the SplitSession facade end-to-end: the same 16-frame stream
+    // assembled through the builder (replay source + in-process transport,
+    // depth-2 pipeline over a shared engine). Tracks the facade's overhead
+    // against pipeline/stream_16_frames — the session is a thin shell, so
+    // the two should stay within noise of each other.
+    if want(&filters, "session") {
+        let engine = SplitSession::builder()
+            .threads(threads)
+            .pipeline_depth(2)
+            .tail_workers(2)
+            .build_engine()?;
+        let clouds: Vec<_> = (0..16)
+            .map(|i| SceneGenerator::with_seed(100 + i as u64).generate().cloud)
+            .collect();
+        results.push(run_bench("session/stream_16_frames", cfg, move || {
+            let mut session = SplitSession::builder()
+                .engine(engine.clone())
+                .pipeline_depth(2)
+                .tail_workers(2)
+                .source(Box::new(ReplaySource::from_clouds(clouds.clone())))
+                .build()
+                .unwrap();
+            let (frames, _report) = session.run().unwrap();
+            std::hint::black_box(frames.len());
+            None
+        }));
     }
 
     print_table("micro benches (wall-clock host ms)", &results);

@@ -39,7 +39,9 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let engine = Engine::new(&manifest, SystemConfig::paper())?;
+    // bench entry routes through the session builder like the CLI; config
+    // sweeps below share its runtime via Engine::with_runtime
+    let engine = splitpoint::SplitSession::builder().build_engine()?;
     let n = frames();
 
     // ---- the core sweep behind Table I and Figs 6–9

@@ -14,6 +14,7 @@
 use anyhow::Result;
 
 use crate::coordinator::engine::Engine;
+use crate::coordinator::link::LinkModel;
 use crate::metrics::SimTime;
 use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
@@ -30,9 +31,48 @@ pub struct SplitEstimate {
     pub inference_time: SimTime,
 }
 
-/// Cost out every split point from a single profile frame.
+/// Link-*independent* per-split costs from one profile frame: compute
+/// times and wire sizes, with the link terms left unpriced. Profiling is
+/// the expensive half (a full unscaled pipeline run); pricing against a
+/// [`LinkModel`] is pure arithmetic — so a caller tracking a live
+/// bandwidth estimate can cache this and re-price every re-evaluation,
+/// re-profiling only occasionally (see `session::Adaptive`).
+#[derive(Debug, Clone)]
+pub struct SplitCosts {
+    pub split: SplitPoint,
+    pub label: String,
+    pub uplink_bytes: usize,
+    pub downlink_bytes: usize,
+    /// false only for edge-only execution (no transfer leg at all; a
+    /// split that ships an empty live set still pays the link RTT)
+    pub pays_uplink: bool,
+    pub pays_downlink: bool,
+    pub edge_compute: SimTime,
+    pub server_compute: SimTime,
+}
+
+/// Cost out every split point from a single profile frame, using the
+/// engine's static link model.
 pub fn estimate_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitEstimate>> {
-    let (store, host_times) = engine.profile_frame(cloud)?;
+    estimate_splits_with_link(engine, cloud, engine.link())
+}
+
+/// [`estimate_splits`] under an explicit link model — the adaptive session
+/// policy passes the engine's RTT with a *live* bandwidth estimate from
+/// the transport, so the analytic crossover tracks the wire instead of
+/// the configured constant.
+pub fn estimate_splits_with_link(
+    engine: &Engine,
+    cloud: &PointCloud,
+    link: &LinkModel,
+) -> Result<Vec<SplitEstimate>> {
+    Ok(price_splits(&profile_splits(engine, cloud)?, link))
+}
+
+/// The expensive half of estimation: one unscaled profile run yielding
+/// every split's compute times and wire sizes (link terms unpriced).
+pub fn profile_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitCosts>> {
+    let (mut store, host_times) = engine.profile_frame(cloud)?;
     let cfg = engine.config();
     let graph = engine.graph();
     let policy = cfg.codec;
@@ -53,7 +93,7 @@ pub fn estimate_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitE
         )
     };
 
-    let mut estimates = Vec::new();
+    let mut costs = Vec::new();
     for sp in graph.all_splits() {
         let live = graph.live_ids(sp);
         let uplink_bytes = if live.is_empty() {
@@ -77,28 +117,54 @@ pub fn estimate_splits(engine: &Engine, cloud: &PointCloud) -> Result<Vec<SplitE
             .map(|(n, d)| SimTime::from_duration(*d).scaled(cfg.server.factor_for(n)))
             .sum();
 
-        let uplink = if sp.head_len == graph.len() {
-            SimTime::ZERO
-        } else {
-            engine.link().transfer_time(uplink_bytes)
-        };
-        let downlink = if resp.is_empty() {
-            SimTime::ZERO
-        } else {
-            engine.link().transfer_time(downlink_bytes)
-        };
-
-        let edge_time = edge_compute + uplink;
-        estimates.push(SplitEstimate {
+        costs.push(SplitCosts {
             split: sp,
             label: graph.split_label(sp),
             uplink_bytes,
             downlink_bytes,
-            edge_time,
-            inference_time: edge_time + server_compute + downlink,
+            pays_uplink: sp.head_len != graph.len(),
+            pays_downlink: !resp.is_empty(),
+            edge_compute,
+            server_compute,
         });
     }
-    Ok(estimates)
+    // the adaptive session policy calls this on the streaming hot path:
+    // hand the profile run's scatter grids back to the voxelizer pool so
+    // a re-evaluation never costs the next frame a fresh dense-grid
+    // allocation (every per-split packet above has been dropped by now,
+    // so the grids are uniquely held)
+    engine.reclaim_scratch(&mut store);
+    Ok(costs)
+}
+
+/// The cheap half: price profiled costs under a link model. Pure
+/// arithmetic — callable per re-evaluation with a fresh bandwidth
+/// estimate at no profiling cost.
+pub fn price_splits(costs: &[SplitCosts], link: &LinkModel) -> Vec<SplitEstimate> {
+    costs
+        .iter()
+        .map(|c| {
+            let uplink = if c.pays_uplink {
+                link.transfer_time(c.uplink_bytes)
+            } else {
+                SimTime::ZERO
+            };
+            let downlink = if c.pays_downlink {
+                link.transfer_time(c.downlink_bytes)
+            } else {
+                SimTime::ZERO
+            };
+            let edge_time = c.edge_compute + uplink;
+            SplitEstimate {
+                split: c.split,
+                label: c.label.clone(),
+                uplink_bytes: c.uplink_bytes,
+                downlink_bytes: c.downlink_bytes,
+                edge_time,
+                inference_time: edge_time + c.server_compute + downlink,
+            }
+        })
+        .collect()
 }
 
 /// What the selector optimizes.
@@ -110,25 +176,30 @@ pub enum Objective {
     EdgeTime,
 }
 
+impl Objective {
+    /// The cost an estimate pays under this objective.
+    pub fn cost(self, est: &SplitEstimate) -> SimTime {
+        match self {
+            Objective::InferenceTime => est.inference_time,
+            Objective::EdgeTime => est.edge_time,
+        }
+    }
+}
+
+/// Cheapest estimate under an objective (panics on an empty slice — the
+/// graph always has at least one split point).
+pub fn best_estimate(estimates: &[SplitEstimate], objective: Objective) -> &SplitEstimate {
+    estimates
+        .iter()
+        .min_by(|a, b| objective.cost(a).cmp(&objective.cost(b)))
+        .expect("graph has at least one split point")
+}
+
 /// Pick the best split for an objective.
 pub fn choose_split(
     engine: &Engine,
     cloud: &PointCloud,
     objective: Objective,
 ) -> Result<SplitEstimate> {
-    let estimates = estimate_splits(engine, cloud)?;
-    Ok(estimates
-        .into_iter()
-        .min_by(|a, b| {
-            let ka = match objective {
-                Objective::InferenceTime => a.inference_time,
-                Objective::EdgeTime => a.edge_time,
-            };
-            let kb = match objective {
-                Objective::InferenceTime => b.inference_time,
-                Objective::EdgeTime => b.edge_time,
-            };
-            ka.cmp(&kb)
-        })
-        .expect("graph has at least one split point"))
+    Ok(best_estimate(&estimate_splits(engine, cloud)?, objective).clone())
 }

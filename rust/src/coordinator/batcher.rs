@@ -9,7 +9,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::pointcloud::Frame;
+use crate::pointcloud::{Frame, FrameSource};
 
 /// Flush policy.
 #[derive(Debug, Clone, Copy)]
@@ -52,14 +52,16 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a frame (called by sensor threads).
-    pub fn push(&self, frame: Frame) {
+    /// Enqueue a frame (called by sensor threads). Returns `false` when
+    /// the batcher is closed and the frame was dropped.
+    pub fn push(&self, frame: Frame) -> bool {
         let mut q = self.q.lock().unwrap();
         if q.closed {
-            return;
+            return false;
         }
         q.frames.push_back((frame, Instant::now()));
         self.cv.notify_all();
+        true
     }
 
     /// No more frames will arrive; wakes waiting consumers.
@@ -115,6 +117,33 @@ impl Batcher {
     fn drain_into(&self, q: &mut Queue, out: &mut Vec<Frame>) {
         let n = q.frames.len().min(self.policy.max_frames);
         out.extend(q.frames.drain(..n).map(|(f, _)| f));
+    }
+
+    /// Pump a [`FrameSource`] into this batcher until the source is
+    /// exhausted or the batcher closes (a sensor thread per source;
+    /// multiple sources interleave into the shared queue). Returns the
+    /// number of frames actually accepted. Does not close the batcher —
+    /// the caller closes once every sensor finishes.
+    ///
+    /// Note the batcher's queue is **unbounded** (sensors must never
+    /// block): this drains the source as fast as it produces. Real-time
+    /// sources (live sensors) pace themselves; for a disk-backed source
+    /// like `KittiSource`, feed from a thread that paces reads — or
+    /// stream it through the bounded pipeline
+    /// ([`crate::coordinator::pipeline::run_source`]) instead, which
+    /// backpressures the reader.
+    pub fn feed_from_source(
+        &self,
+        source: &mut (dyn FrameSource + '_),
+    ) -> anyhow::Result<usize> {
+        let mut pushed = 0;
+        while let Some(frame) = source.next_frame()? {
+            if !self.push(frame) {
+                break; // closed mid-stream: stop reading
+            }
+            pushed += 1;
+        }
+        Ok(pushed)
     }
 
     /// Bridge to the staged scheduler: drain batches into `pipeline` until
@@ -183,8 +212,9 @@ mod tests {
             max_frames: 2,
             max_wait: Duration::from_millis(1),
         });
-        b.push(frame(1, 0));
+        assert!(b.push(frame(1, 0)));
         b.close();
+        assert!(!b.push(frame(1, 1)), "push after close is rejected");
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
     }
@@ -227,6 +257,24 @@ mod tests {
         b.close();
         assert!(!b.next_batch_into(&mut buf));
         assert!(buf.is_empty(), "closed drain must clear the buffer");
+    }
+
+    #[test]
+    fn feed_from_source_pushes_every_frame() {
+        use crate::pointcloud::ReplaySource;
+        let b = Batcher::new(BatchPolicy {
+            max_frames: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        let clouds = vec![PointCloud::default(); 5];
+        let mut src = ReplaySource::from_clouds(clouds);
+        assert_eq!(b.feed_from_source(&mut src).unwrap(), 5);
+        b.close();
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 5);
     }
 
     #[test]

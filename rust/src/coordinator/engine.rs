@@ -22,7 +22,7 @@
 //! runs the same three functions on separate worker threads, so pipelined
 //! output is byte-identical to serial execution *by construction*.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -31,7 +31,7 @@ use crate::config::SystemConfig;
 use crate::coordinator::link::LinkModel;
 use crate::metrics::SimTime;
 use crate::model::graph::{NodeKind, PipelineGraph, SplitPoint, TensorId, TensorStore};
-use crate::model::manifest::Manifest;
+use crate::model::manifest::{Manifest, ModelConfig};
 use crate::pointcloud::PointCloud;
 use crate::postprocess::{assemble_predictions, Detection, ProposalConfig, ProposalStage};
 use crate::runtime::{ModuleId, XlaRuntime};
@@ -46,6 +46,25 @@ pub enum Side {
     Server,
 }
 
+/// Which half (or both) of the split pipeline an engine instance serves.
+///
+/// A `Full` engine runs whole frames; the TCP deployment builds one engine
+/// per process, and the role records which stages that process is allowed
+/// to run. The practical difference is edge-only state: a `ServerTail`
+/// engine defers building the voxelizer (and its scratch-grid pool) until
+/// a raw-offload request actually needs it, so a server that only ever
+/// sees in-network splits never allocates edge-side preprocessing state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineRole {
+    /// Both halves (in-process sessions, tests, benches).
+    #[default]
+    Full,
+    /// Edge-device process: head stages + finalize.
+    EdgeHead,
+    /// Edge-server process: transfer decode + tail stages.
+    ServerTail,
+}
+
 /// Per-frame timing breakdown (all on the virtual clock).
 #[derive(Debug, Clone)]
 pub struct TimingBreakdown {
@@ -56,6 +75,10 @@ pub struct TimingBreakdown {
     pub encode_time: SimTime,
     pub decode_time: SimTime,
     pub uplink_bytes: usize,
+    /// what the same live set would cost under the legacy v1 wire framing
+    /// (flat site index) — the per-frame v1-vs-v2 savings EXPERIMENTS.md
+    /// tracks on real sweeps; equals `uplink_bytes` when nothing ships
+    pub uplink_v1_bytes: usize,
     pub downlink_bytes: usize,
     pub uplink_time: SimTime,
     pub downlink_time: SimTime,
@@ -109,6 +132,8 @@ pub struct HeadFrame {
     /// encoded live-set packet (`None` when the live set is empty, i.e.
     /// edge-only execution)
     wire: Option<Vec<u8>>,
+    /// live-set cost under the legacy v1 framing (0 when nothing ships)
+    wire_v1_bytes: usize,
     encode_time: SimTime,
 }
 
@@ -116,6 +141,11 @@ impl HeadFrame {
     /// Encoded wire bytes, if the split ships anything.
     pub fn wire(&self) -> Option<&[u8]> {
         self.wire.as_deref()
+    }
+
+    /// Byte cost of the same live set under the legacy v1 wire framing.
+    pub fn wire_v1_bytes(&self) -> usize {
+        self.wire_v1_bytes
     }
 
     /// Take the wire buffer out (for transports that consume the bytes)
@@ -141,6 +171,7 @@ pub struct TransferredFrame {
     encode_time: SimTime,
     decode_time: SimTime,
     uplink_bytes: usize,
+    uplink_v1_bytes: usize,
     uplink_time: SimTime,
 }
 
@@ -148,7 +179,11 @@ pub struct TransferredFrame {
 pub struct Engine {
     runtime: Arc<XlaRuntime>,
     graph: PipelineGraph,
-    voxelizer: Voxelizer,
+    /// built lazily from `model_cfg` — a `ServerTail` engine only pays for
+    /// edge-side preprocessing state if a raw-offload request arrives
+    voxelizer: OnceLock<Voxelizer>,
+    model_cfg: ModelConfig,
+    role: EngineRole,
     proposal: ProposalStage,
     link: LinkModel,
     cfg: SystemConfig,
@@ -183,6 +218,17 @@ impl Engine {
         Self::with_runtime(manifest, cfg, runtime)
     }
 
+    /// A tail-half engine for the server process: defers all edge-side
+    /// state (see [`EngineRole::ServerTail`]).
+    pub fn server_tail(
+        manifest: &Manifest,
+        cfg: SystemConfig,
+        threads: usize,
+    ) -> Result<Engine> {
+        let runtime = Arc::new(XlaRuntime::load_pooled(manifest, threads)?);
+        Self::with_runtime_role(manifest, cfg, runtime, EngineRole::ServerTail)
+    }
+
     /// Share one XLA runtime across engines (benches sweep configs without
     /// recompiling artifacts).
     pub fn with_runtime(
@@ -190,8 +236,24 @@ impl Engine {
         cfg: SystemConfig,
         runtime: Arc<XlaRuntime>,
     ) -> Result<Engine> {
+        Self::with_runtime_role(manifest, cfg, runtime, EngineRole::Full)
+    }
+
+    /// [`Engine::with_runtime`] with an explicit [`EngineRole`]. `Full`
+    /// and `EdgeHead` engines build the voxelizer eagerly (it is on their
+    /// steady-state path); `ServerTail` defers it until a raw-offload
+    /// request runs the preprocess node.
+    pub fn with_runtime_role(
+        manifest: &Manifest,
+        cfg: SystemConfig,
+        runtime: Arc<XlaRuntime>,
+        role: EngineRole,
+    ) -> Result<Engine> {
         let graph = PipelineGraph::from_manifest(manifest)?;
-        let voxelizer = Voxelizer::from_config(&manifest.config);
+        let voxelizer = OnceLock::new();
+        if role != EngineRole::ServerTail {
+            let _ = voxelizer.set(Voxelizer::from_config(&manifest.config));
+        }
         let proposal = ProposalStage::new(
             &manifest.config,
             ProposalConfig {
@@ -217,6 +279,8 @@ impl Engine {
             runtime,
             graph,
             voxelizer,
+            model_cfg: manifest.config.clone(),
+            role,
             proposal,
             link,
             cfg,
@@ -228,6 +292,22 @@ impl Engine {
 
     pub fn graph(&self) -> &PipelineGraph {
         &self.graph
+    }
+
+    pub fn role(&self) -> EngineRole {
+        self.role
+    }
+
+    /// Whether the voxelizer (edge-side scratch state) has been built.
+    /// Always true for `Full`/`EdgeHead`; for `ServerTail` it flips only
+    /// when a raw-offload request forces preprocessing onto the server.
+    pub fn voxelizer_ready(&self) -> bool {
+        self.voxelizer.get().is_some()
+    }
+
+    fn voxelizer(&self) -> &Voxelizer {
+        self.voxelizer
+            .get_or_init(|| Voxelizer::from_config(&self.model_cfg))
     }
 
     pub fn config(&self) -> &SystemConfig {
@@ -267,7 +347,7 @@ impl Engine {
                     .get(node.input_ids()[0])
                     .context("preprocess: no 'points' in store")?;
                 let cloud = PointCloud::from_flat(pts.data());
-                let grids = self.voxelizer.voxelize(&cloud);
+                let grids = self.voxelizer().voxelize(&cloud);
                 store.insert(node.output_ids()[0], grids.sum);
                 store.insert(node.output_ids()[1], grids.cnt);
             }
@@ -319,7 +399,10 @@ impl Engine {
     pub fn reclaim_scratch(&self, store: &mut TensorStore) {
         if let Some((sum_id, cnt_id)) = self.scatter_ids {
             if let (Some(sum), Some(cnt)) = (store.take(sum_id), store.take(cnt_id)) {
-                self.voxelizer.recycle_parts(sum, cnt);
+                // a tail engine that never voxelized has no pool to feed
+                if let Some(vox) = self.voxelizer.get() {
+                    vox.recycle_parts(sum, cnt);
+                }
             }
         }
     }
@@ -351,6 +434,9 @@ impl Engine {
         if sp.head_len > self.graph.len() {
             bail!("split {:?} beyond pipeline length", sp);
         }
+        if self.role == EngineRole::ServerTail {
+            bail!("server-tail engine cannot run head stages (EngineRole::ServerTail)");
+        }
         let mut store = self.new_store();
         store.insert(self.graph.primal_id(), Arc::new(cloud.to_tensor()));
 
@@ -367,8 +453,8 @@ impl Engine {
 
         // ---- edge: encode the live set
         let live = self.graph.live_ids(sp);
-        let (wire, encode_time) = if live.is_empty() {
-            (None, SimTime::ZERO)
+        let (wire, wire_v1_bytes, encode_time) = if live.is_empty() {
+            (None, 0, SimTime::ZERO)
         } else {
             let mut tensors = Vec::with_capacity(live.len());
             for &id in live {
@@ -382,6 +468,9 @@ impl Engine {
                 ));
             }
             let packet = Packet::from_shared(tensors);
+            // what the legacy framing would have cost (size arithmetic off
+            // the cached site indexes — no second encode)
+            let v1 = packet.encoded_size_versioned(self.cfg.codec, 1);
             // encode into a pooled, exactly-presized buffer — the
             // steady-state wire path allocates nothing
             let mut buf = self
@@ -393,7 +482,7 @@ impl Engine {
             let t0 = Instant::now();
             packet.encode_into(self.cfg.codec, &mut buf);
             let enc = SimTime::from_duration(t0.elapsed()).scaled(self.cfg.edge.slowdown);
-            (Some(buf), enc)
+            (Some(buf), v1, enc)
         };
 
         Ok(HeadFrame {
@@ -401,6 +490,7 @@ impl Engine {
             store,
             node_times,
             wire,
+            wire_v1_bytes,
             encode_time,
         })
     }
@@ -415,6 +505,7 @@ impl Engine {
             mut store,
             node_times,
             wire,
+            wire_v1_bytes,
             encode_time,
         } = head;
         let (uplink_bytes, decode_time) = match wire {
@@ -452,6 +543,7 @@ impl Engine {
             encode_time,
             decode_time,
             uplink_bytes,
+            uplink_v1_bytes: wire_v1_bytes,
             uplink_time,
         })
     }
@@ -460,6 +552,9 @@ impl Engine {
     /// downlink, assemble detections and hand scratch grids back to the
     /// pool.
     pub fn tail_stage(&self, frame: TransferredFrame) -> Result<FrameResult> {
+        if self.role == EngineRole::EdgeHead {
+            bail!("edge-head engine cannot run tail stages (EngineRole::EdgeHead)");
+        }
         let TransferredFrame {
             sp,
             mut store,
@@ -467,6 +562,7 @@ impl Engine {
             encode_time,
             decode_time,
             uplink_bytes,
+            uplink_v1_bytes,
             uplink_time,
         } = frame;
 
@@ -530,6 +626,7 @@ impl Engine {
                 encode_time,
                 decode_time,
                 uplink_bytes,
+                uplink_v1_bytes,
                 downlink_bytes,
                 uplink_time,
                 downlink_time,

@@ -32,6 +32,72 @@ impl LinkModel {
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
     }
+
+    /// A link model with this model's RTT but a different bandwidth — how
+    /// the adaptive split policy folds a live transport estimate into the
+    /// analytic cost model.
+    pub fn with_bandwidth(&self, bandwidth_bps: f64) -> LinkModel {
+        LinkModel::new(LinkConfig {
+            bandwidth_bps,
+            rtt_one_way: self.cfg.rtt_one_way,
+        })
+    }
+}
+
+/// Rolling uplink-bandwidth estimate from observed transfers (EWMA over
+/// per-frame bytes/seconds). Transports feed it one sample per shipped
+/// frame; the adaptive split policy reads it instead of the static
+/// [`LinkModel`] so the chosen split tracks what the wire actually
+/// delivers ("Split Computing for Complex Object Detectors" shows the best
+/// split shifts with link bandwidth).
+#[derive(Debug, Clone)]
+pub struct BandwidthEstimator {
+    alpha: f64,
+    bps: Option<f64>,
+    samples: u64,
+}
+
+impl Default for BandwidthEstimator {
+    fn default() -> Self {
+        BandwidthEstimator::new(0.3)
+    }
+}
+
+impl BandwidthEstimator {
+    /// `alpha` is the EWMA weight of the newest sample (0 < alpha <= 1).
+    pub fn new(alpha: f64) -> BandwidthEstimator {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA weight out of range");
+        BandwidthEstimator {
+            alpha,
+            bps: None,
+            samples: 0,
+        }
+    }
+
+    /// Record one observed transfer. Degenerate samples (no bytes, or an
+    /// elapsed time too small to divide by) are ignored rather than
+    /// poisoning the average.
+    pub fn observe(&mut self, bytes: usize, elapsed: SimTime) {
+        let secs = elapsed.as_secs_f64();
+        if bytes == 0 || secs < 1e-9 {
+            return;
+        }
+        let sample = bytes as f64 / secs;
+        self.bps = Some(match self.bps {
+            None => sample,
+            Some(prev) => prev + self.alpha * (sample - prev),
+        });
+        self.samples += 1;
+    }
+
+    /// Current estimate in bytes/second; `None` until the first sample.
+    pub fn bandwidth_bps(&self) -> Option<f64> {
+        self.bps
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +140,51 @@ mod tests {
             bandwidth_bps: 0.0,
             rtt_one_way: 0.0,
         });
+    }
+
+    #[test]
+    fn with_bandwidth_keeps_rtt() {
+        let base = LinkModel::new(LinkConfig {
+            bandwidth_bps: 1e6,
+            rtt_one_way: 0.010,
+        });
+        let fast = base.with_bandwidth(1e9);
+        assert_eq!(fast.config().rtt_one_way, 0.010);
+        assert!(fast.transfer_time(1_000_000) < base.transfer_time(1_000_000));
+    }
+
+    #[test]
+    fn estimator_converges_to_steady_rate() {
+        let mut est = BandwidthEstimator::new(0.5);
+        assert_eq!(est.bandwidth_bps(), None);
+        // 2 MB/s steady stream
+        for _ in 0..20 {
+            est.observe(1_000_000, SimTime::from_secs_f64(0.5));
+        }
+        let bps = est.bandwidth_bps().unwrap();
+        assert!((bps - 2e6).abs() < 1.0, "converged to {bps}");
+        assert_eq!(est.samples(), 20);
+    }
+
+    #[test]
+    fn estimator_tracks_a_bandwidth_drop() {
+        let mut est = BandwidthEstimator::new(0.5);
+        for _ in 0..5 {
+            est.observe(4_000_000, SimTime::from_secs_f64(1.0));
+        }
+        for _ in 0..10 {
+            est.observe(1_000_000, SimTime::from_secs_f64(1.0));
+        }
+        let bps = est.bandwidth_bps().unwrap();
+        assert!(bps < 1.1e6, "EWMA follows the drop, got {bps}");
+    }
+
+    #[test]
+    fn estimator_ignores_degenerate_samples() {
+        let mut est = BandwidthEstimator::default();
+        est.observe(0, SimTime::from_secs_f64(1.0));
+        est.observe(100, SimTime::ZERO);
+        assert_eq!(est.bandwidth_bps(), None);
+        assert_eq!(est.samples(), 0);
     }
 }

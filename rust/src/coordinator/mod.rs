@@ -1,7 +1,9 @@
 //! The split-computing coordinator (the paper's L3 contribution).
 //!
+//! * [`session`] — the public facade: `SplitSession` assembled from a
+//!   frame source, a transport, and a split policy
 //! * [`engine`] — per-frame split execution on the calibrated virtual clock
-//! * [`link`] — bandwidth/RTT link model
+//! * [`link`] — bandwidth/RTT link model + live EWMA bandwidth estimator
 //! * [`pipeline`] — staged multi-frame scheduler: overlap preprocess(N+1)
 //!   with transfer/tail(N) on bounded worker queues
 //! * [`transport`] / [`remote`] — real TCP edge/server deployment
@@ -14,8 +16,12 @@ pub mod engine;
 pub mod link;
 pub mod pipeline;
 pub mod remote;
+pub mod session;
 pub mod transport;
 
-pub use engine::{Engine, FrameResult, HeadFrame, Side, TimingBreakdown, TransferredFrame};
-pub use link::LinkModel;
+pub use engine::{
+    Engine, EngineRole, FrameResult, HeadFrame, Side, TimingBreakdown, TransferredFrame,
+};
+pub use link::{BandwidthEstimator, LinkModel};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
+pub use session::{SplitSession, SplitSessionBuilder};

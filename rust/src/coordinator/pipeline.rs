@@ -38,7 +38,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::engine::{Engine, FrameResult};
 use crate::metrics::{OccupancyHist, Recorder};
 use crate::model::graph::SplitPoint;
-use crate::pointcloud::PointCloud;
+use crate::pointcloud::{FrameSource, PointCloud};
 
 // --------------------------------------------------------- bounded queue
 
@@ -474,6 +474,52 @@ impl Pipeline {
             frames: self.shared.frames.load(Ordering::Relaxed),
         }
     }
+
+    /// Run one batch of clouds through the (still-open) pipeline and
+    /// return their results in submission order. A feeder thread submits
+    /// while this thread drains, so batches larger than the queue depth
+    /// cannot deadlock, and the pipeline stays warm between batches — the
+    /// session's segment executor calls this once per policy interval
+    /// without respawning stage workers.
+    ///
+    /// On a frame error the pipeline is closed (later batches would see a
+    /// closed pipeline) and the first error is returned.
+    pub fn run_batch(&self, clouds: Vec<PointCloud>) -> Result<Vec<FrameResult>> {
+        let n = clouds.len();
+        let mut out = Vec::with_capacity(n);
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                // clouds are moved into the pipeline, not cloned — the
+                // caller has already given up ownership of the segment
+                for cloud in clouds {
+                    if self.submit(cloud).is_err() {
+                        break;
+                    }
+                }
+            });
+            for _ in 0..n {
+                match self.next_result() {
+                    Some(Ok(r)) => out.push(r),
+                    Some(Err(e)) => {
+                        first_err = Some(e);
+                        // unblocks the feeder if it is parked on a full
+                        // input queue
+                        self.close();
+                        break;
+                    }
+                    None => {
+                        first_err = Some(anyhow!("pipeline closed before batch completed"));
+                        break;
+                    }
+                }
+            }
+        });
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
 }
 
 impl Drop for Pipeline {
@@ -517,6 +563,63 @@ pub fn run_stream(
         }
         Ok(())
     })?;
+    let report = pipeline.report();
+    Ok((out, report))
+}
+
+/// Stream a [`FrameSource`] straight through a pipeline: the feeder thread
+/// pulls frames (the bounded input queue backpressures the source, so a
+/// KITTI directory is read no faster than the engine drains it) while the
+/// caller's thread collects results in submission order.
+pub fn run_source(
+    engine: Arc<Engine>,
+    sp: SplitPoint,
+    source: &mut (dyn FrameSource + '_),
+    cfg: PipelineConfig,
+) -> Result<(Vec<FrameResult>, PipelineReport)> {
+    let pipeline = Pipeline::spawn(engine, sp, cfg)?;
+    let mut out = Vec::with_capacity(source.len_hint().unwrap_or(16));
+    let mut frame_err: Option<anyhow::Error> = None;
+    let source_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        let p = &pipeline;
+        let src_err = &source_err;
+        s.spawn(move || {
+            loop {
+                match source.next_frame() {
+                    Ok(Some(frame)) => {
+                        if p.submit(frame.cloud).is_err() {
+                            break; // consumer bailed and closed the input
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        *src_err.lock().unwrap() = Some(e);
+                        break;
+                    }
+                }
+            }
+            p.close();
+        });
+        while let Some(r) = p.next_result() {
+            match r {
+                Ok(fr) => out.push(fr),
+                Err(e) => {
+                    if frame_err.is_none() {
+                        frame_err = Some(e);
+                    }
+                    // stop the feeder; queued frames still drain below
+                    p.close();
+                }
+            }
+        }
+    });
+    if let Some(e) = source_err.into_inner().unwrap() {
+        return Err(e.context("frame source failed mid-stream"));
+    }
+    if let Some(e) = frame_err {
+        return Err(e);
+    }
     let report = pipeline.report();
     Ok((out, report))
 }

@@ -19,13 +19,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, HeadFrame};
 use crate::coordinator::transport::{read_message, write_message, Message};
 use crate::metrics::SimTime;
 use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::Detection;
-use crate::tensor::codec::Packet;
+use crate::tensor::codec::{Packet, Policy};
 
 /// Server handle: accept loop runs on background threads until shutdown.
 pub struct Server {
@@ -176,11 +176,27 @@ fn serve_infer(engine: &Engine, head_len: usize, packet: &[u8]) -> Result<(u64, 
     Ok((server_nanos, bytes))
 }
 
+/// Take a head frame's wire bytes for the TCP protocol (an encoded empty
+/// packet when the live set is empty — the protocol always ships one),
+/// plus the v1-framing cost of what actually ships: for an empty packet
+/// the framing is identical under both versions, so the v1 side is
+/// charged symmetrically and `wire_savings` stays honest.
+fn wire_with_v1(head: &mut HeadFrame, codec: Policy) -> (Vec<u8>, usize) {
+    let v1 = head.wire_v1_bytes();
+    let bytes = head
+        .take_wire()
+        .unwrap_or_else(|| Packet::from_shared(Vec::new()).encode(codec));
+    let v1 = if v1 == 0 { bytes.len() } else { v1 };
+    (bytes, v1)
+}
+
 /// Timing of one remote frame (wall-clock, realtime).
 #[derive(Debug, Clone)]
 pub struct RemoteTiming {
     pub edge_compute: SimTime,
     pub uplink_bytes: usize,
+    /// legacy v1-framing cost of the same live set (wire-savings metric)
+    pub uplink_v1_bytes: usize,
     /// send → result received (uplink + server + downlink)
     pub round_trip: SimTime,
     pub server_compute: SimTime,
@@ -209,40 +225,20 @@ impl EdgeClient {
         })
     }
 
-    /// Run one frame: head locally, tail on the server.
+    /// Run one frame: head locally, tail on the server. The head half is
+    /// the engine's own [`Engine::head_stage`] — the TCP client is a thin
+    /// shell that ships the stage's wire bytes over a real socket.
     pub fn run_frame(
         &mut self,
         cloud: &PointCloud,
         sp: SplitPoint,
     ) -> Result<(Vec<Detection>, RemoteTiming)> {
         let engine = self.engine.clone();
-        let graph = engine.graph();
         let t_start = Instant::now();
 
-        let mut store = engine.new_store();
-        store.insert(graph.primal_id(), Arc::new(cloud.to_tensor()));
-        for idx in 0..sp.head_len.min(graph.len()) {
-            engine.run_node(idx, &mut store)?;
-        }
-        let packet = Packet::from_shared(
-            graph
-                .live_ids(sp)
-                .iter()
-                .map(|&id| -> Result<_> {
-                    Ok((
-                        graph.tensor_name(id).to_string(),
-                        store
-                            .get(id)
-                            .cloned()
-                            .with_context(|| {
-                                format!("live tensor '{}' missing", graph.tensor_name(id))
-                            })?,
-                    ))
-                })
-                .collect::<Result<_>>()?,
-        );
-        let bytes = packet.encode(engine.config().codec);
-        drop(packet); // release shared grids so frame teardown can recycle
+        let mut head = engine.head_stage(cloud, sp)?;
+        let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+        let (mut store, _) = head.into_store();
         let edge_compute = SimTime::from_duration(t_start.elapsed());
 
         let request_id = self.next_id;
@@ -266,6 +262,7 @@ impl EdgeClient {
             RemoteTiming {
                 edge_compute,
                 uplink_bytes,
+                uplink_v1_bytes,
                 round_trip,
                 server_compute: SimTime {
                     nanos: server_nanos as u128,
@@ -383,6 +380,7 @@ impl EdgeClient {
                 RemoteTiming {
                     edge_compute: pending.edge_compute,
                     uplink_bytes: pending.uplink_bytes,
+                    uplink_v1_bytes: pending.uplink_v1_bytes,
                     round_trip,
                     server_compute: SimTime {
                         nanos: server_nanos as u128,
@@ -452,15 +450,14 @@ fn send_stream(
         let request_id = first_id + i as u64;
         let t_start = Instant::now();
         let mut head = engine.head_stage(cloud, sp)?;
-        let bytes = head
-            .take_wire()
-            .unwrap_or_else(|| Packet::from_shared(Vec::new()).encode(codec));
+        let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, codec);
         let (store, _) = head.into_store();
         let pending = PendingRequest {
             request_id,
             store,
             edge_compute: SimTime::from_duration(t_start.elapsed()),
             uplink_bytes: bytes.len(),
+            uplink_v1_bytes,
             t_start,
             t_send: Instant::now(),
         };
@@ -486,6 +483,7 @@ struct PendingRequest {
     store: crate::model::graph::TensorStore,
     edge_compute: SimTime,
     uplink_bytes: usize,
+    uplink_v1_bytes: usize,
     t_start: Instant,
     t_send: Instant,
 }

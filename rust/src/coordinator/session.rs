@@ -1,0 +1,998 @@
+//! `SplitSession` — the public facade over the whole split-computing
+//! stack.
+//!
+//! The paper's headline result is that the *right* split point is a
+//! deployment decision (voxelization-split vs in-network splits, shifting
+//! with link bandwidth), yet the original entry points hard-wired one
+//! concrete assembly per subcommand. A session decomposes the run loop
+//! into three swappable axes:
+//!
+//! * **[`FrameSource`]** — where frames come from: synthetic scenes
+//!   ([`SceneSource`]), a KITTI `.bin` directory ([`KittiSource`]), or a
+//!   recorded replay ([`ReplaySource`]).
+//! * **[`Transport`]** — where the tail half runs: [`InProcess`] (the
+//!   calibrated virtual clock, optionally through the staged pipeline) or
+//!   [`Tcp`] (a real edge-server process). Both feed an EWMA
+//!   [`BandwidthEstimator`] from observed transfers.
+//! * **[`SplitPolicy`]** — which split each segment of the stream uses:
+//!   [`Fixed`], or [`Adaptive`] re-costing every split from the live
+//!   bandwidth estimate with switch hysteresis.
+//!
+//! ```no_run
+//! use splitpoint::coordinator::session::SplitSession;
+//!
+//! let (frames, report) = SplitSession::builder()
+//!     .artifacts("artifacts")
+//!     .synthetic(1, 16)
+//!     .pipeline_depth(4)
+//!     .build()?
+//!     .run()?;
+//! println!("{} frames, {}", frames.len(), report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Equivalence contract (pinned by `rust/tests/session.rs`): a session is
+//! an *assembly*, never a semantic change. Per-frame detections are
+//! byte-identical to calling [`Engine::run_frame`] at the same split —
+//! whatever the source, transport, pipeline depth, or policy schedule.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::adaptive::{self, Objective};
+use crate::coordinator::engine::{Engine, EngineRole, FrameResult, TimingBreakdown};
+use crate::coordinator::link::BandwidthEstimator;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
+use crate::coordinator::remote::{EdgeClient, Server};
+use crate::metrics::SimTime;
+use crate::model::graph::SplitPoint;
+use crate::model::manifest::Manifest;
+use crate::pointcloud::kitti::KittiSource;
+use crate::pointcloud::scene::SceneSource;
+use crate::pointcloud::{FrameSource, PointCloud, ReplaySource};
+use crate::postprocess::Detection;
+use crate::runtime::XlaRuntime;
+
+/// Frames pulled from the source per policy segment, independent of the
+/// policy's re-evaluation interval — bounds session memory on unbounded
+/// sources while keeping the staged pipeline warm inside a segment.
+///
+/// Known trades at segment boundaries (both ROADMAP follow-ons):
+/// * the session pre-reads a segment before executing it, so source I/O
+///   and compute alternate rather than overlap across the boundary (for
+///   maximal read/compute overlap on a fixed split, drive
+///   [`crate::coordinator::pipeline::run_source`] directly — its bounded
+///   input queue backpressures the reader frame by frame);
+/// * the TCP transport drains its in-flight window at every boundary
+///   (`EdgeClient::run_stream` is one-shot), costing ~depth×RTT of idle
+///   wire per `SEGMENT_MAX` frames on a fixed-policy stream. The
+///   in-process transport avoids this with its warm cached pipeline.
+const SEGMENT_MAX: usize = 32;
+
+// ------------------------------------------------------------ transports
+
+/// One frame's outcome, transport-agnostic: detections plus the timing
+/// facts every transport can report. `timing` carries the full
+/// virtual-clock breakdown when the transport has one (in-process);
+/// wall-clock transports leave it `None`.
+#[derive(Debug, Clone)]
+pub struct FrameOutput {
+    pub detections: Vec<Detection>,
+    pub uplink_bytes: usize,
+    /// legacy v1-framing cost of the same live set (wire-savings metric)
+    pub uplink_v1_bytes: usize,
+    /// transport-defined "edge time": [`InProcess`] reports the paper's
+    /// Fig 7 quantity on the virtual clock (edge compute + encode +
+    /// uplink; the full breakdown is in `timing`), while [`Tcp`] can only
+    /// attribute local wall-clock head time (compute + encode — its
+    /// uplink is inside `round_trip`). Compare across transports via
+    /// `round_trip`/`inference_time`, not this field.
+    pub edge_time: SimTime,
+    /// send → response received (uplink + server + downlink)
+    pub round_trip: SimTime,
+    pub server_time: SimTime,
+    pub inference_time: SimTime,
+    /// full virtual-clock breakdown, when the transport runs on one
+    pub timing: Option<TimingBreakdown>,
+}
+
+/// The tail half of the split: carries encoded head output to wherever
+/// the server nodes run and brings detections back.
+///
+/// Implementations observe their own transfers into a
+/// [`BandwidthEstimator`]; [`Transport::bandwidth_bps`] is what the
+/// adaptive policy reads.
+pub trait Transport: Send {
+    /// Short name for banners/logs ("in-process", "tcp:…").
+    fn describe(&self) -> String;
+
+    /// Execute `clouds` at split `sp` (ownership passes to the transport —
+    /// segments are moved, never cloned). `pipe.depth > 1` requests
+    /// pipelined execution; results must come back in submission order
+    /// and be byte-identical to serial execution (the schedule is never
+    /// allowed to change semantics).
+    fn run_segment(
+        &mut self,
+        engine: &Arc<Engine>,
+        sp: SplitPoint,
+        clouds: Vec<PointCloud>,
+        pipe: PipelineConfig,
+    ) -> Result<Vec<FrameOutput>>;
+
+    /// Live uplink-bandwidth estimate (bytes/second) from observed
+    /// transfers; `None` before the first sample.
+    fn bandwidth_bps(&self) -> Option<f64>;
+
+    /// Stage/queue report, if this transport keeps one (markdown).
+    fn report(&self) -> Option<String> {
+        None
+    }
+
+    /// Flush and release transport resources (idempotent).
+    fn close(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// In-process transport: head, (virtual) link and tail all run in this
+/// process on the calibrated virtual clock — the paper-figure path. At
+/// `pipeline_depth > 1` segments run through the staged
+/// [`Pipeline`], which is kept warm across segments of the same split.
+pub struct InProcess {
+    estimator: BandwidthEstimator,
+    cached: Option<CachedPipeline>,
+    /// reports of pipelines retired by policy switches/serial segments —
+    /// the session's final report covers the whole stream, not just the
+    /// last pipeline instance
+    retired: Vec<(String, PipelineReport)>,
+}
+
+struct CachedPipeline {
+    sp: SplitPoint,
+    depth: usize,
+    tail_workers: usize,
+    pipeline: Pipeline,
+}
+
+impl Default for InProcess {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InProcess {
+    pub fn new() -> InProcess {
+        InProcess {
+            estimator: BandwidthEstimator::default(),
+            cached: None,
+            retired: Vec::new(),
+        }
+    }
+
+    /// Retire the cached pipeline (if any), keeping its stage report.
+    fn retire_pipeline(&mut self) {
+        if let Some(c) = self.cached.take() {
+            let label = format!(
+                "pipeline (split head_len={}, depth {} x{} tails)",
+                c.sp.head_len, c.depth, c.tail_workers
+            );
+            self.retired.push((label, c.pipeline.report()));
+            // Pipeline::drop closes and joins the stage workers
+        }
+    }
+
+    /// Fold one frame's timing into the bandwidth EWMA and map it to the
+    /// transport-agnostic output. The sample is `bytes / (uplink_time -
+    /// rtt)`: the virtual link prices `rtt + bytes/bw`, so subtracting the
+    /// engine's configured RTT makes the estimator converge to the true
+    /// modeled bandwidth instead of under-shooting (which `Adaptive` would
+    /// then double-penalize by re-adding RTT). Small payloads are skipped
+    /// — see [`MIN_BANDWIDTH_SAMPLE_BYTES`].
+    fn output_of(&mut self, engine: &Engine, r: FrameResult) -> FrameOutput {
+        let t = &r.timing;
+        if t.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES {
+            let rtt = SimTime::from_secs_f64(engine.link().config().rtt_one_way);
+            self.estimator
+                .observe(t.uplink_bytes, t.uplink_time.saturating_sub(rtt));
+        }
+        let uplink_bytes = t.uplink_bytes;
+        let uplink_v1_bytes = t.uplink_v1_bytes;
+        let edge_time = t.edge_time;
+        let inference_time = t.inference_time;
+        let server_time = t.server_compute();
+        let round_trip = t
+            .inference_time
+            .saturating_sub(t.edge_compute())
+            .saturating_sub(t.encode_time);
+        FrameOutput {
+            detections: r.detections,
+            uplink_bytes,
+            uplink_v1_bytes,
+            edge_time,
+            round_trip,
+            server_time,
+            inference_time,
+            timing: Some(r.timing),
+        }
+    }
+}
+
+impl Transport for InProcess {
+    fn describe(&self) -> String {
+        "in-process (virtual clock)".to_string()
+    }
+
+    fn run_segment(
+        &mut self,
+        engine: &Arc<Engine>,
+        sp: SplitPoint,
+        clouds: Vec<PointCloud>,
+        pipe: PipelineConfig,
+    ) -> Result<Vec<FrameOutput>> {
+        let results: Vec<FrameResult> = if pipe.depth <= 1 {
+            self.retire_pipeline();
+            clouds
+                .iter()
+                .map(|c| engine.run_frame(c, sp))
+                .collect::<Result<_>>()?
+        } else {
+            let stale = match &self.cached {
+                Some(c) => {
+                    c.sp != sp || c.depth != pipe.depth || c.tail_workers != pipe.tail_workers
+                }
+                None => true,
+            };
+            if stale {
+                self.retire_pipeline();
+                self.cached = Some(CachedPipeline {
+                    sp,
+                    depth: pipe.depth,
+                    tail_workers: pipe.tail_workers,
+                    pipeline: Pipeline::spawn(engine.clone(), sp, pipe)?,
+                });
+            }
+            let batch = self
+                .cached
+                .as_ref()
+                .expect("pipeline cached above")
+                .pipeline
+                .run_batch(clouds);
+            match batch {
+                Ok(r) => r,
+                Err(e) => {
+                    // the pipeline closed itself on error; don't reuse it
+                    self.retire_pipeline();
+                    return Err(e);
+                }
+            }
+        };
+        Ok(results
+            .into_iter()
+            .map(|r| self.output_of(engine, r))
+            .collect())
+    }
+
+    fn bandwidth_bps(&self) -> Option<f64> {
+        self.estimator.bandwidth_bps()
+    }
+
+    fn report(&self) -> Option<String> {
+        let mut sections: Vec<String> = self
+            .retired
+            .iter()
+            .map(|(label, r)| format!("#### {label}\n\n{}", r.to_markdown()))
+            .collect();
+        if let Some(c) = &self.cached {
+            sections.push(c.pipeline.report().to_markdown());
+        }
+        (!sections.is_empty()).then(|| sections.join("\n"))
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.retire_pipeline();
+        Ok(())
+    }
+}
+
+/// TCP transport: the session is the edge process; the tail runs in a
+/// `splitpoint serve-server` process at `addr`. Connects lazily on the
+/// first segment; `pipeline_depth > 1` uses the pipelined edge client
+/// (overlap head(N+1) with the server round trip of frame N).
+pub struct Tcp {
+    addr: String,
+    client: Option<EdgeClient>,
+    estimator: BandwidthEstimator,
+}
+
+/// Smallest payload worth treating as a bandwidth sample (both
+/// transports). Below this, transfer time is RTT/latency-dominated and
+/// `bytes / elapsed` measures latency, not throughput — an edge-only
+/// segment's ~9-byte empty packets would otherwise poison the EWMA with
+/// sub-KB/s "bandwidth", after which the adaptive policy costs every
+/// shipping split as absurdly expensive and can never escape edge-only
+/// (positive feedback).
+pub const MIN_BANDWIDTH_SAMPLE_BYTES: usize = 16 * 1024;
+
+impl Tcp {
+    pub fn new(addr: impl Into<String>) -> Tcp {
+        Tcp {
+            addr: addr.into(),
+            client: None,
+            estimator: BandwidthEstimator::default(),
+        }
+    }
+}
+
+impl Transport for Tcp {
+    fn describe(&self) -> String {
+        format!("tcp:{} (realtime)", self.addr)
+    }
+
+    fn run_segment(
+        &mut self,
+        engine: &Arc<Engine>,
+        sp: SplitPoint,
+        clouds: Vec<PointCloud>,
+        pipe: PipelineConfig,
+    ) -> Result<Vec<FrameOutput>> {
+        if self.client.is_none() {
+            self.client = Some(
+                EdgeClient::connect(self.addr.as_str(), engine.clone()).with_context(
+                    || format!("is `splitpoint serve-server` running at {}?", self.addr),
+                )?,
+            );
+        }
+        let client = self.client.as_mut().expect("connected above");
+        let results = client.run_stream(&clouds, sp, pipe.depth)?;
+        Ok(results
+            .into_iter()
+            .enumerate()
+            .map(|(i, (detections, t))| {
+                // transfer ≈ round trip minus the server's self-reported
+                // compute minus both configured RTT legs — `price_splits`
+                // re-adds rtt_one_way per leg, so leaving RTT inside the
+                // sample would double-count it (mirrors the InProcess
+                // correction). Two further filters keep the EWMA honest:
+                // RTT-dominated payloads are skipped
+                // (MIN_BANDWIDTH_SAMPLE_BYTES), and in pipelined mode
+                // only the segment's FIRST frame is sampled — the
+                // in-flight window drains at each segment boundary, so
+                // frame 0's round trip has no queueing, while later
+                // frames wait behind up to depth-1 frames of server
+                // compute and would deflate the estimate.
+                let queue_free = pipe.depth <= 1 || i == 0;
+                if queue_free && t.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES {
+                    let rtt_both_legs = SimTime::from_secs_f64(
+                        2.0 * engine.link().config().rtt_one_way,
+                    );
+                    self.estimator.observe(
+                        t.uplink_bytes,
+                        t.round_trip
+                            .saturating_sub(t.server_compute)
+                            .saturating_sub(rtt_both_legs),
+                    );
+                }
+                FrameOutput {
+                    detections,
+                    uplink_bytes: t.uplink_bytes,
+                    uplink_v1_bytes: t.uplink_v1_bytes,
+                    edge_time: t.edge_compute,
+                    round_trip: t.round_trip,
+                    server_time: t.server_compute,
+                    inference_time: t.inference_time,
+                    timing: None,
+                }
+            })
+            .collect())
+    }
+
+    fn bandwidth_bps(&self) -> Option<f64> {
+        self.estimator.bandwidth_bps()
+    }
+
+    fn close(&mut self) -> Result<()> {
+        match self.client.take() {
+            Some(client) => client.shutdown(),
+            None => Ok(()),
+        }
+    }
+}
+
+// -------------------------------------------------------------- policies
+
+/// Everything a policy may consult at a re-evaluation boundary.
+pub struct PolicyContext<'a> {
+    pub engine: &'a Engine,
+    /// profile cloud for this segment (its first frame)
+    pub cloud: &'a PointCloud,
+    /// frames completed so far in this session
+    pub frames_done: u64,
+    /// live transport bandwidth estimate (bytes/second), if any
+    pub bandwidth_bps: Option<f64>,
+    /// split the previous segment ran at
+    pub current: Option<SplitPoint>,
+}
+
+/// Decides the split point for each segment of the stream.
+pub trait SplitPolicy: Send {
+    /// Short name for banners/logs.
+    fn describe(&self) -> String;
+
+    /// Split for the next segment. Called once per segment boundary with
+    /// fresh context; implementations may keep state (hysteresis).
+    fn choose(&mut self, ctx: &PolicyContext<'_>) -> Result<SplitPoint>;
+
+    /// Frames between re-evaluations. The session clamps this to its
+    /// internal segment cap; `usize::MAX` means "never re-evaluate".
+    fn interval(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Always the same split (the classic `--split` flag).
+#[derive(Debug, Clone, Copy)]
+pub struct Fixed(pub SplitPoint);
+
+impl SplitPolicy for Fixed {
+    fn describe(&self) -> String {
+        "fixed".to_string()
+    }
+
+    fn choose(&mut self, _ctx: &PolicyContext<'_>) -> Result<SplitPoint> {
+        Ok(self.0)
+    }
+}
+
+/// Runtime-adaptive split selection: every `every` frames, re-price every
+/// split under the transport's *live* bandwidth estimate (falling back to
+/// the configured link model until the first transfer lands), and switch
+/// only when the best split beats the current one by more than
+/// `hysteresis` — flapping between near-tied splits would churn the
+/// pipeline for no gain.
+///
+/// Cost control: re-pricing ([`adaptive::price_splits`]) is pure
+/// arithmetic and runs at every re-evaluation; the expensive half
+/// ([`adaptive::profile_splits`] — one full unscaled pipeline run) is
+/// cached and refreshed only every `reprofile_every` evaluations, so at
+/// the defaults (8 × 4) the stream pays one extra profile frame per 32
+/// real frames (~3%), not one per 8.
+#[derive(Debug, Clone)]
+pub struct Adaptive {
+    objective: Objective,
+    every: usize,
+    hysteresis: f64,
+    reprofile_every: usize,
+    cached_costs: Option<Vec<adaptive::SplitCosts>>,
+    evals_since_profile: usize,
+}
+
+impl Adaptive {
+    pub fn new(objective: Objective) -> Adaptive {
+        Adaptive {
+            objective,
+            every: 8,
+            hysteresis: 0.10,
+            reprofile_every: 4,
+            cached_costs: None,
+            evals_since_profile: 0,
+        }
+    }
+
+    /// Re-evaluation interval in frames (default 8).
+    pub fn every(mut self, frames: usize) -> Adaptive {
+        self.every = frames.max(1);
+        self
+    }
+
+    /// Minimum fractional improvement required to switch (default 0.10).
+    pub fn hysteresis(mut self, h: f64) -> Adaptive {
+        self.hysteresis = h.max(0.0);
+        self
+    }
+
+    /// Evaluations between fresh profile runs (default 4; 1 = re-profile
+    /// at every re-evaluation).
+    pub fn reprofile_every(mut self, evals: usize) -> Adaptive {
+        self.reprofile_every = evals.max(1);
+        self
+    }
+}
+
+impl SplitPolicy for Adaptive {
+    fn describe(&self) -> String {
+        let obj = match self.objective {
+            Objective::InferenceTime => "inference-time",
+            Objective::EdgeTime => "edge-time",
+        };
+        format!("adaptive({obj}, every {} frame(s))", self.every)
+    }
+
+    fn choose(&mut self, ctx: &PolicyContext<'_>) -> Result<SplitPoint> {
+        let link = match ctx.bandwidth_bps {
+            Some(bps) if bps > 0.0 => ctx.engine.link().with_bandwidth(bps),
+            _ => ctx.engine.link().clone(),
+        };
+        // refresh the (expensive) profile only every Nth evaluation; the
+        // per-evaluation work is the pure-arithmetic re-pricing below
+        if self.cached_costs.is_none() || self.evals_since_profile >= self.reprofile_every {
+            self.cached_costs = Some(adaptive::profile_splits(ctx.engine, ctx.cloud)?);
+            self.evals_since_profile = 0;
+        }
+        self.evals_since_profile += 1;
+        let costs = self.cached_costs.as_ref().expect("profiled above");
+        let estimates = adaptive::price_splits(costs, &link);
+        let best = adaptive::best_estimate(&estimates, self.objective);
+        // hysteresis against the split the session actually ran last
+        // segment (`ctx.current` — the policy keeps no shadow copy)
+        let chosen = match ctx.current {
+            Some(cur) if cur != best.split => {
+                let cur_cost = estimates
+                    .iter()
+                    .find(|e| e.split == cur)
+                    .map(|e| self.objective.cost(e).as_secs_f64());
+                match cur_cost {
+                    // switch only past the hysteresis margin
+                    Some(cc)
+                        if self.objective.cost(best).as_secs_f64()
+                            < cc * (1.0 - self.hysteresis) =>
+                    {
+                        best.split
+                    }
+                    Some(_) => cur,
+                    None => best.split,
+                }
+            }
+            _ => best.split,
+        };
+        Ok(chosen)
+    }
+
+    fn interval(&self) -> usize {
+        self.every
+    }
+}
+
+// --------------------------------------------------------------- session
+
+/// One delivered frame: session sequencing, provenance, the split it ran
+/// at, and the transport's output.
+#[derive(Debug, Clone)]
+pub struct SessionFrame {
+    /// dense session-wide sequence number (delivery order)
+    pub seq: u64,
+    /// source-assigned sequence (replay position, scan index, …)
+    pub source_seq: u64,
+    pub sensor_id: u32,
+    /// points in the input cloud
+    pub points: usize,
+    pub split: SplitPoint,
+    pub split_label: String,
+    pub output: FrameOutput,
+}
+
+/// End-of-stream accounting.
+#[derive(Debug, Clone, Default)]
+pub struct SessionReport {
+    pub frames: usize,
+    pub wall: Duration,
+    /// split changes the policy made mid-stream
+    pub switches: usize,
+    /// frames executed per split label
+    pub split_usage: BTreeMap<String, usize>,
+    /// transport's final bandwidth estimate
+    pub bandwidth_bps: Option<f64>,
+    /// total uplink bytes actually shipped (wire v2)
+    pub uplink_bytes: usize,
+    /// what the same stream would have cost under the v1 framing
+    pub uplink_v1_bytes: usize,
+    /// staged-pipeline stage/queue report, when the transport kept one
+    pub transport_report: Option<String>,
+}
+
+impl SessionReport {
+    /// Wire bytes saved by the v2 delta framing, as a fraction of v1.
+    pub fn wire_savings(&self) -> Option<f64> {
+        (self.uplink_v1_bytes > 0)
+            .then(|| 1.0 - self.uplink_bytes as f64 / self.uplink_v1_bytes as f64)
+    }
+
+    /// One-paragraph human summary for CLI output.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let wall = self.wall.as_secs_f64();
+        let _ = write!(
+            s,
+            "{} frame(s) in {:.2} s ({:.2} frames/s wall)",
+            self.frames,
+            wall,
+            self.frames as f64 / wall.max(1e-9)
+        );
+        if !self.split_usage.is_empty() {
+            let splits: Vec<String> = self
+                .split_usage
+                .iter()
+                .map(|(k, v)| format!("{k}×{v}"))
+                .collect();
+            let _ = write!(s, "; splits {} ({} switch(es))", splits.join(", "), self.switches);
+        }
+        if let Some(bps) = self.bandwidth_bps {
+            let _ = write!(s, "; est. bandwidth {:.2} MB/s", bps / 1e6);
+        }
+        if let Some(savings) = self.wire_savings() {
+            let _ = write!(
+                s,
+                "; uplink {:.2} MB (wire v2; v1 would be {:.2} MB, {:.1}% saved)",
+                self.uplink_bytes as f64 / 1e6,
+                self.uplink_v1_bytes as f64 / 1e6,
+                savings * 100.0
+            );
+        }
+        s
+    }
+}
+
+/// The facade: source → policy → transport, segment by segment. Build one
+/// with [`SplitSession::builder`].
+pub struct SplitSession {
+    engine: Arc<Engine>,
+    source: Box<dyn FrameSource>,
+    transport: Box<dyn Transport>,
+    policy: Box<dyn SplitPolicy>,
+    pipe: PipelineConfig,
+    frames_done: u64,
+}
+
+impl SplitSession {
+    pub fn builder() -> SplitSessionBuilder {
+        SplitSessionBuilder::new()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Banner line describing the assembled session.
+    pub fn describe(&self) -> String {
+        format!(
+            "source: {} | transport: {} | policy: {} | depth {} x{} tail(s), {} kernel thread(s)",
+            self.source.describe(),
+            self.transport.describe(),
+            self.policy.describe(),
+            self.pipe.depth,
+            self.pipe.tail_workers,
+            self.engine.runtime().threads(),
+        )
+    }
+
+    /// Run the stream to exhaustion, delivering each frame to `on_frame`
+    /// in order. The transport is closed on every exit path — a source or
+    /// transport error still sends the TCP shutdown / drains the pipeline
+    /// before the error propagates.
+    pub fn run_with<F: FnMut(SessionFrame)>(&mut self, mut on_frame: F) -> Result<SessionReport> {
+        let t0 = Instant::now();
+        let mut report = SessionReport::default();
+        let run_res = self.run_loop(&mut on_frame, &mut report);
+        let close_res = self.transport.close();
+        report.transport_report = self.transport.report();
+        report.bandwidth_bps = self.transport.bandwidth_bps();
+        report.wall = t0.elapsed();
+        run_res?;
+        close_res?;
+        Ok(report)
+    }
+
+    /// The segment loop behind [`SplitSession::run_with`].
+    fn run_loop(
+        &mut self,
+        on_frame: &mut dyn FnMut(SessionFrame),
+        report: &mut SessionReport,
+    ) -> Result<()> {
+        let mut current_sp: Option<SplitPoint> = None;
+        loop {
+            // ---- pull one segment from the source
+            let target = self.policy.interval().max(1).min(SEGMENT_MAX);
+            let mut metas: Vec<(u32, u64, usize)> = Vec::with_capacity(target);
+            let mut clouds: Vec<PointCloud> = Vec::with_capacity(target);
+            while clouds.len() < target {
+                match self.source.next_frame()? {
+                    Some(f) => {
+                        metas.push((f.sensor_id, f.seq, f.cloud.len()));
+                        clouds.push(f.cloud);
+                    }
+                    None => break,
+                }
+            }
+            if clouds.is_empty() {
+                return Ok(());
+            }
+            let n = clouds.len();
+
+            // ---- policy decides this segment's split
+            let ctx = PolicyContext {
+                engine: &*self.engine,
+                cloud: &clouds[0],
+                frames_done: self.frames_done,
+                bandwidth_bps: self.transport.bandwidth_bps(),
+                current: current_sp,
+            };
+            let sp = self.policy.choose(&ctx)?;
+            if current_sp.is_some_and(|c| c != sp) {
+                report.switches += 1;
+            }
+            current_sp = Some(sp);
+
+            // ---- transport executes the segment (clouds move, no clone)
+            let outs = self
+                .transport
+                .run_segment(&self.engine, sp, clouds, self.pipe)?;
+            if outs.len() != n {
+                bail!("transport returned {} result(s) for {n} frame(s)", outs.len());
+            }
+            let label = self.engine.graph().split_label(sp);
+            *report.split_usage.entry(label.clone()).or_default() += n;
+            for ((sensor_id, source_seq, points), output) in metas.into_iter().zip(outs) {
+                report.uplink_bytes += output.uplink_bytes;
+                report.uplink_v1_bytes += output.uplink_v1_bytes;
+                report.frames += 1;
+                on_frame(SessionFrame {
+                    seq: self.frames_done,
+                    source_seq,
+                    sensor_id,
+                    points,
+                    split: sp,
+                    split_label: label.clone(),
+                    output,
+                });
+                self.frames_done += 1;
+            }
+        }
+    }
+
+    /// [`SplitSession::run_with`], collecting every frame.
+    pub fn run(&mut self) -> Result<(Vec<SessionFrame>, SessionReport)> {
+        let mut frames = Vec::new();
+        let report = self.run_with(|f| frames.push(f))?;
+        Ok((frames, report))
+    }
+}
+
+// --------------------------------------------------------------- builder
+
+/// Assembles a [`SplitSession`] (or just its engine / a server process)
+/// from parts. Unset axes get the classic defaults: synthetic scenes,
+/// in-process transport, the config's fixed split, serial depth, one
+/// kernel thread.
+pub struct SplitSessionBuilder {
+    artifacts: PathBuf,
+    config: Option<SystemConfig>,
+    split: Option<String>,
+    engine: Option<Arc<Engine>>,
+    source: Option<Box<dyn FrameSource>>,
+    transport: Option<Box<dyn Transport>>,
+    policy: Option<Box<dyn SplitPolicy>>,
+    depth: usize,
+    tail_workers: usize,
+    threads: usize,
+    role: EngineRole,
+}
+
+impl Default for SplitSessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SplitSessionBuilder {
+    pub fn new() -> SplitSessionBuilder {
+        SplitSessionBuilder {
+            artifacts: PathBuf::from("artifacts"),
+            config: None,
+            split: None,
+            engine: None,
+            source: None,
+            transport: None,
+            policy: None,
+            depth: 1,
+            tail_workers: 1,
+            threads: 1,
+            role: EngineRole::Full,
+        }
+    }
+
+    /// Artifact directory (`make artifacts` output; default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    pub fn config(mut self, cfg: SystemConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Load the system config from a JSON file.
+    pub fn config_file(mut self, path: &std::path::Path) -> Result<Self> {
+        self.config = Some(SystemConfig::load(path)?);
+        Ok(self)
+    }
+
+    /// Override the config's split name ("vfe", "conv2", "edge_only", …).
+    /// With the default [`Fixed`] policy this is the split every frame
+    /// runs at.
+    pub fn split(mut self, name: &str) -> Self {
+        self.split = Some(name.to_string());
+        self
+    }
+
+    /// Inject a prebuilt engine (benches and tests sweeping sessions over
+    /// one compiled runtime). Overrides `artifacts`/`config`/`split`/
+    /// `threads`/`role` — the engine is taken as-is.
+    pub fn engine(mut self, engine: Arc<Engine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Frame source (any [`FrameSource`]).
+    pub fn source(mut self, source: Box<dyn FrameSource>) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    /// Synthetic-scene source shortcut.
+    pub fn synthetic(self, seed: u64, frames: usize) -> Self {
+        self.source(Box::new(SceneSource::new(seed, frames)))
+    }
+
+    /// `--source` CLI spec: `synthetic` (uses `seed`/`frames`),
+    /// `kitti:<dir>`, or `replay:<file>.bin`. `frames` caps directory
+    /// sources and sets the synthetic/replay length.
+    pub fn source_spec(
+        self,
+        spec: Option<&str>,
+        seed: u64,
+        frames: Option<usize>,
+    ) -> Result<Self> {
+        Ok(self.source(parse_source(spec, seed, frames)?))
+    }
+
+    /// Transport (any [`Transport`]). Default: [`InProcess`].
+    pub fn transport(mut self, transport: Box<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// TCP transport shortcut (edge process against `serve-server`).
+    pub fn tcp(self, addr: &str) -> Self {
+        self.transport(Box::new(Tcp::new(addr)))
+    }
+
+    /// Split policy (any [`SplitPolicy`]). Default: [`Fixed`] at the
+    /// config's split.
+    pub fn policy(mut self, policy: Box<dyn SplitPolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Adaptive-policy shortcut.
+    pub fn adaptive(self, objective: Objective) -> Self {
+        self.policy(Box::new(Adaptive::new(objective)))
+    }
+
+    /// Staged-pipeline depth; 1 (default) = serial.
+    pub fn pipeline_depth(mut self, depth: usize) -> Self {
+        self.depth = depth.max(1);
+        self
+    }
+
+    /// Parallel tail stages when pipelined (default 1).
+    pub fn tail_workers(mut self, n: usize) -> Self {
+        self.tail_workers = n.max(1);
+        self
+    }
+
+    /// Total kernel-thread budget; split across tail workers via
+    /// [`PipelineConfig::kernel_threads_for`] so the two levels of
+    /// parallelism compose (default 1; outputs are bit-identical at any
+    /// count).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Which half of the pipeline this engine serves (default `Full`).
+    pub fn role(mut self, role: EngineRole) -> Self {
+        self.role = role;
+        self
+    }
+
+    /// Build just the engine — the thin-shell path for subcommands and
+    /// benches that drive [`Engine`] directly (sweep, estimate,
+    /// calibrate).
+    pub fn build_engine(&self) -> Result<Arc<Engine>> {
+        if let Some(engine) = &self.engine {
+            return Ok(engine.clone());
+        }
+        let manifest = Manifest::load(&self.artifacts)?;
+        let mut cfg = self.config.clone().unwrap_or_else(SystemConfig::paper);
+        if let Some(split) = &self.split {
+            cfg.split = split.clone();
+        }
+        let tails = if self.depth > 1 { self.tail_workers } else { 1 };
+        let kernel = PipelineConfig::kernel_threads_for(self.threads, tails);
+        let runtime = Arc::new(XlaRuntime::load_pooled(&manifest, kernel)?);
+        Ok(Arc::new(Engine::with_runtime_role(
+            &manifest, cfg, runtime, self.role,
+        )?))
+    }
+
+    /// Build the full session.
+    pub fn build(mut self) -> Result<SplitSession> {
+        let engine = self.build_engine()?;
+        let policy: Box<dyn SplitPolicy> = match self.policy.take() {
+            Some(p) => p,
+            None => Box::new(Fixed(engine.split()?)),
+        };
+        let source = self
+            .source
+            .take()
+            .unwrap_or_else(|| Box::new(SceneSource::new(1, 5)));
+        let transport = self
+            .transport
+            .take()
+            .unwrap_or_else(|| Box::new(InProcess::new()));
+        Ok(SplitSession {
+            engine,
+            source,
+            transport,
+            policy,
+            pipe: PipelineConfig {
+                depth: self.depth,
+                tail_workers: self.tail_workers,
+            },
+            frames_done: 0,
+        })
+    }
+
+    /// Build the server side of the TCP deployment: a tail-role engine
+    /// (no edge-side state until a raw-offload request needs it) behind a
+    /// listening [`Server`].
+    pub fn build_server(self, listen: &str) -> Result<Server> {
+        let engine = self.role(EngineRole::ServerTail).build_engine()?;
+        Server::spawn(listen, engine)
+    }
+}
+
+/// Parse a `--source` spec. `None`/`"synthetic"` yields `frames`
+/// (default 5) scenes from `seed`; `kitti:<dir>` streams a scan
+/// directory (capped at `frames` when given); `replay:<file>.bin` replays
+/// one recorded scan `frames` (default 1) times.
+pub fn parse_source(
+    spec: Option<&str>,
+    seed: u64,
+    frames: Option<usize>,
+) -> Result<Box<dyn FrameSource>> {
+    let spec = spec.unwrap_or("synthetic");
+    match crate::util::cli::split_spec(spec) {
+        ("synthetic", None) => Ok(Box::new(SceneSource::new(seed, frames.unwrap_or(5)))),
+        ("kitti", Some(dir)) => {
+            let src = KittiSource::open(std::path::Path::new(dir))?;
+            Ok(match frames {
+                Some(n) => Box::new(src.limit(n)),
+                None => Box::new(src),
+            })
+        }
+        ("replay", Some(file)) => Ok(Box::new(
+            ReplaySource::from_file(std::path::Path::new(file))?
+                .repeated(frames.unwrap_or(1)),
+        )),
+        _ => bail!(
+            "unknown --source '{spec}' (want synthetic, kitti:<dir>, or replay:<file>.bin)"
+        ),
+    }
+}

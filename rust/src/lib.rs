@@ -4,11 +4,12 @@
 //! Split Computing”* (Noguchi & Azumi, 2025) as a three-layer
 //! rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the split-computing coordinator: pipeline graph
+//! * **L3 (this crate)** — the split-computing coordinator: the
+//!   [`SplitSession`] facade ([`coordinator::session`]), pipeline graph
 //!   and live-set analysis ([`model::graph`]), wire codec
 //!   ([`tensor::codec`]), device/link models and edge/server nodes
-//!   ([`coordinator`]), voxelizer ([`voxel`]), synthetic LiDAR workloads
-//!   ([`pointcloud`]), proposal/NMS stage ([`postprocess`]).
+//!   ([`coordinator`]), voxelizer ([`voxel`]), synthetic and KITTI LiDAR
+//!   workloads ([`pointcloud`]), proposal/NMS stage ([`postprocess`]).
 //! * **L2/L1 (build-time python)** — Voxel R-CNN modules and Pallas
 //!   kernels, AOT-lowered to HLO-text artifacts loaded by [`runtime`].
 //!
@@ -31,6 +32,8 @@ pub mod testing;
 pub mod util;
 pub mod voxel;
 
+pub use coordinator::session::{SplitSession, SplitSessionBuilder};
 pub use model::graph::{PipelineGraph, SplitPoint, TensorId, TensorStore};
 pub use model::manifest::Manifest;
+pub use pointcloud::FrameSource;
 pub use tensor::Tensor;

@@ -1,28 +1,31 @@
 //! splitpoint CLI — leader entrypoint for the split-computing stack.
 //!
+//! Every subcommand is a thin shell over [`SplitSession::builder`]: the
+//! CLI flags pick a frame source (`--source synthetic|kitti:<dir>|
+//! replay:<file>`), a transport (in-process, or TCP for the serve-*
+//! pair), and a split policy (`--policy fixed|adaptive|adaptive-edge`);
+//! the session runs the stream.
+//!
 //! Subcommands:
-//!   run             one or more frames through a chosen split (virtual clock)
+//!   run             stream frames through the session (virtual clock)
 //!   sweep           regenerate the paper's Figs 6–9 + Table I over N frames
 //!   explain-splits  print Table II (live-set analysis) for every split point
 //!   estimate        adaptive split selection: analytic cost of every split
 //!   calibrate       fit the edge slowdown + link bandwidth to paper targets
-//!   serve-server    edge-server process (TCP, realtime)
-//!   serve-edge      edge-device process: stream frames to a server (TCP)
+//!   serve-server    edge-server process (TCP, realtime, tail-role engine)
+//!   serve-edge      edge-device process: stream a source to a server (TCP)
 
-use std::path::PathBuf;
-use std::sync::Arc;
+use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use splitpoint::bench::paper;
-use splitpoint::config::SystemConfig;
 use splitpoint::coordinator::adaptive::{self, Objective};
-use splitpoint::coordinator::pipeline;
-use splitpoint::coordinator::remote::{EdgeClient, Server};
-use splitpoint::coordinator::Engine;
+use splitpoint::coordinator::session::{
+    Adaptive, SessionFrame, SessionReport, SplitPolicy, SplitSession, SplitSessionBuilder,
+};
 use splitpoint::pointcloud::scene::SceneGenerator;
 use splitpoint::util::cli::{parse_threads, Args, Cli, CommandSpec, OptSpec};
-use splitpoint::Manifest;
 
 fn cli() -> Cli {
     let common = || {
@@ -30,7 +33,10 @@ fn cli() -> Cli {
             OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
             OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
             OptSpec { name: "split", value: Some("name"), help: "split point: raw|preprocess|vfe|conv1..conv4|bev_head|proposal|edge_only" },
-            OptSpec { name: "frames", value: Some("n"), help: "number of frames (default 5)" },
+            OptSpec { name: "source", value: Some("spec"), help: "frame source: synthetic | kitti:<dir> | replay:<file>.bin (default synthetic)" },
+            OptSpec { name: "policy", value: Some("name"), help: "split policy: fixed | adaptive | adaptive-edge (default fixed)" },
+            OptSpec { name: "policy-every", value: Some("n"), help: "frames between adaptive re-evaluations (default 8)" },
+            OptSpec { name: "frames", value: Some("n"), help: "frame count (synthetic default 5; kitti default: all scans)" },
             OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
             OptSpec { name: "pipeline-depth", value: Some("n"), help: "staged pipeline depth; 1 = serial (default 1)" },
             OptSpec { name: "tail-workers", value: Some("n"), help: "parallel tail stages when pipelined (default 1)" },
@@ -41,7 +47,7 @@ fn cli() -> Cli {
         bin: "splitpoint",
         about: "Split Computing for 3D point-cloud object detection (Noguchi & Azumi 2025 reproduction)",
         commands: vec![
-            CommandSpec { name: "run", help: "run frames through one split pattern", opts: common() },
+            CommandSpec { name: "run", help: "stream a frame source through one session", opts: common() },
             CommandSpec { name: "sweep", help: "regenerate paper Figs 6-9 + Tables I/II", opts: common() },
             CommandSpec { name: "explain-splits", help: "print Table II live-set analysis", opts: common() },
             CommandSpec { name: "estimate", help: "adaptive split selection (analytic cost model)", opts: common() },
@@ -51,6 +57,8 @@ fn cli() -> Cli {
                 help: "run the edge-server process (TCP)",
                 opts: vec![
                     OptSpec { name: "listen", value: Some("addr"), help: "bind address (default 127.0.0.1:7070)" },
+                    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
+                    OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the server tail (default 1)" },
                 ],
             },
@@ -59,7 +67,13 @@ fn cli() -> Cli {
                 help: "run the edge-device process against a server (TCP)",
                 opts: vec![
                     OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" },
-                    OptSpec { name: "frames", value: Some("n"), help: "number of frames to stream (default 10)" },
+                    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
+                    OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
+                    OptSpec { name: "split", value: Some("name"), help: "split point (default from config)" },
+                    OptSpec { name: "source", value: Some("spec"), help: "frame source: synthetic | kitti:<dir> | replay:<file>.bin" },
+                    OptSpec { name: "policy", value: Some("name"), help: "split policy: fixed | adaptive | adaptive-edge" },
+                    OptSpec { name: "policy-every", value: Some("n"), help: "frames between adaptive re-evaluations (default 8)" },
+                    OptSpec { name: "frames", value: Some("n"), help: "frames to stream (synthetic default 10)" },
                     OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
                     OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N) (default 1 = serial)" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the edge head (default 1)" },
@@ -70,97 +84,110 @@ fn cli() -> Cli {
     }
 }
 
-fn load_engine(args: &Args) -> Result<Engine> {
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let manifest = Manifest::load(&artifacts)?;
-    let mut cfg = match args.get("config") {
-        Some(p) => SystemConfig::load(&PathBuf::from(p))?,
-        None => SystemConfig::paper(),
-    };
-    if let Some(split) = args.get("split") {
-        cfg.split = split.to_string();
+/// Shared CLI → builder wiring: artifacts, config, split override, and
+/// the threads/depth/tail-workers budget (one `--threads` serves kernel
+/// and stage parallelism; see `PipelineConfig::kernel_threads_for`).
+fn session_builder(args: &Args) -> Result<SplitSessionBuilder> {
+    let mut b = SplitSession::builder().artifacts(args.get_or("artifacts", "artifacts"));
+    if let Some(p) = args.get("config") {
+        b = b.config_file(Path::new(p))?;
     }
-    // one worker budget (`--threads`) serves both levels of parallelism:
-    // when the staged pipeline runs W tail stages concurrently, each
-    // execute's kernel pool gets threads/W so the two levels compose
-    // instead of oversubscribing the host
-    let threads = parse_threads(args.get("threads"))?;
+    if let Some(split) = args.get("split") {
+        b = b.split(split);
+    }
     let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
     let tail_workers: usize = if depth > 1 {
         args.get_parse("tail-workers")?.unwrap_or(1)
     } else {
         1
     };
-    let kernel = pipeline::PipelineConfig::kernel_threads_for(threads, tail_workers);
-    Engine::new_threaded(&manifest, cfg, kernel)
+    Ok(b
+        .threads(parse_threads(args.get("threads"))?)
+        .pipeline_depth(depth)
+        .tail_workers(tail_workers))
+}
+
+/// `--policy` flag → policy object (`None` = builder default, i.e. fixed
+/// at the configured split).
+fn policy_from(args: &Args) -> Result<Option<Box<dyn SplitPolicy>>> {
+    let every: usize = args.get_parse("policy-every")?.unwrap_or(8);
+    Ok(match args.get("policy") {
+        None | Some("fixed") => None,
+        Some("adaptive") => Some(Box::new(Adaptive::new(Objective::InferenceTime).every(every))),
+        Some("adaptive-edge") => Some(Box::new(Adaptive::new(Objective::EdgeTime).every(every))),
+        Some(other) => bail!("unknown --policy '{other}' (want fixed, adaptive, or adaptive-edge)"),
+    })
+}
+
+/// Assemble the full session for `run`/`serve-edge`: shared builder plus
+/// source, policy, and (for serve-edge) the TCP transport.
+fn build_session(
+    args: &Args,
+    default_frames: Option<usize>,
+    tcp_addr: Option<&str>,
+) -> Result<SplitSession> {
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let frames: Option<usize> = match args.get_parse("frames")? {
+        Some(n) => Some(n),
+        // synthetic sources need a length; directory sources default to
+        // everything they hold
+        None => match args.get("source") {
+            Some(s) if !s.starts_with("synthetic") => None,
+            _ => default_frames,
+        },
+    };
+    let mut b = session_builder(args)?.source_spec(args.get("source"), seed, frames)?;
+    if let Some(p) = policy_from(args)? {
+        b = b.policy(p);
+    }
+    if let Some(addr) = tcp_addr {
+        b = b.tcp(addr);
+    }
+    b.build()
+}
+
+fn print_session_banner(session: &SplitSession) {
+    let cfg = session.engine().config();
+    println!(
+        "edge={} x{}, server={} x{}",
+        cfg.edge.name, cfg.edge.slowdown, cfg.server.name, cfg.server.slowdown
+    );
+    println!("{}\n", session.describe());
+}
+
+fn print_session_tail(report: &SessionReport) {
+    println!("\n{}", report.summary());
+    if let Some(md) = &report.transport_report {
+        println!("\n{md}");
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
-    let frames: usize = args.get_parse("frames")?.unwrap_or(5);
-    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
-    let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
-    let tail_workers: usize = args.get_parse("tail-workers")?.unwrap_or(1);
-    let sp = engine.split()?;
-    let mut gen = SceneGenerator::with_seed(seed);
-    let kernel_threads = engine.runtime().threads();
-    let depth_note = if depth > 1 {
-        format!(", pipeline depth {depth} x{tail_workers} tails, {kernel_threads} kernel thread(s)")
-    } else {
-        format!(", {kernel_threads} kernel thread(s)")
-    };
-    println!(
-        "running {frames} frame(s) at split '{}' (edge={} x{}, server={} x{}{depth_note})",
-        engine.graph().split_label(sp),
-        engine.config().edge.name,
-        engine.config().edge.slowdown,
-        engine.config().server.name,
-        engine.config().server.slowdown,
-    );
-    let print_frame = |i: usize, pts: usize, r: &splitpoint::coordinator::FrameResult| {
+    let mut session = build_session(args, Some(5), None)?;
+    print_session_banner(&session);
+    let report = session.run_with(|f: SessionFrame| {
         println!(
-            "frame {i}: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
-            pts,
-            r.detections.len(),
-            r.timing.inference_time.as_millis_f64(),
-            r.timing.edge_time.as_millis_f64(),
-            r.timing.uplink_bytes as f64 / 1e6,
-            r.timing.uplink_time.as_millis_f64(),
+            "frame {} [{}]: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
+            f.seq,
+            f.split_label,
+            f.points,
+            f.output.detections.len(),
+            f.output.inference_time.as_millis_f64(),
+            f.output.edge_time.as_millis_f64(),
+            f.output.uplink_bytes as f64 / 1e6,
+            f.output
+                .timing
+                .as_ref()
+                .map(|t| t.uplink_time.as_millis_f64())
+                .unwrap_or(0.0),
         );
-    };
-    if depth > 1 {
-        let clouds: Vec<_> = (0..frames).map(|_| gen.generate().cloud).collect();
-        let t0 = std::time::Instant::now();
-        let (results, report) = pipeline::run_stream(
-            Arc::new(engine),
-            sp,
-            &clouds,
-            pipeline::PipelineConfig {
-                depth,
-                tail_workers,
-            },
-        )?;
-        let wall = t0.elapsed().as_secs_f64();
-        for (i, r) in results.iter().enumerate() {
-            print_frame(i, clouds[i].len(), r);
-        }
-        println!(
-            "\npipelined {frames} frames in {wall:.2} s -> {:.2} frames/s wall",
-            frames as f64 / wall.max(1e-9)
-        );
-        println!("\n{}", report.to_markdown());
-    } else {
-        for i in 0..frames {
-            let scene = gen.generate();
-            let r = engine.run_frame(&scene.cloud, sp)?;
-            print_frame(i, scene.cloud.len(), &r);
-        }
-    }
+    })?;
+    print_session_tail(&report);
     Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
+    let engine = session_builder(args)?.build_engine()?;
     let frames: usize = args.get_parse("frames")?.unwrap_or(5);
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
     let splits = paper::paper_splits(&engine)?;
@@ -173,13 +200,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_explain(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
+    let engine = session_builder(args)?.build_engine()?;
     println!("{}", paper::table2_report(&engine));
     Ok(())
 }
 
 fn cmd_estimate(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
+    let engine = session_builder(args)?.build_engine()?;
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
     let scene = SceneGenerator::with_seed(seed).generate();
     let estimates = adaptive::estimate_splits(&engine, &scene.cloud)?;
@@ -205,7 +232,7 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    let engine = load_engine(args)?;
+    let engine = session_builder(args)?.build_engine()?;
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
     let frames: usize = args.get_parse("frames")?.unwrap_or(3);
     let mut gen = SceneGenerator::with_seed(seed);
@@ -288,10 +315,9 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_server(args: &Args) -> Result<()> {
-    let engine = Arc::new(load_engine(args)?);
     let addr = args.get_or("listen", "127.0.0.1:7070");
-    let server = Server::spawn(addr, engine)?;
-    println!("edge-server listening on {}", server.addr());
+    let server = session_builder(args)?.build_server(addr)?;
+    println!("edge-server listening on {} (tail-role engine)", server.addr());
     println!("Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -299,45 +325,23 @@ fn cmd_serve_server(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_edge(args: &Args) -> Result<()> {
-    let engine = Arc::new(load_engine(args)?);
     let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
-    let frames: usize = args.get_parse("frames")?.unwrap_or(10);
-    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
-    let depth: usize = args.get_parse("pipeline-depth")?.unwrap_or(1);
-    let sp = engine.split()?;
-    let mut client = EdgeClient::connect(addr.as_str(), engine.clone())
-        .with_context(|| format!("is `splitpoint serve-server` running at {addr}?"))?;
-    let mut gen = SceneGenerator::with_seed(seed);
-    let print_frame = |i: usize, dets: usize, t: &splitpoint::coordinator::remote::RemoteTiming| {
+    let mut session = build_session(args, Some(10), Some(addr.as_str()))?;
+    print_session_banner(&session);
+    let report = session.run_with(|f: SessionFrame| {
         println!(
-            "frame {i}: {dets} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
-            t.edge_compute.as_millis_f64(),
-            t.round_trip.as_millis_f64(),
-            t.server_compute.as_millis_f64(),
-            t.inference_time.as_millis_f64(),
-            t.uplink_bytes as f64 / 1e6,
+            "frame {} [{}]: {} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
+            f.seq,
+            f.split_label,
+            f.output.detections.len(),
+            f.output.edge_time.as_millis_f64(),
+            f.output.round_trip.as_millis_f64(),
+            f.output.server_time.as_millis_f64(),
+            f.output.inference_time.as_millis_f64(),
+            f.output.uplink_bytes as f64 / 1e6,
         );
-    };
-    if depth > 1 {
-        let clouds: Vec<_> = (0..frames).map(|_| gen.generate().cloud).collect();
-        let t0 = std::time::Instant::now();
-        let results = client.run_stream(&clouds, sp, depth)?;
-        let wall = t0.elapsed().as_secs_f64();
-        for (i, (dets, t)) in results.iter().enumerate() {
-            print_frame(i, dets.len(), t);
-        }
-        println!(
-            "\npipelined {frames} frames at depth {depth} in {wall:.2} s -> {:.2} frames/s wall",
-            frames as f64 / wall.max(1e-9)
-        );
-    } else {
-        for i in 0..frames {
-            let scene = gen.generate();
-            let (dets, t) = client.run_frame(&scene.cloud, sp)?;
-            print_frame(i, dets.len(), &t);
-        }
-    }
-    client.shutdown()?;
+    })?;
+    print_session_tail(&report);
     Ok(())
 }
 

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::{Point, PointCloud};
+use super::{Frame, FrameSource, Point, PointCloud};
 
 /// Read one scan.
 pub fn read_bin(path: &Path) -> Result<PointCloud> {
@@ -88,6 +88,87 @@ pub fn crop_to_range(
     }
 }
 
+/// [`FrameSource`] over a directory of KITTI velodyne `.bin` scans:
+/// streams them in filename order, reading each file lazily so a bounded
+/// consumer (the staged pipeline's input queue) throttles disk I/O.
+///
+/// Scans are fed as-is by default; [`KittiSource::with_crop`] pre-clips to
+/// the model's metric range (the voxelizer drops out-of-range points
+/// anyway, but cropping shrinks the raw-offload wire).
+pub struct KittiSource {
+    dir: PathBuf,
+    scans: Vec<PathBuf>,
+    next: usize,
+    limit: Option<usize>,
+    crop: Option<((f64, f64), (f64, f64), (f64, f64))>,
+}
+
+impl KittiSource {
+    /// Open a scan directory; errors when it holds no `.bin` files.
+    pub fn open(dir: &Path) -> Result<KittiSource> {
+        let scans = list_scans(dir)?;
+        if scans.is_empty() {
+            bail!("{}: no .bin scans found", dir.display());
+        }
+        Ok(KittiSource {
+            dir: dir.to_path_buf(),
+            scans,
+            next: 0,
+            limit: None,
+            crop: None,
+        })
+    }
+
+    /// Cap the stream at `n` scans.
+    pub fn limit(mut self, n: usize) -> KittiSource {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Pre-crop every scan to a metric range (see [`crop_to_range`]).
+    pub fn with_crop(
+        mut self,
+        x: (f64, f64),
+        y: (f64, f64),
+        z: (f64, f64),
+    ) -> KittiSource {
+        self.crop = Some((x, y, z));
+        self
+    }
+
+    fn total(&self) -> usize {
+        self.limit.map_or(self.scans.len(), |l| l.min(self.scans.len()))
+    }
+}
+
+impl FrameSource for KittiSource {
+    fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.next >= self.total() {
+            return Ok(None);
+        }
+        let path = &self.scans[self.next];
+        let mut cloud = read_bin(path)?;
+        if let Some((x, y, z)) = self.crop {
+            cloud = crop_to_range(&cloud, x, y, z);
+        }
+        let seq = self.next as u64;
+        self.next += 1;
+        Ok(Some(Frame {
+            sensor_id: 0,
+            seq,
+            cloud,
+        }))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.total() - self.next.min(self.total()))
+    }
+
+    fn describe(&self) -> String {
+        format!("kitti:{} ({} scan(s))", self.dir.display(), self.total())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +211,53 @@ mod tests {
         };
         let c = crop_to_range(&cloud, (0.0, 46.08), (-23.04, 23.04), (-3.0, 1.0));
         assert_eq!(c.points.len(), 1);
+    }
+
+    #[test]
+    fn kitti_source_streams_in_name_order_with_limit() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_source");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        for (name, n) in [("b.bin", 2usize), ("a.bin", 1), ("c.bin", 3)] {
+            let p = Point { x: 1.0, y: 0.0, z: 0.0, intensity: 0.5 };
+            let cloud = PointCloud { points: vec![p; n] };
+            write_bin(&dir.join(name), &cloud).unwrap();
+        }
+        let mut src = KittiSource::open(&dir).unwrap();
+        assert_eq!(src.len_hint(), Some(3));
+        let sizes: Vec<usize> = std::iter::from_fn(|| src.next_frame().unwrap())
+            .map(|f| f.cloud.len())
+            .collect();
+        assert_eq!(sizes, [1, 2, 3], "filename order");
+
+        let mut limited = KittiSource::open(&dir).unwrap().limit(2);
+        assert_eq!(limited.len_hint(), Some(2));
+        assert!(limited.next_frame().unwrap().is_some());
+        assert!(limited.next_frame().unwrap().is_some());
+        assert!(limited.next_frame().unwrap().is_none());
+
+        assert!(KittiSource::open(&dir.join("missing")).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn kitti_source_crop_applies() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_source_crop");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let cloud = PointCloud {
+            points: vec![
+                Point { x: 5.0, y: 0.0, z: -1.0, intensity: 0.5 },
+                Point { x: -5.0, y: 0.0, z: -1.0, intensity: 0.5 },
+            ],
+        };
+        write_bin(&dir.join("0.bin"), &cloud).unwrap();
+        let mut src = KittiSource::open(&dir)
+            .unwrap()
+            .with_crop((0.0, 46.08), (-23.04, 23.04), (-3.0, 1.0));
+        let f = src.next_frame().unwrap().unwrap();
+        assert_eq!(f.cloud.len(), 1, "behind-sensor point cropped");
+        fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

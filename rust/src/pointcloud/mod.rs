@@ -82,6 +82,96 @@ pub struct Frame {
     pub cloud: PointCloud,
 }
 
+/// A stream of LiDAR frames — the input half of a
+/// [`crate::coordinator::session::SplitSession`].
+///
+/// Implementations pull frames from wherever they live (the synthetic
+/// generator, a KITTI `.bin` directory, a recorded file) and the session,
+/// the staged pipeline ([`crate::coordinator::pipeline::run_source`]) and
+/// the [`crate::coordinator::batcher::Batcher`] consume them uniformly.
+/// Sources are `Send` so a feeder thread can drive them while the caller
+/// drains results.
+pub trait FrameSource: Send {
+    /// Next frame in the stream; `None` once exhausted. Sources are pull
+    /// based, so backpressure from a bounded consumer throttles I/O for
+    /// free.
+    fn next_frame(&mut self) -> anyhow::Result<Option<Frame>>;
+
+    /// Remaining-frame count, when the source knows it (directory listings
+    /// and replays do; unbounded generators return `None`).
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+
+    /// Human-readable description for logs and session banners.
+    fn describe(&self) -> String {
+        "frames".to_string()
+    }
+}
+
+/// Replay a recorded set of clouds, optionally looping the whole sequence
+/// `repeat` times — the deterministic source the equivalence tests pin the
+/// session against, and the `replay:<file>.bin` CLI spec.
+#[derive(Debug, Clone)]
+pub struct ReplaySource {
+    clouds: std::sync::Arc<Vec<PointCloud>>,
+    label: String,
+    next: usize,
+    total: usize,
+}
+
+impl ReplaySource {
+    /// Replay an in-memory sequence once.
+    pub fn from_clouds(clouds: Vec<PointCloud>) -> ReplaySource {
+        let total = clouds.len();
+        ReplaySource {
+            clouds: std::sync::Arc::new(clouds),
+            label: "replay".to_string(),
+            next: 0,
+            total,
+        }
+    }
+
+    /// Replay one recorded KITTI-format `.bin` scan (see
+    /// [`kitti::read_bin`]).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<ReplaySource> {
+        let cloud = kitti::read_bin(path)?;
+        let mut s = Self::from_clouds(vec![cloud]);
+        s.label = format!("replay:{}", path.display());
+        Ok(s)
+    }
+
+    /// Loop the recorded sequence until `repeat` copies have been played.
+    pub fn repeated(mut self, repeat: usize) -> ReplaySource {
+        self.total = self.clouds.len() * repeat;
+        self
+    }
+}
+
+impl FrameSource for ReplaySource {
+    fn next_frame(&mut self) -> anyhow::Result<Option<Frame>> {
+        if self.next >= self.total || self.clouds.is_empty() {
+            return Ok(None);
+        }
+        let seq = self.next as u64;
+        let cloud = self.clouds[self.next % self.clouds.len()].clone();
+        self.next += 1;
+        Ok(Some(Frame {
+            sensor_id: 0,
+            seq,
+            cloud,
+        }))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.total - self.next.min(self.total))
+    }
+
+    fn describe(&self) -> String {
+        format!("{} ({} frame(s))", self.label, self.total)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +193,37 @@ mod tests {
     fn tensor_shape() {
         let pc = PointCloud::from_flat(&[0.0; 40]);
         assert_eq!(pc.to_tensor().shape(), &[10, 4]);
+    }
+
+    fn cloud_of(n: usize) -> PointCloud {
+        PointCloud::from_flat(&vec![1.0; n * 4])
+    }
+
+    #[test]
+    fn replay_source_plays_in_order_with_hint() {
+        let mut s = ReplaySource::from_clouds(vec![cloud_of(1), cloud_of(2), cloud_of(3)]);
+        assert_eq!(s.len_hint(), Some(3));
+        for expect in [1usize, 2, 3] {
+            let f = s.next_frame().unwrap().expect("frame");
+            assert_eq!(f.cloud.len(), expect);
+            assert_eq!(f.seq as usize + 1, expect);
+        }
+        assert!(s.next_frame().unwrap().is_none());
+        assert_eq!(s.len_hint(), Some(0));
+    }
+
+    #[test]
+    fn replay_source_repeats_the_sequence() {
+        let mut s = ReplaySource::from_clouds(vec![cloud_of(1), cloud_of(2)]).repeated(2);
+        let sizes: Vec<usize> = std::iter::from_fn(|| s.next_frame().unwrap())
+            .map(|f| f.cloud.len())
+            .collect();
+        assert_eq!(sizes, [1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn empty_replay_ends_immediately() {
+        let mut s = ReplaySource::from_clouds(Vec::new()).repeated(5);
+        assert!(s.next_frame().unwrap().is_none());
     }
 }

@@ -9,7 +9,7 @@
 
 use crate::util::rng::Rng;
 
-use super::{Point, PointCloud};
+use super::{Frame, FrameSource, Point, PointCloud};
 
 /// Object class priors (l, w, h in metres) — KITTI metric means.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -270,6 +270,65 @@ impl SceneGenerator {
 
 }
 
+/// [`FrameSource`] over the synthetic generator: the default session
+/// input, yielding `frames` scenes from a seeded stream (or unbounded with
+/// [`SceneSource::unbounded`] for long-running soak sessions).
+pub struct SceneSource {
+    gen: SceneGenerator,
+    seed: u64,
+    seq: u64,
+    remaining: Option<usize>,
+}
+
+impl SceneSource {
+    /// A finite stream of `frames` scenes from `seed`.
+    pub fn new(seed: u64, frames: usize) -> SceneSource {
+        SceneSource {
+            gen: SceneGenerator::with_seed(seed),
+            seed,
+            seq: 0,
+            remaining: Some(frames),
+        }
+    }
+
+    /// An endless scene stream (bound it with the session's own limits).
+    pub fn unbounded(seed: u64) -> SceneSource {
+        SceneSource {
+            remaining: None,
+            ..SceneSource::new(seed, 0)
+        }
+    }
+}
+
+impl FrameSource for SceneSource {
+    fn next_frame(&mut self) -> anyhow::Result<Option<Frame>> {
+        if let Some(n) = self.remaining {
+            if n == 0 {
+                return Ok(None);
+            }
+            self.remaining = Some(n - 1);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        Ok(Some(Frame {
+            sensor_id: 0,
+            seq,
+            cloud: self.gen.generate().cloud,
+        }))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.remaining
+    }
+
+    fn describe(&self) -> String {
+        match self.remaining {
+            Some(_) => format!("synthetic scenes (seed {})", self.seed),
+            None => format!("synthetic scenes (seed {}, unbounded)", self.seed),
+        }
+    }
+}
+
 /// Road height at (x, y): gentle slope away from the sensor.
 fn ground_z(x: f64, _y: f64) -> f64 {
     -1.73 + 0.004 * x
@@ -400,5 +459,18 @@ mod tests {
         let a = g.generate();
         let b = g.generate();
         assert_ne!(a.cloud.points.len(), b.cloud.points.len());
+    }
+
+    #[test]
+    fn scene_source_matches_bare_generator() {
+        let mut src = SceneSource::new(21, 2);
+        let mut gen = SceneGenerator::with_seed(21);
+        for seq in 0..2u64 {
+            let f = src.next_frame().unwrap().expect("frame");
+            assert_eq!(f.seq, seq);
+            assert_eq!(f.cloud.points, gen.generate().cloud.points);
+        }
+        assert!(src.next_frame().unwrap().is_none());
+        assert_eq!(src.len_hint(), Some(0));
     }
 }

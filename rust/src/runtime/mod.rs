@@ -7,7 +7,8 @@
 //!   caller thread, fully offline.
 //! * **pjrt** (`--features pjrt`, needs the `xla` crate) — loads the AOT'd
 //!   HLO-text artifacts and executes them on a pool of PJRT worker threads
-//!   ([`pjrt`]).
+//!   (the `pjrt` module; compiled out of default builds, so not linked
+//!   here — rustdoc on the default feature set would dangle).
 //!
 //! Hot-path contract: modules are addressed by dense [`ModuleId`] (resolved
 //! once at engine construction), inputs flow as `&[Arc<Tensor>]` (no deep

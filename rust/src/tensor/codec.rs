@@ -291,7 +291,7 @@ fn format_payload(t: &Tensor, fmt: Format, index_bytes: usize, value_count: usiz
 
 /// Size in bytes `fmt` would need for this tensor at the current wire
 /// version (without header). Reporting/analysis helper; the encoder's hot
-/// path computes this through the single-walk [`plan`].
+/// path computes this through the single-walk (private) `plan`.
 pub fn payload_size(t: &Tensor, fmt: Format) -> usize {
     let sites = t.site_index();
     let (index_bytes, _) = site_index_cost(sites, WIRE_VERSION);
@@ -654,7 +654,11 @@ impl Packet {
         self.encoded_size_versioned(policy, WIRE_VERSION)
     }
 
-    fn encoded_size_versioned(&self, policy: Policy, version: u8) -> usize {
+    /// [`Packet::encoded_size`] at an explicit framing version (1 = legacy
+    /// flat index, 2 = delta run-list). Costing both versions from one
+    /// packet is how the session reports live v1-vs-v2 wire savings
+    /// without encoding twice.
+    pub fn encoded_size_versioned(&self, policy: Policy, version: u8) -> usize {
         let mut total = 4 + 1 + 4;
         for (name, t) in &self.tensors {
             total += 1 + name.len() + 1 + 1 + 4 * t.shape().len();

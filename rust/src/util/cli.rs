@@ -54,6 +54,16 @@ pub fn parse_threads(v: Option<&str>) -> Result<usize> {
     }
 }
 
+/// Split a `kind:arg` CLI spec (`kitti:/data/scans`, `replay:f.bin`) into
+/// `(kind, Some(arg))`, or `(spec, None)` when there is no `:`. Shared by
+/// `--source` parsing and any future spec-valued flags.
+pub fn split_spec(spec: &str) -> (&str, Option<&str>) {
+    match spec.split_once(':') {
+        Some((kind, arg)) => (kind, Some(arg)),
+        None => (spec, None),
+    }
+}
+
 /// One option's declaration (help text only; parsing is permissive).
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -209,6 +219,13 @@ mod tests {
     fn negative_number_as_value() {
         let a = parse(&["run", "--offset=-3.5"]).unwrap();
         assert_eq!(a.get_parse::<f64>("offset").unwrap(), Some(-3.5));
+    }
+
+    #[test]
+    fn split_spec_splits_on_first_colon() {
+        assert_eq!(split_spec("synthetic"), ("synthetic", None));
+        assert_eq!(split_spec("kitti:/data/scans"), ("kitti", Some("/data/scans")));
+        assert_eq!(split_spec("replay:a:b.bin"), ("replay", Some("a:b.bin")));
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! `SplitSession` facade invariants (require `make artifacts`).
+//!
+//! The contract under test: a session is an *assembly* of source ×
+//! transport × policy, never a semantic change. Whatever the policy
+//! schedule, pipeline depth, or transport, per-frame detections must be
+//! byte-identical to `Engine::run_frame` at the split the session chose
+//! for that frame — no cross-frame state leakage when the split flips
+//! mid-stream.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use splitpoint::config::SystemConfig;
+use splitpoint::coordinator::adaptive::Objective;
+use splitpoint::coordinator::pipeline::{run_source, PipelineConfig};
+use splitpoint::coordinator::remote::{EdgeClient, Server};
+use splitpoint::coordinator::session::{
+    Adaptive, MIN_BANDWIDTH_SAMPLE_BYTES, PolicyContext, SessionFrame, SplitPolicy, SplitSession,
+};
+use splitpoint::coordinator::{Engine, EngineRole};
+use splitpoint::pointcloud::kitti::{self, KittiSource};
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::{FrameSource, PointCloud, ReplaySource};
+use splitpoint::postprocess::Detection;
+use splitpoint::voxel::Voxelizer;
+use splitpoint::{Manifest, SplitPoint};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+/// One shared full engine for the whole test binary.
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            SplitSession::builder()
+                .artifacts(artifacts_dir())
+                .build_engine()
+                .expect("engine")
+        })
+        .clone()
+}
+
+fn clouds(seed0: u64, n: usize) -> Vec<PointCloud> {
+    (0..n)
+        .map(|i| SceneGenerator::with_seed(seed0 + i as u64).generate().cloud)
+        .collect()
+}
+
+fn dets_bitwise_equal(a: &[Detection], b: &[Detection]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && x.score.to_bits() == y.score.to_bits()
+                && x.boxx
+                    .iter()
+                    .zip(&y.boxx)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Test policy: plays a fixed split schedule, one entry per segment.
+struct Scripted {
+    splits: Vec<SplitPoint>,
+    next: usize,
+    every: usize,
+}
+
+impl SplitPolicy for Scripted {
+    fn describe(&self) -> String {
+        "scripted".to_string()
+    }
+
+    fn choose(&mut self, _ctx: &PolicyContext<'_>) -> anyhow::Result<SplitPoint> {
+        let sp = self.splits[self.next % self.splits.len()];
+        self.next += 1;
+        Ok(sp)
+    }
+
+    fn interval(&self) -> usize {
+        self.every
+    }
+}
+
+/// A policy flipping splits mid-stream must yield, for every frame, the
+/// identical detections a `Fixed` policy at that frame's chosen split
+/// would produce — i.e. identical to `Engine::run_frame` at that split,
+/// which the existing suites pin `Fixed` against. Serial and pipelined.
+#[test]
+fn scripted_policy_switching_matches_fixed_per_frame() {
+    let e = engine();
+    let schedule = vec![
+        e.graph().split_by_name("vfe").unwrap(),
+        e.graph().split_by_name("conv1").unwrap(),
+        e.graph().split_by_name("edge_only").unwrap(),
+        e.graph().split_by_name("vfe").unwrap(),
+    ];
+    let stream = clouds(4000, 8);
+    for depth in [1usize, 3] {
+        let mut session = SplitSession::builder()
+            .engine(e.clone())
+            .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+            .policy(Box::new(Scripted {
+                splits: schedule.clone(),
+                next: 0,
+                every: 2,
+            }))
+            .pipeline_depth(depth)
+            .build()
+            .unwrap();
+        let (frames, report) = session.run().unwrap();
+        assert_eq!(frames.len(), stream.len(), "depth {depth}");
+        assert_eq!(report.frames, stream.len());
+        assert!(report.switches >= 2, "schedule must actually flip splits");
+        for f in &frames {
+            // segments of 2: frames 0-1 at vfe, 2-3 at conv1, 4-5 edge_only…
+            let expect = schedule[(f.seq as usize / 2) % schedule.len()];
+            assert_eq!(f.split, expect, "frame {} ran the scheduled split", f.seq);
+            let serial = e
+                .run_frame(&stream[f.source_seq as usize], f.split)
+                .unwrap();
+            assert!(
+                dets_bitwise_equal(&f.output.detections, &serial.detections),
+                "frame {} diverged from run_frame at split '{}' (depth {depth})",
+                f.seq,
+                f.split_label
+            );
+            assert_eq!(f.output.uplink_bytes, serial.timing.uplink_bytes);
+            assert_eq!(f.output.uplink_v1_bytes, serial.timing.uplink_v1_bytes);
+        }
+    }
+}
+
+/// The adaptive policy (live-bandwidth cost model + hysteresis) may pick
+/// any split it likes, but every frame must still be byte-identical to a
+/// fixed run at whatever it picked.
+#[test]
+fn adaptive_policy_frames_match_fixed_at_chosen_splits() {
+    let e = engine();
+    let stream = clouds(5000, 6);
+    let mut session = SplitSession::builder()
+        .engine(e.clone())
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .policy(Box::new(Adaptive::new(Objective::InferenceTime).every(3)))
+        .build()
+        .unwrap();
+    let (frames, report) = session.run().unwrap();
+    assert_eq!(frames.len(), stream.len());
+    if frames
+        .iter()
+        .any(|f| f.output.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES)
+    {
+        assert!(
+            report.bandwidth_bps.is_some(),
+            "transport observed transfers"
+        );
+    }
+    for f in &frames {
+        let serial = e
+            .run_frame(&stream[f.source_seq as usize], f.split)
+            .unwrap();
+        assert!(
+            dets_bitwise_equal(&f.output.detections, &serial.detections),
+            "frame {} diverged from fixed split '{}'",
+            f.seq,
+            f.split_label
+        );
+    }
+}
+
+/// KITTI `.bin` round trip: a generated scene written to disk and read
+/// back through `FrameSource` must voxelize to exactly the grids of the
+/// in-memory path (same occupancy, same sums) — the loader may not
+/// perturb a single point.
+#[test]
+fn kitti_source_matches_in_memory_voxelization() {
+    let m = manifest();
+    let dir = std::env::temp_dir().join("splitpoint_session_kitti_fixture");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let scenes = clouds(6000, 3);
+    for (i, cloud) in scenes.iter().enumerate() {
+        kitti::write_bin(&dir.join(format!("{i:06}.bin")), cloud).unwrap();
+    }
+
+    let vox_disk = Voxelizer::from_config(&m.config);
+    let vox_mem = Voxelizer::from_config(&m.config);
+    let mut src = KittiSource::open(&dir).unwrap();
+    assert_eq!(src.len_hint(), Some(scenes.len()));
+    let mut seen = 0;
+    while let Some(frame) = src.next_frame().unwrap() {
+        let original = &scenes[frame.seq as usize];
+        assert_eq!(
+            frame.cloud.points, original.points,
+            "scan {} round-tripped bit-exactly",
+            frame.seq
+        );
+        let g_disk = vox_disk.voxelize(&frame.cloud);
+        let g_mem = vox_mem.voxelize(original);
+        assert_eq!(
+            Voxelizer::occupied(&g_disk),
+            Voxelizer::occupied(&g_mem),
+            "occupancy parity for scan {}",
+            frame.seq
+        );
+        assert_eq!(g_disk.in_range, g_mem.in_range);
+        assert_eq!(g_disk.sum.data(), g_mem.sum.data());
+        assert_eq!(g_disk.cnt.data(), g_mem.cnt.data());
+        seen += 1;
+    }
+    assert_eq!(seen, scenes.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `pipeline::run_source` streams a `FrameSource` directly: results equal
+/// the serial path frame for frame.
+#[test]
+fn pipeline_consumes_frame_source_directly() {
+    let e = engine();
+    let sp = e.graph().split_by_name("vfe").unwrap();
+    let stream = clouds(7000, 5);
+    let mut src = ReplaySource::from_clouds(stream.clone());
+    let (results, report) = run_source(
+        e.clone(),
+        sp,
+        &mut src,
+        PipelineConfig {
+            depth: 3,
+            tail_workers: 2,
+        },
+    )
+    .unwrap();
+    assert_eq!(results.len(), stream.len());
+    assert_eq!(report.frames, stream.len());
+    for (i, (got, cloud)) in results.iter().zip(&stream).enumerate() {
+        let serial = e.run_frame(cloud, sp).unwrap();
+        assert!(
+            dets_bitwise_equal(&got.detections, &serial.detections),
+            "frame {i} diverged through run_source"
+        );
+    }
+}
+
+/// Server-only mode: a tail-role engine defers the voxelizer (edge-side
+/// scratch state) until a raw-offload request forces preprocessing onto
+/// the server — and serves in-network splits without ever building it.
+#[test]
+fn server_tail_engine_builds_edge_state_lazily() {
+    let m = manifest();
+    let full = engine();
+    let tail = Arc::new(
+        Engine::with_runtime_role(
+            &m,
+            SystemConfig::paper(),
+            full.runtime().clone(),
+            EngineRole::ServerTail,
+        )
+        .unwrap(),
+    );
+    assert_eq!(tail.role(), EngineRole::ServerTail);
+    assert!(!tail.voxelizer_ready(), "tail engine starts without edge state");
+
+    let scene = SceneGenerator::with_seed(8100).generate();
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    assert!(
+        tail.head_stage(&scene.cloud, sp).is_err(),
+        "tail engine must refuse head stages"
+    );
+
+    let server = Server::spawn("127.0.0.1:0", tail.clone()).unwrap();
+    let mut client = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+
+    // in-network split: the tail half runs server-side, no voxelizer needed
+    let local = full.run_frame(&scene.cloud, sp).unwrap();
+    let (dets, timing) = client.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_bitwise_equal(&dets, &local.detections));
+    assert_eq!(timing.uplink_v1_bytes, local.timing.uplink_v1_bytes);
+    assert!(
+        !tail.voxelizer_ready(),
+        "vfe split never touches the server-side voxelizer"
+    );
+
+    // raw offload: preprocessing moves to the server, which lazily builds
+    // the voxelizer on first use
+    let raw = full.graph().split_by_name("raw").unwrap();
+    let local_raw = full.run_frame(&scene.cloud, raw).unwrap();
+    let (dets_raw, _) = client.run_frame(&scene.cloud, raw).unwrap();
+    assert!(dets_bitwise_equal(&dets_raw, &local_raw.detections));
+    assert!(tail.voxelizer_ready(), "raw offload builds it on demand");
+
+    client.shutdown().unwrap();
+    server.shutdown();
+}
+
+/// An edge-role engine refuses tail stages (the complementary guard).
+#[test]
+fn edge_head_engine_refuses_tail_stages() {
+    let m = manifest();
+    let full = engine();
+    let edge = Engine::with_runtime_role(
+        &m,
+        SystemConfig::paper(),
+        full.runtime().clone(),
+        EngineRole::EdgeHead,
+    )
+    .unwrap();
+    let scene = SceneGenerator::with_seed(8200).generate();
+    let sp = edge.graph().split_by_name("vfe").unwrap();
+    let head = edge.head_stage(&scene.cloud, sp).unwrap();
+    let transferred = edge.transfer_stage(head).unwrap();
+    assert!(edge.tail_stage(transferred).is_err());
+}
+
+/// The acceptance sweep: a KITTI `.bin` directory streamed end-to-end
+/// through the session builder's TCP transport at pipeline depth 4
+/// (`serve-edge --source kitti:<dir> --pipeline-depth 4`), byte-identical
+/// to the in-process path, with the v1-vs-v2 wire accounting populated.
+#[test]
+fn kitti_directory_streams_through_tcp_session_at_depth_4() {
+    let full = engine();
+    let dir = std::env::temp_dir().join("splitpoint_session_kitti_tcp");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let scenes = clouds(9000, 6);
+    for (i, cloud) in scenes.iter().enumerate() {
+        kitti::write_bin(&dir.join(format!("{i:06}.bin")), cloud).unwrap();
+    }
+
+    let server = SplitSession::builder()
+        .artifacts(artifacts_dir())
+        .build_server("127.0.0.1:0")
+        .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut session = SplitSession::builder()
+        .engine(full.clone())
+        .source_spec(Some(&format!("kitti:{}", dir.display())), 1, None)
+        .unwrap()
+        .tcp(&addr)
+        .pipeline_depth(4)
+        .build()
+        .unwrap();
+
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let mut count = 0usize;
+    let report = session
+        .run_with(|f: SessionFrame| {
+            let local = full.run_frame(&scenes[f.source_seq as usize], sp).unwrap();
+            assert!(
+                dets_bitwise_equal(&f.output.detections, &local.detections),
+                "scan {} diverged over the pipelined socket",
+                f.source_seq
+            );
+            assert_eq!(f.output.uplink_bytes, local.timing.uplink_bytes);
+            count += 1;
+        })
+        .unwrap();
+    assert_eq!(count, scenes.len());
+    assert_eq!(report.frames, scenes.len());
+    assert!(report.uplink_bytes > 0);
+    assert!(
+        report.uplink_v1_bytes > 0,
+        "v1 twin accounting must be populated for the EXPERIMENTS sweep"
+    );
+    assert!(report.wire_savings().is_some());
+    assert!(report.bandwidth_bps.is_some(), "EWMA fed by real transfers");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `--source` spec parsing errors are actionable.
+#[test]
+fn parse_source_rejects_unknown_specs() {
+    use splitpoint::coordinator::session::parse_source;
+    assert!(parse_source(Some("ftp:nope"), 1, None).is_err());
+    assert!(parse_source(Some("kitti:/definitely/missing/dir"), 1, None).is_err());
+    let mut synth = parse_source(None, 3, Some(2)).unwrap();
+    assert_eq!(synth.len_hint(), Some(2));
+    assert!(synth.next_frame().unwrap().is_some());
+}
