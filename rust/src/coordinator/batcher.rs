@@ -166,6 +166,108 @@ impl Batcher {
     }
 }
 
+/// Deterministic multi-sensor fan-in: N [`FrameSource`]s merged into one
+/// stream by driving the [`Batcher`] one round-robin round at a time —
+/// one frame per live sensor per round, flushed as a batch — so S
+/// synchronized LiDARs interleave as `s0 s1 … sN s0 s1 …` with per-sensor
+/// FIFO order intact (SC-MII's continuous multi-sensor infrastructure
+/// setting, without the nondeterminism of free-running sensor threads;
+/// for wall-clock-paced sensors, spawn threads over
+/// [`Batcher::feed_from_source`] instead).
+///
+/// Frames are re-tagged with `sensor_id = source index`; each source's
+/// own `seq` numbering is preserved, and both travel through the session
+/// to `SessionFrame`/`SessionReport::sensor_usage`.
+pub struct MultiSource {
+    sources: Vec<Option<Box<dyn FrameSource>>>,
+    batcher: Batcher,
+    buffer: VecDeque<Frame>,
+    labels: Vec<String>,
+    drained: bool,
+}
+
+impl MultiSource {
+    /// Round-robin fan-in over `sources` (panics on an empty list).
+    pub fn round_robin(sources: Vec<Box<dyn FrameSource>>) -> MultiSource {
+        assert!(!sources.is_empty(), "fan-in needs at least one source");
+        let labels = sources.iter().map(|s| s.describe()).collect();
+        let batcher = Batcher::new(BatchPolicy {
+            max_frames: sources.len(),
+            // zero wait: a fan-in round is pushed in full before the
+            // batch is taken, so the flush never blocks on the clock and
+            // the interleave is deterministic
+            max_wait: Duration::ZERO,
+        });
+        MultiSource {
+            sources: sources.into_iter().map(Some).collect(),
+            batcher,
+            buffer: VecDeque::new(),
+            labels,
+            drained: false,
+        }
+    }
+}
+
+impl FrameSource for MultiSource {
+    fn next_frame(&mut self) -> anyhow::Result<Option<Frame>> {
+        loop {
+            if let Some(f) = self.buffer.pop_front() {
+                return Ok(Some(f));
+            }
+            if self.drained {
+                return Ok(None);
+            }
+            // one fan-in round: pull one frame from every live sensor
+            // into the shared batcher, then take the flushed batch
+            let mut pushed = 0;
+            for (i, slot) in self.sources.iter_mut().enumerate() {
+                let exhausted = match slot {
+                    Some(src) => match src.next_frame()? {
+                        Some(mut frame) => {
+                            frame.sensor_id = i as u32;
+                            self.batcher.push(frame);
+                            pushed += 1;
+                            false
+                        }
+                        None => true,
+                    },
+                    None => false,
+                };
+                if exhausted {
+                    *slot = None;
+                }
+            }
+            if pushed == 0 {
+                self.batcher.close();
+                while let Some(batch) = self.batcher.next_batch() {
+                    self.buffer.extend(batch);
+                }
+                self.drained = true;
+                continue;
+            }
+            if let Some(batch) = self.batcher.next_batch() {
+                self.buffer.extend(batch);
+            }
+        }
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let mut total = self.buffer.len() + self.batcher.pending();
+        for slot in self.sources.iter().flatten() {
+            total += slot.len_hint()?;
+        }
+        Some(total)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "fan-in({} sensor(s): {})",
+            self.sources.len(),
+            self.labels.join(" | ")
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +377,45 @@ mod tests {
             total += batch.len();
         }
         assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn multi_source_round_robins_and_retags_sensors() {
+        use crate::pointcloud::ReplaySource;
+        let cloud_of = |n: usize| PointCloud::from_flat(&vec![1.0; n * 4]);
+        // sensor 0 has 3 frames, sensor 1 has 1, sensor 2 has 2 —
+        // exhausted sensors drop out of later rounds
+        let mut m = MultiSource::round_robin(vec![
+            Box::new(ReplaySource::from_clouds(vec![cloud_of(1), cloud_of(4), cloud_of(6)])),
+            Box::new(ReplaySource::from_clouds(vec![cloud_of(2)])),
+            Box::new(ReplaySource::from_clouds(vec![cloud_of(3), cloud_of(5)])),
+        ]);
+        assert_eq!(m.len_hint(), Some(6));
+        let mut seen = Vec::new();
+        while let Some(f) = m.next_frame().unwrap() {
+            seen.push((f.sensor_id, f.seq, f.cloud.len()));
+        }
+        assert_eq!(
+            seen,
+            [
+                (0, 0, 1),
+                (1, 0, 2),
+                (2, 0, 3),
+                (0, 1, 4),
+                (2, 1, 5),
+                (0, 2, 6),
+            ],
+            "round-robin interleave with per-sensor seq preserved"
+        );
+        assert_eq!(m.len_hint(), Some(0));
+        assert!(m.next_frame().unwrap().is_none(), "stays exhausted");
+        assert!(m.describe().contains("3 sensor(s)"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn multi_source_rejects_empty_source_list() {
+        let _ = MultiSource::round_robin(Vec::new());
     }
 
     #[test]

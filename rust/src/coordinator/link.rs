@@ -187,4 +187,34 @@ mod tests {
         assert_eq!(est.bandwidth_bps(), None);
         assert_eq!(est.samples(), 0);
     }
+
+    #[test]
+    fn estimator_first_sample_seeds_verbatim() {
+        // the first sample must seed the EWMA exactly (not be blended
+        // toward an implicit zero prior by alpha), whatever alpha is
+        for alpha in [0.05, 0.3, 1.0] {
+            let mut est = BandwidthEstimator::new(alpha);
+            est.observe(3_000_000, SimTime::from_secs_f64(1.5));
+            let bps = est.bandwidth_bps().expect("seeded");
+            assert!(
+                (bps - 2e6).abs() < 1e-6,
+                "alpha {alpha}: first sample taken verbatim, got {bps}"
+            );
+            assert_eq!(est.samples(), 1);
+        }
+    }
+
+    #[test]
+    fn estimator_zero_duration_guard_is_exact_at_the_boundary() {
+        // sub-nanosecond transfers are rejected (dividing by them would
+        // produce absurd petabyte/s samples); anything at or above the
+        // 1 ns floor is a real sample
+        let mut est = BandwidthEstimator::default();
+        est.observe(1_000_000, SimTime::from_secs_f64(1e-10));
+        assert_eq!(est.bandwidth_bps(), None, "sub-ns elapsed rejected");
+        assert_eq!(est.samples(), 0);
+        est.observe(1_000_000, SimTime::from_secs_f64(1e-9));
+        assert!(est.bandwidth_bps().is_some(), "1 ns floor accepted");
+        assert_eq!(est.samples(), 1);
+    }
 }

@@ -466,6 +466,16 @@ impl Pipeline {
         *self.next_seq.lock().unwrap()
     }
 
+    /// Frames submitted but not yet delivered through
+    /// [`Pipeline::next_result`] — still inside a stage, queued, or parked
+    /// in the reorder buffer. This is the occupancy a continuous session
+    /// keeps above zero across segment boundaries.
+    pub fn in_flight(&self) -> usize {
+        let submitted = self.submitted();
+        let delivered = self.reorder.state.lock().unwrap().next;
+        submitted.saturating_sub(delivered) as usize
+    }
+
     /// Snapshot of per-stage latency and queue occupancy.
     pub fn report(&self) -> PipelineReport {
         PipelineReport {

@@ -276,6 +276,17 @@ impl EdgeClient {
         write_message(&mut self.stream, &Message::Shutdown)
     }
 
+    /// Convert this client into a persistent incremental stream handle
+    /// (see [`EdgeStream`]): frames are submitted one at a time and the
+    /// in-flight window survives across submit bursts, so a session
+    /// feeding segments into the handle never drains the pipe at a
+    /// segment boundary. `depth` caps in-flight frames; `depth <= 1`
+    /// still overlaps head(N+1) with the server round trip of frame N
+    /// one frame at a time.
+    pub fn into_stream(self, depth: usize) -> Result<EdgeStream> {
+        EdgeStream::spawn(self.stream, self.engine, self.next_id, depth)
+    }
+
     /// Pipelined streaming: overlap the local head compute of frame N+1
     /// with the server round trip of frame N.
     ///
@@ -433,10 +444,50 @@ fn receive_reply(
     Ok((detections, server_nanos, round_trip))
 }
 
-/// Writer half of the pipelined stream: head compute + send for every
-/// cloud, in order. The pending record goes onto the bounded channel
-/// *before* the socket write, so the channel capacity caps in-flight
-/// frames and the reader always has the store a reply refers to.
+/// One frame of the writer half, shared by the one-shot
+/// [`EdgeClient::run_stream`] and the persistent [`EdgeStream`]: head
+/// compute, wire encode, park the pending record on the bounded channel
+/// (*before* the socket write, so the channel capacity caps in-flight
+/// frames and the reader always has the store a reply refers to), then
+/// send the Infer message. Returns `Ok(false)` when the reader went away
+/// (stop quietly), `Ok(true)` on success.
+fn send_frame(
+    engine: &Engine,
+    stream: &mut TcpStream,
+    cloud: &PointCloud,
+    sp: SplitPoint,
+    request_id: u64,
+    tx: &std::sync::mpsc::SyncSender<PendingRequest>,
+) -> Result<bool> {
+    let t_start = Instant::now();
+    let mut head = engine.head_stage(cloud, sp)?;
+    let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+    let (store, _) = head.into_store();
+    let pending = PendingRequest {
+        request_id,
+        store,
+        edge_compute: SimTime::from_duration(t_start.elapsed()),
+        uplink_bytes: bytes.len(),
+        uplink_v1_bytes,
+        t_start,
+        t_send: Instant::now(),
+    };
+    if tx.send(pending).is_err() {
+        return Ok(false); // reader bailed
+    }
+    write_message(
+        stream,
+        &Message::Infer {
+            request_id,
+            head_len: sp.head_len as u8,
+            packet: bytes,
+        },
+    )?;
+    Ok(true)
+}
+
+/// Writer half of the pipelined stream: [`send_frame`] for every cloud,
+/// in order.
 fn send_stream(
     engine: &Engine,
     stream: &mut TcpStream,
@@ -445,33 +496,10 @@ fn send_stream(
     first_id: u64,
     tx: &std::sync::mpsc::SyncSender<PendingRequest>,
 ) -> Result<()> {
-    let codec = engine.config().codec;
     for (i, cloud) in clouds.iter().enumerate() {
-        let request_id = first_id + i as u64;
-        let t_start = Instant::now();
-        let mut head = engine.head_stage(cloud, sp)?;
-        let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, codec);
-        let (store, _) = head.into_store();
-        let pending = PendingRequest {
-            request_id,
-            store,
-            edge_compute: SimTime::from_duration(t_start.elapsed()),
-            uplink_bytes: bytes.len(),
-            uplink_v1_bytes,
-            t_start,
-            t_send: Instant::now(),
-        };
-        if tx.send(pending).is_err() {
+        if !send_frame(engine, stream, cloud, sp, first_id + i as u64, tx)? {
             return Ok(()); // reader bailed; stop quietly
         }
-        write_message(
-            stream,
-            &Message::Infer {
-                request_id,
-                head_len: sp.head_len as u8,
-                packet: bytes,
-            },
-        )?;
     }
     Ok(())
 }
@@ -486,4 +514,195 @@ struct PendingRequest {
     uplink_v1_bytes: usize,
     t_start: Instant,
     t_send: Instant,
+}
+
+/// One frame queued into an [`EdgeStream`]: the split travels with the
+/// frame, so a policy flip needs no new connection — only the flush the
+/// session already performs.
+struct StreamJob {
+    cloud: PointCloud,
+    sp: SplitPoint,
+}
+
+/// Persistent incremental streaming handle over one TCP connection — the
+/// session-facing inverse of the one-shot [`EdgeClient::run_stream`].
+///
+/// `run_stream` drains its whole in-flight window before returning, which
+/// costs ~depth×RTT of idle wire at every segment boundary of a
+/// fixed-policy stream. An `EdgeStream` instead keeps a writer thread and
+/// the bounded pending queue alive across submit bursts: callers
+/// interleave [`EdgeStream::submit`] and [`EdgeStream::recv`] (results
+/// come back in submission order, byte-identical to the serial client —
+/// both ends run the same stage functions), and the window only empties
+/// when the caller explicitly drains it.
+///
+/// In-flight frames are capped by the pending channel: the writer blocks
+/// forwarding request `depth + 1` until a reply has been received, so a
+/// caller that never lets `in_flight()` exceed `depth` before submitting
+/// can never deadlock.
+pub struct EdgeStream {
+    /// reader half (and shutdown control) of the shared socket
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    job_tx: Option<std::sync::mpsc::SyncSender<StreamJob>>,
+    pending_rx: Option<std::sync::mpsc::Receiver<PendingRequest>>,
+    writer: Option<std::thread::JoinHandle<Result<()>>>,
+    submitted: u64,
+    delivered: u64,
+}
+
+impl EdgeStream {
+    fn spawn(
+        stream: TcpStream,
+        engine: Arc<Engine>,
+        first_id: u64,
+        depth: usize,
+    ) -> Result<EdgeStream> {
+        let depth = depth.max(1);
+        let mut write_stream = stream.try_clone()?;
+        let writer_engine = engine.clone();
+        // jobs hand off one at a time; the *pending* channel is what caps
+        // the in-flight window (same scheme as `run_stream`)
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<StreamJob>(1);
+        let (pending_tx, pending_rx) = std::sync::mpsc::sync_channel::<PendingRequest>(depth);
+        let writer = std::thread::Builder::new()
+            .name("sp-edge-stream".into())
+            .spawn(move || -> Result<()> {
+                let mut request_id = first_id;
+                while let Ok(job) = job_rx.recv() {
+                    let sent = send_frame(
+                        &writer_engine,
+                        &mut write_stream,
+                        &job.cloud,
+                        job.sp,
+                        request_id,
+                        &pending_tx,
+                    );
+                    match sent {
+                        Ok(true) => request_id += 1,
+                        Ok(false) => return Ok(()), // reader bailed; stop quietly
+                        Err(e) => {
+                            // unblock a reader waiting on a reply that
+                            // will never arrive
+                            let _ = write_stream.shutdown(std::net::Shutdown::Both);
+                            return Err(e);
+                        }
+                    }
+                }
+                Ok(())
+            })?;
+        Ok(EdgeStream {
+            stream,
+            engine,
+            job_tx: Some(job_tx),
+            pending_rx: Some(pending_rx),
+            writer: Some(writer),
+            submitted: 0,
+            delivered: 0,
+        })
+    }
+
+    /// Frames submitted but not yet delivered through [`EdgeStream::recv`].
+    pub fn in_flight(&self) -> usize {
+        (self.submitted - self.delivered) as usize
+    }
+
+    /// Queue one frame at split `sp`. Returns as soon as the writer thread
+    /// has the frame; keep `in_flight()` at or below the stream's depth
+    /// before calling (the session's window loop) so the writer can always
+    /// make progress.
+    pub fn submit(&mut self, cloud: PointCloud, sp: SplitPoint) -> Result<()> {
+        let tx = self.job_tx.as_ref().context("edge stream already finished")?;
+        if tx.send(StreamJob { cloud, sp }).is_err() {
+            return Err(self.writer_error());
+        }
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Receive the next completed frame, in submission order. Blocks until
+    /// the server's reply lands; erroring with nothing in flight.
+    pub fn recv(&mut self) -> Result<(Vec<Detection>, RemoteTiming)> {
+        if self.in_flight() == 0 {
+            bail!("edge stream recv with no frame in flight");
+        }
+        let rx = self.pending_rx.as_ref().context("edge stream already finished")?;
+        let mut pending = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return Err(self.writer_error()),
+        };
+        let engine = self.engine.clone();
+        let reply = receive_reply(
+            &mut self.stream,
+            &engine,
+            pending.request_id,
+            &mut pending.store,
+            pending.t_send,
+        );
+        let (detections, server_nanos, round_trip) = match reply {
+            Ok(r) => r,
+            Err(e) => {
+                // unblock a writer stuck in a socket write before the
+                // error propagates (mirrors `run_stream`)
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                return Err(e);
+            }
+        };
+        self.delivered += 1;
+        Ok((
+            detections,
+            RemoteTiming {
+                edge_compute: pending.edge_compute,
+                uplink_bytes: pending.uplink_bytes,
+                uplink_v1_bytes: pending.uplink_v1_bytes,
+                round_trip,
+                server_compute: SimTime {
+                    nanos: server_nanos as u128,
+                },
+                inference_time: SimTime::from_duration(pending.t_start.elapsed()),
+            },
+        ))
+    }
+
+    /// Stop the writer and join it, surfacing its error. Idempotent.
+    fn teardown(&mut self) -> Result<()> {
+        self.job_tx.take();
+        self.pending_rx.take();
+        match self.writer.take() {
+            Some(w) => w
+                .join()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("edge stream writer panicked"))),
+            None => Ok(()),
+        }
+    }
+
+    fn writer_error(&mut self) -> anyhow::Error {
+        match self.teardown() {
+            Err(e) => e,
+            Ok(()) => anyhow::anyhow!("edge stream writer exited early"),
+        }
+    }
+
+    /// Close the stream: join the writer and send the protocol Shutdown.
+    /// Frames still in flight (error paths) are abandoned — the socket is
+    /// shut down instead so neither side can block forever.
+    pub fn shutdown(mut self) -> Result<()> {
+        if self.in_flight() > 0 {
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            return self.teardown();
+        }
+        let res = self.teardown();
+        let msg = write_message(&mut self.stream, &Message::Shutdown);
+        res.and(msg)
+    }
+}
+
+impl Drop for EdgeStream {
+    fn drop(&mut self) {
+        if self.writer.is_some() {
+            // never joined: unblock a writer stuck in a socket write first
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            let _ = self.teardown();
+        }
+    }
 }

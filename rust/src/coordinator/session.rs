@@ -36,43 +36,57 @@
 //! byte-identical to calling [`Engine::run_frame`] at the same split —
 //! whatever the source, transport, pipeline depth, or policy schedule.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context as _, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::config::SystemConfig;
 use crate::coordinator::adaptive::{self, Objective};
+use crate::coordinator::batcher::MultiSource;
 use crate::coordinator::engine::{Engine, EngineRole, FrameResult, TimingBreakdown};
 use crate::coordinator::link::BandwidthEstimator;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
-use crate::coordinator::remote::{EdgeClient, Server};
+use crate::coordinator::remote::{EdgeClient, EdgeStream, RemoteTiming, Server};
 use crate::metrics::SimTime;
 use crate::model::graph::SplitPoint;
 use crate::model::manifest::Manifest;
-use crate::pointcloud::kitti::KittiSource;
+use crate::pointcloud::kitti::{KittiSource, RecordedSource};
 use crate::pointcloud::scene::SceneSource;
-use crate::pointcloud::{FrameSource, PointCloud, ReplaySource};
+use crate::pointcloud::{Frame, FrameSource, PointCloud, RecordingSource, ReplaySource};
 use crate::postprocess::Detection;
 use crate::runtime::XlaRuntime;
 
-/// Frames pulled from the source per policy segment, independent of the
-/// policy's re-evaluation interval — bounds session memory on unbounded
-/// sources while keeping the staged pipeline warm inside a segment.
+/// Upper bound on frames between policy re-evaluations, whatever the
+/// policy's own `interval()` asks for — bounds how long a stale split
+/// decision can persist on an unbounded stream.
 ///
-/// Known trades at segment boundaries (both ROADMAP follow-ons):
-/// * the session pre-reads a segment before executing it, so source I/O
-///   and compute alternate rather than overlap across the boundary (for
-///   maximal read/compute overlap on a fixed split, drive
-///   [`crate::coordinator::pipeline::run_source`] directly — its bounded
-///   input queue backpressures the reader frame by frame);
-/// * the TCP transport drains its in-flight window at every boundary
-///   (`EdgeClient::run_stream` is one-shot), costing ~depth×RTT of idle
-///   wire per `SEGMENT_MAX` frames on a fixed-policy stream. The
-///   in-process transport avoids this with its warm cached pipeline.
+/// Since the continuous-session rework the stream no longer *drains* at
+/// these boundaries: frames keep flowing through the transport's
+/// in-flight window, the bounded feeder thread keeps reading ahead, and
+/// only an actual split flip flushes the window.
 const SEGMENT_MAX: usize = 32;
+
+/// Frames the feeder thread may read ahead of the executing stream — the
+/// bound that lets KITTI `.bin` disk I/O overlap head/transfer/tail
+/// compute across segment boundaries without ballooning memory on
+/// unbounded sources.
+const FEED_AHEAD: usize = 4;
+
+/// When a bandwidth-consuming policy ([`SplitPolicy::wants_bandwidth`])
+/// runs over a transport that can only sample empty-window frames
+/// honestly ([`Transport::needs_queue_free_samples`] — real TCP), the
+/// session deliberately drains the in-flight window at every Nth policy
+/// boundary so the next frame enters an empty window and yields a
+/// queue-free bandwidth sample — on a continuously full TCP window no
+/// frame after the first is otherwise sample-safe, and the adaptive
+/// policy would price splits from stale link data forever. Fixed-style
+/// policies, and any policy on the in-process transport (which samples
+/// every frame on the virtual clock), never pay this: their streams stay
+/// continuously pipelined.
+const RESAMPLE_BOUNDARIES: usize = 4;
 
 // ------------------------------------------------------------ transports
 
@@ -104,6 +118,17 @@ pub struct FrameOutput {
 /// The tail half of the split: carries encoded head output to wherever
 /// the server nodes run and brings detections back.
 ///
+/// Incremental streaming API (the continuous-session rework): the caller
+/// feeds frames one at a time with [`Transport::submit`] and drains
+/// completed frames — in submission order, byte-identical to serial
+/// execution — with [`Transport::recv`]. The in-flight window is the
+/// caller's responsibility: the session never lets
+/// [`Transport::in_flight`] exceed the pipeline depth before submitting,
+/// and only drains the window fully when the split policy actually flips,
+/// at a periodic telemetry boundary for bandwidth-consuming policies
+/// ([`SplitPolicy::wants_bandwidth`]), or at end of stream. This is what
+/// keeps a fixed-policy TCP stream's pipe busy across segment boundaries.
+///
 /// Implementations observe their own transfers into a
 /// [`BandwidthEstimator`]; [`Transport::bandwidth_bps`] is what the
 /// adaptive policy reads.
@@ -111,18 +136,50 @@ pub trait Transport: Send {
     /// Short name for banners/logs ("in-process", "tcp:…").
     fn describe(&self) -> String;
 
-    /// Execute `clouds` at split `sp` (ownership passes to the transport —
-    /// segments are moved, never cloned). `pipe.depth > 1` requests
-    /// pipelined execution; results must come back in submission order
-    /// and be byte-identical to serial execution (the schedule is never
-    /// allowed to change semantics).
+    /// Submit one frame at split `sp` into the in-flight window
+    /// (ownership of the cloud passes to the transport — frames are
+    /// moved, never cloned). `pipe.depth > 1` requests pipelined
+    /// execution. Callers must not change `sp` or `pipe` while frames
+    /// are in flight — the session flushes first.
+    fn submit(
+        &mut self,
+        engine: &Arc<Engine>,
+        sp: SplitPoint,
+        cloud: PointCloud,
+        pipe: PipelineConfig,
+    ) -> Result<()>;
+
+    /// Deliver the next completed frame in submission order, blocking
+    /// until it is ready. Calling with nothing in flight is an error.
+    fn recv(&mut self, engine: &Arc<Engine>) -> Result<FrameOutput>;
+
+    /// Frames submitted but not yet delivered through [`Transport::recv`].
+    fn in_flight(&self) -> usize;
+
+    /// Convenience batch executor over the streaming API: submit every
+    /// cloud with a `pipe.depth`-bounded window, then drain. Provided for
+    /// tests and one-shot callers; the session drives submit/recv
+    /// directly so the window survives across its segment boundaries.
     fn run_segment(
         &mut self,
         engine: &Arc<Engine>,
         sp: SplitPoint,
         clouds: Vec<PointCloud>,
         pipe: PipelineConfig,
-    ) -> Result<Vec<FrameOutput>>;
+    ) -> Result<Vec<FrameOutput>> {
+        let window = pipe.depth.max(1);
+        let mut out = Vec::with_capacity(clouds.len());
+        for cloud in clouds {
+            while self.in_flight() >= window {
+                out.push(self.recv(engine)?);
+            }
+            self.submit(engine, sp, cloud, pipe)?;
+        }
+        while self.in_flight() > 0 {
+            out.push(self.recv(engine)?);
+        }
+        Ok(out)
+    }
 
     /// Live uplink-bandwidth estimate (bytes/second) from observed
     /// transfers; `None` before the first sample.
@@ -133,7 +190,20 @@ pub trait Transport: Send {
         None
     }
 
-    /// Flush and release transport resources (idempotent).
+    /// Whether this transport can only produce honest bandwidth samples
+    /// from frames that entered an *empty* window. True for real-wire
+    /// transports ([`Tcp`]): a queued frame's round trip includes waiting
+    /// behind other frames' server compute, which would deflate the
+    /// estimate. False (default) for transports that sample every frame
+    /// cleanly ([`InProcess`] prices the uplink on the virtual clock,
+    /// queueing-free by construction) — the session then never pays the
+    /// periodic telemetry drain.
+    fn needs_queue_free_samples(&self) -> bool {
+        false
+    }
+
+    /// Flush and release transport resources (idempotent). In-flight
+    /// frames still undelivered on an error path are abandoned.
     fn close(&mut self) -> Result<()> {
         Ok(())
     }
@@ -150,6 +220,9 @@ pub struct InProcess {
     /// the session's final report covers the whole stream, not just the
     /// last pipeline instance
     retired: Vec<(String, PipelineReport)>,
+    /// serial-mode (`depth <= 1`) results completed at submit time,
+    /// awaiting recv
+    ready: VecDeque<FrameResult>,
 }
 
 struct CachedPipeline {
@@ -171,6 +244,7 @@ impl InProcess {
             estimator: BandwidthEstimator::default(),
             cached: None,
             retired: Vec::new(),
+            ready: VecDeque::new(),
         }
     }
 
@@ -227,54 +301,73 @@ impl Transport for InProcess {
         "in-process (virtual clock)".to_string()
     }
 
-    fn run_segment(
+    fn submit(
         &mut self,
         engine: &Arc<Engine>,
         sp: SplitPoint,
-        clouds: Vec<PointCloud>,
+        cloud: PointCloud,
         pipe: PipelineConfig,
-    ) -> Result<Vec<FrameOutput>> {
-        let results: Vec<FrameResult> = if pipe.depth <= 1 {
+    ) -> Result<()> {
+        if pipe.depth <= 1 {
+            // serial path: execute immediately, deliver lazily — the
+            // session's window loop recv's before the next submit
             self.retire_pipeline();
-            clouds
-                .iter()
-                .map(|c| engine.run_frame(c, sp))
-                .collect::<Result<_>>()?
-        } else {
-            let stale = match &self.cached {
-                Some(c) => {
-                    c.sp != sp || c.depth != pipe.depth || c.tail_workers != pipe.tail_workers
-                }
-                None => true,
-            };
-            if stale {
-                self.retire_pipeline();
-                self.cached = Some(CachedPipeline {
-                    sp,
-                    depth: pipe.depth,
-                    tail_workers: pipe.tail_workers,
-                    pipeline: Pipeline::spawn(engine.clone(), sp, pipe)?,
-                });
+            self.ready.push_back(engine.run_frame(&cloud, sp)?);
+            return Ok(());
+        }
+        let stale = match &self.cached {
+            Some(c) => {
+                c.sp != sp || c.depth != pipe.depth || c.tail_workers != pipe.tail_workers
             }
-            let batch = self
-                .cached
-                .as_ref()
-                .expect("pipeline cached above")
-                .pipeline
-                .run_batch(clouds);
-            match batch {
-                Ok(r) => r,
-                Err(e) => {
-                    // the pipeline closed itself on error; don't reuse it
-                    self.retire_pipeline();
-                    return Err(e);
-                }
-            }
+            None => true,
         };
-        Ok(results
-            .into_iter()
-            .map(|r| self.output_of(engine, r))
-            .collect())
+        if stale {
+            if self.in_flight() > 0 {
+                bail!(
+                    "split/depth changed with {} frame(s) in flight — flush first",
+                    self.in_flight()
+                );
+            }
+            self.retire_pipeline();
+            self.cached = Some(CachedPipeline {
+                sp,
+                depth: pipe.depth,
+                tail_workers: pipe.tail_workers,
+                pipeline: Pipeline::spawn(engine.clone(), sp, pipe)?,
+            });
+        }
+        let submit = self.cached.as_ref().expect("pipeline cached above").pipeline.submit(cloud);
+        if let Err(e) = submit {
+            self.retire_pipeline();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, engine: &Arc<Engine>) -> Result<FrameOutput> {
+        if let Some(r) = self.ready.pop_front() {
+            return Ok(self.output_of(engine, r));
+        }
+        let next = match &self.cached {
+            Some(c) if c.pipeline.in_flight() > 0 => c.pipeline.next_result(),
+            _ => bail!("in-process recv with no frame in flight"),
+        };
+        match next {
+            Some(Ok(r)) => Ok(self.output_of(engine, r)),
+            Some(Err(e)) => {
+                // the pipeline closed itself on error; don't reuse it
+                self.retire_pipeline();
+                Err(e)
+            }
+            None => {
+                self.retire_pipeline();
+                Err(anyhow!("pipeline closed with frames in flight"))
+            }
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.ready.len() + self.cached.as_ref().map_or(0, |c| c.pipeline.in_flight())
     }
 
     fn bandwidth_bps(&self) -> Option<f64> {
@@ -301,12 +394,27 @@ impl Transport for InProcess {
 
 /// TCP transport: the session is the edge process; the tail runs in a
 /// `splitpoint serve-server` process at `addr`. Connects lazily on the
-/// first segment; `pipeline_depth > 1` uses the pipelined edge client
-/// (overlap head(N+1) with the server round trip of frame N).
+/// first frame; `pipeline_depth > 1` opens a persistent [`EdgeStream`]
+/// whose in-flight window (overlap head(N+1) with the server round trip
+/// of frame N) survives across the session's segment boundaries — the
+/// pipe only drains when the split policy actually flips.
 pub struct Tcp {
     addr: String,
-    client: Option<EdgeClient>,
+    conn: TcpConn,
     estimator: BandwidthEstimator,
+    /// serial-mode results completed at submit time, awaiting recv
+    ready: VecDeque<(Vec<Detection>, RemoteTiming)>,
+    /// streaming mode: whether each in-flight frame was submitted into an
+    /// empty window (its round trip is queueing-free and safe to sample)
+    queue_free: VecDeque<bool>,
+}
+
+enum TcpConn {
+    Idle,
+    /// serial (`depth <= 1`): one blocking round trip per frame
+    Serial(EdgeClient),
+    /// pipelined: persistent incremental stream handle
+    Streaming(EdgeStream),
 }
 
 /// Smallest payload worth treating as a bandwidth sample (both
@@ -322,9 +430,29 @@ impl Tcp {
     pub fn new(addr: impl Into<String>) -> Tcp {
         Tcp {
             addr: addr.into(),
-            client: None,
+            conn: TcpConn::Idle,
             estimator: BandwidthEstimator::default(),
+            ready: VecDeque::new(),
+            queue_free: VecDeque::new(),
         }
+    }
+
+    /// Connect lazily, picking serial or streaming mode from the pipeline
+    /// depth of the first submit. The mode is fixed for the connection's
+    /// lifetime — the session never changes `pipe` mid-stream.
+    fn connect(&mut self, engine: &Arc<Engine>, depth: usize) -> Result<()> {
+        if matches!(self.conn, TcpConn::Idle) {
+            let client = EdgeClient::connect(self.addr.as_str(), engine.clone())
+                .with_context(|| {
+                    format!("is `splitpoint serve-server` running at {}?", self.addr)
+                })?;
+            self.conn = if depth <= 1 {
+                TcpConn::Serial(client)
+            } else {
+                TcpConn::Streaming(client.into_stream(depth)?)
+            };
+        }
+        Ok(())
     }
 }
 
@@ -333,62 +461,83 @@ impl Transport for Tcp {
         format!("tcp:{} (realtime)", self.addr)
     }
 
-    fn run_segment(
+    fn submit(
         &mut self,
         engine: &Arc<Engine>,
         sp: SplitPoint,
-        clouds: Vec<PointCloud>,
+        cloud: PointCloud,
         pipe: PipelineConfig,
-    ) -> Result<Vec<FrameOutput>> {
-        if self.client.is_none() {
-            self.client = Some(
-                EdgeClient::connect(self.addr.as_str(), engine.clone()).with_context(
-                    || format!("is `splitpoint serve-server` running at {}?", self.addr),
-                )?,
+    ) -> Result<()> {
+        self.connect(engine, pipe.depth)?;
+        match &mut self.conn {
+            TcpConn::Idle => unreachable!("connected above"),
+            TcpConn::Serial(client) => {
+                if pipe.depth > 1 {
+                    bail!("pipelined submit on a serial TCP connection");
+                }
+                // serial: one full round trip now, delivered at recv; the
+                // window never queues, so every frame is sample-safe
+                self.ready.push_back(client.run_frame(&cloud, sp)?);
+                self.queue_free.push_back(true);
+                Ok(())
+            }
+            TcpConn::Streaming(stream) => {
+                if pipe.depth <= 1 {
+                    bail!("serial submit on a streaming TCP connection");
+                }
+                // a frame entering an EMPTY window (first frame after
+                // connect or after a policy-flip flush) sees no queueing —
+                // later frames wait behind up to depth-1 frames of server
+                // compute, which would deflate the bandwidth estimate
+                self.queue_free.push_back(stream.in_flight() == 0);
+                stream.submit(cloud, sp)
+            }
+        }
+    }
+
+    fn recv(&mut self, engine: &Arc<Engine>) -> Result<FrameOutput> {
+        let (detections, t) = match &mut self.conn {
+            TcpConn::Streaming(stream) => stream.recv()?,
+            _ => self.ready.pop_front().context("tcp recv with no frame in flight")?,
+        };
+        let queue_free = self.queue_free.pop_front().unwrap_or(false);
+        // transfer ≈ round trip minus the server's self-reported compute
+        // minus both configured RTT legs — `price_splits` re-adds
+        // rtt_one_way per leg, so leaving RTT inside the sample would
+        // double-count it (mirrors the InProcess correction). Two further
+        // filters keep the EWMA honest: RTT-dominated payloads are skipped
+        // (MIN_BANDWIDTH_SAMPLE_BYTES), and queue-waiting frames are never
+        // sampled (`queue_free`).
+        if queue_free && t.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES {
+            let rtt_both_legs = SimTime::from_secs_f64(2.0 * engine.link().config().rtt_one_way);
+            self.estimator.observe(
+                t.uplink_bytes,
+                t.round_trip
+                    .saturating_sub(t.server_compute)
+                    .saturating_sub(rtt_both_legs),
             );
         }
-        let client = self.client.as_mut().expect("connected above");
-        let results = client.run_stream(&clouds, sp, pipe.depth)?;
-        Ok(results
-            .into_iter()
-            .enumerate()
-            .map(|(i, (detections, t))| {
-                // transfer ≈ round trip minus the server's self-reported
-                // compute minus both configured RTT legs — `price_splits`
-                // re-adds rtt_one_way per leg, so leaving RTT inside the
-                // sample would double-count it (mirrors the InProcess
-                // correction). Two further filters keep the EWMA honest:
-                // RTT-dominated payloads are skipped
-                // (MIN_BANDWIDTH_SAMPLE_BYTES), and in pipelined mode
-                // only the segment's FIRST frame is sampled — the
-                // in-flight window drains at each segment boundary, so
-                // frame 0's round trip has no queueing, while later
-                // frames wait behind up to depth-1 frames of server
-                // compute and would deflate the estimate.
-                let queue_free = pipe.depth <= 1 || i == 0;
-                if queue_free && t.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES {
-                    let rtt_both_legs = SimTime::from_secs_f64(
-                        2.0 * engine.link().config().rtt_one_way,
-                    );
-                    self.estimator.observe(
-                        t.uplink_bytes,
-                        t.round_trip
-                            .saturating_sub(t.server_compute)
-                            .saturating_sub(rtt_both_legs),
-                    );
-                }
-                FrameOutput {
-                    detections,
-                    uplink_bytes: t.uplink_bytes,
-                    uplink_v1_bytes: t.uplink_v1_bytes,
-                    edge_time: t.edge_compute,
-                    round_trip: t.round_trip,
-                    server_time: t.server_compute,
-                    inference_time: t.inference_time,
-                    timing: None,
-                }
-            })
-            .collect())
+        Ok(FrameOutput {
+            detections,
+            uplink_bytes: t.uplink_bytes,
+            uplink_v1_bytes: t.uplink_v1_bytes,
+            edge_time: t.edge_compute,
+            round_trip: t.round_trip,
+            server_time: t.server_compute,
+            inference_time: t.inference_time,
+            timing: None,
+        })
+    }
+
+    fn in_flight(&self) -> usize {
+        match &self.conn {
+            TcpConn::Streaming(stream) => stream.in_flight(),
+            _ => self.ready.len(),
+        }
+    }
+
+    fn needs_queue_free_samples(&self) -> bool {
+        true
     }
 
     fn bandwidth_bps(&self) -> Option<f64> {
@@ -396,9 +545,10 @@ impl Transport for Tcp {
     }
 
     fn close(&mut self) -> Result<()> {
-        match self.client.take() {
-            Some(client) => client.shutdown(),
-            None => Ok(()),
+        match std::mem::replace(&mut self.conn, TcpConn::Idle) {
+            TcpConn::Idle => Ok(()),
+            TcpConn::Serial(client) => client.shutdown(),
+            TcpConn::Streaming(stream) => stream.shutdown(),
         }
     }
 }
@@ -416,6 +566,10 @@ pub struct PolicyContext<'a> {
     pub bandwidth_bps: Option<f64>,
     /// split the previous segment ran at
     pub current: Option<SplitPoint>,
+    /// frames still inside the transport's window at this boundary — on a
+    /// continuous stream this stays above zero across every boundary that
+    /// doesn't flip the split (pinned by `rust/tests/session.rs`)
+    pub in_flight: usize,
 }
 
 /// Decides the split point for each segment of the stream.
@@ -431,6 +585,16 @@ pub trait SplitPolicy: Send {
     /// internal segment cap; `usize::MAX` means "never re-evaluate".
     fn interval(&self) -> usize {
         usize::MAX
+    }
+
+    /// Whether this policy consumes the live bandwidth estimate. When
+    /// true, the session trades a little pipelining for telemetry: every
+    /// [`RESAMPLE_BOUNDARIES`]th boundary it drains the window so the
+    /// next frame's round trip is queue-free and sampleable. Policies
+    /// that ignore `bandwidth_bps` keep the default `false` and their
+    /// streams never drain mid-flight.
+    fn wants_bandwidth(&self) -> bool {
+        false
     }
 }
 
@@ -467,8 +631,11 @@ pub struct Adaptive {
     every: usize,
     hysteresis: f64,
     reprofile_every: usize,
+    cooldown: usize,
     cached_costs: Option<Vec<adaptive::SplitCosts>>,
     evals_since_profile: usize,
+    /// evaluations since the last switch (saturating; MAX = never switched)
+    evals_since_switch: usize,
 }
 
 impl Adaptive {
@@ -478,8 +645,10 @@ impl Adaptive {
             every: 8,
             hysteresis: 0.10,
             reprofile_every: 4,
+            cooldown: 0,
             cached_costs: None,
             evals_since_profile: 0,
+            evals_since_switch: usize::MAX,
         }
     }
 
@@ -499,6 +668,17 @@ impl Adaptive {
     /// at every re-evaluation).
     pub fn reprofile_every(mut self, evals: usize) -> Adaptive {
         self.reprofile_every = evals.max(1);
+        self
+    }
+
+    /// Refuse another flip for `evals` evaluations after a switch
+    /// (default 0 = disabled). Every switch flushes the transport's
+    /// in-flight window and (in-process) respawns the staged pipeline, so
+    /// a cooldown bounds how often a noisy bandwidth estimate can pay
+    /// that cost even when each flip individually clears the hysteresis
+    /// margin.
+    pub fn cooldown(mut self, evals: usize) -> Adaptive {
+        self.cooldown = evals;
         self
     }
 }
@@ -529,7 +709,7 @@ impl SplitPolicy for Adaptive {
         let best = adaptive::best_estimate(&estimates, self.objective);
         // hysteresis against the split the session actually ran last
         // segment (`ctx.current` — the policy keeps no shadow copy)
-        let chosen = match ctx.current {
+        let desired = match ctx.current {
             Some(cur) if cur != best.split => {
                 let cur_cost = estimates
                     .iter()
@@ -549,11 +729,26 @@ impl SplitPolicy for Adaptive {
             }
             _ => best.split,
         };
+        // cooldown: a recent switch freezes the policy at the current
+        // split for `cooldown` further evaluations
+        let chosen = match ctx.current {
+            Some(cur) if desired != cur && self.evals_since_switch < self.cooldown => cur,
+            _ => desired,
+        };
+        if ctx.current.is_some_and(|cur| chosen != cur) {
+            self.evals_since_switch = 0;
+        } else {
+            self.evals_since_switch = self.evals_since_switch.saturating_add(1);
+        }
         Ok(chosen)
     }
 
     fn interval(&self) -> usize {
         self.every
+    }
+
+    fn wants_bandwidth(&self) -> bool {
+        true
     }
 }
 
@@ -584,6 +779,9 @@ pub struct SessionReport {
     pub switches: usize,
     /// frames executed per split label
     pub split_usage: BTreeMap<String, usize>,
+    /// frames delivered per sensor id (multi-sensor fan-in tagging; a
+    /// single-sensor stream has one entry for sensor 0)
+    pub sensor_usage: BTreeMap<u32, usize>,
     /// transport's final bandwidth estimate
     pub bandwidth_bps: Option<f64>,
     /// total uplink bytes actually shipped (wire v2)
@@ -621,6 +819,14 @@ impl SessionReport {
                 .collect();
             let _ = write!(s, "; splits {} ({} switch(es))", splits.join(", "), self.switches);
         }
+        if self.sensor_usage.len() > 1 {
+            let sensors: Vec<String> = self
+                .sensor_usage
+                .iter()
+                .map(|(k, v)| format!("s{k}×{v}"))
+                .collect();
+            let _ = write!(s, "; sensors {}", sensors.join(", "));
+        }
         if let Some(bps) = self.bandwidth_bps {
             let _ = write!(s, "; est. bandwidth {:.2} MB/s", bps / 1e6);
         }
@@ -637,8 +843,10 @@ impl SessionReport {
     }
 }
 
-/// The facade: source → policy → transport, segment by segment. Build one
-/// with [`SplitSession::builder`].
+/// The facade: source → policy → transport, as one continuous stream — a
+/// bounded feeder thread reads ahead of compute and the transport's
+/// in-flight window only drains on a split flip. Build one with
+/// [`SplitSession::builder`].
 pub struct SplitSession {
     engine: Arc<Engine>,
     source: Box<dyn FrameSource>,
@@ -687,71 +895,154 @@ impl SplitSession {
         Ok(report)
     }
 
-    /// The segment loop behind [`SplitSession::run_with`].
+    /// The continuous streaming loop behind [`SplitSession::run_with`].
+    ///
+    /// A bounded feeder thread pulls frames from the [`FrameSource`]
+    /// ([`FEED_AHEAD`] read-ahead), so source I/O overlaps
+    /// head/transfer/tail compute across segment boundaries. The main
+    /// loop re-evaluates the policy every `interval` frames and keeps the
+    /// transport's in-flight window at `pipeline_depth`; the window is
+    /// only drained when the policy actually flips the split (or the
+    /// stream ends) — never at a mere segment boundary.
     fn run_loop(
         &mut self,
         on_frame: &mut dyn FnMut(SessionFrame),
         report: &mut SessionReport,
     ) -> Result<()> {
-        let mut current_sp: Option<SplitPoint> = None;
-        loop {
-            // ---- pull one segment from the source
-            let target = self.policy.interval().max(1).min(SEGMENT_MAX);
-            let mut metas: Vec<(u32, u64, usize)> = Vec::with_capacity(target);
-            let mut clouds: Vec<PointCloud> = Vec::with_capacity(target);
-            while clouds.len() < target {
-                match self.source.next_frame()? {
-                    Some(f) => {
-                        metas.push((f.sensor_id, f.seq, f.cloud.len()));
-                        clouds.push(f.cloud);
+        let interval = self.policy.interval().max(1).min(SEGMENT_MAX);
+        // the telemetry drain costs a window flush — pay it only when the
+        // policy consumes bandwidth AND this transport cannot sample a
+        // full window honestly (TCP; the virtual clock samples every frame)
+        let resample = self.policy.wants_bandwidth() && self.transport.needs_queue_free_samples();
+        let window = self.pipe.depth.max(1);
+        let pipe = self.pipe;
+        let engine = self.engine.clone();
+        let source = &mut self.source;
+        let transport = &mut self.transport;
+        let policy = &mut self.policy;
+        let frames_done = &mut self.frames_done;
+
+        std::thread::scope(|s| -> Result<()> {
+            // the channel lives inside the scope body: when the main loop
+            // exits early (an error), `feed_rx` drops before the scope
+            // joins the feeder, so a feeder blocked on a full channel
+            // fails its send and exits instead of deadlocking the join
+            let (feed_tx, feed_rx) = std::sync::mpsc::sync_channel::<Result<Frame>>(FEED_AHEAD);
+            s.spawn(move || {
+                loop {
+                    match source.next_frame() {
+                        Ok(Some(f)) => {
+                            if feed_tx.send(Ok(f)).is_err() {
+                                break; // consumer bailed
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            let _ = feed_tx.send(Err(e));
+                            break;
+                        }
                     }
-                    None => break,
                 }
-            }
-            if clouds.is_empty() {
-                return Ok(());
-            }
-            let n = clouds.len();
+                // feed_tx drops here: the main loop sees end-of-stream
+            });
 
-            // ---- policy decides this segment's split
-            let ctx = PolicyContext {
-                engine: &*self.engine,
-                cloud: &clouds[0],
-                frames_done: self.frames_done,
-                bandwidth_bps: self.transport.bandwidth_bps(),
-                current: current_sp,
-            };
-            let sp = self.policy.choose(&ctx)?;
-            if current_sp.is_some_and(|c| c != sp) {
-                report.switches += 1;
-            }
-            current_sp = Some(sp);
+            let mut pending: VecDeque<PendingMeta> = VecDeque::new();
+            let mut current_sp: Option<SplitPoint> = None;
+            let mut current_label = String::new();
+            let mut into_segment = 0usize;
+            let mut boundaries = 0usize;
+            loop {
+                let frame = match feed_rx.recv() {
+                    Ok(Ok(f)) => f,
+                    Ok(Err(e)) => return Err(e.context("frame source failed mid-stream")),
+                    Err(_) => break, // source exhausted
+                };
 
-            // ---- transport executes the segment (clouds move, no clone)
-            let outs = self
-                .transport
-                .run_segment(&self.engine, sp, clouds, self.pipe)?;
-            if outs.len() != n {
-                bail!("transport returned {} result(s) for {n} frame(s)", outs.len());
-            }
-            let label = self.engine.graph().split_label(sp);
-            *report.split_usage.entry(label.clone()).or_default() += n;
-            for ((sensor_id, source_seq, points), output) in metas.into_iter().zip(outs) {
-                report.uplink_bytes += output.uplink_bytes;
-                report.uplink_v1_bytes += output.uplink_v1_bytes;
-                report.frames += 1;
-                on_frame(SessionFrame {
-                    seq: self.frames_done,
-                    source_seq,
-                    sensor_id,
-                    points,
+                // ---- segment boundary: the policy decides the next split
+                if into_segment == 0 {
+                    boundaries += 1;
+                    // periodic telemetry drain for bandwidth-consuming
+                    // policies: the frame submitted next enters an empty
+                    // window, so its round trip is a clean sample
+                    if resample && boundaries % RESAMPLE_BOUNDARIES == 0 {
+                        while transport.in_flight() > 0 {
+                            deliver_one(
+                                &engine,
+                                &mut **transport,
+                                &mut pending,
+                                frames_done,
+                                report,
+                                on_frame,
+                            )?;
+                        }
+                    }
+                    let ctx = PolicyContext {
+                        engine: &*engine,
+                        cloud: &frame.cloud,
+                        frames_done: *frames_done,
+                        bandwidth_bps: transport.bandwidth_bps(),
+                        current: current_sp,
+                        in_flight: transport.in_flight(),
+                    };
+                    let sp = policy.choose(&ctx)?;
+                    if current_sp.is_some_and(|c| c != sp) {
+                        // flush: every in-flight frame still runs (and is
+                        // delivered) at the split it was submitted under
+                        while transport.in_flight() > 0 {
+                            deliver_one(
+                                &engine,
+                                &mut **transport,
+                                &mut pending,
+                                frames_done,
+                                report,
+                                on_frame,
+                            )?;
+                        }
+                        report.switches += 1;
+                    }
+                    if current_sp != Some(sp) {
+                        current_label = engine.graph().split_label(sp);
+                    }
+                    current_sp = Some(sp);
+                }
+                let sp = current_sp.expect("split chosen at segment start");
+
+                // ---- keep the window at `depth`, then submit
+                while transport.in_flight() >= window {
+                    deliver_one(
+                        &engine,
+                        &mut **transport,
+                        &mut pending,
+                        frames_done,
+                        report,
+                        on_frame,
+                    )?;
+                }
+                pending.push_back(PendingMeta {
+                    sensor_id: frame.sensor_id,
+                    source_seq: frame.seq,
+                    points: frame.cloud.len(),
                     split: sp,
-                    split_label: label.clone(),
-                    output,
+                    label: current_label.clone(),
                 });
-                self.frames_done += 1;
+                transport.submit(&engine, sp, frame.cloud, pipe)?;
+                *report.split_usage.entry(current_label.clone()).or_default() += 1;
+                into_segment = (into_segment + 1) % interval;
             }
-        }
+
+            // ---- end of stream: drain the window
+            while transport.in_flight() > 0 {
+                deliver_one(
+                    &engine,
+                    &mut **transport,
+                    &mut pending,
+                    frames_done,
+                    report,
+                    on_frame,
+                )?;
+            }
+            Ok(())
+        })
     }
 
     /// [`SplitSession::run_with`], collecting every frame.
@@ -760,6 +1051,49 @@ impl SplitSession {
         let report = self.run_with(|f| frames.push(f))?;
         Ok((frames, report))
     }
+}
+
+/// Provenance of one submitted-but-undelivered frame: everything the
+/// session needs to wrap the transport's eventual [`FrameOutput`] into a
+/// [`SessionFrame`]. Transports deliver in submission order, so a FIFO
+/// deque of these stays aligned with `Transport::recv`.
+struct PendingMeta {
+    sensor_id: u32,
+    source_seq: u64,
+    points: usize,
+    split: SplitPoint,
+    label: String,
+}
+
+/// Deliver the transport's next completed frame to `on_frame`, folding it
+/// into the running report.
+fn deliver_one(
+    engine: &Arc<Engine>,
+    transport: &mut dyn Transport,
+    pending: &mut VecDeque<PendingMeta>,
+    frames_done: &mut u64,
+    report: &mut SessionReport,
+    on_frame: &mut dyn FnMut(SessionFrame),
+) -> Result<()> {
+    let output = transport.recv(engine)?;
+    let meta = pending
+        .pop_front()
+        .context("transport delivered a frame with no pending meta")?;
+    report.uplink_bytes += output.uplink_bytes;
+    report.uplink_v1_bytes += output.uplink_v1_bytes;
+    report.frames += 1;
+    *report.sensor_usage.entry(meta.sensor_id).or_default() += 1;
+    on_frame(SessionFrame {
+        seq: *frames_done,
+        source_seq: meta.source_seq,
+        sensor_id: meta.sensor_id,
+        points: meta.points,
+        split: meta.split,
+        split_label: meta.label,
+        output,
+    });
+    *frames_done += 1;
+    Ok(())
 }
 
 // --------------------------------------------------------------- builder
@@ -780,6 +1114,8 @@ pub struct SplitSessionBuilder {
     tail_workers: usize,
     threads: usize,
     role: EngineRole,
+    sensors: usize,
+    record: Option<PathBuf>,
 }
 
 impl Default for SplitSessionBuilder {
@@ -802,6 +1138,8 @@ impl SplitSessionBuilder {
             tail_workers: 1,
             threads: 1,
             role: EngineRole::Full,
+            sensors: 1,
+            record: None,
         }
     }
 
@@ -850,15 +1188,53 @@ impl SplitSessionBuilder {
     }
 
     /// `--source` CLI spec: `synthetic` (uses `seed`/`frames`),
-    /// `kitti:<dir>`, or `replay:<file>.bin`. `frames` caps directory
-    /// sources and sets the synthetic/replay length.
+    /// `kitti:<dir>`, `replay:<file>.bin`, or `replay:<corpus-dir>` (a
+    /// [`RecorderSink`](crate::pointcloud::kitti::RecorderSink) corpus).
+    /// `frames` caps directory sources and sets the synthetic/replay
+    /// length. Honors a prior [`SplitSessionBuilder::sensors`] call by
+    /// replicating the spec per sensor behind a round-robin
+    /// [`MultiSource`] — set the sensor count *before* the source spec.
     pub fn source_spec(
         self,
         spec: Option<&str>,
         seed: u64,
         frames: Option<usize>,
     ) -> Result<Self> {
-        Ok(self.source(parse_source(spec, seed, frames)?))
+        let sensors = self.sensors;
+        Ok(self.source(parse_source_multi(spec, seed, frames, sensors)?))
+    }
+
+    /// Multi-sensor fan-in: replicate the next `source_spec` across `n`
+    /// sensors (synthetic sources get seeds `seed..seed+n`; directory and
+    /// replay sources stream the same data per sensor), round-robin
+    /// interleaved through the [`Batcher`](crate::coordinator::batcher::Batcher)
+    /// with per-sensor frame tagging. Default 1.
+    pub fn sensors(mut self, n: usize) -> Self {
+        self.sensors = n.max(1);
+        self
+    }
+
+    /// Record every frame the source yields into `dir` as a `.bin` +
+    /// manifest replay corpus (see
+    /// [`RecorderSink`](crate::pointcloud::kitti::RecorderSink)) — the
+    /// inverse of `replay:<dir>`.
+    pub fn record_to(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.record = Some(dir.into());
+        self
+    }
+
+    /// `--sink` CLI spec: `record:<dir>` (see
+    /// [`SplitSessionBuilder::record_to`]). `None` is a no-op.
+    pub fn sink_spec(mut self, spec: Option<&str>) -> Result<Self> {
+        if let Some(spec) = spec {
+            match crate::util::cli::split_spec(spec) {
+                ("record", Some(dir)) if !dir.is_empty() => {
+                    self.record = Some(PathBuf::from(dir));
+                }
+                _ => bail!("unknown --sink '{spec}' (want record:<dir>)"),
+            }
+        }
+        Ok(self)
     }
 
     /// Transport (any [`Transport`]). Default: [`InProcess`].
@@ -938,10 +1314,13 @@ impl SplitSessionBuilder {
             Some(p) => p,
             None => Box::new(Fixed(engine.split()?)),
         };
-        let source = self
+        let mut source = self
             .source
             .take()
             .unwrap_or_else(|| Box::new(SceneSource::new(1, 5)));
+        if let Some(dir) = self.record.take() {
+            source = Box::new(RecordingSource::new(source, &dir)?);
+        }
         let transport = self
             .transport
             .take()
@@ -971,7 +1350,10 @@ impl SplitSessionBuilder {
 /// Parse a `--source` spec. `None`/`"synthetic"` yields `frames`
 /// (default 5) scenes from `seed`; `kitti:<dir>` streams a scan
 /// directory (capped at `frames` when given); `replay:<file>.bin` replays
-/// one recorded scan `frames` (default 1) times.
+/// one recorded scan `frames` (default 1) times; `replay:<dir>` streams a
+/// recorded corpus (a `RecorderSink` manifest directory, capped at
+/// `frames` when given) with its original sensor tags and sequence
+/// numbers.
 pub fn parse_source(
     spec: Option<&str>,
     seed: u64,
@@ -987,12 +1369,82 @@ pub fn parse_source(
                 None => Box::new(src),
             })
         }
+        ("replay", Some(path)) if std::path::Path::new(path).is_dir() => {
+            let src = RecordedSource::open(std::path::Path::new(path))?;
+            Ok(match frames {
+                Some(n) => Box::new(src.limit(n)),
+                None => Box::new(src),
+            })
+        }
         ("replay", Some(file)) => Ok(Box::new(
             ReplaySource::from_file(std::path::Path::new(file))?
                 .repeated(frames.unwrap_or(1)),
         )),
         _ => bail!(
-            "unknown --source '{spec}' (want synthetic, kitti:<dir>, or replay:<file>.bin)"
+            "unknown --source '{spec}' (want synthetic, kitti:<dir>, replay:<file>.bin, \
+             or replay:<corpus-dir>)"
         ),
+    }
+}
+
+/// [`parse_source`] replicated across `sensors` round-robin fan-in
+/// sources (see [`SplitSessionBuilder::sensors`]); `sensors <= 1` is the
+/// plain single-source parse.
+pub fn parse_source_multi(
+    spec: Option<&str>,
+    seed: u64,
+    frames: Option<usize>,
+    sensors: usize,
+) -> Result<Box<dyn FrameSource>> {
+    if sensors <= 1 {
+        return parse_source(spec, seed, frames);
+    }
+    let mut sources = Vec::with_capacity(sensors);
+    for i in 0..sensors {
+        sources.push(parse_source(spec, seed + i as u64, frames)?);
+    }
+    Ok(Box::new(MultiSource::round_robin(sources)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A stream that ships no bytes (e.g. a segment of empty clouds at
+    /// edge-only, where no occupied site ever reaches the wire) must
+    /// report "no savings measurable", not divide by zero.
+    #[test]
+    fn wire_savings_is_none_when_nothing_shipped() {
+        let empty = SessionReport::default();
+        assert_eq!(empty.uplink_v1_bytes, 0);
+        assert_eq!(empty.wire_savings(), None);
+
+        let shipped = SessionReport {
+            uplink_bytes: 50,
+            uplink_v1_bytes: 100,
+            ..SessionReport::default()
+        };
+        let savings = shipped.wire_savings().expect("v1 bytes observed");
+        assert!((savings - 0.5).abs() < 1e-12);
+        // an all-empty stream's summary must not print a savings clause
+        assert!(!empty.summary().contains("saved"));
+    }
+
+    #[test]
+    fn sink_spec_accepts_record_dirs_only() {
+        assert!(SplitSession::builder().sink_spec(None).is_ok());
+        let b = SplitSession::builder()
+            .sink_spec(Some("record:/tmp/corpus"))
+            .unwrap();
+        assert_eq!(b.record.as_deref(), Some(std::path::Path::new("/tmp/corpus")));
+        assert!(SplitSession::builder().sink_spec(Some("record:")).is_err());
+        assert!(SplitSession::builder().sink_spec(Some("tape:/x")).is_err());
+    }
+
+    #[test]
+    fn adaptive_cooldown_defaults_off() {
+        let a = Adaptive::new(Objective::InferenceTime);
+        assert_eq!(a.cooldown, 0);
+        assert_eq!(a.evals_since_switch, usize::MAX);
     }
 }

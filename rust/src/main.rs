@@ -33,7 +33,7 @@ fn cli() -> Cli {
             OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
             OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
             OptSpec { name: "split", value: Some("name"), help: "split point: raw|preprocess|vfe|conv1..conv4|bev_head|proposal|edge_only" },
-            OptSpec { name: "source", value: Some("spec"), help: "frame source: synthetic | kitti:<dir> | replay:<file>.bin (default synthetic)" },
+            OptSpec { name: "source", value: Some("spec"), help: "frame source: synthetic | kitti:<dir> | replay:<file>.bin | replay:<corpus-dir> (default synthetic)" },
             OptSpec { name: "policy", value: Some("name"), help: "split policy: fixed | adaptive | adaptive-edge (default fixed)" },
             OptSpec { name: "policy-every", value: Some("n"), help: "frames between adaptive re-evaluations (default 8)" },
             OptSpec { name: "frames", value: Some("n"), help: "frame count (synthetic default 5; kitti default: all scans)" },
@@ -43,11 +43,23 @@ fn cli() -> Cli {
             OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads; bit-identical at any count (default 1)" },
         ]
     };
+    // session-streaming extras (run + serve-edge)
+    let streaming = || {
+        vec![
+            OptSpec { name: "sensors", value: Some("n"), help: "multi-sensor fan-in: replicate the source n times, round-robin, per-sensor tagging (default 1)" },
+            OptSpec { name: "sink", value: Some("spec"), help: "frame sink: record:<dir> writes the streamed clouds + manifest as a replay corpus" },
+            OptSpec { name: "dets-out", value: Some("file"), help: "write per-frame detections (bit-exact hex) for cross-run diffing" },
+        ]
+    };
     Cli {
         bin: "splitpoint",
         about: "Split Computing for 3D point-cloud object detection (Noguchi & Azumi 2025 reproduction)",
         commands: vec![
-            CommandSpec { name: "run", help: "stream a frame source through one session", opts: common() },
+            CommandSpec {
+                name: "run",
+                help: "stream a frame source through one session",
+                opts: common().into_iter().chain(streaming()).collect(),
+            },
             CommandSpec { name: "sweep", help: "regenerate paper Figs 6-9 + Tables I/II", opts: common() },
             CommandSpec { name: "explain-splits", help: "print Table II live-set analysis", opts: common() },
             CommandSpec { name: "estimate", help: "adaptive split selection (analytic cost model)", opts: common() },
@@ -75,9 +87,12 @@ fn cli() -> Cli {
                     OptSpec { name: "policy-every", value: Some("n"), help: "frames between adaptive re-evaluations (default 8)" },
                     OptSpec { name: "frames", value: Some("n"), help: "frames to stream (synthetic default 10)" },
                     OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
-                    OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N) (default 1 = serial)" },
+                    OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N), window kept full across segments (default 1 = serial)" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the edge head (default 1)" },
-                ],
+                ]
+                .into_iter()
+                .chain(streaming())
+                .collect(),
             },
         ],
         global_opts: vec![],
@@ -136,7 +151,11 @@ fn build_session(
             _ => default_frames,
         },
     };
-    let mut b = session_builder(args)?.source_spec(args.get("source"), seed, frames)?;
+    let sensors: usize = args.get_parse("sensors")?.unwrap_or(1);
+    let mut b = session_builder(args)?
+        .sensors(sensors)
+        .source_spec(args.get("source"), seed, frames)?
+        .sink_spec(args.get("sink"))?;
     if let Some(p) = policy_from(args)? {
         b = b.policy(p);
     }
@@ -144,6 +163,64 @@ fn build_session(
         b = b.tcp(addr);
     }
     b.build()
+}
+
+/// `--dets-out` accumulator: a transport/split/policy-invariant bit-exact
+/// rendering of every delivered frame's detections. Scores and box
+/// coordinates are printed as raw f32 bit patterns, so two runs that
+/// claim byte-identical detections diff clean with `cmp` — the CI
+/// `tcp-e2e` and `replay-corpus` lanes diff these files across the
+/// in-process/TCP transports and the record/replay pair. The split label
+/// is deliberately omitted: detections are split-invariant, policies are
+/// not.
+#[derive(Default)]
+struct DetsOut {
+    path: Option<String>,
+    buf: String,
+}
+
+impl DetsOut {
+    fn from_args(args: &Args) -> DetsOut {
+        DetsOut {
+            path: args.get("dets-out").map(str::to_string),
+            buf: String::new(),
+        }
+    }
+
+    fn push(&mut self, f: &SessionFrame) {
+        if self.path.is_none() {
+            return;
+        }
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            self.buf,
+            "frame seq={} sensor={} src={} pts={} dets={}",
+            f.seq,
+            f.sensor_id,
+            f.source_seq,
+            f.points,
+            f.output.detections.len()
+        );
+        for d in &f.output.detections {
+            let boxx: Vec<String> =
+                d.boxx.iter().map(|v| format!("{:08x}", v.to_bits())).collect();
+            let _ = writeln!(
+                self.buf,
+                "  det class={} score={:08x} box={}",
+                d.class,
+                d.score.to_bits(),
+                boxx.join(",")
+            );
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if let Some(path) = self.path {
+            std::fs::write(&path, self.buf)
+                .map_err(|e| anyhow::anyhow!("writing --dets-out {path}: {e}"))?;
+        }
+        Ok(())
+    }
 }
 
 fn print_session_banner(session: &SplitSession) {
@@ -165,10 +242,13 @@ fn print_session_tail(report: &SessionReport) {
 fn cmd_run(args: &Args) -> Result<()> {
     let mut session = build_session(args, Some(5), None)?;
     print_session_banner(&session);
+    let mut dets = DetsOut::from_args(args);
     let report = session.run_with(|f: SessionFrame| {
+        dets.push(&f);
         println!(
-            "frame {} [{}]: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
+            "frame {} [s{} {}]: {} pts, {} dets | inference {:.1} ms, edge {:.1} ms, uplink {:.2} MB / {:.1} ms",
             f.seq,
+            f.sensor_id,
             f.split_label,
             f.points,
             f.output.detections.len(),
@@ -182,6 +262,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .unwrap_or(0.0),
         );
     })?;
+    dets.finish()?;
     print_session_tail(&report);
     Ok(())
 }
@@ -328,10 +409,13 @@ fn cmd_serve_edge(args: &Args) -> Result<()> {
     let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
     let mut session = build_session(args, Some(10), Some(addr.as_str()))?;
     print_session_banner(&session);
+    let mut dets = DetsOut::from_args(args);
     let report = session.run_with(|f: SessionFrame| {
+        dets.push(&f);
         println!(
-            "frame {} [{}]: {} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
+            "frame {} [s{} {}]: {} dets | edge {:.1} ms + rtt {:.1} ms (server {:.1} ms) = {:.1} ms, uplink {:.2} MB",
             f.seq,
+            f.sensor_id,
             f.split_label,
             f.output.detections.len(),
             f.output.edge_time.as_millis_f64(),
@@ -341,6 +425,7 @@ fn cmd_serve_edge(args: &Args) -> Result<()> {
             f.output.uplink_bytes as f64 / 1e6,
         );
     })?;
+    dets.finish()?;
     print_session_tail(&report);
     Ok(())
 }

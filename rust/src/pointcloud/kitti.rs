@@ -169,6 +169,236 @@ impl FrameSource for KittiSource {
     }
 }
 
+// ------------------------------------------------------ replay corpora
+
+/// Manifest filename of a recorded replay corpus.
+pub const CORPUS_MANIFEST: &str = "manifest.json";
+/// Schema tag inside the corpus manifest.
+pub const CORPUS_SCHEMA: &str = "splitpoint-replay-corpus/v1";
+
+/// Write a streamed session back to disk as a replay corpus — the inverse
+/// of [`RecordedSource`]: one KITTI-format `.bin` per frame (so the
+/// directory also reads back through a plain [`KittiSource`]) plus a
+/// `manifest.json` preserving per-frame provenance (sensor id, source
+/// sequence number, point count) that the raw filename ordering loses.
+///
+/// `.bin` scans are bit-exact f32 records, so record → replay is lossless
+/// and detections over the replayed corpus are byte-identical to the
+/// original stream (enforced by `rust/tests/session.rs` and the CI
+/// `replay-corpus` lane).
+pub struct RecorderSink {
+    dir: PathBuf,
+    entries: Vec<CorpusEntry>,
+    finished: bool,
+}
+
+#[derive(Debug, Clone)]
+struct CorpusEntry {
+    file: String,
+    sensor_id: u32,
+    seq: u64,
+    points: usize,
+}
+
+impl RecorderSink {
+    /// Create the corpus directory. A directory holding a *previous
+    /// recording* (identified by its [`CORPUS_MANIFEST`]) is cleared
+    /// first — re-recording a shorter stream must not leave orphaned
+    /// scans that the new manifest no longer lists, or the documented
+    /// plain-[`KittiSource`] readback would silently mix recordings. A
+    /// directory containing `.bin` files but **no** manifest is refused:
+    /// it is someone's dataset, not a corpus, and sweeping it would
+    /// destroy data (`--sink record:` pointed at a KITTI scan directory).
+    pub fn create(dir: &Path) -> Result<RecorderSink> {
+        fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let scans = list_scans(dir)?;
+        if !scans.is_empty() {
+            if !dir.join(CORPUS_MANIFEST).is_file() {
+                bail!(
+                    "{}: holds {} .bin file(s) but no {CORPUS_MANIFEST} — refusing to \
+                     record over what looks like a dataset, not a previous recording \
+                     (pick an empty directory)",
+                    dir.display(),
+                    scans.len()
+                );
+            }
+            for path in scans {
+                fs::remove_file(&path)
+                    .with_context(|| format!("clearing stale {}", path.display()))?;
+            }
+            fs::remove_file(dir.join(CORPUS_MANIFEST))
+                .with_context(|| format!("clearing stale manifest in {}", dir.display()))?;
+        }
+        Ok(RecorderSink {
+            dir: dir.to_path_buf(),
+            entries: Vec::new(),
+            finished: false,
+        })
+    }
+
+    /// Append one frame to the corpus: writes `<index>.bin` (dense
+    /// record-order index, so filename order replays in stream order) and
+    /// remembers its provenance for the manifest.
+    pub fn record(&mut self, frame: &Frame) -> Result<()> {
+        let file = format!("{:06}.bin", self.entries.len());
+        write_bin(&self.dir.join(&file), &frame.cloud)?;
+        self.entries.push(CorpusEntry {
+            file,
+            sensor_id: frame.sensor_id,
+            seq: frame.seq,
+            points: frame.cloud.len(),
+        });
+        self.finished = false;
+        Ok(())
+    }
+
+    pub fn frames_recorded(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write the manifest. Idempotent; also invoked on drop (best-effort)
+    /// so a recording session that forgets to finish still leaves a
+    /// replayable corpus.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        use crate::util::json::Value;
+        let frames: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("file", Value::str(&e.file)),
+                    ("sensor_id", Value::num(e.sensor_id as f64)),
+                    ("seq", Value::num(e.seq as f64)),
+                    ("points", Value::num(e.points as f64)),
+                ])
+            })
+            .collect();
+        let manifest = Value::obj(vec![
+            ("schema", Value::str(CORPUS_SCHEMA)),
+            ("frames", Value::arr(frames)),
+        ]);
+        let path = self.dir.join(CORPUS_MANIFEST);
+        fs::write(&path, manifest.pretty() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for RecorderSink {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+/// [`FrameSource`] over a recorded corpus directory (the output of
+/// [`RecorderSink`]): streams the manifest's frames in record order,
+/// reading each `.bin` lazily, with the original sensor ids and sequence
+/// numbers restored — the `replay:<dir>` CLI spec.
+pub struct RecordedSource {
+    dir: PathBuf,
+    entries: Vec<CorpusEntry>,
+    next: usize,
+    limit: Option<usize>,
+}
+
+impl RecordedSource {
+    /// Open a corpus directory; errors when the manifest is missing,
+    /// unparseable, or carries the wrong schema.
+    pub fn open(dir: &Path) -> Result<RecordedSource> {
+        use crate::util::json::{parse, Value};
+        let path = dir.join(CORPUS_MANIFEST);
+        let text =
+            fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        match doc.get("schema").and_then(Value::as_str) {
+            Some(CORPUS_SCHEMA) => {}
+            other => bail!(
+                "{}: schema {:?}, want {:?}",
+                path.display(),
+                other,
+                CORPUS_SCHEMA
+            ),
+        }
+        let frames = doc
+            .get("frames")
+            .and_then(Value::as_arr)
+            .with_context(|| format!("{}: manifest has no frames array", path.display()))?;
+        let entries = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| -> Result<CorpusEntry> {
+                Ok(CorpusEntry {
+                    file: f
+                        .get("file")
+                        .and_then(Value::as_str)
+                        .with_context(|| format!("frame {i}: missing file"))?
+                        .to_string(),
+                    sensor_id: f
+                        .get("sensor_id")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(0) as u32,
+                    seq: f.get("seq").and_then(Value::as_usize).unwrap_or(i) as u64,
+                    points: f.get("points").and_then(Value::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RecordedSource {
+            dir: dir.to_path_buf(),
+            entries,
+            next: 0,
+            limit: None,
+        })
+    }
+
+    /// Cap the replay at `n` frames.
+    pub fn limit(mut self, n: usize) -> RecordedSource {
+        self.limit = Some(n);
+        self
+    }
+
+    fn total(&self) -> usize {
+        self.limit
+            .map_or(self.entries.len(), |l| l.min(self.entries.len()))
+    }
+}
+
+impl FrameSource for RecordedSource {
+    fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.next >= self.total() {
+            return Ok(None);
+        }
+        let e = &self.entries[self.next];
+        let cloud = read_bin(&self.dir.join(&e.file))?;
+        self.next += 1;
+        Ok(Some(Frame {
+            sensor_id: e.sensor_id,
+            seq: e.seq,
+            cloud,
+        }))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.total() - self.next.min(self.total()))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "replay:{} ({} recorded frame(s))",
+            self.dir.display(),
+            self.total()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +487,109 @@ mod tests {
             .with_crop((0.0, 46.08), (-23.04, 23.04), (-3.0, 1.0));
         let f = src.next_frame().unwrap().unwrap();
         assert_eq!(f.cloud.len(), 1, "behind-sensor point cropped");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recorder_corpus_roundtrips_with_provenance() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_corpus");
+        let _ = fs::remove_dir_all(&dir);
+        let clouds = [
+            PointCloud {
+                points: vec![Point { x: 1.5, y: -2.0, z: 0.25, intensity: 0.9 }],
+            },
+            PointCloud {
+                points: vec![
+                    Point { x: 40.0, y: 10.0, z: -1.0, intensity: 0.1 },
+                    Point { x: 0.5, y: 0.0, z: 0.0, intensity: 1.0 },
+                ],
+            },
+        ];
+        let mut sink = RecorderSink::create(&dir).unwrap();
+        // out-of-order sensor/seq tags must survive the roundtrip
+        sink.record(&Frame { sensor_id: 2, seq: 7, cloud: clouds[0].clone() }).unwrap();
+        sink.record(&Frame { sensor_id: 0, seq: 3, cloud: clouds[1].clone() }).unwrap();
+        assert_eq!(sink.frames_recorded(), 2);
+        sink.finish().unwrap();
+        drop(sink);
+
+        let mut src = RecordedSource::open(&dir).unwrap();
+        assert_eq!(src.len_hint(), Some(2));
+        let a = src.next_frame().unwrap().unwrap();
+        assert_eq!((a.sensor_id, a.seq), (2, 7));
+        assert_eq!(a.cloud.points, clouds[0].points, "bit-exact replay");
+        let b = src.next_frame().unwrap().unwrap();
+        assert_eq!((b.sensor_id, b.seq), (0, 3));
+        assert_eq!(b.cloud.points, clouds[1].points);
+        assert!(src.next_frame().unwrap().is_none());
+
+        // the corpus is plain kitti .bin files too: KittiSource reads it
+        // in the same (record) order, just without the provenance tags
+        let mut plain = KittiSource::open(&dir).unwrap();
+        assert_eq!(plain.next_frame().unwrap().unwrap().cloud.points, clouds[0].points);
+
+        // limit caps the replay
+        let mut limited = RecordedSource::open(&dir).unwrap().limit(1);
+        assert_eq!(limited.len_hint(), Some(1));
+        assert!(limited.next_frame().unwrap().is_some());
+        assert!(limited.next_frame().unwrap().is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recorder_create_clears_a_previous_recording() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_corpus_rerecord");
+        let _ = fs::remove_dir_all(&dir);
+        let p = Point { x: 1.0, y: 0.0, z: 0.0, intensity: 0.5 };
+        let frame_of = |n: usize| Frame {
+            sensor_id: 0,
+            seq: n as u64,
+            cloud: PointCloud { points: vec![p; n + 1] },
+        };
+        // first recording: 3 frames
+        let mut sink = RecorderSink::create(&dir).unwrap();
+        for i in 0..3 {
+            sink.record(&frame_of(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        drop(sink);
+        // re-record a SHORTER stream into the same directory
+        let mut sink = RecorderSink::create(&dir).unwrap();
+        sink.record(&frame_of(9)).unwrap();
+        sink.finish().unwrap();
+        drop(sink);
+        // both readback paths agree: one frame, no stale scans
+        let mut replay = RecordedSource::open(&dir).unwrap();
+        assert_eq!(replay.len_hint(), Some(1));
+        assert_eq!(replay.next_frame().unwrap().unwrap().cloud.len(), 10);
+        let plain = KittiSource::open(&dir).unwrap();
+        assert_eq!(plain.len_hint(), Some(1), "stale .bin scans swept");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recorder_refuses_a_bin_directory_without_a_manifest() {
+        // a .bin directory with no manifest is a dataset, not a corpus —
+        // recording over it must fail instead of deleting the scans
+        let dir = std::env::temp_dir().join("splitpoint_kitti_recorder_guard");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let p = Point { x: 1.0, y: 0.0, z: 0.0, intensity: 0.5 };
+        write_bin(&dir.join("000000.bin"), &PointCloud { points: vec![p] }).unwrap();
+        let err = RecorderSink::create(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("refusing"), "got: {err:#}");
+        assert!(dir.join("000000.bin").is_file(), "the dataset scan survives");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recorded_source_rejects_missing_or_bad_manifest() {
+        let dir = std::env::temp_dir().join("splitpoint_kitti_corpus_bad");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(RecordedSource::open(&dir).is_err(), "no manifest");
+        fs::write(dir.join(CORPUS_MANIFEST), "{\"schema\": \"other/v9\"}").unwrap();
+        assert!(RecordedSource::open(&dir).is_err(), "wrong schema");
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -12,6 +12,8 @@
 pub mod kitti;
 pub mod scene;
 
+pub use kitti::{RecordedSource, RecorderSink};
+
 /// One LiDAR return: metric xyz + reflectance intensity.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Point {
@@ -148,6 +150,56 @@ impl ReplaySource {
     }
 }
 
+/// Tee wrapper: pass every frame of `inner` through unchanged while
+/// recording it into a [`RecorderSink`] replay corpus — how a session's
+/// `record:<dir>` sink spec captures whatever it streamed (synthetic,
+/// KITTI, multi-sensor fan-in …) as a deterministic regression corpus.
+/// The manifest is written when the inner source ends (and best-effort on
+/// drop for streams abandoned mid-way).
+pub struct RecordingSource {
+    inner: Box<dyn FrameSource>,
+    sink: RecorderSink,
+}
+
+impl RecordingSource {
+    pub fn new(
+        inner: Box<dyn FrameSource>,
+        dir: &std::path::Path,
+    ) -> anyhow::Result<RecordingSource> {
+        Ok(RecordingSource {
+            inner,
+            sink: RecorderSink::create(dir)?,
+        })
+    }
+}
+
+impl FrameSource for RecordingSource {
+    fn next_frame(&mut self) -> anyhow::Result<Option<Frame>> {
+        match self.inner.next_frame()? {
+            Some(frame) => {
+                self.sink.record(&frame)?;
+                Ok(Some(frame))
+            }
+            None => {
+                self.sink.finish()?;
+                Ok(None)
+            }
+        }
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} → record:{}",
+            self.inner.describe(),
+            self.sink.dir().display()
+        )
+    }
+}
+
 impl FrameSource for ReplaySource {
     fn next_frame(&mut self) -> anyhow::Result<Option<Frame>> {
         if self.next >= self.total || self.clouds.is_empty() {
@@ -225,5 +277,28 @@ mod tests {
     fn empty_replay_ends_immediately() {
         let mut s = ReplaySource::from_clouds(Vec::new()).repeated(5);
         assert!(s.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn recording_source_tees_frames_and_writes_the_manifest_at_eos() {
+        let dir = std::env::temp_dir().join("splitpoint_recording_source");
+        let _ = std::fs::remove_dir_all(&dir);
+        let clouds = vec![cloud_of(1), cloud_of(2)];
+        let inner = Box::new(ReplaySource::from_clouds(clouds.clone()));
+        let mut rec = RecordingSource::new(inner, &dir).unwrap();
+        assert_eq!(rec.len_hint(), Some(2));
+        let mut passed = Vec::new();
+        while let Some(f) = rec.next_frame().unwrap() {
+            passed.push(f.cloud);
+        }
+        assert_eq!(passed.len(), 2, "frames pass through unchanged");
+        assert_eq!(passed[0].points, clouds[0].points);
+
+        // EOS wrote the manifest: the corpus replays bit-exactly
+        let mut replay = RecordedSource::open(&dir).unwrap();
+        assert_eq!(replay.len_hint(), Some(2));
+        let f0 = replay.next_frame().unwrap().unwrap();
+        assert_eq!(f0.cloud.points, clouds[0].points);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -8,17 +8,20 @@
 //! mid-stream.
 
 use std::path::PathBuf;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
+use splitpoint::bench::paper;
 use splitpoint::config::SystemConfig;
-use splitpoint::coordinator::adaptive::Objective;
+use splitpoint::coordinator::adaptive::{self, Objective};
+use splitpoint::coordinator::batcher::MultiSource;
 use splitpoint::coordinator::pipeline::{run_source, PipelineConfig};
 use splitpoint::coordinator::remote::{EdgeClient, Server};
 use splitpoint::coordinator::session::{
-    Adaptive, MIN_BANDWIDTH_SAMPLE_BYTES, PolicyContext, SessionFrame, SplitPolicy, SplitSession,
+    Adaptive, Fixed, MIN_BANDWIDTH_SAMPLE_BYTES, PolicyContext, SessionFrame, SplitPolicy,
+    SplitSession,
 };
 use splitpoint::coordinator::{Engine, EngineRole};
-use splitpoint::pointcloud::kitti::{self, KittiSource};
+use splitpoint::pointcloud::kitti::{self, KittiSource, RecordedSource};
 use splitpoint::pointcloud::scene::SceneGenerator;
 use splitpoint::pointcloud::{FrameSource, PointCloud, ReplaySource};
 use splitpoint::postprocess::Detection;
@@ -383,4 +386,291 @@ fn parse_source_rejects_unknown_specs() {
     let mut synth = parse_source(None, 3, Some(2)).unwrap();
     assert_eq!(synth.len_hint(), Some(2));
     assert!(synth.next_frame().unwrap().is_some());
+}
+
+/// Fixed-policy test double that records the transport's in-flight
+/// occupancy at every policy boundary — the probe for the
+/// no-drain-at-segment-boundaries contract.
+struct FixedProbing {
+    sp: SplitPoint,
+    every: usize,
+    in_flight_log: Arc<Mutex<Vec<usize>>>,
+}
+
+impl SplitPolicy for FixedProbing {
+    fn describe(&self) -> String {
+        "fixed-probing".to_string()
+    }
+
+    fn choose(&mut self, ctx: &PolicyContext<'_>) -> anyhow::Result<SplitPoint> {
+        self.in_flight_log.lock().unwrap().push(ctx.in_flight);
+        Ok(self.sp)
+    }
+
+    fn interval(&self) -> usize {
+        self.every
+    }
+}
+
+/// The continuous-session contract (tentpole acceptance): a fixed-policy
+/// stream never drains the transport's in-flight window at a segment
+/// boundary. On the virtual-clock transport at depth 3 with 3-frame
+/// segments, every boundary after the first must see occupancy > 0 —
+/// and per-frame output must still be byte-identical to `run_frame`.
+#[test]
+fn fixed_policy_keeps_window_full_across_segment_boundaries() {
+    let e = engine();
+    let sp = e.graph().split_by_name("vfe").unwrap();
+    let stream = clouds(16000, 10);
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let mut session = SplitSession::builder()
+        .engine(e.clone())
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .policy(Box::new(FixedProbing {
+            sp,
+            every: 3,
+            in_flight_log: log.clone(),
+        }))
+        .pipeline_depth(3)
+        .build()
+        .unwrap();
+    let (frames, report) = session.run().unwrap();
+    assert_eq!(frames.len(), stream.len());
+    assert_eq!(report.switches, 0, "fixed policy never flips");
+
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 4, "boundaries at frames 0, 3, 6, 9");
+    assert_eq!(log[0], 0, "nothing in flight before the first frame");
+    for (i, &occ) in log.iter().enumerate().skip(1) {
+        assert!(
+            occ > 0,
+            "boundary {i}: window drained to {occ} — the stream stalled at a segment \
+             boundary instead of staying pipelined"
+        );
+    }
+
+    for f in &frames {
+        let serial = e.run_frame(&stream[f.source_seq as usize], sp).unwrap();
+        assert!(
+            dets_bitwise_equal(&f.output.detections, &serial.detections),
+            "frame {} diverged under the continuous window",
+            f.seq
+        );
+        assert_eq!(f.output.uplink_bytes, serial.timing.uplink_bytes);
+    }
+}
+
+/// TCP acceptance sweep: a pipelined fixed-policy TCP session must be
+/// byte-identical to `Engine::run_frame` at *every* split point — the
+/// persistent stream handle (window kept full across boundaries) is pure
+/// scheduling, never semantics, wherever the pipeline is cut.
+#[test]
+fn tcp_stream_matches_run_frame_at_every_split() {
+    let full = engine();
+    let server = SplitSession::builder()
+        .artifacts(artifacts_dir())
+        .build_server("127.0.0.1:0")
+        .unwrap();
+    let addr = server.addr().to_string();
+    let stream = clouds(17000, 2);
+
+    for sp in paper::paper_splits(&full).unwrap() {
+        let label = full.graph().split_label(sp);
+        let mut session = SplitSession::builder()
+            .engine(full.clone())
+            .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+            .policy(Box::new(Fixed(sp)))
+            .tcp(&addr)
+            .pipeline_depth(2)
+            .build()
+            .unwrap();
+        let (frames, report) = session.run().unwrap();
+        assert_eq!(frames.len(), stream.len(), "split '{label}'");
+        assert_eq!(report.frames, stream.len());
+        for f in &frames {
+            let local = full.run_frame(&stream[f.source_seq as usize], sp).unwrap();
+            assert!(
+                dets_bitwise_equal(&f.output.detections, &local.detections),
+                "frame {} diverged over the persistent TCP stream at split '{label}'",
+                f.seq
+            );
+            // byte accounting matches wherever the live set is non-empty
+            // (an empty set ships a ~9-byte protocol packet over TCP that
+            // the virtual clock has no reason to charge)
+            if local.timing.uplink_bytes > 0 {
+                assert_eq!(f.output.uplink_bytes, local.timing.uplink_bytes, "split '{label}'");
+                assert_eq!(
+                    f.output.uplink_v1_bytes, local.timing.uplink_v1_bytes,
+                    "split '{label}'"
+                );
+            }
+        }
+    }
+    server.shutdown();
+}
+
+/// Record → replay is lossless: a session teed through a `RecorderSink`
+/// and a second session replaying the corpus produce byte-identical
+/// detections with provenance (sensor, seq, points) intact — for both a
+/// synthetic stream and a KITTI `.bin` fixture directory. This is the
+/// local twin of the CI `replay-corpus` lane.
+#[test]
+fn record_replay_roundtrip_is_lossless() {
+    let e = engine();
+    let base = std::env::temp_dir().join("splitpoint_session_record_replay");
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+
+    // ---- source A: synthetic; source B: a KITTI fixture directory
+    let synth = clouds(18000, 3);
+    let kitti_dir = base.join("kitti_fixture");
+    std::fs::create_dir_all(&kitti_dir).unwrap();
+    let kitti_clouds = clouds(18500, 2);
+    for (i, cloud) in kitti_clouds.iter().enumerate() {
+        kitti::write_bin(&kitti_dir.join(format!("{i:06}.bin")), cloud).unwrap();
+    }
+    let cases: Vec<(&str, Box<dyn FrameSource>)> = vec![
+        (
+            "synthetic",
+            Box::new(ReplaySource::from_clouds(synth.clone())),
+        ),
+        ("kitti", Box::new(KittiSource::open(&kitti_dir).unwrap())),
+    ];
+
+    for (name, source) in cases {
+        let corpus = base.join(format!("corpus_{name}"));
+        let mut recording = SplitSession::builder()
+            .engine(e.clone())
+            .source(source)
+            .record_to(&corpus)
+            .pipeline_depth(2)
+            .build()
+            .unwrap();
+        let (orig, _) = recording.run().unwrap();
+        assert!(!orig.is_empty(), "{name}: recorded session streamed frames");
+        assert!(corpus.join("manifest.json").is_file(), "{name}: manifest written");
+        let direct = RecordedSource::open(&corpus).unwrap();
+        assert_eq!(direct.len_hint(), Some(orig.len()), "{name}: corpus is complete");
+
+        // replay through the CLI spec path (exercises parse_source too)
+        let mut replay = SplitSession::builder()
+            .engine(e.clone())
+            .source_spec(Some(&format!("replay:{}", corpus.display())), 1, None)
+            .unwrap()
+            .pipeline_depth(2)
+            .build()
+            .unwrap();
+        let (replayed, _) = replay.run().unwrap();
+        assert_eq!(replayed.len(), orig.len(), "{name}: frame count preserved");
+        for (a, b) in orig.iter().zip(&replayed) {
+            assert_eq!(a.sensor_id, b.sensor_id, "{name}: sensor tag preserved");
+            assert_eq!(a.source_seq, b.source_seq, "{name}: source seq preserved");
+            assert_eq!(a.points, b.points, "{name}: point count preserved");
+            assert!(
+                dets_bitwise_equal(&a.output.detections, &b.output.detections),
+                "{name}: frame {} detections diverged through record→replay",
+                a.seq
+            );
+            assert_eq!(a.output.uplink_bytes, b.output.uplink_bytes, "{name}");
+        }
+    }
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+/// Multi-sensor fan-in: two replay "sensors" of unequal length
+/// round-robin through the batcher with per-sensor tagging intact, the
+/// report accounts frames per sensor, and every frame remains
+/// byte-identical to `run_frame` on its own cloud.
+#[test]
+fn multi_sensor_fan_in_round_robins_and_matches_run_frame() {
+    let e = engine();
+    let s0 = clouds(19000, 3);
+    let s1 = clouds(19500, 2);
+    let multi = MultiSource::round_robin(vec![
+        Box::new(ReplaySource::from_clouds(s0.clone())),
+        Box::new(ReplaySource::from_clouds(s1.clone())),
+    ]);
+    let mut session = SplitSession::builder()
+        .engine(e.clone())
+        .source(Box::new(multi))
+        .pipeline_depth(2)
+        .build()
+        .unwrap();
+    let (frames, report) = session.run().unwrap();
+
+    let tags: Vec<(u32, u64)> = frames.iter().map(|f| (f.sensor_id, f.source_seq)).collect();
+    assert_eq!(
+        tags,
+        [(0, 0), (1, 0), (0, 1), (1, 1), (0, 2)],
+        "round-robin interleave, sensor 1 drops out when exhausted"
+    );
+    assert_eq!(report.sensor_usage.get(&0), Some(&3));
+    assert_eq!(report.sensor_usage.get(&1), Some(&2));
+    assert!(report.summary().contains("sensors"), "summary reports the fan-in");
+
+    for f in &frames {
+        let cloud = match f.sensor_id {
+            0 => &s0[f.source_seq as usize],
+            _ => &s1[f.source_seq as usize],
+        };
+        let serial = e.run_frame(cloud, f.split).unwrap();
+        assert!(
+            dets_bitwise_equal(&f.output.detections, &serial.detections),
+            "sensor {} frame {} diverged through the fan-in",
+            f.sensor_id,
+            f.source_seq
+        );
+    }
+}
+
+/// `Adaptive` flip damping: a hysteresis margin keeps the policy at the
+/// current split when the projected win is below the margin, and the
+/// post-switch cooldown refuses a second flip for the configured number
+/// of evaluations even with the margin at zero.
+#[test]
+fn adaptive_hysteresis_and_cooldown_refuse_flips() {
+    let e = engine();
+    let cloud = SceneGenerator::with_seed(20000).generate().cloud;
+    let edge_only = e.graph().split_edge_only();
+    let ctx = |current: Option<SplitPoint>| PolicyContext {
+        engine: &*e,
+        cloud: &cloud,
+        frames_done: 0,
+        bandwidth_bps: None,
+        current,
+        in_flight: 0,
+    };
+
+    // precondition: under the default link, running everything on the
+    // slow edge is NOT the inference-time optimum (the paper's headline)
+    let best = adaptive::choose_split(&e, &cloud, Objective::InferenceTime).unwrap().split;
+    assert_ne!(best, edge_only, "test precondition");
+
+    // an absurd hysteresis margin: no win is ever big enough to switch
+    let mut sticky = Adaptive::new(Objective::InferenceTime).hysteresis(1e9);
+    assert_eq!(
+        sticky.choose(&ctx(Some(edge_only))).unwrap(),
+        edge_only,
+        "hysteresis refuses the flip"
+    );
+    // zero margin: the same situation flips to the optimum
+    let mut eager = Adaptive::new(Objective::InferenceTime).hysteresis(0.0);
+    assert_eq!(eager.choose(&ctx(Some(edge_only))).unwrap(), best);
+
+    // cooldown 1: first evaluation switches, the next one is frozen at
+    // the current split, the one after that may switch again
+    let mut cooled = Adaptive::new(Objective::InferenceTime)
+        .hysteresis(0.0)
+        .cooldown(1);
+    assert_eq!(cooled.choose(&ctx(Some(edge_only))).unwrap(), best, "switches");
+    assert_eq!(
+        cooled.choose(&ctx(Some(edge_only))).unwrap(),
+        edge_only,
+        "within the cooldown window the flip is refused"
+    );
+    assert_eq!(
+        cooled.choose(&ctx(Some(edge_only))).unwrap(),
+        best,
+        "cooldown expired"
+    );
 }

@@ -10,11 +10,16 @@ design.
 
 To arm the gate:
 
-1. Download the ``BENCH_micro`` artifact from the latest main-branch CI run
-   (threads=1 file).
-2. ``python3 scripts/arm_perf_gate.py /path/to/downloaded/BENCH_micro.json``
-3. Commit the rewritten repo-root ``BENCH_micro.json``, and paste the
-   printed speedup table into docs/PERF.md.
+1. Download the ``BENCH_micro`` artifact from the latest main-branch CI run.
+2. ``python3 scripts/arm_perf_gate.py /path/to/BENCH_micro.json \\
+       [/path/to/BENCH_micro_tmax.json]``
+3. Commit the rewritten repo-root ``BENCH_micro.json`` (and, when the tmax
+   twin was given, the informational ``BENCH_micro_tmax.json``), and paste
+   the printed speedup + drift tables into docs/PERF.md.
+
+``--check`` runs the same validation against the given artifact(s) without
+writing anything — the CI perf-gate lane invokes it on its freshly measured
+files so the script itself cannot rot.
 
 The script refuses artifacts that are empty, schema-mismatched, or missing
 the gated hot paths, so a truncated or filtered run cannot silently become
@@ -27,6 +32,7 @@ import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 TARGET = REPO_ROOT / "BENCH_micro.json"
+TARGET_TMAX = REPO_ROOT / "BENCH_micro_tmax.json"
 SCHEMA = "splitpoint-micro-bench/v1"
 
 # Hot paths the gate tracks; a baseline missing any of these is not a full
@@ -57,35 +63,113 @@ def fail(msg: str) -> "sys.NoReturn":
     sys.exit(1)
 
 
-def main() -> None:
-    if len(sys.argv) != 2:
-        fail(f"usage: {sys.argv[0]} <downloaded BENCH_micro.json>")
-    src = pathlib.Path(sys.argv[1])
+def load(path: pathlib.Path) -> dict:
     try:
-        data = json.loads(src.read_text())
+        return json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
-        fail(f"cannot read artifact {src}: {e}")
+        fail(f"cannot read artifact {path}: {e}")
 
+
+def validate(data: dict, src: pathlib.Path, *, gated: bool) -> None:
+    """Reject empty/partial/mis-threaded artifacts. `gated` artifacts must
+    be the threads=1 run; informational (tmax) twins may carry any thread
+    count (a 1-core runner legitimately measures max == 1)."""
     if data.get("schema") != SCHEMA:
-        fail(f"schema mismatch: got {data.get('schema')!r}, want {SCHEMA!r}")
+        fail(f"{src}: schema mismatch: got {data.get('schema')!r}, want {SCHEMA!r}")
     baseline = data.get("baseline") or {}
     current = data.get("current") or {}
     if not baseline or not current:
-        fail("artifact has an empty baseline/current section — not a full measured run")
+        fail(f"{src}: empty baseline/current section — not a full measured run")
     missing = [k for k in REQUIRED if k not in baseline]
     if missing:
         fail(
-            "baseline is missing gated hot paths (filtered or truncated run?): "
-            + ", ".join(missing)
+            f"{src}: baseline is missing gated hot paths (filtered or truncated "
+            "run?): " + ", ".join(missing)
         )
-    threads = data.get("threads")
-    if threads not in (None, 1):
-        fail(f"gated baseline must be the threads=1 run, artifact says threads={threads}")
+    if gated:
+        threads = data.get("threads")
+        if threads not in (None, 1):
+            fail(
+                f"{src}: gated baseline must be the threads=1 run, artifact says "
+                f"threads={threads}"
+            )
+
+
+def tracked_stat(entry: dict) -> "float | None":
+    """Mirror of bench::regression: p50 preferred, mean fallback."""
+    for key in ("p50_ms", "mean_ms"):
+        v = entry.get(key)
+        if isinstance(v, (int, float)) and v > 0:
+            return float(v)
+    return None
+
+
+def drift_table(old: dict, new: dict) -> "list[str]":
+    """Markdown drift table (docs/PERF.md) of new-vs-committed p50s, worst
+    drift first. Empty when the committed baseline was never armed."""
+    old_base = old.get("baseline") or {}
+    new_cur = new.get("current") or {}
+    rows = []
+    for name in sorted(set(old_base) & set(new_cur)):
+        was = tracked_stat(old_base[name])
+        now = tracked_stat(new_cur[name])
+        if was is None or now is None:
+            continue
+        rows.append((name, was, now, (now - was) / was * 100.0))
+    if not rows:
+        return []
+    rows.sort(key=lambda r: -abs(r[3]))
+    lines = [
+        "| bench | committed p50 ms | new p50 ms | drift |",
+        "|---|---|---|---|",
+    ]
+    for name, was, now, pct in rows:
+        lines.append(f"| {name} | {was:.3f} | {now:.3f} | {pct:+.1f}% |")
+    return lines
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    check_only = "--check" in argv
+    argv = [a for a in argv if a != "--check"]
+    if len(argv) not in (1, 2):
+        fail(
+            f"usage: {sys.argv[0]} [--check] <BENCH_micro.json> "
+            "[<BENCH_micro_tmax.json>]"
+        )
+    src = pathlib.Path(argv[0])
+    data = load(src)
+    validate(data, src, gated=True)
+
+    tmax_src = pathlib.Path(argv[1]) if len(argv) == 2 else None
+    tmax_data = None
+    if tmax_src is not None:
+        tmax_data = load(tmax_src)
+        validate(tmax_data, tmax_src, gated=False)
+
+    if check_only:
+        checked = [str(src)] + ([str(tmax_src)] if tmax_src else [])
+        print(f"check ok: {', '.join(checked)} — full runs, schema + hot paths valid")
+        return
+
+    # drift of the fresh run against whatever baseline is committed today
+    # (meaningful once armed; silent on the first arming)
+    drift = drift_table(load(TARGET) if TARGET.exists() else {}, data)
 
     data["status"] = "armed"
     data.pop("note", None)
     TARGET.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     print(f"armed: wrote {TARGET.relative_to(REPO_ROOT)} from {src}")
+
+    if tmax_data is not None:
+        tmax_data["status"] = "informational"
+        tmax_data.pop("note", None)
+        TARGET_TMAX.write_text(json.dumps(tmax_data, indent=2, sort_keys=True) + "\n")
+        print(
+            f"promoted threads=max twin: wrote "
+            f"{TARGET_TMAX.relative_to(REPO_ROOT)} from {tmax_src} "
+            "(informational — never gated; runner core counts vary)"
+        )
 
     vs_legacy = data.get("speedup_vs_legacy") or {}
     if vs_legacy:
@@ -99,7 +183,15 @@ def main() -> None:
             verdict = "—" if floor is None else ("OK" if ratio >= floor else "LOW")
             floor_s = f"≥{floor}×" if floor is not None else "—"
             print(f"| {name} | {ratio:.2f}× | {floor_s} | {verdict} |")
-    print("\nnext: git add BENCH_micro.json && commit — the perf-gate lane is armed.")
+
+    if drift:
+        print("\ndrift vs previously committed baseline (paste into docs/PERF.md):\n")
+        print("\n".join(drift))
+
+    print("\nnext: git add BENCH_micro.json", end="")
+    if tmax_data is not None:
+        print(" BENCH_micro_tmax.json", end="")
+    print(" && commit — the perf-gate lane is armed.")
 
 
 if __name__ == "__main__":
