@@ -4,15 +4,20 @@
 //! whole-frame paths.
 //!
 //!   cargo bench --bench micro [-- keyword…] [-- --json] \
-//!       [-- --threads N|max] [-- --out FILE]
+//!       [-- --threads N|max] [-- --simd auto|scalar|forced] [-- --out FILE]
 //!
 //! `--json` additionally writes `BENCH_micro.json` (or `--out FILE`) at
 //! the repo root (per-bench mean/p50/p95 + throughput). The file keeps
 //! the recorded `baseline` section across runs — the first full
 //! single-threaded run seeds it — so the perf trajectory
 //! (`speedup_vs_baseline`) is tracked in-tree; see docs/PERF.md.
-//! `--threads` sizes the executor's kernel worker pool (outputs are
-//! bit-identical at any count; only the clock moves).
+//! `--threads` sizes the executor's kernel worker pool and `--simd` picks
+//! the axpy dispatch (outputs are bit-identical at any combination; only
+//! the clock moves). The JSON records the resolved dispatch in
+//! `cpu_features` so the perf gate never compares baselines across
+//! instruction sets, and the `runtime/*` hot paths run `@scalar` twins
+//! (same engine, forced-scalar dispatch) yielding `speedup_vs_scalar` —
+//! the SIMD win in isolation.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -24,8 +29,9 @@ use splitpoint::pointcloud::ReplaySource;
 use splitpoint::postprocess::nms::nms_bev;
 use splitpoint::postprocess::Detection;
 use splitpoint::runtime::reference::ReferenceModel;
+use splitpoint::runtime::simd::{self, SimdMode};
 use splitpoint::tensor::codec::{Packet, Policy};
-use splitpoint::util::cli::parse_threads;
+use splitpoint::util::cli::{parse_simd, parse_threads};
 use splitpoint::util::json::{self, Value};
 use splitpoint::util::rng::Rng;
 use splitpoint::voxel::Voxelizer;
@@ -38,6 +44,7 @@ fn want(filters: &[String], key: &str) -> bool {
 fn main() -> anyhow::Result<()> {
     let mut json_out = false;
     let mut threads = 1usize;
+    let mut simd_mode = SimdMode::Auto;
     let mut out_path = "BENCH_micro.json".to_string();
     let mut filters: Vec<String> = Vec::new();
     let mut it = std::env::args().skip(1);
@@ -58,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         match flag.as_str() {
             "--json" => json_out = true,
             "--threads" => threads = parse_threads(Some(&value("--threads")?))?,
+            "--simd" => simd_mode = parse_simd(Some(&value("--simd")?))?,
             "--out" => out_path = value("--out")?,
             s if s.starts_with("--") => {} // tolerate harness flags
             s => filters.push(s.to_string()),
@@ -198,11 +206,20 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
-    // ---- gather-GEMM kernel stages vs their scalar `@legacy` twins: the
-    // perf-gate's canonical before/after pair (targets in docs/PERF.md:
+    // ---- gather-GEMM kernel stages vs their scalar `@legacy` twins (the
+    // perf-gate's canonical before/after pair; targets in docs/PERF.md:
     // ≥1.5x at --threads max, ≥1.15x single-threaded from layout/blocking)
+    // and their `@scalar` twins (same gather-GEMM engine, forced-scalar
+    // axpy dispatch; target ≥1.5x SIMD-vs-scalar at threads=1 on AVX2)
     if want(&filters, "runtime") {
-        let engine = SplitSession::builder().threads(threads).build_engine()?;
+        let engine = SplitSession::builder()
+            .threads(threads)
+            .simd(simd_mode)
+            .build_engine()?;
+        let scalar_engine = SplitSession::builder()
+            .threads(threads)
+            .simd(SimdMode::Scalar)
+            .build_engine()?;
         let (store, _) = engine.profile_frame(&scene.cloud)?;
         let legacy = ReferenceModel::new(&manifest)?;
         for module in ["conv1", "bev_head"] {
@@ -231,6 +248,15 @@ fn main() -> anyhow::Result<()> {
                     None
                 }));
             }
+            {
+                let rt = scalar_engine.runtime().clone();
+                let module = module.to_string();
+                let inputs = inputs.clone();
+                results.push(run_bench(&format!("{bench_name}@scalar"), cfg, move || {
+                    std::hint::black_box(rt.execute(&module, &inputs).unwrap().len());
+                    None
+                }));
+            }
             let idx = legacy.module_index(module).expect("legacy module");
             let lm = &legacy;
             results.push(run_bench(&format!("{bench_name}@legacy"), cfg, move || {
@@ -242,7 +268,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- per-module execution + whole-frame paths
     if want(&filters, "xla") || want(&filters, "run_frame") {
-        let engine = SplitSession::builder().threads(threads).build_engine()?;
+        let engine = SplitSession::builder().threads(threads).simd(simd_mode).build_engine()?;
         if want(&filters, "xla") {
             let (store, _) = engine.profile_frame(&scene.cloud)?;
             for node in engine.graph().nodes() {
@@ -314,6 +340,7 @@ fn main() -> anyhow::Result<()> {
         // stage parallelism compose (the builder does the same arithmetic)
         let engine = SplitSession::builder()
             .threads(threads)
+            .simd(simd_mode)
             .pipeline_depth(2)
             .tail_workers(2)
             .build_engine()?;
@@ -325,7 +352,7 @@ fn main() -> anyhow::Result<()> {
             // the serial twin gets the FULL thread budget (no tail workers
             // to share with) so speedup_vs_legacy isolates stage overlap
             // instead of comparing against a kernel-handicapped baseline
-            let serial = SplitSession::builder().threads(threads).build_engine()?;
+            let serial = SplitSession::builder().threads(threads).simd(simd_mode).build_engine()?;
             let cl = clouds.clone();
             results.push(run_bench("pipeline/stream_16_frames@legacy", cfg, move || {
                 for c in &cl {
@@ -365,6 +392,7 @@ fn main() -> anyhow::Result<()> {
     if want(&filters, "session") {
         let engine = SplitSession::builder()
             .threads(threads)
+            .simd(simd_mode)
             .pipeline_depth(2)
             .tail_workers(2)
             .build_engine()?;
@@ -387,7 +415,8 @@ fn main() -> anyhow::Result<()> {
 
     print_table("micro benches (wall-clock host ms)", &results);
     if json_out {
-        write_json(&results, cfg, filters.is_empty(), threads, &out_path)?;
+        let dispatch = simd::resolve(simd_mode)?;
+        write_json(&results, cfg, filters.is_empty(), threads, dispatch, &out_path)?;
     }
     Ok(())
 }
@@ -402,6 +431,7 @@ fn write_json(
     cfg: BenchConfig,
     full_run: bool,
     threads: usize,
+    dispatch: simd::SimdLevel,
     out_path: &str,
 ) -> anyhow::Result<()> {
     let mut current: BTreeMap<String, Value> = BTreeMap::new();
@@ -438,6 +468,7 @@ fn write_json(
     let mean_of = |v: &Value| v.get("mean_ms").and_then(Value::as_f64);
     let mut vs_baseline: BTreeMap<String, Value> = BTreeMap::new();
     let mut vs_legacy: BTreeMap<String, Value> = BTreeMap::new();
+    let mut vs_scalar: BTreeMap<String, Value> = BTreeMap::new();
     for (k, cur) in &current {
         let cm = mean_of(cur);
         if let (Some(bm), Some(cm)) = (baseline.get(k).and_then(&mean_of), cm) {
@@ -453,6 +484,15 @@ fn write_json(
                 vs_legacy.insert(k.clone(), Value::num(lm / cm));
             }
         }
+        // "name" vs "name@scalar" — the SIMD win in isolation (same
+        // gather-GEMM engine, forced-scalar axpy dispatch)
+        if let (Some(sm), Some(cm)) =
+            (current.get(&format!("{k}@scalar")).and_then(&mean_of), cm)
+        {
+            if cm > 0.0 {
+                vs_scalar.insert(k.clone(), Value::num(sm / cm));
+            }
+        }
     }
 
     let out = Value::Obj(BTreeMap::from([
@@ -464,10 +504,19 @@ fn write_json(
         ("iters".to_string(), Value::num(cfg.iters as f64)),
         ("warmup_iters".to_string(), Value::num(cfg.warmup_iters as f64)),
         ("threads".to_string(), Value::num(threads as f64)),
+        (
+            "cpu_features".to_string(),
+            Value::Obj(BTreeMap::from([
+                ("arch".to_string(), Value::str(std::env::consts::ARCH)),
+                ("dispatch".to_string(), Value::str(dispatch.name())),
+                ("detected".to_string(), Value::str(simd::detect().name())),
+            ])),
+        ),
         ("baseline".to_string(), Value::Obj(baseline)),
         ("current".to_string(), Value::Obj(current)),
         ("speedup_vs_baseline".to_string(), Value::Obj(vs_baseline)),
         ("speedup_vs_legacy".to_string(), Value::Obj(vs_legacy)),
+        ("speedup_vs_scalar".to_string(), Value::Obj(vs_scalar)),
     ]));
     std::fs::write(out_path, out.pretty())?;
     eprintln!("[micro] wrote {out_path}");

@@ -57,6 +57,7 @@ use crate::pointcloud::kitti::{KittiSource, RecordedSource};
 use crate::pointcloud::scene::SceneSource;
 use crate::pointcloud::{Frame, FrameSource, PointCloud, RecordingSource, ReplaySource};
 use crate::postprocess::Detection;
+use crate::runtime::simd::SimdMode;
 use crate::runtime::XlaRuntime;
 
 /// Upper bound on frames between policy re-evaluations, whatever the
@@ -596,6 +597,15 @@ pub trait SplitPolicy: Send {
     fn wants_bandwidth(&self) -> bool {
         false
     }
+
+    /// Human-readable reason for the most recent [`SplitPolicy::choose`]
+    /// decision, recorded into the [`SegmentRecord`] that decision opens.
+    /// Stateless policies keep the default (their static description);
+    /// [`Adaptive`] reports *why* it switched, held, or was frozen by its
+    /// cooldown.
+    fn explain(&self) -> String {
+        self.describe()
+    }
 }
 
 /// Always the same split (the classic `--split` flag).
@@ -636,6 +646,9 @@ pub struct Adaptive {
     evals_since_profile: usize,
     /// evaluations since the last switch (saturating; MAX = never switched)
     evals_since_switch: usize,
+    /// why the last `choose` call decided what it did (see
+    /// [`SplitPolicy::explain`]); empty before the first evaluation
+    last_explain: String,
 }
 
 impl Adaptive {
@@ -649,6 +662,7 @@ impl Adaptive {
             cached_costs: None,
             evals_since_profile: 0,
             evals_since_switch: usize::MAX,
+            last_explain: String::new(),
         }
     }
 
@@ -707,6 +721,11 @@ impl SplitPolicy for Adaptive {
         let costs = self.cached_costs.as_ref().expect("profiled above");
         let estimates = adaptive::price_splits(costs, &link);
         let best = adaptive::best_estimate(&estimates, self.objective);
+        let best_ms = self.objective.cost(best).as_secs_f64() * 1e3;
+        let bw = match ctx.bandwidth_bps {
+            Some(bps) if bps > 0.0 => format!("{:.2} MB/s measured", bps / 1e6),
+            _ => "configured link model".to_string(),
+        };
         // hysteresis against the split the session actually ran last
         // segment (`ctx.current` — the policy keeps no shadow copy)
         let desired = match ctx.current {
@@ -721,18 +740,52 @@ impl SplitPolicy for Adaptive {
                         if self.objective.cost(best).as_secs_f64()
                             < cc * (1.0 - self.hysteresis) =>
                     {
+                        self.last_explain = format!(
+                            "switched: best prices {best_ms:.2} ms vs current \
+                             {:.2} ms, beating the {:.0}% hysteresis ({bw})",
+                            cc * 1e3,
+                            self.hysteresis * 100.0
+                        );
                         best.split
                     }
-                    Some(_) => cur,
-                    None => best.split,
+                    Some(cc) => {
+                        self.last_explain = format!(
+                            "held: best prices {best_ms:.2} ms vs current {:.2} ms, \
+                             within the {:.0}% hysteresis ({bw})",
+                            cc * 1e3,
+                            self.hysteresis * 100.0
+                        );
+                        cur
+                    }
+                    None => {
+                        self.last_explain =
+                            "switched: current split missing from estimates".to_string();
+                        best.split
+                    }
                 }
             }
-            _ => best.split,
+            Some(_) => {
+                self.last_explain =
+                    format!("held: best split already current at {best_ms:.2} ms ({bw})");
+                best.split
+            }
+            None => {
+                self.last_explain =
+                    format!("initial pick: cheapest split prices {best_ms:.2} ms ({bw})");
+                best.split
+            }
         };
         // cooldown: a recent switch freezes the policy at the current
         // split for `cooldown` further evaluations
         let chosen = match ctx.current {
-            Some(cur) if desired != cur && self.evals_since_switch < self.cooldown => cur,
+            Some(cur) if desired != cur && self.evals_since_switch < self.cooldown => {
+                self.last_explain = format!(
+                    "held by cooldown: switch wanted but only {} of {} evaluations \
+                     have passed since the last flip",
+                    self.evals_since_switch, self.cooldown
+                );
+                cur
+            }
             _ => desired,
         };
         if ctx.current.is_some_and(|cur| chosen != cur) {
@@ -749,6 +802,14 @@ impl SplitPolicy for Adaptive {
 
     fn wants_bandwidth(&self) -> bool {
         true
+    }
+
+    fn explain(&self) -> String {
+        if self.last_explain.is_empty() {
+            self.describe()
+        } else {
+            self.last_explain.clone()
+        }
     }
 }
 
@@ -768,6 +829,24 @@ pub struct SessionFrame {
     pub split: SplitPoint,
     pub split_label: String,
     pub output: FrameOutput,
+}
+
+/// One contiguous run of frames at a single split: opened whenever the
+/// policy's decision actually changes the split (the stream's first
+/// boundary included), closed by the next flip or end of stream. The
+/// policy boundaries *between* flips — where the decision held — extend
+/// the open record's frame count rather than opening a new one.
+#[derive(Debug, Clone)]
+pub struct SegmentRecord {
+    /// 0-based position in stream order
+    pub index: usize,
+    pub split: SplitPoint,
+    pub split_label: String,
+    /// frames submitted while this segment was the open one
+    pub frames: usize,
+    /// the policy's [`SplitPolicy::explain`] at the boundary that opened
+    /// this segment — for [`Adaptive`], why it flipped
+    pub reason: String,
 }
 
 /// End-of-stream accounting.
@@ -790,9 +869,29 @@ pub struct SessionReport {
     pub uplink_v1_bytes: usize,
     /// staged-pipeline stage/queue report, when the transport kept one
     pub transport_report: Option<String>,
+    /// per-segment policy decisions in stream order (`run --report`)
+    pub segments: Vec<SegmentRecord>,
 }
 
 impl SessionReport {
+    /// Markdown table of per-segment policy decisions, or `None` for an
+    /// empty stream. Printed by `run --report`.
+    pub fn segments_table(&self) -> Option<String> {
+        use std::fmt::Write as _;
+        if self.segments.is_empty() {
+            return None;
+        }
+        let mut s = String::from("| seg | split | frames | policy reason |\n|---|---|---|---|\n");
+        for seg in &self.segments {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} |",
+                seg.index, seg.split_label, seg.frames, seg.reason
+            );
+        }
+        Some(s)
+    }
+
     /// Wire bytes saved by the v2 delta framing, as a fraction of v1.
     pub fn wire_savings(&self) -> Option<f64> {
         (self.uplink_v1_bytes > 0)
@@ -868,13 +967,15 @@ impl SplitSession {
     /// Banner line describing the assembled session.
     pub fn describe(&self) -> String {
         format!(
-            "source: {} | transport: {} | policy: {} | depth {} x{} tail(s), {} kernel thread(s)",
+            "source: {} | transport: {} | policy: {} | depth {} x{} tail(s), \
+             {} kernel thread(s), simd {}",
             self.source.describe(),
             self.transport.describe(),
             self.policy.describe(),
             self.pipe.depth,
             self.pipe.tail_workers,
             self.engine.runtime().threads(),
+            self.engine.runtime().simd_dispatch(),
         )
     }
 
@@ -1002,6 +1103,13 @@ impl SplitSession {
                     }
                     if current_sp != Some(sp) {
                         current_label = engine.graph().split_label(sp);
+                        report.segments.push(SegmentRecord {
+                            index: report.segments.len(),
+                            split: sp,
+                            split_label: current_label.clone(),
+                            frames: 0,
+                            reason: policy.explain(),
+                        });
                     }
                     current_sp = Some(sp);
                 }
@@ -1027,6 +1135,9 @@ impl SplitSession {
                 });
                 transport.submit(&engine, sp, frame.cloud, pipe)?;
                 *report.split_usage.entry(current_label.clone()).or_default() += 1;
+                if let Some(seg) = report.segments.last_mut() {
+                    seg.frames += 1;
+                }
                 into_segment = (into_segment + 1) % interval;
             }
 
@@ -1113,6 +1224,7 @@ pub struct SplitSessionBuilder {
     depth: usize,
     tail_workers: usize,
     threads: usize,
+    simd: SimdMode,
     role: EngineRole,
     sensors: usize,
     record: Option<PathBuf>,
@@ -1137,6 +1249,7 @@ impl SplitSessionBuilder {
             depth: 1,
             tail_workers: 1,
             threads: 1,
+            simd: SimdMode::Auto,
             role: EngineRole::Full,
             sensors: 1,
             record: None,
@@ -1287,6 +1400,16 @@ impl SplitSessionBuilder {
         self
     }
 
+    /// Kernel SIMD dispatch (`--simd auto|scalar|forced`; default
+    /// [`SimdMode::Auto`]). Outputs are bit-identical at any setting —
+    /// this only selects the instruction set the axpy micro-kernel runs
+    /// on (see `runtime::simd`). Ignored when a prebuilt
+    /// [`SplitSessionBuilder::engine`] is injected.
+    pub fn simd(mut self, mode: SimdMode) -> Self {
+        self.simd = mode;
+        self
+    }
+
     /// Build just the engine — the thin-shell path for subcommands and
     /// benches that drive [`Engine`] directly (sweep, estimate,
     /// calibrate).
@@ -1301,7 +1424,7 @@ impl SplitSessionBuilder {
         }
         let tails = if self.depth > 1 { self.tail_workers } else { 1 };
         let kernel = PipelineConfig::kernel_threads_for(self.threads, tails);
-        let runtime = Arc::new(XlaRuntime::load_pooled(&manifest, kernel)?);
+        let runtime = Arc::new(XlaRuntime::load_with(&manifest, kernel, self.simd)?);
         Ok(Arc::new(Engine::with_runtime_role(
             &manifest, cfg, runtime, self.role,
         )?))
@@ -1446,5 +1569,53 @@ mod tests {
         let a = Adaptive::new(Objective::InferenceTime);
         assert_eq!(a.cooldown, 0);
         assert_eq!(a.evals_since_switch, usize::MAX);
+    }
+
+    #[test]
+    fn segments_table_lists_policy_decisions_in_order() {
+        let mut report = SessionReport::default();
+        assert!(report.segments_table().is_none(), "empty stream has no table");
+        report.segments.push(SegmentRecord {
+            index: 0,
+            split: SplitPoint { head_len: 2 },
+            split_label: "conv2".to_string(),
+            frames: 8,
+            reason: "initial pick: cheapest split prices 0.40 ms (configured link model)"
+                .to_string(),
+        });
+        report.segments.push(SegmentRecord {
+            index: 1,
+            split: SplitPoint { head_len: 0 },
+            split_label: "raw".to_string(),
+            frames: 24,
+            reason: "switched: best prices 0.20 ms vs current 0.40 ms, beating the \
+                     10% hysteresis (9.50 MB/s measured)"
+                .to_string(),
+        });
+        let table = report.segments_table().expect("two segments recorded");
+        let lines: Vec<&str> = table.lines().collect();
+        assert!(lines[0].contains("policy reason"));
+        assert!(lines[2].starts_with("| 0 | conv2 | 8 |"));
+        assert!(lines[3].starts_with("| 1 | raw | 24 |"));
+        assert!(lines[3].contains("switched"));
+    }
+
+    /// Policies without bespoke explanations fall back to their static
+    /// description; `Adaptive` does too until its first evaluation.
+    #[test]
+    fn explain_defaults_to_describe() {
+        let fixed = Fixed(SplitPoint { head_len: 3 });
+        assert_eq!(fixed.explain(), fixed.describe());
+        let a = Adaptive::new(Objective::InferenceTime);
+        assert!(a.last_explain.is_empty());
+        assert_eq!(a.explain(), a.describe());
+    }
+
+    #[test]
+    fn builder_defaults_to_auto_simd() {
+        let b = SplitSession::builder();
+        assert_eq!(b.simd, SimdMode::Auto);
+        let b = b.simd(SimdMode::Scalar);
+        assert_eq!(b.simd, SimdMode::Scalar);
     }
 }

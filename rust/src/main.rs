@@ -25,7 +25,7 @@ use splitpoint::coordinator::session::{
     Adaptive, SessionFrame, SessionReport, SplitPolicy, SplitSession, SplitSessionBuilder,
 };
 use splitpoint::pointcloud::scene::SceneGenerator;
-use splitpoint::util::cli::{parse_threads, Args, Cli, CommandSpec, OptSpec};
+use splitpoint::util::cli::{parse_simd, parse_threads, Args, Cli, CommandSpec, OptSpec};
 
 fn cli() -> Cli {
     let common = || {
@@ -41,6 +41,7 @@ fn cli() -> Cli {
             OptSpec { name: "pipeline-depth", value: Some("n"), help: "staged pipeline depth; 1 = serial (default 1)" },
             OptSpec { name: "tail-workers", value: Some("n"), help: "parallel tail stages when pipelined (default 1)" },
             OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads; bit-identical at any count (default 1)" },
+            OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced; bit-identical at any setting (default auto)" },
         ]
     };
     // session-streaming extras (run + serve-edge)
@@ -49,6 +50,7 @@ fn cli() -> Cli {
             OptSpec { name: "sensors", value: Some("n"), help: "multi-sensor fan-in: replicate the source n times, round-robin, per-sensor tagging (default 1)" },
             OptSpec { name: "sink", value: Some("spec"), help: "frame sink: record:<dir> writes the streamed clouds + manifest as a replay corpus" },
             OptSpec { name: "dets-out", value: Some("file"), help: "write per-frame detections (bit-exact hex) for cross-run diffing" },
+            OptSpec { name: "report", value: None, help: "print the per-segment policy-decision table after the stream" },
         ]
     };
     Cli {
@@ -72,6 +74,7 @@ fn cli() -> Cli {
                     OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
                     OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the server tail (default 1)" },
+                    OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced (default auto)" },
                 ],
             },
             CommandSpec {
@@ -89,6 +92,7 @@ fn cli() -> Cli {
                     OptSpec { name: "seed", value: Some("n"), help: "scene generator seed (default 1)" },
                     OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N), window kept full across segments (default 1 = serial)" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the edge head (default 1)" },
+                    OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced (default auto)" },
                 ]
                 .into_iter()
                 .chain(streaming())
@@ -118,6 +122,7 @@ fn session_builder(args: &Args) -> Result<SplitSessionBuilder> {
     };
     Ok(b
         .threads(parse_threads(args.get("threads"))?)
+        .simd(parse_simd(args.get("simd"))?)
         .pipeline_depth(depth)
         .tail_workers(tail_workers))
 }
@@ -232,8 +237,13 @@ fn print_session_banner(session: &SplitSession) {
     println!("{}\n", session.describe());
 }
 
-fn print_session_tail(report: &SessionReport) {
+fn print_session_tail(report: &SessionReport, show_segments: bool) {
     println!("\n{}", report.summary());
+    if show_segments {
+        if let Some(table) = report.segments_table() {
+            println!("\nper-segment policy decisions:\n\n{table}");
+        }
+    }
     if let Some(md) = &report.transport_report {
         println!("\n{md}");
     }
@@ -263,7 +273,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     })?;
     dets.finish()?;
-    print_session_tail(&report);
+    print_session_tail(&report, args.has("report"));
     Ok(())
 }
 
@@ -426,7 +436,7 @@ fn cmd_serve_edge(args: &Args) -> Result<()> {
         );
     })?;
     dets.finish()?;
-    print_session_tail(&report);
+    print_session_tail(&report, args.has("report"));
     Ok(())
 }
 

@@ -17,6 +17,7 @@
 
 pub mod pool;
 pub mod reference;
+pub mod simd;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -79,13 +80,28 @@ impl XlaRuntime {
     /// Outputs are bit-identical at any thread count (see
     /// `runtime::reference`).
     pub fn load_pooled(manifest: &Manifest, threads: usize) -> Result<XlaRuntime> {
+        Self::load_with(manifest, threads, simd::SimdMode::Auto)
+    }
+
+    /// [`Self::load_pooled`] with an explicit SIMD dispatch mode for the
+    /// reference backend's kernels (`--simd auto|scalar|forced`). PJRT
+    /// executables carry their own codegen, so the mode is ignored there.
+    pub fn load_with(
+        manifest: &Manifest,
+        threads: usize,
+        simd: simd::SimdMode,
+    ) -> Result<XlaRuntime> {
         let threads = pool::resolve_threads(threads).max(1);
         #[cfg(feature = "pjrt")]
-        let backend = Backend::Pjrt(pjrt::PjrtPool::load(manifest, threads)?);
+        let backend = {
+            let _ = simd; // AOT'd HLO picks its own instruction set
+            Backend::Pjrt(pjrt::PjrtPool::load(manifest, threads)?)
+        };
         #[cfg(not(feature = "pjrt"))]
-        let backend = Backend::Reference(reference::ReferenceModel::new_pooled(
+        let backend = Backend::Reference(reference::ReferenceModel::with_simd(
             manifest,
             Arc::new(pool::WorkerPool::new(threads)),
+            simd,
         )?);
         Ok(XlaRuntime {
             backend,
@@ -106,6 +122,29 @@ impl XlaRuntime {
     pub fn scratch_stats(&self) -> (usize, usize) {
         match &self.backend {
             Backend::Reference(m) => m.pool().scratch_stats(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => (0, 0),
+        }
+    }
+
+    /// The instruction set the reference kernels dispatch to (`"scalar"`,
+    /// `"avx2"`, `"neon"`), or `"pjrt"` when that backend is compiled in.
+    /// Recorded in bench artifacts and printed by session banners.
+    pub fn simd_dispatch(&self) -> &'static str {
+        match &self.backend {
+            Backend::Reference(m) => m.simd_level().name(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// `(taps_seen, taps_skipped)` accumulated by the sparse 3D conv
+    /// gather's per-tap occupancy masks; `(0, 0)` on PJRT. Skipped taps
+    /// avoided both the gather fill and the axpy pass — the ratio is the
+    /// sparse-frame win the tap masks buy (reported by `--report`).
+    pub fn tap_stats(&self) -> (u64, u64) {
+        match &self.backend {
+            Backend::Reference(m) => m.tap_stats(),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => (0, 0),
         }
@@ -343,6 +382,18 @@ mod tests {
         let bad = XlaRuntime::submit(&rt, "vfe", vec![Arc::new(Tensor::zeros(&[2, 2]))]);
         assert!(bad.unwrap().wait().is_err());
         assert!(XlaRuntime::submit(&rt, "nonexistent", Vec::new()).is_err());
+    }
+
+    #[test]
+    fn load_with_reports_dispatch_and_tap_stats() {
+        let rt = XlaRuntime::load_with(&test_manifest(), 1, simd::SimdMode::Scalar).unwrap();
+        #[cfg(not(feature = "pjrt"))]
+        {
+            assert_eq!(rt.simd_dispatch(), "scalar");
+            let auto = XlaRuntime::load_with(&test_manifest(), 1, simd::SimdMode::Auto).unwrap();
+            assert_eq!(auto.simd_dispatch(), simd::detect().name());
+        }
+        assert_eq!(rt.tap_stats(), (0, 0), "no kernels ran yet");
     }
 
     #[test]

@@ -32,10 +32,14 @@ const MAX_SCRATCH: usize = 32;
 
 /// Reusable per-worker kernel buffer: `patch` holds the gathered
 /// neighborhood matrix of the tile being processed (the kernels
-/// accumulate in place in the output buffer, so one matrix suffices).
+/// accumulate in place in the output buffer, so one matrix suffices), and
+/// `mask` holds the per-tap occupancy plane the sparse 3D conv gather
+/// builds alongside it (which source site, if any, feeds each tap of each
+/// site in the tile).
 #[derive(Debug, Default)]
 pub struct Scratch {
     pub patch: Vec<f32>,
+    pub mask: Vec<u32>,
 }
 
 impl Scratch {
@@ -48,9 +52,24 @@ impl Scratch {
         &mut self.patch[..len]
     }
 
+    /// Grow `patch` and `mask` together and return both. One call (rather
+    /// than two methods) because the gather needs simultaneous `&mut`
+    /// borrows of the two planes, which a pair of `&mut self` accessors
+    /// cannot hand out.
+    pub fn patch_and_mask(&mut self, patch_len: usize, mask_len: usize) -> (&mut [f32], &mut [u32]) {
+        if self.patch.len() < patch_len {
+            self.patch.resize(patch_len, 0.0);
+        }
+        if self.mask.len() < mask_len {
+            self.mask.resize(mask_len, 0);
+        }
+        (&mut self.patch[..patch_len], &mut self.mask[..mask_len])
+    }
+
     /// Bytes currently reserved by this arena.
     pub fn capacity_bytes(&self) -> usize {
         self.patch.capacity() * std::mem::size_of::<f32>()
+            + self.mask.capacity() * std::mem::size_of::<u32>()
     }
 }
 
@@ -230,6 +249,26 @@ mod tests {
         assert_eq!(pool.scratch_stats().0, 0);
         assert_eq!(again.capacity_bytes(), bytes);
         pool.recycle(again);
+    }
+
+    #[test]
+    fn patch_and_mask_grow_together_and_count_in_capacity() {
+        let pool = WorkerPool::new(1);
+        let mut s = pool.scratch();
+        let (patch, mask) = s.patch_and_mask(256, 216);
+        assert_eq!(patch.len(), 256);
+        assert_eq!(mask.len(), 216);
+        mask[0] = 7;
+        patch[0] = 1.0;
+        let bytes = s.capacity_bytes();
+        assert!(bytes >= 256 * 4 + 216 * 4);
+        pool.recycle(s);
+        assert_eq!(pool.scratch_stats(), (1, bytes));
+        // shrinking requests reuse the same buffers — no reallocation
+        let mut s = pool.scratch();
+        let (p2, m2) = s.patch_and_mask(16, 27);
+        assert_eq!((p2.len(), m2.len()), (16, 27));
+        assert_eq!(s.capacity_bytes(), bytes);
     }
 
     #[test]

@@ -52,14 +52,39 @@
 //! Patch/accumulator buffers come from the pool's per-worker scratch
 //! arenas, so steady-state kernel execution allocates nothing beyond the
 //! output tensors themselves.
+//!
+//! # SIMD dispatch + per-tap occupancy masks
+//!
+//! The blocked axpy inner loop dispatches through [`crate::runtime::simd`]:
+//! AVX2 (x86_64) / NEON (aarch64) lanes each own a **distinct output
+//! channel**, the multiply and add stay separate instructions (no FMA
+//! contraction), and the `cout % width` remainder runs the identical
+//! scalar loop — so the SIMD path is bitwise identical to the scalar
+//! fallback and to the legacy kernels. The instruction set is resolved
+//! once at construction ([`ReferenceModel::with_simd`], CLI
+//! `--simd auto|scalar|forced`) and threaded into the kernels as a plain
+//! enum; the hot loops never re-probe the CPU.
+//!
+//! The sparse 3D gather additionally builds a per-tap occupancy plane for
+//! each tile (in the same per-worker scratch arena as the patch matrix):
+//! a tap — one of the 27 neighbor offsets — that is absent for *every*
+//! site in the tile is skipped by both the gather fill and the GEMM's
+//! `cin` weight rows for that tap. Absent taps contribute only exact-zero
+//! activations, which the scalar loop already elides via its `xv == 0.0`
+//! test, so the skip is bitwise exact; on KITTI-like occupancy most tiles
+//! sit on the active set's boundary and drop a large fraction of their 27
+//! taps. [`ReferenceModel::tap_stats`] exposes the seen/skipped counters
+//! (the skip rate compounds with SIMD on sparse frames).
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::manifest::{Manifest, ModelConfig, ModuleSpec, StageSpec};
 use crate::runtime::pool::{Scratch, WorkerPool};
+use crate::runtime::simd::{self, SimdLevel, SimdMode};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -235,7 +260,14 @@ fn row_jobs<'a>(
 /// parallelized over row ranges. Per-row operation order matches
 /// [`scalar_linear`] exactly (ascending `cin`, zero activations skipped),
 /// so the output is bit-identical at any tile size or thread count.
-fn linear(pool: &WorkerPool, x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
+fn linear(
+    pool: &WorkerPool,
+    level: SimdLevel,
+    x: &[f32],
+    n: usize,
+    lw: &LinW,
+    relu: bool,
+) -> Vec<f32> {
     let (cin, cout) = (lw.cin, lw.cout);
     debug_assert_eq!(x.len(), n * cin);
     let mut out = vec![0.0f32; n * cout];
@@ -247,14 +279,21 @@ fn linear(pool: &WorkerPool, x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<
     let ranges = WorkerPool::partition(n, parts);
     let jobs = row_jobs(&mut out, &ranges, cout);
     pool.scatter(jobs, |_w, (rows, chunk)| {
-        linear_rows(x, rows, lw, relu, chunk);
+        linear_rows(x, rows, lw, relu, chunk, level);
     });
     out
 }
 
 /// The tiled row micro-kernel behind [`linear`]: each weight row is
 /// streamed once per `TILE` output rows instead of once per row.
-fn linear_rows(x: &[f32], rows: Range<usize>, lw: &LinW, relu: bool, chunk: &mut [f32]) {
+fn linear_rows(
+    x: &[f32],
+    rows: Range<usize>,
+    lw: &LinW,
+    relu: bool,
+    chunk: &mut [f32],
+    level: SimdLevel,
+) {
     let (cin, cout) = (lw.cin, lw.cout);
     let r0 = rows.start;
     let nrows = rows.len();
@@ -273,9 +312,7 @@ fn linear_rows(x: &[f32], rows: Range<usize>, lw: &LinW, relu: bool, chunk: &mut
                     continue;
                 }
                 let arow = &mut acc[t * cout..(t + 1) * cout];
-                for (a, &wv) in arow.iter_mut().zip(wrow) {
-                    *a += xv * wv;
-                }
+                simd::axpy(level, arow, wrow, xv);
             }
         }
         if relu {
@@ -326,7 +363,14 @@ fn scalar_linear(x: &[f32], n: usize, lw: &LinW, relu: bool) -> Vec<f32> {
 /// are partitioned across the pool; each worker gathers pixel tiles into a
 /// patch matrix (border taps zero-filled) and runs the blocked
 /// `(TILE × 9·cin) @ (9·cin × cout)` micro-kernel in place.
-fn conv2d_relu(pool: &WorkerPool, x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
+fn conv2d_relu(
+    pool: &WorkerPool,
+    level: SimdLevel,
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cw: &Conv2dW,
+) -> Vec<f32> {
     let (cin, cout) = (cw.cin, cw.cout);
     debug_assert_eq!(x.len(), h * w * cin);
     let mut out = vec![0.0f32; h * w * cout];
@@ -339,12 +383,13 @@ fn conv2d_relu(pool: &WorkerPool, x: &[f32], h: usize, w: usize, cw: &Conv2dW) -
     let jobs = row_jobs(&mut out, &ranges, w * cout);
     pool.scatter(jobs, |_wk, (oys, chunk)| {
         let mut scratch = pool.scratch();
-        conv2d_rows(x, h, w, cw, oys, chunk, &mut scratch);
+        conv2d_rows(x, h, w, cw, oys, chunk, &mut scratch, level);
         pool.recycle(scratch);
     });
     out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn conv2d_rows(
     x: &[f32],
     h: usize,
@@ -353,6 +398,7 @@ fn conv2d_rows(
     oys: Range<usize>,
     chunk: &mut [f32],
     scratch: &mut Scratch,
+    level: SimdLevel,
 ) {
     let (cin, cout) = (cw.cin, cw.cout);
     let k_total = 9 * cin;
@@ -395,9 +441,7 @@ fn conv2d_rows(
                         continue;
                     }
                     let arow = &mut acc[t * cout..(t + 1) * cout];
-                    for (a, &wv) in arow.iter_mut().zip(wrow) {
-                        *a += xv * wv;
-                    }
+                    simd::axpy(level, arow, wrow, xv);
                 }
             }
             for a in acc.iter_mut() {
@@ -456,12 +500,17 @@ fn scalar_conv2d_relu(x: &[f32], h: usize, w: usize, cw: &Conv2dW) -> Vec<f32> {
 // ---------------------------------------------------------- conv3d kernels
 
 /// The sparse 3D gather-GEMM worker kernel: process `sites` (a contiguous
-/// ascending slice of the active output list) in tiles — gather each
-/// tile's 3×3×3 neighborhoods into the scratch patch matrix (absent or
-/// masked-off taps zero-filled), then run the blocked GEMM into `chunk`,
-/// the caller's disjoint interval of the output buffer starting at row
-/// `base_row`. Nonzero post-ReLU sites are appended to `out_sites`
-/// (ascending, since `sites` is).
+/// ascending slice of the active output list) in tiles — resolve each
+/// tile's 3×3×3 neighborhood occupancy into the scratch **mask plane**,
+/// gather the present taps into the scratch patch matrix, then run the
+/// blocked GEMM into `chunk`, the caller's disjoint interval of the output
+/// buffer starting at row `base_row`. Taps absent for *every* site in the
+/// tile skip both the gather fill and their `cin` GEMM weight rows — an
+/// absent tap only ever contributes exact-zero activations, which the GEMM
+/// elides per element anyway (`xv == 0.0`), so the skip is bitwise exact.
+/// Nonzero post-ReLU sites are appended to `out_sites` (ascending, since
+/// `sites` is). Returns `(taps_seen, taps_skipped)` for the tap-mask
+/// telemetry (27 seen per tile processed).
 #[allow(clippy::too_many_arguments)]
 fn conv3d_sites(
     fd: &[f32],
@@ -475,66 +524,97 @@ fn conv3d_sites(
     chunk: &mut [f32],
     out_sites: &mut Vec<u32>,
     scratch: &mut Scratch,
-) {
+    level: SimdLevel,
+) -> (u64, u64) {
     let (d_in, h_in, w_in) = dims_in;
     let (h_out, w_out) = dims_out;
     let (cin, cout) = (cw.cin, cw.cout);
     let [sz, sy, sx] = stride;
     let k_total = 27 * cin;
-    let patch = scratch.patch_mut(TILE * k_total);
+    let (patch, mask_plane) = scratch.patch_and_mask(TILE * k_total, TILE * 27);
+    let mut taps_seen = 0u64;
+    let mut taps_skipped = 0u64;
     let mut i = 0usize;
     while i < sites.len() {
         let tl = TILE.min(sites.len() - i);
         let tile = &sites[i..i + tl];
-        // ---- gather
+        // ---- occupancy pass: one branchy coordinate walk per tile fills
+        // the mask plane with each tap's source site (+1; 0 = absent) and
+        // folds per-tap presence across the tile
+        let mut tap_any = [false; 27];
         for (t, &o) in tile.iter().enumerate() {
             let oi = o as usize;
             let oz = oi / (h_out * w_out);
             let oy = (oi / w_out) % h_out;
             let ox = oi % w_out;
-            let prow = &mut patch[t * k_total..(t + 1) * k_total];
+            let mrow = &mut mask_plane[t * 27..(t + 1) * 27];
+            let mut tap = 0usize;
             for dz in 0..3usize {
                 let z = (oz * sz + dz) as i64 - 1;
                 for dy in 0..3usize {
                     let y = (oy * sy + dy) as i64 - 1;
                     for dx in 0..3usize {
                         let x = (ox * sx + dx) as i64 - 1;
-                        let tap = ((dz * 3 + dy) * 3 + dx) * cin;
-                        let dst = &mut prow[tap..tap + cin];
                         let inside = z >= 0
                             && z < d_in as i64
                             && y >= 0
                             && y < h_in as i64
                             && x >= 0
                             && x < w_in as i64;
+                        let mut src = 0u32;
                         if inside {
                             let s = (z as usize * h_in + y as usize) * w_in + x as usize;
                             if md[s] != 0.0 {
-                                dst.copy_from_slice(&fd[s * cin..(s + 1) * cin]);
-                                continue;
+                                src = s as u32 + 1;
+                                tap_any[tap] = true;
                             }
                         }
-                        dst.fill(0.0);
+                        mrow[tap] = src;
+                        tap += 1;
                     }
                 }
             }
         }
-        // ---- bias init + blocked GEMM (weight rows stream once per tile)
+        // ---- gather: only taps present somewhere in the tile are filled
+        // (skipped tap columns hold stale data the GEMM never reads)
+        for t in 0..tl {
+            let prow = &mut patch[t * k_total..(t + 1) * k_total];
+            let mrow = &mask_plane[t * 27..(t + 1) * 27];
+            for (tap, &src) in mrow.iter().enumerate() {
+                if !tap_any[tap] {
+                    continue;
+                }
+                let dst = &mut prow[tap * cin..(tap + 1) * cin];
+                if src != 0 {
+                    let s = (src - 1) as usize;
+                    dst.copy_from_slice(&fd[s * cin..(s + 1) * cin]);
+                } else {
+                    dst.fill(0.0);
+                }
+            }
+        }
+        // ---- bias init + blocked GEMM (weight rows stream once per tile;
+        // all-absent taps skip their cin rows entirely)
         for &o in tile {
             let off = (o as usize - base_row) * cout;
             chunk[off..off + cout].copy_from_slice(&cw.b);
         }
-        for kk in 0..k_total {
-            let wrow = &cw.w[kk * cout..(kk + 1) * cout];
-            for (t, &o) in tile.iter().enumerate() {
-                let xv = patch[t * k_total + kk];
-                if xv == 0.0 {
-                    continue;
-                }
-                let off = (o as usize - base_row) * cout;
-                let arow = &mut chunk[off..off + cout];
-                for (a, &wv) in arow.iter_mut().zip(wrow) {
-                    *a += xv * wv;
+        for (tap, &any) in tap_any.iter().enumerate() {
+            taps_seen += 1;
+            if !any {
+                taps_skipped += 1;
+                continue;
+            }
+            for kk in tap * cin..(tap + 1) * cin {
+                let wrow = &cw.w[kk * cout..(kk + 1) * cout];
+                for (t, &o) in tile.iter().enumerate() {
+                    let xv = patch[t * k_total + kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let off = (o as usize - base_row) * cout;
+                    let arow = &mut chunk[off..off + cout];
+                    simd::axpy(level, arow, wrow, xv);
                 }
             }
         }
@@ -556,6 +636,7 @@ fn conv3d_sites(
         }
         i += tl;
     }
+    (taps_seen, taps_skipped)
 }
 
 /// Pre-gather-GEMM scalar 3D conv over the active set. Kept verbatim as
@@ -661,6 +742,7 @@ fn roi_pool_rows(
     concat_c: usize,
     kis: Range<usize>,
     chunk: &mut [f32],
+    level: SimdLevel,
 ) {
     let g3 = g * g * g;
     let (x0, y0, z0) = origin;
@@ -700,9 +782,7 @@ fn roi_pool_rows(
                             continue;
                         }
                         let wrow = &sc.proj.w[ci * pc..(ci + 1) * pc];
-                        for (a, &wv) in dest.iter_mut().zip(wrow) {
-                            *a += xv * wv;
-                        }
+                        simd::axpy(level, dest, wrow, xv);
                     }
                 }
                 for a in dest.iter_mut() {
@@ -724,6 +804,13 @@ pub struct ReferenceModel {
     specs: Vec<ModuleSpec>,
     weights: Weights,
     pool: Arc<WorkerPool>,
+    /// SIMD dispatch level, resolved once at construction.
+    simd: SimdLevel,
+    /// 3×3×3 taps examined by the sparse conv gather (27 per tile).
+    tap_seen: AtomicU64,
+    /// Taps whose gather + GEMM rows were skipped (absent for the whole
+    /// tile) — the per-tap occupancy-mask win on sparse frames.
+    tap_skipped: AtomicU64,
 }
 
 impl ReferenceModel {
@@ -735,18 +822,49 @@ impl ReferenceModel {
     /// Model whose kernels parallelize over `pool`'s worker threads. The
     /// pool is shared — the engine hands the same pool to every module, and
     /// callers size it against the pipeline's tail workers (docs/PERF.md).
+    /// SIMD dispatch defaults to auto-detection.
     pub fn new_pooled(manifest: &Manifest, pool: Arc<WorkerPool>) -> Result<ReferenceModel> {
+        Self::with_simd(manifest, pool, SimdMode::Auto)
+    }
+
+    /// [`Self::new_pooled`] with an explicit SIMD dispatch mode
+    /// (`--simd auto|scalar|forced`). The mode is resolved to a concrete
+    /// [`SimdLevel`] here, once; every kernel call dispatches on the
+    /// stored enum. All levels are bitwise identical (module docs).
+    pub fn with_simd(
+        manifest: &Manifest,
+        pool: Arc<WorkerPool>,
+        mode: SimdMode,
+    ) -> Result<ReferenceModel> {
         Ok(ReferenceModel {
             cfg: manifest.config.clone(),
             specs: manifest.modules.clone(),
             weights: init_weights(&manifest.config)?,
             pool,
+            simd: simd::resolve(mode)?,
+            tap_seen: AtomicU64::new(0),
+            tap_skipped: AtomicU64::new(0),
         })
     }
 
     /// The kernel worker pool (tests read its scratch stats).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
+    }
+
+    /// The SIMD level the kernels dispatch to.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// `(taps_seen, taps_skipped)` accumulated by the sparse 3D conv
+    /// gather since construction. Relaxed counters — telemetry, not
+    /// synchronization.
+    pub fn tap_stats(&self) -> (u64, u64) {
+        (
+            self.tap_seen.load(Ordering::Relaxed),
+            self.tap_skipped.load(Ordering::Relaxed),
+        )
     }
 
     /// Dense index of a module by name (aligned with the manifest order).
@@ -1002,9 +1120,11 @@ impl ReferenceModel {
                     jobs.push((r.clone(), first_row, chunk, sites_out));
                 }
                 let active_ref: &[u32] = &active;
+                let level = self.simd;
+                let (tap_seen, tap_skipped) = (&self.tap_seen, &self.tap_skipped);
                 pool.scatter(jobs, |_wk, (sites_r, base_row, chunk, sites_out)| {
                     let mut scratch = pool.scratch();
-                    conv3d_sites(
+                    let (seen, skipped) = conv3d_sites(
                         fd,
                         md,
                         (d_in, h_in, w_in),
@@ -1016,8 +1136,11 @@ impl ReferenceModel {
                         chunk,
                         sites_out,
                         &mut scratch,
+                        level,
                     );
                     pool.recycle(scratch);
+                    tap_seen.fetch_add(seen, Ordering::Relaxed);
+                    tap_skipped.fetch_add(skipped, Ordering::Relaxed);
                 });
             }
             for l in site_lists {
@@ -1060,12 +1183,13 @@ impl ReferenceModel {
             }
         }
         let pool = self.pool.as_ref();
+        let level = self.simd;
         let x = if legacy {
             let x1 = scalar_conv2d_relu(&x, h, w, &self.weights.bev_block1);
             scalar_conv2d_relu(&x1, h, w, &self.weights.bev_block2)
         } else {
-            let x1 = conv2d_relu(pool, &x, h, w, &self.weights.bev_block1);
-            conv2d_relu(pool, &x1, h, w, &self.weights.bev_block2)
+            let x1 = conv2d_relu(pool, level, &x, h, w, &self.weights.bev_block1);
+            conv2d_relu(pool, level, &x1, h, w, &self.weights.bev_block2)
         };
 
         let hw = h * w;
@@ -1073,7 +1197,7 @@ impl ReferenceModel {
             if legacy {
                 scalar_linear(&x, hw, lw, false)
             } else {
-                linear(pool, &x, hw, lw, false)
+                linear(pool, level, &x, hw, lw, false)
             }
         };
         let cls = head(&self.weights.bev_cls);
@@ -1093,6 +1217,7 @@ impl ReferenceModel {
     fn roi_head(&self, spec: &ModuleSpec, inputs: &[Arc<Tensor>]) -> Result<Vec<Tensor>> {
         let cfg = &self.cfg;
         let pool = self.pool.as_ref();
+        let level = self.simd;
         let rois = inputs
             .last()
             .context("roi_head wants the roi tensor last")?;
@@ -1167,13 +1292,14 @@ impl ReferenceModel {
                     concat_c,
                     kis,
                     chunk,
+                    level,
                 );
             });
         }
 
         // shared per-grid-point MLP (the head's compute bulk)
-        let h1 = linear(pool, &xcat, k * g3, &self.weights.roi_mlp1, true);
-        let h2 = linear(pool, &h1, k * g3, &self.weights.roi_mlp2, true);
+        let h1 = linear(pool, level, &xcat, k * g3, &self.weights.roi_mlp1, true);
+        let h2 = linear(pool, level, &h1, k * g3, &self.weights.roi_mlp2, true);
 
         // permutation-invariant pool over the grid: [mean || max]
         let mlp = self.weights.roi_mlp2.cout;
@@ -1197,10 +1323,10 @@ impl ReferenceModel {
             }
         }
 
-        let f1 = linear(pool, &pooled, k, &self.weights.roi_fc1, true);
-        let f2 = linear(pool, &f1, k, &self.weights.roi_fc2, true);
-        let cls = linear(pool, &f2, k, &self.weights.roi_cls, false);
-        let reg = linear(pool, &f2, k, &self.weights.roi_reg, false);
+        let f1 = linear(pool, level, &pooled, k, &self.weights.roi_fc1, true);
+        let f2 = linear(pool, level, &f1, k, &self.weights.roi_fc2, true);
+        let cls = linear(pool, level, &f2, k, &self.weights.roi_cls, false);
+        let reg = linear(pool, level, &f2, k, &self.weights.roi_reg, false);
 
         // residual decode in the RoI local frame (Voxel R-CNN style)
         let mut boxes = vec![0.0f32; k * 7];
@@ -1519,5 +1645,163 @@ mod tests {
         let sum = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
         let cnt = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
         assert!(m.execute_legacy(module_idx(&m, "vfe"), &[sum, cnt]).is_err());
+    }
+
+    fn model_scalar() -> ReferenceModel {
+        ReferenceModel::with_simd(
+            &test_manifest(),
+            Arc::new(WorkerPool::new(1)),
+            SimdMode::Scalar,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn simd_dispatch_is_bitwise_identical_to_forced_scalar() {
+        // auto-dispatch (AVX2/NEON where available) vs forced scalar, per
+        // module; on scalar-only hosts this degenerates to scalar==scalar,
+        // which is exactly the guarantee the fallback makes
+        let ms = model_scalar();
+        let mv = model(); // SimdMode::Auto
+        assert_eq!(ms.simd_level(), SimdLevel::Scalar);
+        assert_eq!(mv.simd_level(), simd::detect());
+
+        let (feat, mask) = random_stage_input(&[16, 128, 128, 4], 0.02, 21);
+        let idx = module_idx(&ms, "conv1");
+        assert_eq!(
+            ms.execute(idx, &[feat.clone(), mask.clone()]).unwrap(),
+            mv.execute(idx, &[feat, mask]).unwrap(),
+            "conv1 diverged between scalar and {} dispatch",
+            mv.simd_level().name()
+        );
+
+        let (feat, mask) = random_stage_input(&[8, 128, 128, 32], 0.01, 22);
+        let idx3 = module_idx(&ms, "conv3");
+        assert_eq!(
+            ms.execute(idx3, &[feat.clone(), mask.clone()]).unwrap(),
+            mv.execute(idx3, &[feat, mask]).unwrap(),
+            "strided conv3 diverged between scalar and SIMD dispatch"
+        );
+
+        let mut f4 = Tensor::zeros(&[2, 32, 32, 128]);
+        let mut rng = Rng::new(23);
+        for x in f4.data_mut().iter_mut() {
+            if rng.chance(0.3) {
+                *x = rng.normal() as f32;
+            }
+        }
+        let f4 = Arc::new(f4);
+        let bidx = module_idx(&ms, "bev_head");
+        assert_eq!(
+            ms.execute(bidx, &[f4.clone()]).unwrap(),
+            mv.execute(bidx, &[f4]).unwrap(),
+            "bev_head diverged between scalar and SIMD dispatch"
+        );
+
+        // roi_head: grid pool + towers (cout = 1 for the cls head also
+        // exercises the all-remainder axpy path)
+        let mut rois = Tensor::zeros(&[96, 7]);
+        rois.data_mut()[..7].copy_from_slice(&[10.0, 0.0, -1.0, 3.9, 1.6, 1.56, 0.3]);
+        for slot in 1..96 {
+            rois.data_mut()[slot * 7..slot * 7 + 7]
+                .copy_from_slice(&[-1e4, -1e4, -1e4, 0.0, 0.0, 0.0, 0.0]);
+        }
+        let mut c2 = Tensor::zeros(&[8, 128, 128, 32]);
+        let mut rng = Rng::new(24);
+        for x in c2.data_mut().iter_mut() {
+            if rng.chance(0.05) {
+                *x = (rng.normal() as f32).abs();
+            }
+        }
+        let c2 = Arc::new(c2);
+        let c3 = Arc::new(Tensor::zeros(&[4, 64, 64, 64]));
+        let c4 = Arc::new(Tensor::zeros(&[2, 32, 32, 128]));
+        let rois = Arc::new(rois);
+        let ridx = module_idx(&ms, "roi_head");
+        assert_eq!(
+            ms.execute(ridx, &[c2.clone(), c3.clone(), c4.clone(), rois.clone()])
+                .unwrap(),
+            mv.execute(ridx, &[c2, c3, c4, rois]).unwrap(),
+            "roi_head diverged between scalar and SIMD dispatch"
+        );
+    }
+
+    #[test]
+    fn forced_mode_errors_only_on_scalar_hosts() {
+        let r = ReferenceModel::with_simd(
+            &test_manifest(),
+            Arc::new(WorkerPool::new(1)),
+            SimdMode::Forced,
+        );
+        match r {
+            Ok(m) => assert_ne!(m.simd_level(), SimdLevel::Scalar),
+            Err(_) => assert_eq!(simd::detect(), SimdLevel::Scalar),
+        }
+    }
+
+    #[test]
+    fn tap_masks_skip_absent_taps_on_sparse_frames() {
+        let m = model();
+        assert_eq!(m.tap_stats(), (0, 0));
+        // one isolated occupied site: the dilated active set is its 27
+        // neighbors, and their neighborhoods are mostly absent
+        let mut feat = Tensor::zeros(&[16, 128, 128, 4]);
+        let mut mask = Tensor::zeros(&[16, 128, 128, 1]);
+        let s = (8 * 128 + 64) * 128 + 64;
+        for c in 0..4 {
+            feat.data_mut()[s * 4 + c] = 1.0;
+        }
+        mask.data_mut()[s] = 1.0;
+        let idx = module_idx(&m, "conv1");
+        m.execute(idx, &[Arc::new(feat), Arc::new(mask)]).unwrap();
+        let (seen, skipped) = m.tap_stats();
+        assert!(seen >= 27, "one active tile must count its 27 taps");
+        assert_eq!(seen % 27, 0, "taps are counted per whole tile");
+        assert!(skipped > 0, "an isolated site must skip absent taps");
+        assert!(skipped < seen, "the center tap is present, not skipped");
+
+        // an empty frame runs no tiles at all
+        let before = m.tap_stats();
+        let feat = Arc::new(Tensor::zeros(&[16, 128, 128, 4]));
+        let mask = Arc::new(Tensor::zeros(&[16, 128, 128, 1]));
+        let out = m.execute(idx, &[feat, mask]).unwrap();
+        assert_eq!(m.tap_stats(), before, "empty active set counts nothing");
+        assert!(out[0].data().iter().all(|&x| x == 0.0));
+        assert!(out[1].site_index().is_empty());
+    }
+
+    #[test]
+    fn tap_mask_skips_match_legacy_on_adversarial_occupancy() {
+        // single occupied site (max skipping), a dense 4³ block (interior
+        // tiles skip nothing), and a fragmented diagonal — all must stay
+        // bitwise equal to the legacy scalar kernel
+        let m = model();
+        let idx = module_idx(&m, "conv1");
+        let cases: Vec<Vec<(usize, usize, usize)>> = vec![
+            vec![(8, 64, 64)],
+            (0..4usize)
+                .flat_map(|z| {
+                    (0..4usize).flat_map(move |y| (0..4usize).map(move |x| (6 + z, 60 + y, 60 + x)))
+                })
+                .collect(),
+            (0..10usize).map(|i| (i, 3 * i, 5 * i)).collect(),
+        ];
+        for (ci, sites) in cases.iter().enumerate() {
+            let mut feat = Tensor::zeros(&[16, 128, 128, 4]);
+            let mut mask = Tensor::zeros(&[16, 128, 128, 1]);
+            for (i, &(z, y, x)) in sites.iter().enumerate() {
+                let s = (z * 128 + y) * 128 + x;
+                for c in 0..4 {
+                    feat.data_mut()[s * 4 + c] = (i + 1) as f32 * 0.17 + c as f32 * 0.05;
+                }
+                mask.data_mut()[s] = 1.0;
+            }
+            let feat = Arc::new(feat);
+            let mask = Arc::new(mask);
+            let new = m.execute(idx, &[feat.clone(), mask.clone()]).unwrap();
+            let old = m.execute_legacy(idx, &[feat, mask]).unwrap();
+            assert_eq!(new, old, "case {ci}: tap-masked kernel diverged from legacy");
+            assert_eq!(new[0].site_index(), old[0].site_index(), "case {ci}");
+        }
     }
 }

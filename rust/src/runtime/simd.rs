@@ -1,0 +1,283 @@
+//! Runtime-dispatched SIMD axpy micro-kernel for the reference executor.
+//!
+//! The gather-GEMM kernels (`runtime::reference`) spend nearly all their
+//! time in one shape of loop: `acc[c] += x * w[c]` over a contiguous
+//! `cout`-length row. This module vectorizes exactly that loop across the
+//! **output-channel** dimension — each SIMD lane is a distinct accumulator
+//! for a distinct output channel, so no floating-point reduction is ever
+//! re-associated and the vector path is **bitwise identical** to the
+//! scalar path:
+//!
+//! * lanes never interact: lane `c` computes `acc[c] + x * w[c]`, the
+//!   same two IEEE-754 operations in the same order as the scalar loop;
+//! * the multiply and add stay **separate instructions** (`mul` then
+//!   `add`, never FMA — a fused contraction would skip the intermediate
+//!   rounding the scalar code performs);
+//! * the `cout % width` remainder runs the identical scalar loop.
+//!
+//! The instruction set is picked **once** at [`detect`] time (AVX2 on
+//! x86_64 when the CPU reports it, NEON unconditionally on aarch64 — it
+//! is part of the baseline ISA — scalar everywhere else) and threaded
+//! through `ReferenceModel` as a [`SimdLevel`] value, so the hot loop
+//! never re-probes CPUID. The CLI exposes the choice as
+//! `--simd auto|scalar|forced` ([`SimdMode`]).
+
+use anyhow::{bail, Result};
+
+/// CLI-selectable dispatch mode (`--simd auto|scalar|forced`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Use the best instruction set the host reports (the default).
+    #[default]
+    Auto,
+    /// Force the scalar fallback even when SIMD is available (bench
+    /// `@scalar` twins, bisection of suspected codegen issues).
+    Scalar,
+    /// Require a vector path; error out if detection finds none. Guards
+    /// perf runs against silently measuring the fallback.
+    Forced,
+}
+
+impl SimdMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Forced => "forced",
+        }
+    }
+}
+
+/// The instruction set a `ReferenceModel` dispatches to. Resolved once at
+/// construction; copying it into kernel calls is free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Plain `for` loop — the reference semantics, available everywhere.
+    Scalar,
+    /// 8 × f32 per iteration via 256-bit AVX2 loads/stores.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4 × f32 per iteration via 128-bit NEON; baseline on aarch64.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name, recorded in bench artifacts
+    /// (`cpu_features.dispatch`) and printed by session banners.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// Probe the host CPU once. Cheap enough to call freely, but callers
+/// should cache the result (as `ReferenceModel` does) so the kernels
+/// branch on a plain enum.
+pub fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline ISA — no runtime probe
+        // needed (and `std` itself assumes it on this target).
+        SimdLevel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+/// Turn a CLI [`SimdMode`] into the concrete dispatch level.
+pub fn resolve(mode: SimdMode) -> Result<SimdLevel> {
+    let detected = detect();
+    match mode {
+        SimdMode::Auto => Ok(detected),
+        SimdMode::Scalar => Ok(SimdLevel::Scalar),
+        SimdMode::Forced => {
+            if detected == SimdLevel::Scalar {
+                bail!(
+                    "--simd forced: no vector path available on this host \
+                     (arch {}; AVX2 not detected and NEON requires aarch64)",
+                    std::env::consts::ARCH
+                );
+            }
+            Ok(detected)
+        }
+    }
+}
+
+/// `acc[c] += x * w[c]` for `c` in `0..acc.len()`, dispatched on `level`.
+///
+/// `w` must be at least as long as `acc`; only the first `acc.len()`
+/// weights are read. All levels produce bit-identical results (see the
+/// module docs for the argument).
+#[inline]
+pub fn axpy(level: SimdLevel, acc: &mut [f32], w: &[f32], x: f32) {
+    debug_assert!(w.len() >= acc.len());
+    match level {
+        SimdLevel::Scalar => axpy_scalar(acc, w, x),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 variant only exists when `detect()` saw the
+        // avx2 CPUID bit (or the caller constructed it deliberately on a
+        // host that has it — `resolve` is the only public constructor
+        // path); bounds are checked by the loop condition.
+        SimdLevel::Avx2 => unsafe { axpy_avx2(acc, w, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds are checked by the
+        // loop condition.
+        SimdLevel::Neon => unsafe { axpy_neon(acc, w, x) },
+    }
+}
+
+/// The reference loop — byte-for-byte what the pre-SIMD kernels did.
+#[inline]
+fn axpy_scalar(acc: &mut [f32], w: &[f32], x: f32) {
+    for (a, &wv) in acc.iter_mut().zip(w) {
+        *a += x * wv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], w: &[f32], x: f32) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    let n = acc.len();
+    let xv = _mm256_set1_ps(x);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        // mul then add — deliberately NOT `_mm256_fmadd_ps`: each lane
+        // must round `x * w` before the add, exactly like the scalar
+        // `*a += x * wv`, or bit-identity to the scalar kernels breaks.
+        let prod = _mm256_mul_ps(xv, wv);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, prod));
+        i += 8;
+    }
+    axpy_scalar(&mut acc[i..], &w[i..], x);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn axpy_neon(acc: &mut [f32], w: &[f32], x: f32) {
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    let n = acc.len();
+    let xv = vdupq_n_f32(x);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let wv = vld1q_f32(w.as_ptr().add(i));
+        let av = vld1q_f32(acc.as_ptr().add(i));
+        // mul then add — deliberately NOT `vfmaq_f32`: fused contraction
+        // would skip the intermediate rounding the scalar loop performs.
+        let prod = vmulq_f32(xv, wv);
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(av, prod));
+        i += 4;
+    }
+    axpy_scalar(&mut acc[i..], &w[i..], x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// xorshift-ish generator over a wide magnitude band, including exact
+    /// zeros (the kernels' skip case) and denormal-adjacent values.
+    fn fill(seed: u64, out: &mut [f32]) {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        for (i, v) in out.iter_mut().enumerate() {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let unit = (s >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+            *v = match i % 7 {
+                0 => 0.0,
+                1 => unit * 1e-6,
+                2 => unit * 1e6,
+                _ => unit * 4.0,
+            };
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        assert_eq!(SimdMode::Auto.name(), "auto");
+        assert_eq!(SimdMode::Scalar.name(), "scalar");
+        assert_eq!(SimdMode::Forced.name(), "forced");
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn resolve_honors_mode() {
+        assert_eq!(resolve(SimdMode::Scalar).unwrap(), SimdLevel::Scalar);
+        assert_eq!(resolve(SimdMode::Auto).unwrap(), detect());
+        match resolve(SimdMode::Forced) {
+            Ok(level) => {
+                assert_ne!(level, SimdLevel::Scalar);
+                assert_eq!(level, detect());
+            }
+            // forced must only fail where there is genuinely nothing to
+            // force — i.e. detection already fell back to scalar
+            Err(_) => assert_eq!(detect(), SimdLevel::Scalar),
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy_is_bitwise_equal_to_scalar() {
+        let level = detect();
+        // remainder coverage: below / at / above both vector widths
+        for &n in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 11, 15, 16, 17, 31, 32, 33, 64, 100] {
+            for seed in 0..4u64 {
+                let mut w = vec![0.0f32; n];
+                let mut acc_scalar = vec![0.0f32; n];
+                fill(seed * 1000 + n as u64, &mut w);
+                fill(seed * 2000 + n as u64 + 1, &mut acc_scalar);
+                let mut acc_simd = acc_scalar.clone();
+                let x = if seed == 3 { 0.0 } else { 1.25 + seed as f32 * 0.37 };
+                axpy(level, &mut acc_simd, &w, x);
+                axpy(SimdLevel::Scalar, &mut acc_scalar, &w, x);
+                for (i, (a, b)) in acc_simd.iter().zip(&acc_scalar).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "lane {i} of n={n} seed={seed} diverged under {}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_axpy_accumulation_stays_bitwise_equal() {
+        // the kernels call axpy thousands of times into the same
+        // accumulator; make sure divergence cannot build up across calls
+        let level = detect();
+        let cout = 96; // not a multiple of 8 → exercises the remainder
+        let mut acc_scalar = vec![0.0f32; cout];
+        let mut acc_simd = vec![0.0f32; cout];
+        let mut w = vec![0.0f32; cout];
+        for step in 0..200u64 {
+            fill(step + 7, &mut w);
+            let x = (step as f32 * 0.731).sin();
+            axpy(level, &mut acc_simd, &w, x);
+            axpy(SimdLevel::Scalar, &mut acc_scalar, &w, x);
+        }
+        let a: Vec<u32> = acc_simd.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = acc_scalar.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -54,6 +54,19 @@ pub fn parse_threads(v: Option<&str>) -> Result<usize> {
     }
 }
 
+/// Parse a `--simd` value into a [`crate::runtime::simd::SimdMode`]:
+/// `auto` (or the flag absent) probes the CPU, `scalar` forces the
+/// fallback kernels, `forced` errors out unless a vector path exists.
+pub fn parse_simd(v: Option<&str>) -> Result<crate::runtime::simd::SimdMode> {
+    use crate::runtime::simd::SimdMode;
+    match v {
+        None | Some("auto") => Ok(SimdMode::Auto),
+        Some("scalar") => Ok(SimdMode::Scalar),
+        Some("forced") => Ok(SimdMode::Forced),
+        Some(s) => bail!("--simd: want auto, scalar, or forced; got '{s}'"),
+    }
+}
+
 /// Split a `kind:arg` CLI spec (`kitti:/data/scans`, `replay:f.bin`) into
 /// `(kind, Some(arg))`, or `(spec, None)` when there is no `:`. Shared by
 /// `--source` parsing and any future spec-valued flags.
@@ -240,5 +253,16 @@ mod tests {
         assert_eq!(parse_threads(Some("0")).unwrap(), all);
         assert!(parse_threads(Some("-2")).is_err());
         assert!(parse_threads(Some("many")).is_err());
+    }
+
+    #[test]
+    fn simd_parses_modes_and_rejects_typos() {
+        use crate::runtime::simd::SimdMode;
+        assert_eq!(parse_simd(None).unwrap(), SimdMode::Auto);
+        assert_eq!(parse_simd(Some("auto")).unwrap(), SimdMode::Auto);
+        assert_eq!(parse_simd(Some("scalar")).unwrap(), SimdMode::Scalar);
+        assert_eq!(parse_simd(Some("forced")).unwrap(), SimdMode::Forced);
+        let e = parse_simd(Some("avx512")).unwrap_err().to_string();
+        assert!(e.contains("avx512"));
     }
 }

@@ -159,6 +159,24 @@ impl Voxelizer {
         grids.cnt.site_index().len()
     }
 
+    /// Occupied fraction of the grid in [0, 1] (cached index, no rescan).
+    /// This is the quantity the conv stages' per-tap mask skip feeds on:
+    /// at KITTI-like occupancy (a few percent) most 3×3×3 taps are absent
+    /// for a whole gather tile, so low fractions predict high
+    /// `XlaRuntime::tap_stats()` skip rates.
+    pub fn occupancy_fraction(grids: &VoxelGrids) -> f64 {
+        let [d, h, w] = [
+            grids.cnt.shape()[0],
+            grids.cnt.shape()[1],
+            grids.cnt.shape()[2],
+        ];
+        let total = d * h * w;
+        if total == 0 {
+            return 0.0;
+        }
+        grids.cnt.site_index().len() as f64 / total as f64
+    }
+
     /// Hand a frame's grids back to the scratch pool. No-op unless this is
     /// the last reference (a wire packet may still share the tensors).
     pub fn recycle(&self, grids: VoxelGrids) {
@@ -298,6 +316,17 @@ mod tests {
             (0.005..0.15).contains(&occ),
             "VFE occupancy {occ:.4} outside the KITTI-like band"
         );
+    }
+
+    #[test]
+    fn occupancy_fraction_matches_occupied_count() {
+        let v = vox();
+        let scene = crate::pointcloud::scene::SceneGenerator::with_seed(3).generate();
+        let g = v.voxelize(&scene.cloud);
+        let expect = Voxelizer::occupied(&g) as f64 / (16.0 * 128.0 * 128.0);
+        assert_eq!(Voxelizer::occupancy_fraction(&g), expect);
+        let empty = v.voxelize(&PointCloud::default());
+        assert_eq!(Voxelizer::occupancy_fraction(&empty), 0.0);
     }
 
     #[test]

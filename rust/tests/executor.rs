@@ -5,7 +5,13 @@
 //!   pool partitions independent output rows, it never re-associates a
 //!   float reduction, so parallelism is scheduling, not semantics;
 //! * the kernel scratch arenas stop growing after warmup — steady-state
-//!   execution allocates nothing for patch/accumulator buffers.
+//!   execution allocates nothing for patch/accumulator buffers;
+//! * (PR 6) the pin extends three ways: SIMD-dispatched, forced-scalar,
+//!   and pre-refactor legacy kernels produce byte-identical module
+//!   outputs, and SIMD vs scalar detections match across every split at
+//!   threads {1, 2, max} — including adversarial-occupancy frames that
+//!   exercise the per-tap mask-skip path (empty, single site, dense
+//!   block).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -14,13 +20,28 @@ use splitpoint::config::SystemConfig;
 use splitpoint::coordinator::Engine;
 use splitpoint::model::graph::NodeKind;
 use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::{Point, PointCloud};
 use splitpoint::postprocess::Detection;
+use splitpoint::runtime::reference::ReferenceModel;
+use splitpoint::runtime::simd::SimdMode;
+use splitpoint::runtime::XlaRuntime;
 use splitpoint::tensor::Tensor;
 use splitpoint::Manifest;
 
 fn load_manifest() -> Manifest {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Manifest::load(&dir).expect("artifact manifest")
+}
+
+/// Engine over an explicitly-dispatched runtime (the builder's
+/// `.simd(mode)` path, without needing an artifacts working directory).
+fn engine_with(manifest: &Manifest, threads: usize, simd: SimdMode) -> Engine {
+    let runtime = Arc::new(XlaRuntime::load_with(manifest, threads, simd).unwrap());
+    Engine::with_runtime(manifest, SystemConfig::paper(), runtime).unwrap()
+}
+
+fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Bitwise equality — not allclose. Thread count must not move a single
@@ -133,6 +154,110 @@ fn pipelined_threaded_engine_matches_serial() {
             dets_identical(&p.detections, &s.detections),
             "kernel threads + pipeline tails must stay bit-identical to serial"
         );
+    }
+}
+
+/// The PR 3 `threads=N == threads=1` harness extended to a three-way
+/// pin: every Xla module's outputs under the SIMD-dispatched engine, the
+/// forced-scalar engine, and the pre-refactor legacy kernels are
+/// byte-identical at threads {1, 2, max}. On hosts without a vector unit
+/// `auto` resolves to scalar and the comparison is still meaningful —
+/// gather-GEMM + masks vs the legacy direct kernels.
+#[test]
+fn simd_scalar_and_legacy_module_outputs_are_byte_identical() {
+    let manifest = load_manifest();
+    let scene = SceneGenerator::with_seed(42).generate();
+    let legacy = ReferenceModel::new(&manifest).unwrap();
+    let e1 = engine_with(&manifest, 1, SimdMode::Auto);
+    let (store, _) = e1.profile_frame(&scene.cloud).unwrap();
+    for threads in [1usize, 2, max_threads()] {
+        let auto = engine_with(&manifest, threads, SimdMode::Auto);
+        let scalar = engine_with(&manifest, threads, SimdMode::Scalar);
+        for node in e1.graph().nodes() {
+            if node.kind != NodeKind::Xla {
+                continue;
+            }
+            let inputs: Vec<Arc<Tensor>> = node
+                .input_ids()
+                .iter()
+                .map(|&id| store.get(id).expect("profiled input").clone())
+                .collect();
+            let a = auto.runtime().execute(&node.name, &inputs).unwrap();
+            let s = scalar.runtime().execute(&node.name, &inputs).unwrap();
+            assert_eq!(
+                a, s,
+                "module '{}' diverged between simd=auto and simd=scalar at threads={threads}",
+                node.name
+            );
+            let idx = legacy.module_index(&node.name).expect("legacy module");
+            let l = legacy.execute_legacy(idx, &inputs).unwrap();
+            assert_eq!(
+                a, l,
+                "module '{}' diverged between simd=auto and the legacy kernels at threads={threads}",
+                node.name
+            );
+        }
+    }
+}
+
+/// Satellite 3 — adversarial occupancy for the per-tap mask-skip path: a
+/// fully-empty frame (every 3×3×3 neighborhood absent), a single
+/// occupied site, and a dense block must all produce detections and wire
+/// bytes bitwise-equal between SIMD and forced-scalar dispatch across
+/// every split at threads {1, 2, max}; the sparse frames must actually
+/// take the skip path (tap telemetry sees absent taps).
+#[test]
+fn mask_skip_frames_match_scalar_across_splits_and_threads() {
+    let manifest = load_manifest();
+    let single = PointCloud {
+        points: vec![Point { x: 12.0, y: 0.5, z: -1.0, intensity: 0.4 }],
+    };
+    let mut block = Vec::new();
+    for i in 0..12 {
+        for j in 0..12 {
+            for k in 0..4 {
+                block.push(Point {
+                    x: 10.0 + i as f32 * 0.2,
+                    y: -1.0 + j as f32 * 0.2,
+                    z: -1.6 + k as f32 * 0.4,
+                    intensity: 0.1 + i as f32 * 0.01 + j as f32 * 0.02,
+                });
+            }
+        }
+    }
+    let clouds = [
+        ("empty", PointCloud::default()),
+        ("single-site", single),
+        ("dense-block", PointCloud { points: block }),
+    ];
+    for threads in [1usize, 2, max_threads()] {
+        let auto = engine_with(&manifest, threads, SimdMode::Auto);
+        let scalar = engine_with(&manifest, threads, SimdMode::Scalar);
+        for (kind, cloud) in &clouds {
+            for sp in auto.graph().all_splits() {
+                let a = auto.run_frame(cloud, sp).unwrap();
+                let s = scalar.run_frame(cloud, sp).unwrap();
+                assert!(
+                    dets_identical(&a.detections, &s.detections),
+                    "{kind} frame: detections diverged between simd=auto and \
+                     simd=scalar at split '{}' threads={threads}",
+                    auto.graph().split_label(sp)
+                );
+                assert_eq!(
+                    a.timing.uplink_bytes,
+                    s.timing.uplink_bytes,
+                    "{kind} frame: wire bytes diverged at split '{}' threads={threads}",
+                    auto.graph().split_label(sp)
+                );
+            }
+        }
+        let (seen, skipped) = auto.runtime().tap_stats();
+        assert!(seen > 0, "conv stages saw no taps at threads={threads}");
+        assert!(
+            skipped > 0,
+            "sparse frames left no absent taps to skip at threads={threads}"
+        );
+        assert!(skipped < seen, "a dense block cannot skip every tap");
     }
 }
 

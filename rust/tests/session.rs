@@ -139,6 +139,65 @@ fn scripted_policy_switching_matches_fixed_per_frame() {
     }
 }
 
+/// Satellite (PR 6): per-segment policy decisions land in
+/// `SessionReport.segments` — one record per actual split change, in
+/// stream order, with frames-per-segment summing to the stream length
+/// and the policy's reason captured at the boundary that opened the
+/// segment. A fixed-policy stream is one segment covering every frame.
+#[test]
+fn session_report_records_segments_with_reasons() {
+    let e = engine();
+    let schedule = vec![
+        e.graph().split_by_name("vfe").unwrap(),
+        e.graph().split_by_name("conv1").unwrap(),
+        e.graph().split_by_name("edge_only").unwrap(),
+        e.graph().split_by_name("vfe").unwrap(),
+    ];
+    let stream = clouds(22000, 8);
+    let mut session = SplitSession::builder()
+        .engine(e.clone())
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .policy(Box::new(Scripted {
+            splits: schedule.clone(),
+            next: 0,
+            every: 2,
+        }))
+        .build()
+        .unwrap();
+    let (_, report) = session.run().unwrap();
+    assert_eq!(report.frames, stream.len());
+    assert_eq!(report.segments.len(), 4, "one record per split change");
+    let labels: Vec<&str> = report.segments.iter().map(|s| s.split_label.as_str()).collect();
+    assert_eq!(labels, ["vfe", "conv1", "edge_only", "vfe"]);
+    for (i, seg) in report.segments.iter().enumerate() {
+        assert_eq!(seg.index, i);
+        assert_eq!(seg.frames, 2, "segment {i} frame count");
+        assert_eq!(seg.split, schedule[i]);
+        // Scripted keeps the default explain — its static description
+        assert_eq!(seg.reason, "scripted");
+    }
+    assert_eq!(
+        report.segments.iter().map(|s| s.frames).sum::<usize>(),
+        report.frames,
+        "per-segment frames partition the stream"
+    );
+    let table = report.segments_table().expect("segments recorded");
+    assert!(table.contains("| 2 | edge_only | 2 | scripted |"), "table row:\n{table}");
+
+    // a fixed-policy stream: exactly one segment, covering every frame
+    let sp = e.graph().split_by_name("vfe").unwrap();
+    let mut fixed = SplitSession::builder()
+        .engine(e.clone())
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .policy(Box::new(Fixed(sp)))
+        .build()
+        .unwrap();
+    let (_, report) = fixed.run().unwrap();
+    assert_eq!(report.segments.len(), 1);
+    assert_eq!(report.segments[0].frames, stream.len());
+    assert_eq!(report.segments[0].reason, "fixed");
+}
+
 /// The adaptive policy (live-bandwidth cost model + hysteresis) may pick
 /// any split it likes, but every frame must still be byte-identical to a
 /// fixed run at whatever it picked.
@@ -672,5 +731,53 @@ fn adaptive_hysteresis_and_cooldown_refuse_flips() {
         cooled.choose(&ctx(Some(edge_only))).unwrap(),
         best,
         "cooldown expired"
+    );
+}
+
+/// `Adaptive::explain` narrates the most recent decision: initial pick,
+/// switch past the hysteresis margin, hold within it, and cooldown
+/// freeze — the strings the per-segment report records.
+#[test]
+fn adaptive_explain_reports_decision_reasons() {
+    let e = engine();
+    let cloud = SceneGenerator::with_seed(21000).generate().cloud;
+    let edge_only = e.graph().split_edge_only();
+    let ctx = |current: Option<SplitPoint>| PolicyContext {
+        engine: &*e,
+        cloud: &cloud,
+        frames_done: 0,
+        bandwidth_bps: None,
+        current,
+        in_flight: 0,
+    };
+    let best = adaptive::choose_split(&e, &cloud, Objective::InferenceTime).unwrap().split;
+    assert_ne!(best, edge_only, "test precondition");
+
+    let mut fresh = Adaptive::new(Objective::InferenceTime);
+    assert_eq!(fresh.explain(), fresh.describe(), "no evaluation yet");
+    fresh.choose(&ctx(None)).unwrap();
+    assert!(
+        fresh.explain().starts_with("initial pick"),
+        "got: {}",
+        fresh.explain()
+    );
+
+    let mut sticky = Adaptive::new(Objective::InferenceTime).hysteresis(1e9);
+    sticky.choose(&ctx(Some(edge_only))).unwrap();
+    assert!(sticky.explain().starts_with("held"), "got: {}", sticky.explain());
+
+    let mut eager = Adaptive::new(Objective::InferenceTime).hysteresis(0.0);
+    eager.choose(&ctx(Some(edge_only))).unwrap();
+    assert!(eager.explain().starts_with("switched"), "got: {}", eager.explain());
+
+    let mut cooled = Adaptive::new(Objective::InferenceTime)
+        .hysteresis(0.0)
+        .cooldown(1);
+    cooled.choose(&ctx(Some(edge_only))).unwrap();
+    cooled.choose(&ctx(Some(edge_only))).unwrap();
+    assert!(
+        cooled.explain().contains("cooldown"),
+        "got: {}",
+        cooled.explain()
     );
 }

@@ -23,7 +23,14 @@ files so the script itself cannot rot.
 
 The script refuses artifacts that are empty, schema-mismatched, or missing
 the gated hot paths, so a truncated or filtered run cannot silently become
-the baseline.
+the baseline. It also validates the recorded SIMD dispatch path
+(``cpu_features.dispatch``, written by the bench suite since the SIMD
+kernels landed): the gated and tmax artifacts must agree with each other,
+and re-arming refuses an artifact whose dispatch differs from the
+committed armed baseline's — a baseline measured on an AVX2 runner must
+never be compared against scalar-dispatch runs (or vice versa). Re-arming
+across instruction sets requires deleting/renaming the committed baseline
+first, which makes the switch an explicit, reviewable act.
 """
 
 import json
@@ -70,10 +77,23 @@ def load(path: pathlib.Path) -> dict:
         fail(f"cannot read artifact {path}: {e}")
 
 
+def dispatch_of(data: dict) -> "str | None":
+    """The SIMD dispatch path an artifact was measured under
+    (``cpu_features.dispatch``: "scalar", "avx2", "neon"), or None for
+    artifacts written before the field existed."""
+    features = data.get("cpu_features")
+    if isinstance(features, dict):
+        d = features.get("dispatch")
+        if isinstance(d, str) and d:
+            return d
+    return None
+
+
 def validate(data: dict, src: pathlib.Path, *, gated: bool) -> None:
     """Reject empty/partial/mis-threaded artifacts. `gated` artifacts must
     be the threads=1 run; informational (tmax) twins may carry any thread
-    count (a 1-core runner legitimately measures max == 1)."""
+    count (a 1-core runner legitimately measures max == 1). Fresh
+    artifacts must record their SIMD dispatch path."""
     if data.get("schema") != SCHEMA:
         fail(f"{src}: schema mismatch: got {data.get('schema')!r}, want {SCHEMA!r}")
     baseline = data.get("baseline") or {}
@@ -85,6 +105,13 @@ def validate(data: dict, src: pathlib.Path, *, gated: bool) -> None:
         fail(
             f"{src}: baseline is missing gated hot paths (filtered or truncated "
             "run?): " + ", ".join(missing)
+        )
+    if dispatch_of(data) is None:
+        fail(
+            f"{src}: no cpu_features.dispatch recorded — re-run the micro suite "
+            "with --json (the bench writes it since the SIMD kernels landed); "
+            "a baseline without a recorded instruction set cannot be compared "
+            "across runners"
         )
     if gated:
         threads = data.get("threads")
@@ -146,11 +173,42 @@ def main() -> None:
     if tmax_src is not None:
         tmax_data = load(tmax_src)
         validate(tmax_data, tmax_src, gated=False)
+        if dispatch_of(tmax_data) != dispatch_of(data):
+            fail(
+                f"dispatch mismatch between artifacts: {src} was measured with "
+                f"{dispatch_of(data)!r} but {tmax_src} with "
+                f"{dispatch_of(tmax_data)!r} — these are not from the same "
+                "runner/run and must not be committed together"
+            )
 
     if check_only:
         checked = [str(src)] + ([str(tmax_src)] if tmax_src else [])
-        print(f"check ok: {', '.join(checked)} — full runs, schema + hot paths valid")
+        print(
+            f"check ok: {', '.join(checked)} — full runs, schema + hot paths "
+            f"valid, dispatch {dispatch_of(data)!r}"
+        )
         return
+
+    # Never arm across instruction sets: a baseline measured under AVX2
+    # dispatch is systematically faster than a scalar-dispatch run of the
+    # same code, so comparing them would report phantom regressions (or
+    # mask real ones). Switching runners is fine — but it must be explicit:
+    # delete/rename the committed baseline first, then arm fresh.
+    if TARGET.exists():
+        committed = load(TARGET)
+        committed_dispatch = dispatch_of(committed)
+        if (
+            committed.get("status") == "armed"
+            and committed_dispatch is not None
+            and committed_dispatch != dispatch_of(data)
+        ):
+            fail(
+                f"refusing to re-arm: committed baseline was measured with "
+                f"dispatch {committed_dispatch!r} but {src} reports "
+                f"{dispatch_of(data)!r}; baselines from different instruction "
+                "sets are not comparable — if the runner fleet changed, remove "
+                f"{TARGET.relative_to(REPO_ROOT)} first and arm from scratch"
+            )
 
     # drift of the fresh run against whatever baseline is committed today
     # (meaningful once armed; silent on the first arming)
