@@ -61,7 +61,7 @@ fn main() -> Result<()> {
     }
 
     client.shutdown()?;
-    server.shutdown();
+    server.shutdown()?;
 
     println!(
         "\n{}",

@@ -1,9 +1,14 @@
-//! Multi-sensor frame batcher (paper §VI future work: "processing
+//! Deadline-flush batcher (paper §VI future work: "processing
 //! integrated data from multiple LiDARs").
 //!
-//! Frames from S sensors land in a shared queue; a batch flushes when it
-//! reaches `batch_max` frames or the oldest frame has waited
-//! `batch_wait_ms`. Per-sensor FIFO order is preserved.
+//! Items from N producers land in a shared queue; a batch flushes when it
+//! reaches `max_frames` items or the oldest item has waited `max_wait`.
+//! Per-producer FIFO order is preserved. The batcher is generic over the
+//! item type: sensor threads push [`Frame`]s into a `Batcher<Frame>` for
+//! multi-LiDAR fan-in, and the concurrent split server pushes per-session
+//! tail jobs into the same structure so frames from different TCP
+//! connections coalesce into one tail dispatch
+//! (see [`crate::coordinator::remote::Server`]).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -27,20 +32,20 @@ impl Default for BatchPolicy {
     }
 }
 
-struct Queue {
-    frames: VecDeque<(Frame, Instant)>,
+struct Queue<T> {
+    frames: VecDeque<(T, Instant)>,
     closed: bool,
 }
 
-/// Thread-safe frame batcher.
-pub struct Batcher {
+/// Thread-safe deadline-flush batcher (defaults to [`Frame`] items).
+pub struct Batcher<T = Frame> {
     policy: BatchPolicy,
-    q: Mutex<Queue>,
+    q: Mutex<Queue<T>>,
     cv: Condvar,
 }
 
-impl Batcher {
-    pub fn new(policy: BatchPolicy) -> Batcher {
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
         assert!(policy.max_frames > 0);
         Batcher {
             policy,
@@ -52,14 +57,14 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a frame (called by sensor threads). Returns `false` when
-    /// the batcher is closed and the frame was dropped.
-    pub fn push(&self, frame: Frame) -> bool {
+    /// Enqueue an item (called by producer threads). Returns `false` when
+    /// the batcher is closed and the item was dropped.
+    pub fn push(&self, item: T) -> bool {
         let mut q = self.q.lock().unwrap();
         if q.closed {
             return false;
         }
-        q.frames.push_back((frame, Instant::now()));
+        q.frames.push_back((item, Instant::now()));
         self.cv.notify_all();
         true
     }
@@ -76,7 +81,7 @@ impl Batcher {
 
     /// Dequeue the next batch. Blocks until the policy triggers a flush or
     /// the batcher is closed; `None` means closed-and-drained.
-    pub fn next_batch(&self) -> Option<Vec<Frame>> {
+    pub fn next_batch(&self) -> Option<Vec<T>> {
         let mut out = Vec::new();
         if self.next_batch_into(&mut out) {
             Some(out)
@@ -89,7 +94,7 @@ impl Batcher {
     /// `out` (cleared first; its capacity is reused across batches, so a
     /// steady-state consumer loop allocates nothing). Returns `false` when
     /// the batcher is closed and drained.
-    pub fn next_batch_into(&self, out: &mut Vec<Frame>) -> bool {
+    pub fn next_batch_into(&self, out: &mut Vec<T>) -> bool {
         out.clear();
         let mut q = self.q.lock().unwrap();
         loop {
@@ -114,11 +119,13 @@ impl Batcher {
         }
     }
 
-    fn drain_into(&self, q: &mut Queue, out: &mut Vec<Frame>) {
+    fn drain_into(&self, q: &mut Queue<T>, out: &mut Vec<T>) {
         let n = q.frames.len().min(self.policy.max_frames);
         out.extend(q.frames.drain(..n).map(|(f, _)| f));
     }
+}
 
+impl Batcher<Frame> {
     /// Pump a [`FrameSource`] into this batcher until the source is
     /// exhausted or the batcher closes (a sensor thread per source;
     /// multiple sources interleave into the shared queue). Returns the
@@ -416,6 +423,21 @@ mod tests {
     #[should_panic]
     fn multi_source_rejects_empty_source_list() {
         let _ = MultiSource::round_robin(Vec::new());
+    }
+
+    /// The batcher is generic over the item type — the server batches
+    /// per-session tail jobs through the same queue the sensors use.
+    #[test]
+    fn batches_non_frame_items() {
+        let b: Batcher<(u64, &'static str)> = Batcher::new(BatchPolicy {
+            max_frames: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        assert!(b.push((1, "a")));
+        assert!(b.push((2, "b")));
+        assert_eq!(b.next_batch().unwrap(), vec![(1, "a"), (2, "b")]);
+        b.close();
+        assert!(b.next_batch().is_none());
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! * [`link`] — bandwidth/RTT link model + live EWMA bandwidth estimator
 //! * [`pipeline`] — staged multi-frame scheduler: overlap preprocess(N+1)
 //!   with transfer/tail(N) on bounded worker queues
-//! * [`transport`] / [`remote`] — real TCP edge/server deployment
-//! * [`batcher`] — multi-LiDAR frame batching (paper §VI future work)
+//! * [`transport`] / [`remote`] — real TCP edge/server deployment: the
+//!   concurrent multi-client `Server` plus the edge-side clients
+//! * [`batcher`] — deadline-flush batching: multi-LiDAR fan-in and the
+//!   server's cross-client tail coalescing
+//! * [`shutdown`] — the drain-vs-abort teardown contract every
+//!   connection-holding handle implements
 //! * [`adaptive`] — analytic split-point selection (extension)
 
 pub mod adaptive;
@@ -17,6 +21,7 @@ pub mod link;
 pub mod pipeline;
 pub mod remote;
 pub mod session;
+pub mod shutdown;
 pub mod transport;
 
 pub use engine::{
@@ -24,4 +29,6 @@ pub use engine::{
 };
 pub use link::{BandwidthEstimator, LinkModel};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
-pub use session::{SplitSession, SplitSessionBuilder};
+pub use remote::{Server, ServerConfig, ServerStats};
+pub use session::{ServerSession, ServerSessionBuilder, SplitSession, SplitSessionBuilder};
+pub use shutdown::{Shutdown, ShutdownMode};

@@ -131,25 +131,31 @@ impl<T> BoundedQueue<T> {
 
 // -------------------------------------------------------- reorder buffer
 
-/// Restores submission order: stage workers complete frames as they
-/// finish; the consumer always receives seq 0, 1, 2, …
+/// Restores submission order: out-of-order workers complete items as
+/// they finish; the consumer always receives seq 0, 1, 2, …
+///
+/// Generic over the completed item: the pipeline reorders
+/// `Result<FrameResult>`s for its pull-driven consumer ([`Reorder::next`]),
+/// and the concurrent split server reorders per-session reply messages
+/// push-driven ([`Reorder::drain_ready`]) so each TCP client sees FIFO
+/// replies no matter which tail worker finished first.
 #[derive(Debug)]
-struct Reorder {
-    state: Mutex<ReorderState>,
+pub(crate) struct Reorder<T> {
+    state: Mutex<ReorderState<T>>,
     ready: Condvar,
 }
 
 #[derive(Debug)]
-struct ReorderState {
-    results: BTreeMap<u64, Result<FrameResult>>,
+struct ReorderState<T> {
+    results: BTreeMap<u64, T>,
     next: u64,
     /// set once every stage worker has exited — every submitted frame has
     /// its entry by then
     producers_done: bool,
 }
 
-impl Reorder {
-    fn new() -> Reorder {
+impl<T> Reorder<T> {
+    pub(crate) fn new() -> Reorder<T> {
         Reorder {
             state: Mutex::new(ReorderState {
                 results: BTreeMap::new(),
@@ -160,7 +166,7 @@ impl Reorder {
         }
     }
 
-    fn complete(&self, seq: u64, result: Result<FrameResult>) {
+    pub(crate) fn complete(&self, seq: u64, result: T) {
         let mut s = self.state.lock().unwrap();
         s.results.insert(seq, result);
         self.ready.notify_all();
@@ -174,7 +180,7 @@ impl Reorder {
 
     /// Blocks until the next-in-order frame completes; `None` once the
     /// pipeline is closed and fully drained.
-    fn next(&self) -> Option<Result<FrameResult>> {
+    fn next(&self) -> Option<T> {
         let mut s = self.state.lock().unwrap();
         loop {
             let seq = s.next;
@@ -186,6 +192,26 @@ impl Reorder {
                 return None;
             }
             s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking complement of [`Reorder::next`]: pop the contiguous
+    /// run of in-order items that are ready *now* (possibly empty). The
+    /// server's reply path calls this after every [`Reorder::complete`] —
+    /// whichever worker lands the next-in-order reply flushes it and any
+    /// successors it unblocked.
+    pub(crate) fn drain_ready(&self) -> Vec<(u64, T)> {
+        let mut s = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        loop {
+            let seq = s.next;
+            match s.results.remove(&seq) {
+                Some(r) => {
+                    out.push((seq, r));
+                    s.next += 1;
+                }
+                None => return out,
+            }
         }
     }
 }
@@ -296,7 +322,7 @@ impl PipelineShared {
 /// thread can share one `Pipeline` by reference.
 pub struct Pipeline {
     input: Arc<BoundedQueue<(u64, PointCloud)>>,
-    reorder: Arc<Reorder>,
+    reorder: Arc<Reorder<Result<FrameResult>>>,
     shared: Arc<PipelineShared>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     /// next sequence number; held across the submit push so sequence
@@ -718,6 +744,21 @@ mod tests {
             assert!(r.next().unwrap().is_err());
         }
         assert!(r.next().is_none());
+    }
+
+    /// The push-driven flush path the server's per-session reply routing
+    /// uses: only the contiguous in-order run drains, gaps park.
+    #[test]
+    fn reorder_drain_ready_pops_contiguous_runs_only() {
+        let r: Reorder<&'static str> = Reorder::new();
+        r.complete(1, "b");
+        assert!(r.drain_ready().is_empty(), "seq 0 missing: nothing ready");
+        r.complete(0, "a");
+        assert_eq!(r.drain_ready(), vec![(0, "a"), (1, "b")]);
+        r.complete(3, "d");
+        assert!(r.drain_ready().is_empty(), "seq 2 missing again");
+        r.complete(2, "c");
+        assert_eq!(r.drain_ready(), vec![(2, "c"), (3, "d")]);
     }
 
     #[test]

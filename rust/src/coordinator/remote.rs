@@ -1,4 +1,4 @@
-//! Real two-process deployment: TCP edge server + edge-device client.
+//! Real two-process deployment: concurrent TCP split server + edge client.
 //!
 //! This is the paper's Fig 1/2 topology executed for real: the head runs in
 //! the edge process, the live set crosses an actual socket, the tail runs
@@ -7,130 +7,878 @@
 //! demonstrate the mechanism; the calibrated virtual-clock engine produces
 //! the paper-comparable figures.
 //!
+//! The server side is a multi-client session server sharing one tail:
+//!
+//! * every connection gets a session handler thread that reads requests,
+//!   applies admission control, and enqueues tail jobs;
+//! * one shared [`Batcher`] coalesces jobs across sessions, so frames from
+//!   different clients land in one tail dispatch (each frame's tail is
+//!   independent — batching changes scheduling, never arithmetic, so every
+//!   client's detections stay byte-identical to a solo run);
+//! * a dispatcher thread pulls batches and scatters them over the engine's
+//!   kernel [`WorkerPool`](crate::runtime::pool::WorkerPool) lanes;
+//! * replies route back through a per-session reorder buffer that
+//!   preserves the connection's FIFO reply contract.
+//!
+//! Backpressure is two-level: a global pending cap refuses new work with a
+//! [`Message::Busy`] retry hint, and a per-session window stops reading a
+//! session's socket (TCP backpressure) so one greedy client cannot starve
+//! the rest. Teardown follows the [`Shutdown`] contract: graceful drain
+//! (stop accepting, flush everything admitted, then close) bounded by a
+//! timeout, with abort as the fallback and the `Drop` path.
+//!
 //! Wire packets are self-describing (tensor names), so each process
 //! resolves names to its graph's interned ids once per request at the
 //! boundary; everything inside the frame then runs on the id-indexed
 //! store, sharing tensors by refcount.
 
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::HashMap;
+use std::io::Read as _;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::engine::{Engine, HeadFrame};
+use crate::coordinator::pipeline::Reorder;
+use crate::coordinator::shutdown::{Shutdown, ShutdownMode};
 use crate::coordinator::transport::{read_message, write_message, Message};
-use crate::metrics::SimTime;
+use crate::metrics::{OccupancyHist, SimTime};
 use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::Detection;
 use crate::tensor::codec::{Packet, Policy};
 
-/// Server handle: accept loop runs on background threads until shutdown.
+/// Admission, batching, and teardown knobs for [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Concurrent session cap: connections beyond it are refused at accept
+    /// time with a protocol `Error` (stats connections count too).
+    pub max_sessions: usize,
+    /// Global cap on admitted-but-unanswered tail jobs. An `Infer`
+    /// arriving at the cap is refused with [`Message::Busy`] instead of
+    /// queued — a soft cap (checked before the increment), so brief
+    /// overshoot by a few in-flight admissions is possible.
+    pub pending_cap: usize,
+    /// Per-session in-flight bound: a session's handler stops reading its
+    /// socket while this many of its frames are outstanding, so TCP
+    /// backpressure reaches the client and one session cannot consume the
+    /// whole pending budget.
+    pub session_window: usize,
+    /// Graceful-drain deadline: [`Server::shutdown`] aborts whatever is
+    /// still in flight once this much time has passed.
+    pub drain_timeout: Duration,
+    /// Parallel lanes per tail dispatch: each batch is scattered over the
+    /// engine's kernel pool in at most this many contiguous ranges.
+    pub tail_slots: usize,
+    /// Cross-session coalescing policy. The default `max_wait` of zero
+    /// adds no latency: a dispatch takes whatever is queued the moment it
+    /// looks, so batches grow exactly when the tail is the bottleneck.
+    pub batch: BatchPolicy,
+    /// Periodic stderr metrics summary (`None` = off).
+    pub stats_interval: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_sessions: 64,
+            pending_cap: 256,
+            session_window: 32,
+            drain_timeout: Duration::from_secs(10),
+            tail_slots: 1,
+            batch: BatchPolicy {
+                max_frames: 8,
+                max_wait: Duration::ZERO,
+            },
+            stats_interval: None,
+        }
+    }
+}
+
+/// Wire footprint of a message (header + payload), for byte accounting.
+fn wire_len(msg: &Message) -> u64 {
+    let payload = match msg {
+        Message::Infer { packet, .. } => 9 + packet.len(),
+        Message::InferResult { packet, .. } => 16 + packet.len(),
+        Message::Error { message, .. } => 8 + message.len(),
+        Message::Busy { .. } => 16,
+        Message::StatsResult { text } => text.len(),
+        Message::Shutdown | Message::Stats => 0,
+    };
+    9 + payload as u64
+}
+
+/// One admitted tail request travelling from a session handler to the
+/// dispatcher. Holds its session alive until the reply is flushed, so a
+/// client disconnecting mid-stream never invalidates queued work.
+struct TailJob {
+    session: Arc<SessionState>,
+    /// per-session reply sequence (the reorder buffer's key)
+    seq: u64,
+    request_id: u64,
+    head_len: u8,
+    packet: Vec<u8>,
+}
+
+/// Per-session in-flight window, guarded by `SessionState::win`.
+struct Window {
+    in_flight: usize,
+    submitted: u64,
+}
+
+/// Everything one connection's handler, jobs, and metrics share.
+struct SessionState {
+    id: u64,
+    peer: String,
+    /// Write half. Replies go out under this lock in `seq` order — the
+    /// reorder drain runs inside it so concurrent tail workers cannot
+    /// interleave one session's replies.
+    sock: Mutex<TcpStream>,
+    /// Shutdown control handle, outside the write lock: a write blocked on
+    /// a stalled client must still be interruptible.
+    ctrl: TcpStream,
+    /// Parks out-of-order replies until their predecessors land, restoring
+    /// the connection's FIFO reply contract.
+    replies: Reorder<Message>,
+    win: Mutex<Window>,
+    win_cv: Condvar,
+    /// Cleared on write failure or abort; dead sessions drop replies
+    /// instead of erroring the tail workers that computed them.
+    alive: AtomicBool,
+    frames: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    tail_nanos: AtomicU64,
+}
+
+impl SessionState {
+    /// Route one reply: park it in the reorder buffer, flush the
+    /// contiguous ready run to the socket, then release window slots for
+    /// every flushed frame.
+    fn complete(&self, seq: u64, msg: Message, metrics: &ServerMetrics) {
+        let mut sock = self.sock.lock().unwrap();
+        self.replies.complete(seq, msg);
+        let ready = self.replies.drain_ready();
+        let flushed = ready.len();
+        for (_, msg) in ready {
+            if self.alive.load(Ordering::Acquire) {
+                match write_message(&mut *sock, &msg) {
+                    Ok(()) => {
+                        let n = wire_len(&msg);
+                        self.bytes_out.fetch_add(n, Ordering::Relaxed);
+                        metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(_) => self.alive.store(false, Ordering::Release),
+                }
+            }
+        }
+        drop(sock);
+        if flushed > 0 {
+            let mut w = self.win.lock().unwrap();
+            w.in_flight -= flushed;
+            drop(w);
+            self.win_cv.notify_all();
+        }
+    }
+}
+
+/// Server-wide counters behind relaxed atomics (hot paths never contend).
+#[derive(Default)]
+struct ServerMetrics {
+    sessions_total: AtomicU64,
+    frames: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    tail_nanos: AtomicU64,
+    tail_batches: AtomicU64,
+    multi_session_batches: AtomicU64,
+    busy_rejections: AtomicU64,
+    accept_refusals: AtomicU64,
+    session_errors: AtomicU64,
+    /// batcher depth sampled at each dispatch
+    queue_occupancy: Mutex<OccupancyHist>,
+}
+
+/// State shared by the accept loop, session handlers, and dispatcher.
+struct ServerShared {
+    cfg: ServerConfig,
+    engine: Arc<Engine>,
+    batcher: Batcher<TailJob>,
+    stop: AtomicBool,
+    aborted: AtomicBool,
+    /// admitted-but-unanswered jobs across all sessions
+    pending: AtomicUsize,
+    next_session: AtomicU64,
+    sessions: Mutex<HashMap<u64, Arc<SessionState>>>,
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    metrics: ServerMetrics,
+}
+
+impl ServerShared {
+    /// Immediate teardown: unblock every reader and writer, drop queued
+    /// work (tail jobs already dequeued finish as errors, cheaply).
+    fn abort(&self) {
+        self.aborted.store(true, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        for sess in self.sessions.lock().unwrap().values() {
+            sess.alive.store(false, Ordering::Release);
+            let _ = sess.ctrl.shutdown(std::net::Shutdown::Both);
+        }
+        self.batcher.close();
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        let per_session: Vec<SessionSnapshot> = {
+            let sessions = self.sessions.lock().unwrap();
+            let mut v: Vec<SessionSnapshot> = sessions
+                .values()
+                .map(|s| {
+                    let (in_flight, submitted) = {
+                        let w = s.win.lock().unwrap();
+                        (w.in_flight, w.submitted)
+                    };
+                    SessionSnapshot {
+                        id: s.id,
+                        peer: s.peer.clone(),
+                        frames: s.frames.load(Ordering::Relaxed),
+                        submitted,
+                        uplink_bytes: s.bytes_in.load(Ordering::Relaxed),
+                        downlink_bytes: s.bytes_out.load(Ordering::Relaxed),
+                        tail_time: SimTime {
+                            nanos: s.tail_nanos.load(Ordering::Relaxed) as u128,
+                        },
+                        in_flight,
+                    }
+                })
+                .collect();
+            v.sort_by_key(|s| s.id);
+            v
+        };
+        let m = &self.metrics;
+        let occ = m.queue_occupancy.lock().unwrap();
+        ServerStats {
+            sessions_active: per_session.len(),
+            sessions_total: m.sessions_total.load(Ordering::Relaxed),
+            frames: m.frames.load(Ordering::Relaxed),
+            uplink_bytes: m.bytes_in.load(Ordering::Relaxed),
+            downlink_bytes: m.bytes_out.load(Ordering::Relaxed),
+            tail_batches: m.tail_batches.load(Ordering::Relaxed),
+            multi_session_batches: m.multi_session_batches.load(Ordering::Relaxed),
+            busy_rejections: m.busy_rejections.load(Ordering::Relaxed),
+            accept_refusals: m.accept_refusals.load(Ordering::Relaxed),
+            session_errors: m.session_errors.load(Ordering::Relaxed),
+            pending: self.pending.load(Ordering::Relaxed),
+            tail_time: SimTime {
+                nanos: m.tail_nanos.load(Ordering::Relaxed) as u128,
+            },
+            queue_mean: occ.mean(),
+            queue_max: occ.max(),
+            per_session,
+        }
+    }
+}
+
+/// Point-in-time metrics for one live session.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    pub id: u64,
+    pub peer: String,
+    /// tail jobs completed for this session
+    pub frames: u64,
+    /// requests admitted past the session window (an exact count, read
+    /// under the window lock — test harnesses gate teardown on it)
+    pub submitted: u64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub tail_time: SimTime,
+    pub in_flight: usize,
+}
+
+/// Point-in-time server metrics: [`Server::stats`] in process, the
+/// `Stats` protocol request (see [`fetch_stats`]) over the wire.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub sessions_active: usize,
+    pub sessions_total: u64,
+    pub frames: u64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    /// tail dispatches executed
+    pub tail_batches: u64,
+    /// dispatches that coalesced frames from more than one session
+    pub multi_session_batches: u64,
+    /// `Infer` requests refused with `Busy` at the pending cap
+    pub busy_rejections: u64,
+    /// connections refused at the session cap
+    pub accept_refusals: u64,
+    /// sessions that ended with a protocol/socket error (isolated)
+    pub session_errors: u64,
+    /// admitted-but-unanswered jobs right now
+    pub pending: usize,
+    /// cumulative tail compute
+    pub tail_time: SimTime,
+    /// mean batcher depth observed at dispatch time
+    pub queue_mean: f64,
+    pub queue_max: usize,
+    pub per_session: Vec<SessionSnapshot>,
+}
+
+impl ServerStats {
+    /// One-line operator summary (the periodic stderr heartbeat).
+    pub fn summary(&self) -> String {
+        format!(
+            "server: {} session(s) active, {} total | {} frame(s) in {} batch(es) \
+             ({} multi-session), {} pending | up {:.2} MB, down {:.2} MB | \
+             tail {:.1} ms total, queue mean {:.2} max {} | {} busy, {} refused, {} error(s)",
+            self.sessions_active,
+            self.sessions_total,
+            self.frames,
+            self.tail_batches,
+            self.multi_session_batches,
+            self.pending,
+            self.uplink_bytes as f64 / 1e6,
+            self.downlink_bytes as f64 / 1e6,
+            self.tail_time.as_millis_f64(),
+            self.queue_mean,
+            self.queue_max,
+            self.busy_rejections,
+            self.accept_refusals,
+            self.session_errors,
+        )
+    }
+
+    /// Greppable `key=value` lines plus one `session` row per live
+    /// session — the `StatsResult` wire payload.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "sessions_active={}", self.sessions_active);
+        let _ = writeln!(out, "sessions_total={}", self.sessions_total);
+        let _ = writeln!(out, "frames={}", self.frames);
+        let _ = writeln!(out, "uplink_bytes={}", self.uplink_bytes);
+        let _ = writeln!(out, "downlink_bytes={}", self.downlink_bytes);
+        let _ = writeln!(out, "tail_batches={}", self.tail_batches);
+        let _ = writeln!(out, "multi_session_batches={}", self.multi_session_batches);
+        let _ = writeln!(out, "busy_rejections={}", self.busy_rejections);
+        let _ = writeln!(out, "accept_refusals={}", self.accept_refusals);
+        let _ = writeln!(out, "session_errors={}", self.session_errors);
+        let _ = writeln!(out, "pending={}", self.pending);
+        let _ = writeln!(out, "tail_ms={:.3}", self.tail_time.as_millis_f64());
+        let _ = writeln!(out, "queue_mean={:.3}", self.queue_mean);
+        let _ = writeln!(out, "queue_max={}", self.queue_max);
+        for s in &self.per_session {
+            let _ = writeln!(
+                out,
+                "session id={} peer={} frames={} submitted={} up={} down={} tail_ms={:.3} in_flight={}",
+                s.id,
+                s.peer,
+                s.frames,
+                s.submitted,
+                s.uplink_bytes,
+                s.downlink_bytes,
+                s.tail_time.as_millis_f64(),
+                s.in_flight,
+            );
+        }
+        out
+    }
+}
+
+/// Concurrent multi-client split server (see the module docs for the
+/// architecture). Construct with [`Server::spawn`]/[`Server::spawn_with`]
+/// or through [`ServerSession`](crate::coordinator::session::ServerSession).
 pub struct Server {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    stats_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and start serving. `engine` runs the tail side.
+    /// Bind and start serving with the default [`ServerConfig`].
+    /// `engine` runs the tail side, shared by every session.
     pub fn spawn(addr: &str, engine: Arc<Engine>) -> Result<Server> {
+        Server::spawn_with(addr, engine, ServerConfig::default())
+    }
+
+    /// Bind and start serving with explicit admission/batching knobs.
+    pub fn spawn_with(addr: &str, engine: Arc<Engine>, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
 
-        let accept_thread = std::thread::Builder::new()
-            .name("sp-server-accept".into())
-            .spawn(move || {
-                let mut workers = Vec::new();
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            stream.set_nonblocking(false).ok();
-                            stream.set_nodelay(true).ok();
-                            let engine = engine.clone();
-                            workers.push(std::thread::spawn(move || {
-                                let _ = handle_connection(stream, engine);
-                            }));
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for w in workers {
-                    let _ = w.join();
-                }
-            })?;
+        let shared = Arc::new(ServerShared {
+            batcher: Batcher::new(cfg.batch),
+            cfg,
+            engine,
+            stop: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
+            pending: AtomicUsize::new(0),
+            next_session: AtomicU64::new(0),
+            sessions: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+            metrics: ServerMetrics::default(),
+        });
+
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("sp-server-accept".into())
+                .spawn(move || accept_loop(listener, &shared))?
+        };
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("sp-server-dispatch".into())
+                .spawn(move || dispatch_loop(&shared))?
+        };
+        let stats_thread = match shared.cfg.stats_interval {
+            Some(interval) => {
+                let shared = shared.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("sp-server-stats".into())
+                        .spawn(move || stats_loop(&shared, interval))?,
+                )
+            }
+            None => None,
+        };
 
         Ok(Server {
             addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
+            shared,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+            stats_thread,
         })
     }
 
-    pub fn addr(&self) -> std::net::SocketAddr {
+    pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+    /// Point-in-time metrics snapshot.
+    pub fn stats(&self) -> ServerStats {
+        self.shared.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, flush every admitted frame, then
+    /// close — bounded by the configured `drain_timeout`, after which
+    /// in-flight work is aborted and this errors.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_mode(ShutdownMode::Drain)
+    }
+}
+
+impl Shutdown for Server {
+    fn shutdown_mode(&mut self, mode: ShutdownMode) -> Result<()> {
+        if self.accept.is_none() && self.dispatcher.is_none() {
+            return Ok(()); // already torn down
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let accept = self.accept.take();
+        let dispatcher = self.dispatcher.take();
+        let stats_thread = self.stats_thread.take();
+        let shared = self.shared.clone();
+        // The full teardown sequence; under Drain it runs on a helper
+        // thread so the deadline can interrupt it.
+        let drain = move || {
+            // no new sessions
+            if let Some(t) = accept {
+                let _ = t.join();
+            }
+            // shut every session's read half: handlers see EOF after the
+            // requests already buffered, admit nothing more, and exit —
+            // write halves stay open so admitted frames still flush
+            for sess in shared.sessions.lock().unwrap().values() {
+                let _ = sess.ctrl.shutdown(std::net::Shutdown::Read);
+            }
+            let handlers: Vec<_> = std::mem::take(&mut *shared.handlers.lock().unwrap());
+            for h in handlers {
+                let _ = h.join();
+            }
+            // closed + drained: the dispatcher finishes the queue and exits
+            shared.batcher.close();
+            if let Some(t) = dispatcher {
+                let _ = t.join();
+            }
+            if let Some(t) = stats_thread {
+                let _ = t.join();
+            }
+        };
+        match mode {
+            ShutdownMode::Abort => {
+                self.shared.abort();
+                drain();
+                Ok(())
+            }
+            ShutdownMode::Drain => {
+                let timeout = self.shared.cfg.drain_timeout;
+                let (tx, rx) = std::sync::mpsc::channel();
+                let helper = std::thread::Builder::new()
+                    .name("sp-server-drain".into())
+                    .spawn(move || {
+                        drain();
+                        let _ = tx.send(());
+                    })?;
+                match rx.recv_timeout(timeout) {
+                    Ok(()) => {
+                        let _ = helper.join();
+                        Ok(())
+                    }
+                    Err(_) => {
+                        self.shared.abort();
+                        let _ = helper.join();
+                        bail!("server drain exceeded {timeout:?}; in-flight work aborted")
+                    }
+                }
+            }
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        // non-panicking under in-flight sessions; no-op after an explicit
+        // shutdown (the thread handles are already taken)
+        let _ = self.shutdown_mode(ShutdownMode::Abort);
+    }
+}
+
+/// Join handler threads that already finished, keeping the registry small
+/// on long-lived servers with session churn.
+fn reap_finished(shared: &ServerShared) {
+    let mut handlers = shared.handlers.lock().unwrap();
+    let mut live = Vec::with_capacity(handlers.len());
+    for h in handlers.drain(..) {
+        if h.is_finished() {
+            let _ = h.join();
+        } else {
+            live.push(h);
+        }
+    }
+    *handlers = live;
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<ServerShared>) {
+    while !shared.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                reap_finished(shared);
+                let active = shared.sessions.lock().unwrap().len();
+                if active >= shared.cfg.max_sessions {
+                    shared.metrics.accept_refusals.fetch_add(1, Ordering::Relaxed);
+                    let mut stream = stream;
+                    let _ = write_message(
+                        &mut stream,
+                        &Message::Error {
+                            request_id: 0,
+                            message: format!(
+                                "session capacity reached ({active} active, cap {}); retry later",
+                                shared.cfg.max_sessions
+                            ),
+                        },
+                    );
+                    continue; // refused: the socket drops here
+                }
+                match spawn_session(shared, stream, peer) {
+                    Ok(handle) => shared.handlers.lock().unwrap().push(handle),
+                    Err(e) => eprintln!("server: failed to start session for {peer}: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
         }
     }
 }
 
-/// One connection: a stream of Infer frames until Shutdown/EOF.
-fn handle_connection(mut stream: TcpStream, engine: Arc<Engine>) -> Result<()> {
+fn spawn_session(
+    shared: &Arc<ServerShared>,
+    stream: TcpStream,
+    peer: SocketAddr,
+) -> Result<std::thread::JoinHandle<()>> {
+    let id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+    let reader = stream.try_clone()?;
+    let ctrl = stream.try_clone()?;
+    let sess = Arc::new(SessionState {
+        id,
+        peer: peer.to_string(),
+        sock: Mutex::new(stream),
+        ctrl,
+        replies: Reorder::new(),
+        win: Mutex::new(Window {
+            in_flight: 0,
+            submitted: 0,
+        }),
+        win_cv: Condvar::new(),
+        alive: AtomicBool::new(true),
+        frames: AtomicU64::new(0),
+        bytes_in: AtomicU64::new(0),
+        bytes_out: AtomicU64::new(0),
+        tail_nanos: AtomicU64::new(0),
+    });
+    shared.sessions.lock().unwrap().insert(id, sess.clone());
+    shared.metrics.sessions_total.fetch_add(1, Ordering::Relaxed);
+    let shared = shared.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("sp-server-sess-{id}"))
+        .spawn(move || run_session(&shared, &sess, reader));
+    match spawned {
+        Ok(handle) => Ok(handle),
+        Err(e) => {
+            // roll the registration back so the slot frees immediately
+            shared.sessions.lock().unwrap().remove(&id);
+            Err(e).context("spawning session handler")
+        }
+    }
+}
+
+/// Session handler wrapper: errors are logged and isolated — a malformed
+/// frame or a mid-frame disconnect ends *this* session only, never the
+/// accept loop or the shared batcher.
+fn run_session(shared: &Arc<ServerShared>, sess: &Arc<SessionState>, reader: TcpStream) {
+    if let Err(e) = session_loop(shared, sess, reader) {
+        shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "server: session {} ({}) ended with error (others unaffected): {e:#}",
+            sess.id, sess.peer
+        );
+    }
+    shared.sessions.lock().unwrap().remove(&sess.id);
+    // tail jobs still in flight hold the session Arc: their replies flush
+    // (or are dropped if the socket died) and the window drains after us.
+}
+
+fn session_loop(
+    shared: &Arc<ServerShared>,
+    sess: &Arc<SessionState>,
+    mut reader: TcpStream,
+) -> Result<()> {
     loop {
-        let msg = match read_message(&mut stream) {
+        // Distinguish a clean close (EOF *between* frames — a client that
+        // just went away) from a mid-frame cut (malformed peer): read one
+        // byte manually, then parse the rest of the frame behind it.
+        let mut first = [0u8; 1];
+        let n = loop {
+            match reader.read(&mut first) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(()),
+                Err(e) => return Err(e).context("reading session socket"),
+            }
+        };
+        if n == 0 {
+            return Ok(()); // clean EOF at a frame boundary (or drain)
+        }
+        let msg = match read_message(&mut (&first[..]).chain(&mut reader)) {
             Ok(m) => m,
-            Err(_) => return Ok(()), // peer closed
+            Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(()), // cut mid-read by teardown
+            Err(e) => return Err(e).context("malformed frame"),
         };
         match msg {
             Message::Shutdown => return Ok(()),
+            Message::Stats => {
+                let text = shared.snapshot().to_text();
+                let reply = Message::StatsResult { text };
+                let n = wire_len(&reply);
+                let mut sock = sess.sock.lock().unwrap();
+                write_message(&mut *sock, &reply).context("writing stats reply")?;
+                drop(sock);
+                sess.bytes_out.fetch_add(n, Ordering::Relaxed);
+                shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+            }
             Message::Infer {
                 request_id,
                 head_len,
                 packet,
             } => {
-                let reply = serve_infer(&engine, head_len as usize, &packet);
-                match reply {
-                    Ok((server_nanos, bytes)) => write_message(
-                        &mut stream,
-                        &Message::InferResult {
+                let rx_bytes = 18 + packet.len() as u64;
+                sess.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
+                shared.metrics.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
+
+                // global admission: refuse (with a retry hint) rather than
+                // queue unboundedly
+                let pending = shared.pending.load(Ordering::Acquire);
+                if pending >= shared.cfg.pending_cap {
+                    shared.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                    let reply = Message::Busy {
+                        request_id,
+                        pending: pending as u64,
+                    };
+                    let tx_bytes = wire_len(&reply);
+                    let mut sock = sess.sock.lock().unwrap();
+                    write_message(&mut *sock, &reply).context("writing busy reply")?;
+                    drop(sock);
+                    sess.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                    shared.metrics.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                    continue;
+                }
+
+                // per-session window: stop reading this socket until a
+                // slot frees (TCP backpressure reaches the client)
+                let seq = {
+                    let mut w = sess.win.lock().unwrap();
+                    loop {
+                        if w.in_flight < shared.cfg.session_window {
+                            break;
+                        }
+                        if shared.aborted.load(Ordering::Acquire) {
+                            return Ok(());
+                        }
+                        let (guard, _) = sess
+                            .win_cv
+                            .wait_timeout(w, Duration::from_millis(100))
+                            .unwrap();
+                        w = guard;
+                    }
+                    w.in_flight += 1;
+                    let seq = w.submitted;
+                    w.submitted += 1;
+                    seq
+                };
+                shared.pending.fetch_add(1, Ordering::AcqRel);
+                let job = TailJob {
+                    session: sess.clone(),
+                    seq,
+                    request_id,
+                    head_len,
+                    packet,
+                };
+                if !shared.batcher.push(job) {
+                    // only reachable once teardown closed the queue; keep
+                    // the reply chain gap-free so earlier frames still flush
+                    shared.pending.fetch_sub(1, Ordering::AcqRel);
+                    sess.complete(
+                        seq,
+                        Message::Error {
                             request_id,
-                            server_nanos,
-                            packet: bytes,
+                            message: "server draining; resubmit".into(),
                         },
-                    )?,
-                    Err(e) => write_message(
-                        &mut stream,
-                        &Message::Error {
-                            request_id,
-                            message: format!("{e:#}"),
-                        },
-                    )?,
+                        &shared.metrics,
+                    );
                 }
             }
             other => bail!("server got unexpected {other:?}"),
         }
+    }
+}
+
+/// Dispatcher: pull coalesced batches off the shared queue and scatter
+/// them over the engine's kernel pool. Exits when the batcher is closed
+/// and drained (teardown).
+fn dispatch_loop(shared: &Arc<ServerShared>) {
+    let mut batch: Vec<TailJob> = Vec::new();
+    while shared.batcher.next_batch_into(&mut batch) {
+        shared
+            .metrics
+            .queue_occupancy
+            .lock()
+            .unwrap()
+            .record(shared.batcher.pending());
+        shared.metrics.tail_batches.fetch_add(1, Ordering::Relaxed);
+        let mut ids: Vec<u64> = batch.iter().map(|j| j.session.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() > 1 {
+            shared
+                .metrics
+                .multi_session_batches
+                .fetch_add(1, Ordering::Relaxed);
+        }
+
+        let slots = shared.cfg.tail_slots.clamp(1, batch.len());
+        let jobs = &batch;
+        match shared.engine.runtime().kernel_pool() {
+            Some(pool) if slots > 1 => pool.scatter_ranges(jobs.len(), slots, |range| {
+                for job in &jobs[range] {
+                    run_tail_job(shared, job);
+                }
+            }),
+            _ => {
+                for job in jobs {
+                    run_tail_job(shared, job);
+                }
+            }
+        }
+        let done = batch.len();
+        batch.clear(); // drops the session Arcs
+        shared.pending.fetch_sub(done, Ordering::AcqRel);
+    }
+}
+
+/// Execute one tail job and route its reply. Each frame's tail work is
+/// independent (own store, shared read-only weights), so batch membership
+/// and lane assignment never change the computed bytes — the determinism
+/// contract cross-client batching rests on.
+fn run_tail_job(shared: &ServerShared, job: &TailJob) {
+    if shared.aborted.load(Ordering::Acquire) || !job.session.alive.load(Ordering::Acquire) {
+        // aborting, or the client is gone: keep the reply chain gap-free
+        // without burning tail compute
+        job.session.complete(
+            job.seq,
+            Message::Error {
+                request_id: job.request_id,
+                message: "server aborted".into(),
+            },
+            &shared.metrics,
+        );
+        return;
+    }
+    let reply = match serve_infer(&shared.engine, job.head_len as usize, &job.packet) {
+        Ok((server_nanos, bytes)) => {
+            job.session.tail_nanos.fetch_add(server_nanos, Ordering::Relaxed);
+            shared.metrics.tail_nanos.fetch_add(server_nanos, Ordering::Relaxed);
+            Message::InferResult {
+                request_id: job.request_id,
+                server_nanos,
+                packet: bytes,
+            }
+        }
+        Err(e) => Message::Error {
+            request_id: job.request_id,
+            message: format!("{e:#}"),
+        },
+    };
+    job.session.frames.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.frames.fetch_add(1, Ordering::Relaxed);
+    job.session.complete(job.seq, reply, &shared.metrics);
+}
+
+/// Periodic stderr heartbeat (opt-in via `ServerConfig::stats_interval`).
+fn stats_loop(shared: &Arc<ServerShared>, interval: Duration) {
+    let mut last = Instant::now();
+    while !shared.stop.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(100));
+        if last.elapsed() >= interval {
+            eprintln!("{}", shared.snapshot().summary());
+            last = Instant::now();
+        }
+    }
+}
+
+/// Fetch a server's metrics snapshot over the wire (the `Stats` protocol
+/// request) on a dedicated short-lived connection.
+pub fn fetch_stats<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+    stream.set_nodelay(true)?;
+    write_message(&mut stream, &Message::Stats)?;
+    match read_message(&mut stream)? {
+        Message::StatsResult { text } => {
+            let _ = write_message(&mut stream, &Message::Shutdown);
+            Ok(text)
+        }
+        Message::Error { message, .. } => bail!("server error: {message}"),
+        other => bail!("unexpected stats reply {other:?}"),
     }
 }
 
@@ -272,8 +1020,9 @@ impl EdgeClient {
         ))
     }
 
+    /// Graceful close: tell the server the session is over.
     pub fn shutdown(mut self) -> Result<()> {
-        write_message(&mut self.stream, &Message::Shutdown)
+        self.shutdown_mode(ShutdownMode::Drain)
     }
 
     /// Convert this client into a persistent incremental stream handle
@@ -292,13 +1041,14 @@ impl EdgeClient {
     ///
     /// A writer thread runs [`Engine::head_stage`] per frame and sends the
     /// wire packet; this thread receives responses and finalizes, in
-    /// submission order (the server processes one connection's requests
-    /// sequentially, so replies are FIFO). `depth` caps in-flight frames:
-    /// `depth <= 1` degenerates to the serial [`EdgeClient::run_frame`]
-    /// loop. Per-frame `round_trip` now includes queueing — at the server,
-    /// and on the client side whenever backpressure stalls the writer
-    /// before the request reaches the socket — which is the point:
-    /// latency is traded for the throughput that overlap buys.
+    /// submission order (the server preserves a connection's FIFO reply
+    /// order even when it batches across sessions). `depth` caps in-flight
+    /// frames: `depth <= 1` degenerates to the serial
+    /// [`EdgeClient::run_frame`] loop. Per-frame `round_trip` now includes
+    /// queueing — at the server, and on the client side whenever
+    /// backpressure stalls the writer before the request reaches the
+    /// socket — which is the point: latency is traded for the throughput
+    /// that overlap buys.
     pub fn run_stream(
         &mut self,
         clouds: &[PointCloud],
@@ -404,6 +1154,20 @@ impl EdgeClient {
     }
 }
 
+impl Shutdown for EdgeClient {
+    fn shutdown_mode(&mut self, mode: ShutdownMode) -> Result<()> {
+        match mode {
+            // the serial client never has frames in flight between calls:
+            // drain == telling the server the session is over
+            ShutdownMode::Drain => write_message(&mut self.stream, &Message::Shutdown),
+            ShutdownMode::Abort => {
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Receive and apply one server reply for `expected_id` (shared by the
 /// serial and pipelined clients, which the tests assert are equivalent):
 /// match the `InferResult`, decode the response tensors into `store`,
@@ -428,6 +1192,9 @@ fn receive_reply(
                 bail!("response id {rid} != request {expected_id}");
             }
             (server_nanos, packet)
+        }
+        Message::Busy { pending, .. } => {
+            bail!("server saturated ({pending} request(s) pending); retry later")
         }
         Message::Error { message, .. } => bail!("server error: {message}"),
         other => bail!("unexpected reply {other:?}"),
@@ -683,26 +1450,50 @@ impl EdgeStream {
         }
     }
 
-    /// Close the stream: join the writer and send the protocol Shutdown.
-    /// Frames still in flight (error paths) are abandoned — the socket is
-    /// shut down instead so neither side can block forever.
+    /// Close the stream: drain cleanly when nothing is in flight,
+    /// otherwise abandon the window and shut the socket so neither side
+    /// can block forever (the historical error-path semantics).
     pub fn shutdown(mut self) -> Result<()> {
         if self.in_flight() > 0 {
-            let _ = self.stream.shutdown(std::net::Shutdown::Both);
-            return self.teardown();
+            self.shutdown_mode(ShutdownMode::Abort)
+        } else {
+            self.shutdown_mode(ShutdownMode::Drain)
         }
-        let res = self.teardown();
-        let msg = write_message(&mut self.stream, &Message::Shutdown);
-        res.and(msg)
+    }
+}
+
+impl Shutdown for EdgeStream {
+    fn shutdown_mode(&mut self, mode: ShutdownMode) -> Result<()> {
+        match mode {
+            ShutdownMode::Drain => {
+                // flush the window: receive (and discard) every in-flight
+                // reply so no submitted frame is dropped
+                while self.in_flight() > 0 {
+                    self.recv()?;
+                }
+                let res = self.teardown();
+                let msg = write_message(&mut self.stream, &Message::Shutdown);
+                res.and(msg)
+            }
+            ShutdownMode::Abort => {
+                // the writer's error (if any) is one this abort just
+                // caused by shutting the socket under it — swallow it,
+                // abort must not fail
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                let _ = self.teardown();
+                Ok(())
+            }
+        }
     }
 }
 
 impl Drop for EdgeStream {
     fn drop(&mut self) {
         if self.writer.is_some() {
-            // never joined: unblock a writer stuck in a socket write first
-            let _ = self.stream.shutdown(std::net::Shutdown::Both);
-            let _ = self.teardown();
+            // never joined: unblock a writer stuck in a socket write, then
+            // reap it — the abandon-and-close path, never blocking on the
+            // server
+            let _ = self.shutdown_mode(ShutdownMode::Abort);
         }
     }
 }

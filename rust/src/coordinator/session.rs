@@ -49,7 +49,9 @@ use crate::coordinator::batcher::MultiSource;
 use crate::coordinator::engine::{Engine, EngineRole, FrameResult, TimingBreakdown};
 use crate::coordinator::link::BandwidthEstimator;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
-use crate::coordinator::remote::{EdgeClient, EdgeStream, RemoteTiming, Server};
+use crate::coordinator::remote::{
+    EdgeClient, EdgeStream, RemoteTiming, Server, ServerConfig, ServerStats,
+};
 use crate::metrics::SimTime;
 use crate::model::graph::SplitPoint;
 use crate::model::manifest::Manifest;
@@ -1461,12 +1463,192 @@ impl SplitSessionBuilder {
         })
     }
 
-    /// Build the server side of the TCP deployment: a tail-role engine
-    /// (no edge-side state until a raw-offload request needs it) behind a
-    /// listening [`Server`].
+    /// Build the server side of the TCP deployment.
+    #[deprecated(note = "use ServerSession::builder().listen(addr).build()")]
     pub fn build_server(self, listen: &str) -> Result<Server> {
-        let engine = self.role(EngineRole::ServerTail).build_engine()?;
-        Server::spawn(listen, engine)
+        Ok(ServerSessionBuilder::from_inner(self)
+            .listen(listen)
+            .build()?
+            .into_server())
+    }
+}
+
+// -------------------------------------------------------- server session
+
+/// The server-process counterpart of [`SplitSession`]: a tail-role engine
+/// behind a listening concurrent [`Server`], assembled by a builder
+/// symmetric with the client side. The facade owns the admission and
+/// teardown knobs ([`ServerConfig`]) the raw `Server::spawn_with` takes,
+/// so `serve-server` and the tests stay thin shells.
+///
+/// ```no_run
+/// use splitpoint::coordinator::session::ServerSession;
+///
+/// let server = ServerSession::builder()
+///     .listen("0.0.0.0:7878")
+///     .artifacts("artifacts")
+///     .threads(4)
+///     .max_sessions(8)
+///     .build()?;
+/// println!("serving on {}", server.addr());
+/// # server.shutdown()?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct ServerSession {
+    server: Server,
+}
+
+impl ServerSession {
+    pub fn builder() -> ServerSessionBuilder {
+        ServerSessionBuilder::from_inner(SplitSessionBuilder::new())
+    }
+
+    /// The bound address (resolved port when `listen` used port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    /// Point-in-time server metrics.
+    pub fn stats(&self) -> ServerStats {
+        self.server.stats()
+    }
+
+    /// Graceful drain (see [`Server::shutdown`]).
+    pub fn shutdown(self) -> Result<()> {
+        self.server.shutdown()
+    }
+
+    /// Unwrap the underlying [`Server`] handle (the deprecated
+    /// `build_server` compatibility path).
+    pub fn into_server(self) -> Server {
+        self.server
+    }
+}
+
+/// Builds a [`ServerSession`]. Engine axes (`artifacts`, `config`,
+/// `threads`, `simd`, a prebuilt `engine`) mirror [`SplitSessionBuilder`];
+/// the rest are the server's admission/batching/teardown knobs.
+pub struct ServerSessionBuilder {
+    inner: SplitSessionBuilder,
+    listen: String,
+    cfg: ServerConfig,
+}
+
+impl Default for ServerSessionBuilder {
+    fn default() -> Self {
+        ServerSession::builder()
+    }
+}
+
+impl ServerSessionBuilder {
+    fn from_inner(inner: SplitSessionBuilder) -> ServerSessionBuilder {
+        ServerSessionBuilder {
+            inner,
+            listen: "127.0.0.1:7878".to_string(),
+            cfg: ServerConfig::default(),
+        }
+    }
+
+    /// Listen address (default `127.0.0.1:7878`; port 0 picks a free one,
+    /// readable back through [`ServerSession::addr`]).
+    pub fn listen(mut self, addr: &str) -> Self {
+        self.listen = addr.to_string();
+        self
+    }
+
+    /// Artifact directory (see [`SplitSessionBuilder::artifacts`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.inner = self.inner.artifacts(dir);
+        self
+    }
+
+    pub fn config(mut self, cfg: SystemConfig) -> Self {
+        self.inner = self.inner.config(cfg);
+        self
+    }
+
+    /// Load the system config from a JSON file.
+    pub fn config_file(mut self, path: &std::path::Path) -> Result<Self> {
+        self.inner = self.inner.config_file(path)?;
+        Ok(self)
+    }
+
+    /// Kernel-thread budget, split across tail lanes via
+    /// [`PipelineConfig::kernel_threads_for`] when `tail_slots > 1`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.inner = self.inner.threads(n);
+        self
+    }
+
+    /// Kernel SIMD dispatch (see [`SplitSessionBuilder::simd`]).
+    pub fn simd(mut self, mode: SimdMode) -> Self {
+        self.inner = self.inner.simd(mode);
+        self
+    }
+
+    /// Inject a prebuilt engine (tests sharing one compiled runtime).
+    pub fn engine(mut self, engine: Arc<Engine>) -> Self {
+        self.inner = self.inner.engine(engine);
+        self
+    }
+
+    /// Concurrent session cap (see [`ServerConfig::max_sessions`]).
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.cfg.max_sessions = n.max(1);
+        self
+    }
+
+    /// Global pending-job cap (see [`ServerConfig::pending_cap`]).
+    pub fn pending_cap(mut self, n: usize) -> Self {
+        self.cfg.pending_cap = n.max(1);
+        self
+    }
+
+    /// Per-session in-flight bound (see [`ServerConfig::session_window`]).
+    pub fn session_window(mut self, n: usize) -> Self {
+        self.cfg.session_window = n.max(1);
+        self
+    }
+
+    /// Graceful-drain deadline (see [`ServerConfig::drain_timeout`]).
+    pub fn drain_timeout(mut self, d: Duration) -> Self {
+        self.cfg.drain_timeout = d;
+        self
+    }
+
+    /// Parallel tail lanes per dispatch (see [`ServerConfig::tail_slots`]).
+    pub fn tail_slots(mut self, n: usize) -> Self {
+        self.cfg.tail_slots = n.max(1);
+        self
+    }
+
+    /// Cross-session coalescing policy (see [`ServerConfig::batch`]).
+    pub fn batch(mut self, max_frames: usize, max_wait: Duration) -> Self {
+        self.cfg.batch = crate::coordinator::batcher::BatchPolicy {
+            max_frames: max_frames.max(1),
+            max_wait,
+        };
+        self
+    }
+
+    /// Periodic stderr metrics summary (see
+    /// [`ServerConfig::stats_interval`]); zero disables it.
+    pub fn stats_interval(mut self, d: Duration) -> Self {
+        self.cfg.stats_interval = (!d.is_zero()).then_some(d);
+        self
+    }
+
+    /// Build the tail-role engine and start listening.
+    pub fn build(self) -> Result<ServerSession> {
+        let mut inner = self.inner.role(EngineRole::ServerTail);
+        if self.cfg.tail_slots > 1 {
+            // split the kernel-thread budget across the dispatch lanes the
+            // same way the pipelined client splits it across tail workers
+            inner = inner.pipeline_depth(2).tail_workers(self.cfg.tail_slots);
+        }
+        let engine = inner.build_engine()?;
+        let server = Server::spawn_with(&self.listen, engine, self.cfg)?;
+        Ok(ServerSession { server })
     }
 }
 

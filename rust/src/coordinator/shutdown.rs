@@ -1,0 +1,74 @@
+//! Unified teardown contract for every connection-holding handle.
+//!
+//! [`Server`](crate::coordinator::remote::Server),
+//! [`EdgeClient`](crate::coordinator::remote::EdgeClient), and
+//! [`EdgeStream`](crate::coordinator::remote::EdgeStream) each used to
+//! hand-roll their own drain-vs-abandon logic in `shutdown`/`Drop`. They
+//! now share one two-mode contract: **drain** finishes in-flight work
+//! before closing (the `shutdown()` happy path), **abort** unblocks and
+//! abandons it (the `Drop` path, which must never block forever or
+//! panic). Every by-value `shutdown()` convenience and every `Drop` impl
+//! is a thin wrapper over [`Shutdown::shutdown_mode`].
+
+use anyhow::Result;
+
+/// How to tear a handle down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShutdownMode {
+    /// Graceful: stop accepting new work, flush everything in flight,
+    /// then close. The server bounds this with its configured
+    /// `drain_timeout` and falls back to [`ShutdownMode::Abort`] when the
+    /// deadline passes.
+    Drain,
+    /// Immediate: shut sockets both ways to unblock any stuck reader or
+    /// writer, drop in-flight work, join threads. Infallible in spirit —
+    /// implementations log rather than propagate where possible.
+    Abort,
+}
+
+/// The common teardown surface. Implementations must be idempotent: a
+/// second call (any mode) is a no-op, so `shutdown()` followed by `Drop`
+/// never double-joins a thread or double-closes a socket.
+pub trait Shutdown {
+    /// Tear down with the given mode. `Drain` may fail (a peer died with
+    /// frames in flight, the drain deadline passed); `Abort` should not.
+    fn shutdown_mode(&mut self, mode: ShutdownMode) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Handle {
+        drains: usize,
+        aborts: usize,
+        done: bool,
+    }
+
+    impl Shutdown for Handle {
+        fn shutdown_mode(&mut self, mode: ShutdownMode) -> Result<()> {
+            if self.done {
+                return Ok(());
+            }
+            self.done = true;
+            match mode {
+                ShutdownMode::Drain => self.drains += 1,
+                ShutdownMode::Abort => self.aborts += 1,
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn idempotent_teardown_pattern() {
+        let mut h = Handle {
+            drains: 0,
+            aborts: 0,
+            done: false,
+        };
+        h.shutdown_mode(ShutdownMode::Drain).unwrap();
+        // the Drop path after an explicit shutdown is a no-op
+        h.shutdown_mode(ShutdownMode::Abort).unwrap();
+        assert_eq!((h.drains, h.aborts), (1, 0));
+    }
+}

@@ -31,6 +31,17 @@ pub enum Message {
     Error { request_id: u64, message: String },
     /// either direction: close the session.
     Shutdown,
+    /// server → edge: admission refused — the server's global pending cap
+    /// is reached. `pending` is the queue depth at refusal time, the
+    /// retry hint (the request was *not* queued; resubmit after backoff).
+    Busy { request_id: u64, pending: u64 },
+    /// edge → server: request a metrics snapshot. Use a dedicated
+    /// connection — the reply is not ordered with in-flight inference
+    /// replies on a pipelined session.
+    Stats,
+    /// server → edge: metrics snapshot as `key=value` lines plus one
+    /// `session …` row per live session.
+    StatsResult { text: String },
 }
 
 impl Message {
@@ -40,6 +51,9 @@ impl Message {
             Message::InferResult { .. } => 2,
             Message::Error { .. } => 3,
             Message::Shutdown => 4,
+            Message::Busy { .. } => 5,
+            Message::Stats => 6,
+            Message::StatsResult { .. } => 7,
         }
     }
 }
@@ -74,6 +88,17 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
             payload.extend_from_slice(message.as_bytes());
         }
         Message::Shutdown => {}
+        Message::Busy {
+            request_id,
+            pending,
+        } => {
+            payload.extend_from_slice(&request_id.to_le_bytes());
+            payload.extend_from_slice(&pending.to_le_bytes());
+        }
+        Message::Stats => {}
+        Message::StatsResult { text } => {
+            payload.extend_from_slice(text.as_bytes());
+        }
     }
     w.write_all(&FRAME_MAGIC.to_le_bytes())?;
     w.write_all(&[msg.type_byte()])?;
@@ -121,6 +146,14 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
             message: String::from_utf8_lossy(&payload[8..]).to_string(),
         },
         4 => Message::Shutdown,
+        5 => Message::Busy {
+            request_id: u64_at(0)?,
+            pending: u64_at(8)?,
+        },
+        6 => Message::Stats,
+        7 => Message::StatsResult {
+            text: String::from_utf8_lossy(&payload).to_string(),
+        },
         t => bail!("unknown message type {t}"),
     })
 }
@@ -154,6 +187,14 @@ mod tests {
                 message: "boom".into(),
             },
             Message::Shutdown,
+            Message::Busy {
+                request_id: 11,
+                pending: 64,
+            },
+            Message::Stats,
+            Message::StatsResult {
+                text: "frames=3\nsessions_active=1\n".into(),
+            },
         ] {
             assert_eq!(roundtrip(msg.clone()), msg);
         }

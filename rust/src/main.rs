@@ -12,8 +12,9 @@
 //!   explain-splits  print Table II (live-set analysis) for every split point
 //!   estimate        adaptive split selection: analytic cost of every split
 //!   calibrate       fit the edge slowdown + link bandwidth to paper targets
-//!   serve-server    edge-server process (TCP, realtime, tail-role engine)
+//!   serve-server    edge-server process (TCP, realtime, concurrent sessions)
 //!   serve-edge      edge-device process: stream a source to a server (TCP)
+//!   server-stats    fetch a running serve-server's metrics snapshot
 
 use std::path::Path;
 
@@ -21,8 +22,10 @@ use anyhow::{bail, Result};
 
 use splitpoint::bench::paper;
 use splitpoint::coordinator::adaptive::{self, Objective};
+use splitpoint::coordinator::remote::fetch_stats;
 use splitpoint::coordinator::session::{
-    Adaptive, SessionFrame, SessionReport, SplitPolicy, SplitSession, SplitSessionBuilder,
+    Adaptive, ServerSession, SessionFrame, SessionReport, SplitPolicy, SplitSession,
+    SplitSessionBuilder,
 };
 use splitpoint::pointcloud::scene::SceneGenerator;
 use splitpoint::util::cli::{parse_simd, parse_threads, Args, Cli, CommandSpec, OptSpec};
@@ -68,13 +71,27 @@ fn cli() -> Cli {
             CommandSpec { name: "calibrate", help: "fit device/link constants to the paper's targets", opts: common() },
             CommandSpec {
                 name: "serve-server",
-                help: "run the edge-server process (TCP)",
+                help: "run the edge-server process (TCP, concurrent sessions)",
                 opts: vec![
                     OptSpec { name: "listen", value: Some("addr"), help: "bind address (default 127.0.0.1:7070)" },
                     OptSpec { name: "artifacts", value: Some("dir"), help: "artifact dir (default: artifacts)" },
                     OptSpec { name: "config", value: Some("file"), help: "system config JSON" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the server tail (default 1)" },
                     OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced (default auto)" },
+                    OptSpec { name: "max-sessions", value: Some("n"), help: "concurrent session cap; extra connections are refused (default 64)" },
+                    OptSpec { name: "pending-cap", value: Some("n"), help: "global in-flight tail-job cap; excess requests get Busy + retry hint (default 256)" },
+                    OptSpec { name: "session-window", value: Some("n"), help: "per-session in-flight bound before TCP backpressure (default 32)" },
+                    OptSpec { name: "tail-slots", value: Some("n"), help: "parallel tail lanes per cross-client batch (default 1)" },
+                    OptSpec { name: "batch-frames", value: Some("n"), help: "max frames coalesced into one tail dispatch (default 8)" },
+                    OptSpec { name: "drain-timeout", value: Some("secs"), help: "graceful-drain deadline on shutdown (default 10)" },
+                    OptSpec { name: "stats-every", value: Some("secs"), help: "periodic stderr metrics summary; 0 = off (default 30)" },
+                ],
+            },
+            CommandSpec {
+                name: "server-stats",
+                help: "fetch a running serve-server's metrics snapshot",
+                opts: vec![
+                    OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" },
                 ],
             },
             CommandSpec {
@@ -406,13 +423,49 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_server(args: &Args) -> Result<()> {
-    let addr = args.get_or("listen", "127.0.0.1:7070");
-    let server = session_builder(args)?.build_server(addr)?;
-    println!("edge-server listening on {} (tail-role engine)", server.addr());
+    let mut b = ServerSession::builder()
+        .listen(args.get_or("listen", "127.0.0.1:7070"))
+        .artifacts(args.get_or("artifacts", "artifacts"))
+        .threads(parse_threads(args.get("threads"))?)
+        .simd(parse_simd(args.get("simd"))?);
+    if let Some(p) = args.get("config") {
+        b = b.config_file(Path::new(p))?;
+    }
+    if let Some(n) = args.get_parse("max-sessions")? {
+        b = b.max_sessions(n);
+    }
+    if let Some(n) = args.get_parse("pending-cap")? {
+        b = b.pending_cap(n);
+    }
+    if let Some(n) = args.get_parse("session-window")? {
+        b = b.session_window(n);
+    }
+    if let Some(n) = args.get_parse("tail-slots")? {
+        b = b.tail_slots(n);
+    }
+    if let Some(n) = args.get_parse("batch-frames")? {
+        b = b.batch(n, std::time::Duration::ZERO);
+    }
+    if let Some(secs) = args.get_parse::<u64>("drain-timeout")? {
+        b = b.drain_timeout(std::time::Duration::from_secs(secs));
+    }
+    let stats_every: u64 = args.get_parse("stats-every")?.unwrap_or(30);
+    b = b.stats_interval(std::time::Duration::from_secs(stats_every));
+    let server = b.build()?;
+    println!(
+        "edge-server listening on {} (tail-role engine, concurrent sessions)",
+        server.addr()
+    );
     println!("Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_server_stats(args: &Args) -> Result<()> {
+    let addr = args.get_or("connect", "127.0.0.1:7070");
+    print!("{}", fetch_stats(addr)?);
+    Ok(())
 }
 
 fn cmd_serve_edge(args: &Args) -> Result<()> {
@@ -451,6 +504,7 @@ fn main() -> Result<()> {
         Some("estimate") => cmd_estimate(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve-server") => cmd_serve_server(&args),
+        Some("server-stats") => cmd_server_stats(&args),
         Some("serve-edge") => cmd_serve_edge(&args),
         _ => {
             println!("{}", cli.help(None));

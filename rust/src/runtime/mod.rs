@@ -116,6 +116,19 @@ impl XlaRuntime {
         self.kernel_threads
     }
 
+    /// The reference backend's shared kernel [`pool::WorkerPool`] (`None`
+    /// on PJRT, whose executables schedule internally). The concurrent
+    /// split server scatters cross-client tail batches over this same
+    /// pool, so stage-level and kernel-level parallelism draw on one
+    /// thread budget and one scratch-arena set.
+    pub fn kernel_pool(&self) -> Option<&pool::WorkerPool> {
+        match &self.backend {
+            Backend::Reference(m) => Some(m.pool()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
     /// (count, reserved bytes) of the reference backend's pooled kernel
     /// scratch arenas; `(0, 0)` on PJRT. The steady-state no-growth
     /// property test (`rust/tests/executor.rs`) reads this.

@@ -154,6 +154,21 @@ impl WorkerPool {
         });
     }
 
+    /// [`WorkerPool::partition`] + [`WorkerPool::scatter`] in one call:
+    /// split `0..n` into at most `parts` contiguous ranges and run
+    /// `f(range)` for each in parallel. The server's cross-client tail
+    /// dispatch scatters each batch over the engine's kernel pool this
+    /// way — `parts` lanes of frames, each frame's kernels then fanning
+    /// out over the remaining thread budget — so stage- and kernel-level
+    /// parallelism share one pool (and its scratch arenas) instead of
+    /// oversubscribing.
+    pub fn scatter_ranges<F>(&self, n: usize, parts: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.scatter(Self::partition(n, parts.max(1)), |_, r| f(r));
+    }
+
     /// Pop a scratch arena (or a fresh empty one). Pair with
     /// [`WorkerPool::recycle`] so its buffers' capacity is reused by the
     /// next region instead of reallocated.
@@ -233,6 +248,24 @@ mod tests {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scatter_ranges_covers_every_index_once() {
+        let pool = WorkerPool::new(3);
+        let n = 37usize;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.scatter_ranges(n, 5, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+        // n == 0 and parts == 0 are no-ops, not panics
+        pool.scatter_ranges(0, 4, |_| panic!("no ranges for n=0"));
+        pool.scatter_ranges(3, 0, |_| {});
     }
 
     #[test]

@@ -195,7 +195,7 @@ fn tcp_roundtrip_matches_local() {
     assert!(timing.uplink_bytes > 0);
     assert!(timing.inference_time.nanos > 0);
     client.shutdown().unwrap();
-    server.shutdown();
+    server.shutdown().unwrap();
 }
 
 #[test]
@@ -226,7 +226,7 @@ fn tcp_serves_multiple_clients_and_splits() {
     for h in handles {
         h.join().unwrap();
     }
-    server.shutdown();
+    server.shutdown().unwrap();
 }
 
 #[test]

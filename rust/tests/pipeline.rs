@@ -319,5 +319,5 @@ fn tcp_pipelined_stream_matches_serial_client() {
     let one = client.run_stream(&stream[..2], sp, 1).unwrap();
     assert!(dets_bitwise_equal(&one[0].0, &serial[0]));
     client.shutdown().unwrap();
-    server.shutdown();
+    server.shutdown().unwrap();
 }

@@ -1,0 +1,422 @@
+//! Concurrent multi-client server invariants (require `make artifacts`).
+//!
+//! The contract under test: the shared-tail session server is pure
+//! *scheduling*. However many clients connect, whatever splits and
+//! pipeline depths they mix, and however their frames coalesce into
+//! cross-session tail batches, every client's detections are byte-identical
+//! to a solo `Engine::run_frame` run. Around that core: admission control
+//! refuses (and recovers) instead of queueing unboundedly, graceful drain
+//! flushes every admitted frame, and one misbehaving client never affects
+//! the others.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use splitpoint::coordinator::remote::{fetch_stats, EdgeClient};
+use splitpoint::coordinator::session::{ServerSession, SplitSession};
+use splitpoint::coordinator::shutdown::{Shutdown, ShutdownMode};
+use splitpoint::coordinator::transport::{read_message, write_message, Message};
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::PointCloud;
+use splitpoint::postprocess::Detection;
+use splitpoint::tensor::codec::Packet;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// One shared full engine for the whole test binary (runs both halves:
+/// the server reuses it as its tail, each client as its head).
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            SplitSession::builder()
+                .artifacts(artifacts_dir())
+                .build_engine()
+                .expect("run `make artifacts` before cargo test")
+        })
+        .clone()
+}
+
+fn clouds(seed0: u64, n: usize) -> Vec<PointCloud> {
+    (0..n)
+        .map(|i| SceneGenerator::with_seed(seed0 + i as u64).generate().cloud)
+        .collect()
+}
+
+fn dets_bitwise_equal(a: &[Detection], b: &[Detection]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && x.score.to_bits() == y.score.to_bits()
+                && x.boxx
+                    .iter()
+                    .zip(y.boxx.iter())
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Poll until `cond` holds (the server's counters are updated by its own
+/// threads, so tests gate on observed state rather than sleeps).
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The tentpole contract: 8 concurrent clients on one server, mixing
+/// splits and pipeline depths, every frame byte-identical to a solo run —
+/// and the shared batcher demonstrably coalesced frames across sessions
+/// while doing it.
+#[test]
+fn eight_concurrent_clients_match_solo_bitwise() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        // a small wait widens the coalescing window so the cross-session
+        // batch assertion below is robust, without changing any output
+        .batch(8, Duration::from_millis(2))
+        .build()
+        .unwrap();
+    let addr = server.addr();
+
+    let splits = ["vfe", "conv2", "bev_head", "edge_only"];
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let full = full.clone();
+            let split = splits[i % splits.len()];
+            let depth = 1 + i % 3;
+            std::thread::spawn(move || {
+                let sp = full.graph().split_by_name(split).unwrap();
+                let scenes = clouds(21_000 + 100 * i as u64, 3);
+                let solo: Vec<Vec<Detection>> = scenes
+                    .iter()
+                    .map(|c| full.run_frame(c, sp).unwrap().detections)
+                    .collect();
+                let mut client = EdgeClient::connect(addr, full.clone()).unwrap();
+                let results = client.run_stream(&scenes, sp, depth).unwrap();
+                client.shutdown().unwrap();
+                for (j, ((dets, _), solo)) in results.iter().zip(&solo).enumerate() {
+                    assert!(
+                        dets_bitwise_equal(dets, solo),
+                        "client {i} ({split}, depth {depth}) frame {j} diverged under \
+                         cross-client batching"
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.frames, 24, "8 clients x 3 frames");
+    assert_eq!(stats.sessions_total, 8);
+    assert_eq!(stats.session_errors, 0);
+    assert!(stats.tail_batches >= 1);
+    assert!(
+        stats.multi_session_batches > 0,
+        "no tail batch ever mixed sessions — cross-client coalescing is dead \
+         (tail_batches={}, queue_max={})",
+        stats.tail_batches,
+        stats.queue_max
+    );
+    assert!(stats.uplink_bytes > 0 && stats.downlink_bytes > 0);
+    server.shutdown().unwrap();
+}
+
+/// Admission control: at the pending cap the server answers `Busy` with a
+/// retry hint instead of queueing, and serves the same client normally
+/// once the backlog clears.
+#[test]
+fn pending_cap_refuses_with_busy_then_recovers() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .pending_cap(1)
+        // a long deadline (never hit max_frames) holds the first job in
+        // the queue, pinning `pending` at the cap while B knocks
+        .batch(64, Duration::from_millis(300))
+        .build()
+        .unwrap();
+
+    // edge_only head: the tail runs zero nodes, so a raw-protocol client
+    // can ship an empty live set without computing anything
+    let head_len = full.graph().len() as u8;
+    let empty = Packet::from_shared(Vec::new()).encode(full.config().codec);
+
+    let mut a = TcpStream::connect(server.addr()).unwrap();
+    let mut b = TcpStream::connect(server.addr()).unwrap();
+    write_message(
+        &mut a,
+        &Message::Infer {
+            request_id: 1,
+            head_len,
+            packet: empty.clone(),
+        },
+    )
+    .unwrap();
+    wait_for("frame A admitted", || server.stats().pending == 1);
+
+    write_message(
+        &mut b,
+        &Message::Infer {
+            request_id: 2,
+            head_len,
+            packet: empty.clone(),
+        },
+    )
+    .unwrap();
+    match read_message(&mut b).unwrap() {
+        Message::Busy {
+            request_id,
+            pending,
+        } => {
+            assert_eq!(request_id, 2);
+            assert!(pending >= 1, "retry hint carries the queue depth");
+        }
+        other => panic!("expected Busy at the pending cap, got {other:?}"),
+    }
+
+    // A's reply lands once the batch deadline fires
+    match read_message(&mut a).unwrap() {
+        Message::InferResult { request_id, .. } => assert_eq!(request_id, 1),
+        other => panic!("expected A's result, got {other:?}"),
+    }
+
+    // recovery: with the backlog cleared, B's resubmission is served
+    wait_for("backlog cleared", || server.stats().pending == 0);
+    write_message(
+        &mut b,
+        &Message::Infer {
+            request_id: 3,
+            head_len,
+            packet: empty,
+        },
+    )
+    .unwrap();
+    match read_message(&mut b).unwrap() {
+        Message::InferResult { request_id, .. } => assert_eq!(request_id, 3),
+        other => panic!("expected B's result after recovery, got {other:?}"),
+    }
+
+    let stats = server.stats();
+    assert!(stats.busy_rejections >= 1);
+    assert_eq!(stats.frames, 2, "refused requests must not be executed");
+    write_message(&mut a, &Message::Shutdown).unwrap();
+    write_message(&mut b, &Message::Shutdown).unwrap();
+    server.shutdown().unwrap();
+}
+
+/// Graceful drain under load: shutdown with a full in-flight window still
+/// delivers every admitted frame (zero dropped), bitwise-correct, within
+/// the drain deadline.
+#[test]
+fn graceful_drain_flushes_every_admitted_frame() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .drain_timeout(Duration::from_secs(30))
+        .build()
+        .unwrap();
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let scenes = clouds(23_000, 8);
+    let solo: Vec<Vec<Detection>> = scenes
+        .iter()
+        .map(|c| full.run_frame(c, sp).unwrap().detections)
+        .collect();
+
+    let client = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let mut stream = client.into_stream(8).unwrap();
+    for c in &scenes {
+        stream.submit(c.clone(), sp).unwrap();
+    }
+    // once all 8 are *admitted* (exact count, read under the server's
+    // window lock) shut down mid-flight: drain must flush them all
+    wait_for("all 8 frames admitted", || {
+        server
+            .stats()
+            .per_session
+            .iter()
+            .map(|s| s.submitted)
+            .sum::<u64>()
+            >= 8
+    });
+    let t0 = Instant::now();
+    let shutdown = std::thread::spawn(move || server.shutdown());
+    for (i, solo) in solo.iter().enumerate() {
+        let (dets, _) = stream
+            .recv()
+            .unwrap_or_else(|e| panic!("frame {i} dropped during drain: {e:#}"));
+        assert!(dets_bitwise_equal(&dets, solo), "frame {i} diverged");
+    }
+    shutdown.join().unwrap().expect("drain completed cleanly");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "drain blew the deadline"
+    );
+    drop(stream); // server is gone; Drop's abort path handles the socket
+}
+
+/// Fault isolation: a client speaking garbage, one vanishing mid-frame,
+/// and one aborting with work in flight are each logged and dropped —
+/// the accept loop, shared batcher, and a healthy concurrent session all
+/// keep working, bitwise.
+#[test]
+fn misbehaving_clients_are_isolated() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .build()
+        .unwrap();
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let scene = SceneGenerator::with_seed(24_500).generate();
+    let solo = full.run_frame(&scene.cloud, sp).unwrap().detections;
+
+    let mut good = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let (dets, _) = good.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_bitwise_equal(&dets, &solo));
+
+    // (1) garbage: a frame header with the wrong magic
+    let mut evil = TcpStream::connect(server.addr()).unwrap();
+    evil.write_all(&[0xde, 0xad, 0xbe, 0xef, 1, 0, 0, 0, 0]).unwrap();
+    evil.flush().unwrap();
+    // the server logs the error and closes our session; nothing comes back
+    let mut probe = [0u8; 1];
+    let got = match evil.read(&mut probe) {
+        Ok(n) => n,
+        Err(_) => 0, // reset is as good as EOF here
+    };
+    assert_eq!(got, 0, "malformed session must be closed, not answered");
+
+    // (2) mid-frame disconnect: half a header, then gone
+    let mut cut = TcpStream::connect(server.addr()).unwrap();
+    cut.write_all(&0x5350_4652u32.to_le_bytes()).unwrap();
+    cut.flush().unwrap();
+    drop(cut);
+
+    // (3) abort with a frame in flight: the admitted job completes
+    // server-side against a dead socket
+    let aborting = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let mut aborting = aborting.into_stream(2).unwrap();
+    aborting.submit(scene.cloud.clone(), sp).unwrap();
+    aborting.shutdown_mode(ShutdownMode::Abort).unwrap();
+
+    wait_for("misbehaving sessions reaped", || {
+        server.stats().sessions_active == 1
+    });
+    assert!(
+        server.stats().session_errors >= 1,
+        "the malformed frame must surface as an isolated session error"
+    );
+
+    // the healthy session is unaffected — same bytes as before the chaos
+    let (dets, _) = good.run_frame(&scene.cloud, sp).unwrap();
+    assert!(
+        dets_bitwise_equal(&dets, &solo),
+        "healthy client diverged after other sessions misbehaved"
+    );
+    good.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// The session cap refuses surplus connections with an actionable error
+/// and accepts again once a slot frees.
+#[test]
+fn session_cap_refuses_then_recovers() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .max_sessions(1)
+        .build()
+        .unwrap();
+
+    let hold = TcpStream::connect(server.addr()).unwrap();
+    wait_for("first session registered", || {
+        server.stats().sessions_active == 1
+    });
+
+    let mut refused = TcpStream::connect(server.addr()).unwrap();
+    match read_message(&mut refused) {
+        Ok(Message::Error { message, .. }) => {
+            assert!(message.contains("capacity"), "got: {message}")
+        }
+        other => panic!("expected a capacity refusal, got {other:?}"),
+    }
+    assert!(server.stats().accept_refusals >= 1);
+
+    drop(hold);
+    wait_for("slot freed", || server.stats().sessions_active == 0);
+    let scene = SceneGenerator::with_seed(26_000).generate();
+    let sp = full.graph().split_by_name("conv2").unwrap();
+    let solo = full.run_frame(&scene.cloud, sp).unwrap().detections;
+    let mut client = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let (dets, _) = client.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_bitwise_equal(&dets, &solo));
+    client.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// The `Stats` protocol request and the in-process snapshot agree, and
+/// both carry the batching counters the soak lane greps for.
+#[test]
+fn stats_snapshot_in_process_and_over_the_wire() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .build()
+        .unwrap();
+    let scene = SceneGenerator::with_seed(27_000).generate();
+    let sp = full.graph().split_by_name("conv2").unwrap();
+    let mut client = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let _ = client.run_frame(&scene.cloud, sp).unwrap();
+
+    let text = fetch_stats(server.addr()).unwrap();
+    assert!(text.contains("frames=1\n"), "wire snapshot:\n{text}");
+    assert!(text.contains("tail_batches="));
+    assert!(text.contains("multi_session_batches="));
+    assert!(text.contains("session id="), "per-session rows present");
+
+    let stats = server.stats();
+    assert_eq!(stats.frames, 1);
+    assert!(stats.tail_batches >= 1);
+    assert_eq!(stats.multi_session_batches, 0, "one client, no coalescing");
+    assert!(stats.uplink_bytes > 0 && stats.downlink_bytes > 0);
+    assert!(stats.summary().contains("1 frame(s)"));
+
+    client.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// Dropping the server with live sessions and in-flight work must abort
+/// cleanly: no panic, no hang (the `Drop`-path half of the Shutdown
+/// contract).
+#[test]
+fn server_drop_with_live_sessions_aborts_cleanly() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .build()
+        .unwrap();
+    let _hold = TcpStream::connect(server.addr()).unwrap();
+    wait_for("session registered", || server.stats().sessions_active == 1);
+    drop(server);
+}

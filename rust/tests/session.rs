@@ -17,8 +17,8 @@ use splitpoint::coordinator::batcher::MultiSource;
 use splitpoint::coordinator::pipeline::{run_source, PipelineConfig};
 use splitpoint::coordinator::remote::{EdgeClient, Server};
 use splitpoint::coordinator::session::{
-    Adaptive, Fixed, MIN_BANDWIDTH_SAMPLE_BYTES, PolicyContext, SessionFrame, SplitPolicy,
-    SplitSession,
+    Adaptive, Fixed, MIN_BANDWIDTH_SAMPLE_BYTES, PolicyContext, ServerSession, SessionFrame,
+    SplitPolicy, SplitSession,
 };
 use splitpoint::coordinator::{Engine, EngineRole};
 use splitpoint::pointcloud::kitti::{self, KittiSource, RecordedSource};
@@ -356,7 +356,7 @@ fn server_tail_engine_builds_edge_state_lazily() {
     assert!(tail.voxelizer_ready(), "raw offload builds it on demand");
 
     client.shutdown().unwrap();
-    server.shutdown();
+    server.shutdown().unwrap();
 }
 
 /// An edge-role engine refuses tail stages (the complementary guard).
@@ -393,6 +393,9 @@ fn kitti_directory_streams_through_tcp_session_at_depth_4() {
         kitti::write_bin(&dir.join(format!("{i:06}.bin")), cloud).unwrap();
     }
 
+    // the deprecated one-call server shim must keep working (it now routes
+    // through ServerSession::builder)
+    #[allow(deprecated)]
     let server = SplitSession::builder()
         .artifacts(artifacts_dir())
         .build_server("127.0.0.1:0")
@@ -432,7 +435,7 @@ fn kitti_directory_streams_through_tcp_session_at_depth_4() {
     assert!(report.wire_savings().is_some());
     assert!(report.bandwidth_bps.is_some(), "EWMA fed by real transfers");
 
-    server.shutdown();
+    server.shutdown().unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -526,9 +529,10 @@ fn fixed_policy_keeps_window_full_across_segment_boundaries() {
 #[test]
 fn tcp_stream_matches_run_frame_at_every_split() {
     let full = engine();
-    let server = SplitSession::builder()
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
         .artifacts(artifacts_dir())
-        .build_server("127.0.0.1:0")
+        .build()
         .unwrap();
     let addr = server.addr().to_string();
     let stream = clouds(17000, 2);
@@ -565,7 +569,7 @@ fn tcp_stream_matches_run_frame_at_every_split() {
             }
         }
     }
-    server.shutdown();
+    server.shutdown().unwrap();
 }
 
 /// Record → replay is lossless: a session teed through a `RecorderSink`
