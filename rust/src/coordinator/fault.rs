@@ -1,0 +1,866 @@
+//! Hostile-network fault layer: seeded link-fault injection and the
+//! client retry/backoff policy.
+//!
+//! Split computing lives or dies on the edge↔server link, yet every test
+//! up to PR 7 ran over a cooperative loopback. This module makes the link
+//! hostile *deterministically*: every delay, stall and cut is replayable
+//! from a single seed, so a failing CI profile reproduces locally.
+//!
+//! Three injection surfaces share one schedule vocabulary
+//! ([`FaultProfile`] + [`Pacer`]):
+//!
+//! * [`ChaosProxy`] — a raw TCP relay between real `serve-edge` /
+//!   `serve-server` processes. The only surface that can inject *hard
+//!   disconnects*; the resilient client reconnects through it and resumes
+//!   its session.
+//! * [`FaultTransport`] — wraps any [`Transport`] in-process and injects
+//!   delay-class faults (jitter, bandwidth steps, stalls) around frame
+//!   delivery. Disconnects are stripped: an in-process link cannot drop.
+//! * [`RetryPolicy`] / [`Backoff`] — the client-side answer: bounded
+//!   exponential backoff with seeded jitter, shared by the `Busy` retry
+//!   path and the reconnect loop in `coordinator::remote`.
+//!
+//! Everything here is **off by default**: a session without `--fault`
+//! never constructs a pacer, and a client without `--resume` sends
+//! byte-identical wire traffic to PR 7.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::pipeline::PipelineConfig;
+use crate::coordinator::session::{FrameOutput, Transport};
+use crate::metrics::SimTime;
+use crate::model::graph::SplitPoint;
+use crate::pointcloud::PointCloud;
+use crate::util::rng::Rng;
+
+// ------------------------------------------------------------ link health
+
+/// Client-side link telemetry fed back into the policy plane
+/// (`PolicyContext::health`) and the session report: how hard the
+/// transport had to fight the link to deliver the stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkHealth {
+    /// `Busy` rejections retried after backoff.
+    pub retries: u64,
+    /// Transparent reconnect + session-resume cycles.
+    pub reconnects: u64,
+    /// Total time spent sleeping in backoff (retry + reconnect).
+    pub backoff_time: SimTime,
+    /// Injected stall time, when a [`FaultTransport`] is in the path.
+    pub stall_time: SimTime,
+    /// Smoothed round-trip time from queue-free frames, if measured.
+    pub rtt: Option<SimTime>,
+}
+
+impl LinkHealth {
+    /// True when nothing degraded: no retries, reconnects or stalls.
+    pub fn is_clean(&self) -> bool {
+        self.retries == 0 && self.reconnects == 0 && self.stall_time == SimTime::ZERO
+    }
+}
+
+// ------------------------------------------------------------ retry policy
+
+/// Bounded exponential backoff with seeded jitter. `backoff(stream)`
+/// forks one deterministic [`Backoff`] schedule per logical stream
+/// (request id, reconnect loop), so retry timing is reproducible from
+/// `(seed, stream)` while distinct streams still decorrelate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts after the first failure before giving up.
+    pub max_retries: u32,
+    /// First-retry delay; doubles each attempt.
+    pub base: Duration,
+    /// Hard ceiling on any single delay.
+    pub cap: Duration,
+    /// Jitter seed; same seed → same schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 5,
+            base: Duration::from_millis(20),
+            cap: Duration::from_secs(2),
+            seed: 0x5350_4652, // "SPFR", matching the wire magic
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (the pre-PR 8 fatal behavior).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// Start a backoff schedule for one logical stream.
+    pub fn backoff(&self, stream: u64) -> Backoff {
+        Backoff {
+            attempt: 0,
+            max: self.max_retries,
+            base: self.base,
+            cap: self.cap,
+            rng: Rng::new(self.seed ^ stream.rotate_left(17)),
+        }
+    }
+}
+
+/// One in-progress retry schedule; see [`RetryPolicy::backoff`].
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    attempt: u32,
+    max: u32,
+    base: Duration,
+    cap: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// The next delay to sleep before retrying, or `None` once the
+    /// attempt budget is exhausted. Delay `k` is jittered uniformly in
+    /// `[0.5, 1.0) × min(cap, base · 2^k)`.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.max {
+            return None;
+        }
+        let exp = self.base.as_secs_f64() * 2f64.powi(self.attempt.min(30) as i32);
+        let full = exp.min(self.cap.as_secs_f64());
+        let jittered = self.rng.uniform(0.5, 1.0) * full;
+        self.attempt += 1;
+        Some(Duration::from_secs_f64(jittered))
+    }
+
+    /// Attempts consumed so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Total attempts this schedule allows.
+    pub fn max_retries(&self) -> u32 {
+        self.max
+    }
+}
+
+// ------------------------------------------------------------ profiles
+
+/// Alternating bandwidth bands: the pacer throttles to `hi_bps` for
+/// `step_bytes`, then `lo_bps` for the next `step_bytes`, and so on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthStep {
+    pub hi_bps: f64,
+    pub lo_bps: f64,
+    pub step_bytes: u64,
+}
+
+/// Periodic short stalls: every `every_bytes` forwarded, pause the link
+/// for `pause` before the next chunk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StallSpec {
+    pub every_bytes: u64,
+    pub pause: Duration,
+}
+
+/// Hard mid-stream disconnects. The first connection is cut after
+/// `first_bytes`; each subsequent connection's budget doubles (capped),
+/// so a resuming client is guaranteed to make progress even when a
+/// single frame exceeds the early budgets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DisconnectSpec {
+    pub first_bytes: u64,
+}
+
+/// A composable, seed-replayable link-fault schedule. Fields compose:
+/// a profile may jitter *and* stall. [`FaultProfile::clean`] (the
+/// default) injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultProfile {
+    pub name: &'static str,
+    /// Per-chunk uniform delay in `[0, jitter_max)`.
+    pub jitter_max: Duration,
+    pub bandwidth: Option<BandwidthStep>,
+    pub stall: Option<StallSpec>,
+    pub disconnect: Option<DisconnectSpec>,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::clean()
+    }
+}
+
+/// Profile names accepted by [`FaultProfile::parse`] / `--fault`.
+pub const PROFILE_NAMES: [&str; 5] = ["clean", "jitter", "bandwidth-step", "stall", "disconnect"];
+
+impl FaultProfile {
+    /// No injection at all — the identity schedule.
+    pub fn clean() -> FaultProfile {
+        FaultProfile {
+            name: "clean",
+            jitter_max: Duration::ZERO,
+            bandwidth: None,
+            stall: None,
+            disconnect: None,
+        }
+    }
+
+    /// Small random per-chunk delays (radio-link delay variance).
+    pub fn jitter() -> FaultProfile {
+        FaultProfile {
+            jitter_max: Duration::from_millis(2),
+            name: "jitter",
+            ..FaultProfile::clean()
+        }
+    }
+
+    /// Bandwidth alternating between a fast and a slow band every 64 KB —
+    /// the regime shift the adaptive policy is supposed to track.
+    pub fn bandwidth_step() -> FaultProfile {
+        FaultProfile {
+            name: "bandwidth-step",
+            bandwidth: Some(BandwidthStep {
+                hi_bps: 64e6,
+                lo_bps: 8e6,
+                step_bytes: 64 * 1024,
+            }),
+            ..FaultProfile::clean()
+        }
+    }
+
+    /// A 100 ms link freeze every 128 KB (handover / contention bursts).
+    pub fn stall() -> FaultProfile {
+        FaultProfile {
+            name: "stall",
+            stall: Some(StallSpec {
+                every_bytes: 128 * 1024,
+                pause: Duration::from_millis(100),
+            }),
+            ..FaultProfile::clean()
+        }
+    }
+
+    /// Hard mid-stream connection cuts with an escalating byte budget.
+    pub fn disconnect() -> FaultProfile {
+        FaultProfile {
+            name: "disconnect",
+            disconnect: Some(DisconnectSpec {
+                first_bytes: 48 * 1024,
+            }),
+            ..FaultProfile::clean()
+        }
+    }
+
+    /// Look up a preset by its `--fault` name.
+    pub fn parse(name: &str) -> Result<FaultProfile> {
+        match name {
+            "clean" => Ok(FaultProfile::clean()),
+            "jitter" => Ok(FaultProfile::jitter()),
+            "bandwidth-step" | "bandwidth_step" => Ok(FaultProfile::bandwidth_step()),
+            "stall" => Ok(FaultProfile::stall()),
+            "disconnect" => Ok(FaultProfile::disconnect()),
+            other => bail!(
+                "unknown fault profile {other:?}; expected one of {}",
+                PROFILE_NAMES.join(", ")
+            ),
+        }
+    }
+
+    /// True when this profile injects nothing.
+    pub fn is_clean(&self) -> bool {
+        self.jitter_max == Duration::ZERO
+            && self.bandwidth.is_none()
+            && self.stall.is_none()
+            && self.disconnect.is_none()
+    }
+
+    /// This profile with disconnects stripped (for surfaces that cannot
+    /// drop a connection, like [`FaultTransport`]).
+    pub fn without_disconnect(mut self) -> FaultProfile {
+        self.disconnect = None;
+        self
+    }
+}
+
+// ------------------------------------------------------------ pacer
+
+/// What to do with the next chunk of bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pace {
+    /// Sleep this long, then forward the whole chunk.
+    Forward(Duration),
+    /// Forward only the first `n` bytes, then hard-cut the connection.
+    Cut(usize),
+}
+
+/// Per-connection-direction pacing state: turns a [`FaultProfile`] plus a
+/// seed into a deterministic, byte-triggered schedule of delays and cuts.
+/// All triggers are byte counters, not wall-clock probabilities — the
+/// schedule replays exactly for the same byte stream.
+#[derive(Debug, Clone)]
+pub struct Pacer {
+    profile: FaultProfile,
+    rng: Rng,
+    /// Bytes admitted so far on this connection.
+    sent: u64,
+    since_stall: u64,
+    /// Bytes until the forced cut; `None` = never cut.
+    budget: Option<u64>,
+}
+
+/// Ceiling on the escalating disconnect budget (see [`DisconnectSpec`]).
+const MAX_CUT_BUDGET: u64 = 16 * 1024 * 1024;
+
+impl Pacer {
+    /// `reconnects` is how many connections came before this one — the
+    /// disconnect budget escalates `first_bytes · 2^reconnects` (capped)
+    /// so resumed sessions always make forward progress.
+    pub fn new(profile: &FaultProfile, seed: u64, reconnects: u64) -> Pacer {
+        let budget = profile.disconnect.map(|d| {
+            let scale = 1u64 << reconnects.min(8);
+            d.first_bytes.saturating_mul(scale).min(MAX_CUT_BUDGET)
+        });
+        Pacer {
+            profile: profile.clone(),
+            rng: Rng::new(seed),
+            sent: 0,
+            since_stall: 0,
+            budget,
+        }
+    }
+
+    /// Schedule the next `len`-byte chunk.
+    pub fn pace(&mut self, len: usize) -> Pace {
+        if let Some(budget) = self.budget {
+            let left = budget.saturating_sub(self.sent);
+            if len as u64 >= left {
+                self.sent = budget;
+                return Pace::Cut(left as usize);
+            }
+        }
+        let mut delay = Duration::ZERO;
+        if self.profile.jitter_max > Duration::ZERO {
+            let jit = self.rng.uniform(0.0, self.profile.jitter_max.as_secs_f64());
+            delay += Duration::from_secs_f64(jit);
+        }
+        if let Some(bw) = self.profile.bandwidth {
+            let band = (self.sent / bw.step_bytes) % 2;
+            let bps = if band == 0 { bw.hi_bps } else { bw.lo_bps };
+            delay += Duration::from_secs_f64(len as f64 / bps);
+        }
+        if let Some(st) = self.profile.stall {
+            self.since_stall += len as u64;
+            if self.since_stall >= st.every_bytes {
+                self.since_stall %= st.every_bytes;
+                delay += st.pause;
+            }
+        }
+        self.sent += len as u64;
+        Pace::Forward(delay)
+    }
+}
+
+// ------------------------------------------------------------ chaos proxy
+
+/// A fault-injecting TCP relay for real `serve-edge` ↔ `serve-server`
+/// deployments: listens on one address, dials the upstream server per
+/// client connection, and pumps bytes both ways through a seeded
+/// [`Pacer`]. Disconnect profiles hard-cut both sockets mid-stream; the
+/// proxy keeps listening, so a resuming client reconnects through it and
+/// the next connection gets a doubled byte budget.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    pumps: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind `listen` (port 0 allocates) and relay every connection to
+    /// `upstream` under `profile`. Connection `i` derives its pacer seeds
+    /// from `seed` and `i`, so the whole fault schedule replays from one
+    /// seed.
+    pub fn spawn(
+        listen: impl ToSocketAddrs,
+        upstream: impl ToSocketAddrs,
+        profile: FaultProfile,
+        seed: u64,
+    ) -> Result<ChaosProxy> {
+        let upstream: SocketAddr = upstream
+            .to_socket_addrs()
+            .context("resolving chaos-proxy upstream")?
+            .next()
+            .context("chaos-proxy upstream resolved to no address")?;
+        let listener = TcpListener::bind(listen).context("binding chaos-proxy listener")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let pumps: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let accepted = Arc::clone(&accepted);
+            let conns = Arc::clone(&conns);
+            let pumps = Arc::clone(&pumps);
+            thread::Builder::new()
+                .name("sp-chaos-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        let (client, _) = match listener.accept() {
+                            Ok(pair) => pair,
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                thread::sleep(Duration::from_millis(5));
+                                continue;
+                            }
+                            Err(_) => break,
+                        };
+                        let i = accepted.fetch_add(1, Ordering::AcqRel);
+                        let server = match TcpStream::connect(upstream) {
+                            Ok(s) => s,
+                            Err(e) => {
+                                eprintln!("[chaos-proxy] upstream dial failed: {e}");
+                                let _ = client.shutdown(Shutdown::Both);
+                                continue;
+                            }
+                        };
+                        let _ = client.set_nodelay(true);
+                        let _ = server.set_nodelay(true);
+                        // one independent seed stream per connection+direction
+                        let mut conn_rng = Rng::new(seed ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                        let up_pacer = Pacer::new(&profile, conn_rng.next_u64(), i);
+                        let down_pacer = Pacer::new(&profile, conn_rng.next_u64(), i);
+                        let spawned = Self::spawn_pumps(
+                            &client, &server, up_pacer, down_pacer, &stop, &conns, &pumps,
+                        );
+                        if let Err(e) = spawned {
+                            eprintln!("[chaos-proxy] pump spawn failed: {e}");
+                            let _ = client.shutdown(Shutdown::Both);
+                            let _ = server.shutdown(Shutdown::Both);
+                        }
+                    }
+                })
+                .context("spawning chaos-proxy accept thread")?
+        };
+
+        Ok(ChaosProxy {
+            addr,
+            stop,
+            accepted,
+            conns,
+            pumps,
+            accept: Some(accept),
+        })
+    }
+
+    fn spawn_pumps(
+        client: &TcpStream,
+        server: &TcpStream,
+        up_pacer: Pacer,
+        down_pacer: Pacer,
+        stop: &Arc<AtomicBool>,
+        conns: &Arc<Mutex<Vec<TcpStream>>>,
+        pumps: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    ) -> Result<()> {
+        {
+            let mut held = conns.lock().unwrap();
+            held.push(client.try_clone()?);
+            held.push(server.try_clone()?);
+        }
+        let up = Self::spawn_pump(
+            "sp-chaos-up",
+            client.try_clone()?,
+            server.try_clone()?,
+            up_pacer,
+            Arc::clone(stop),
+        )?;
+        let down = Self::spawn_pump(
+            "sp-chaos-down",
+            server.try_clone()?,
+            client.try_clone()?,
+            down_pacer,
+            Arc::clone(stop),
+        )?;
+        let mut held = pumps.lock().unwrap();
+        held.push(up);
+        held.push(down);
+        Ok(())
+    }
+
+    fn spawn_pump(
+        name: &str,
+        mut from: TcpStream,
+        mut to: TcpStream,
+        mut pacer: Pacer,
+        stop: Arc<AtomicBool>,
+    ) -> Result<JoinHandle<()>> {
+        thread::Builder::new()
+            .name(name.into())
+            .spawn(move || {
+                let mut buf = [0u8; 16 * 1024];
+                loop {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let n = match from.read(&mut buf) {
+                        Ok(0) => break,
+                        Ok(n) => n,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => break,
+                    };
+                    match pacer.pace(n) {
+                        Pace::Forward(delay) => {
+                            if !delay.is_zero() {
+                                thread::sleep(delay);
+                            }
+                            if to.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                        Pace::Cut(keep) => {
+                            if keep > 0 {
+                                let _ = to.write_all(&buf[..keep]);
+                            }
+                            break;
+                        }
+                    }
+                }
+                // either direction ending (EOF, error or cut) kills the
+                // whole relay pair — a half-open chaos link helps nobody
+                let _ = from.shutdown(Shutdown::Both);
+                let _ = to.shutdown(Shutdown::Both);
+            })
+            .with_context(|| format!("spawning chaos-proxy pump {name}"))
+    }
+
+    /// The address clients should dial (resolved, so port 0 works).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections accepted so far — under a disconnect profile this is
+    /// `1 + reconnects` observed through the proxy.
+    pub fn connections(&self) -> u64 {
+        self.accepted.load(Ordering::Acquire)
+    }
+
+    /// Stop relaying: close every live connection, stop accepting, and
+    /// join all pump threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for sock in self.conns.lock().unwrap().drain(..) {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        let pumps: Vec<_> = self.pumps.lock().unwrap().drain(..).collect();
+        for pump in pumps {
+            let _ = pump.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ------------------------------------------------------------ transport wrap
+
+/// Delay-class fault injection around any [`Transport`]: jitter,
+/// bandwidth steps and stalls are applied as real sleeps keyed to each
+/// delivered frame's uplink bytes. Disconnects are stripped at
+/// construction — only the [`ChaosProxy`] can cut a connection.
+/// Detections pass through untouched, so outputs stay bitwise identical
+/// to the unwrapped transport.
+pub struct FaultTransport {
+    inner: Box<dyn Transport>,
+    profile: FaultProfile,
+    pacer: Pacer,
+    injected: SimTime,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Box<dyn Transport>, profile: FaultProfile, seed: u64) -> FaultTransport {
+        let profile = profile.without_disconnect();
+        let pacer = Pacer::new(&profile, seed, 0);
+        FaultTransport {
+            inner,
+            profile,
+            pacer,
+            injected: SimTime::ZERO,
+        }
+    }
+}
+
+impl Transport for FaultTransport {
+    fn describe(&self) -> String {
+        format!("{} (fault:{})", self.inner.describe(), self.profile.name)
+    }
+
+    fn submit(
+        &mut self,
+        engine: &Arc<Engine>,
+        sp: SplitPoint,
+        cloud: PointCloud,
+        pipe: PipelineConfig,
+    ) -> Result<()> {
+        self.inner.submit(engine, sp, cloud, pipe)
+    }
+
+    fn recv(&mut self, engine: &Arc<Engine>) -> Result<FrameOutput> {
+        let out = self.inner.recv(engine)?;
+        if !self.profile.is_clean() {
+            if let Pace::Forward(delay) = self.pacer.pace(out.uplink_bytes.max(1)) {
+                if !delay.is_zero() {
+                    thread::sleep(delay);
+                    self.injected += SimTime::from_duration(delay);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    fn bandwidth_bps(&self) -> Option<f64> {
+        self.inner.bandwidth_bps()
+    }
+
+    fn report(&self) -> Option<String> {
+        self.inner.report()
+    }
+
+    fn needs_queue_free_samples(&self) -> bool {
+        self.inner.needs_queue_free_samples()
+    }
+
+    fn link_health(&self) -> LinkHealth {
+        let mut health = self.inner.link_health();
+        health.stall_time += self.injected;
+        health
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.inner.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_same_seed_reproduces_the_schedule() {
+        let policy = RetryPolicy::default();
+        let delays = |stream| {
+            let mut b = policy.backoff(stream);
+            std::iter::from_fn(move || b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(delays(7), delays(7));
+        assert_eq!(delays(7).len(), policy.max_retries as usize);
+    }
+
+    #[test]
+    fn backoff_streams_decorrelate() {
+        let policy = RetryPolicy::default();
+        let first = policy.backoff(1).next_delay().unwrap();
+        let second = policy.backoff(2).next_delay().unwrap();
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn backoff_grows_until_the_cap_bounds_it() {
+        let policy = RetryPolicy {
+            max_retries: 10,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(200),
+            seed: 3,
+        };
+        let mut b = policy.backoff(0);
+        let mut prev = Duration::ZERO;
+        for k in 0..10 {
+            let d = b.next_delay().expect("within budget");
+            assert!(d <= policy.cap, "attempt {k}: {d:?} exceeds cap");
+            // jitter is [0.5, 1.0)× so pre-cap delays strictly increase
+            if k < 5 {
+                assert!(d > prev, "attempt {k}: {d:?} not above {prev:?}");
+            }
+            prev = d;
+        }
+        assert_eq!(b.next_delay(), None, "budget exhausted");
+        assert_eq!(b.attempts(), 10);
+    }
+
+    #[test]
+    fn retry_none_never_sleeps() {
+        assert_eq!(RetryPolicy::none().backoff(0).next_delay(), None);
+    }
+
+    #[test]
+    fn profile_parse_covers_every_preset() {
+        for name in PROFILE_NAMES {
+            let p = FaultProfile::parse(name).unwrap();
+            assert_eq!(p.name, name);
+            assert_eq!(p.is_clean(), name == "clean");
+        }
+        assert!(FaultProfile::parse("lossy").is_err());
+    }
+
+    #[test]
+    fn pacer_cuts_exactly_at_the_byte_budget() {
+        let profile = FaultProfile {
+            disconnect: Some(DisconnectSpec { first_bytes: 100 }),
+            ..FaultProfile::disconnect()
+        };
+        let mut p = Pacer::new(&profile, 1, 0);
+        assert_eq!(p.pace(60), Pace::Forward(Duration::ZERO));
+        assert_eq!(p.pace(60), Pace::Cut(40));
+        assert_eq!(p.pace(10), Pace::Cut(0), "stays cut");
+    }
+
+    #[test]
+    fn pacer_budget_escalates_per_reconnect() {
+        let profile = FaultProfile::disconnect();
+        let first = Pacer::new(&profile, 1, 0).budget.unwrap();
+        let third = Pacer::new(&profile, 1, 2).budget.unwrap();
+        assert_eq!(third, first * 4);
+        let late = Pacer::new(&profile, 1, 60).budget.unwrap();
+        assert_eq!(late, MAX_CUT_BUDGET, "budget is capped");
+    }
+
+    #[test]
+    fn pacer_stall_triggers_on_byte_thresholds() {
+        let profile = FaultProfile {
+            stall: Some(StallSpec {
+                every_bytes: 100,
+                pause: Duration::from_millis(50),
+            }),
+            ..FaultProfile::stall()
+        };
+        let mut p = Pacer::new(&profile, 1, 0);
+        match p.pace(99) {
+            Pace::Forward(d) => assert_eq!(d, Duration::ZERO),
+            other => panic!("unexpected {other:?}"),
+        }
+        match p.pace(1) {
+            Pace::Forward(d) => assert_eq!(d, Duration::from_millis(50)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pacer_bandwidth_bands_alternate() {
+        let profile = FaultProfile {
+            bandwidth: Some(BandwidthStep {
+                hi_bps: 1e6,
+                lo_bps: 1e5,
+                step_bytes: 1000,
+            }),
+            ..FaultProfile::bandwidth_step()
+        };
+        let mut p = Pacer::new(&profile, 1, 0);
+        let hi = match p.pace(1000) {
+            Pace::Forward(d) => d,
+            other => panic!("unexpected {other:?}"),
+        };
+        let lo = match p.pace(1000) {
+            Pace::Forward(d) => d,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert!(lo > hi * 5, "slow band {lo:?} vs fast band {hi:?}");
+    }
+
+    #[test]
+    fn pacer_schedule_replays_from_seed() {
+        let profile = FaultProfile::jitter();
+        let mut a = Pacer::new(&profile, 42, 0);
+        let mut b = Pacer::new(&profile, 42, 0);
+        for len in [100, 5000, 1, 16 * 1024] {
+            assert_eq!(a.pace(len), b.pace(len));
+        }
+    }
+
+    #[test]
+    fn chaos_proxy_relays_bytes_under_a_clean_profile() {
+        let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream_addr = upstream.local_addr().unwrap();
+        let echo = thread::spawn(move || {
+            let (mut sock, _) = upstream.accept().unwrap();
+            let mut buf = [0u8; 4];
+            sock.read_exact(&mut buf).unwrap();
+            for b in &mut buf {
+                *b ^= 0xff;
+            }
+            sock.write_all(&buf).unwrap();
+        });
+        let mut proxy =
+            ChaosProxy::spawn("127.0.0.1:0", upstream_addr, FaultProfile::clean(), 1).unwrap();
+        let mut client = TcpStream::connect(proxy.addr()).unwrap();
+        client.write_all(&[1, 2, 3, 4]).unwrap();
+        let mut reply = [0u8; 4];
+        client.read_exact(&mut reply).unwrap();
+        assert_eq!(reply, [0xfe, 0xfd, 0xfc, 0xfb]);
+        assert_eq!(proxy.connections(), 1);
+        echo.join().unwrap();
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn chaos_proxy_cuts_then_accepts_a_reconnect() {
+        let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream_addr = upstream.local_addr().unwrap();
+        let sink = thread::spawn(move || {
+            // swallow whatever arrives on each of two connections
+            for _ in 0..2 {
+                let (mut sock, _) = upstream.accept().unwrap();
+                let mut buf = [0u8; 1024];
+                while matches!(sock.read(&mut buf), Ok(n) if n > 0) {}
+            }
+        });
+        let profile = FaultProfile {
+            disconnect: Some(DisconnectSpec { first_bytes: 64 }),
+            ..FaultProfile::disconnect()
+        };
+        let mut proxy = ChaosProxy::spawn("127.0.0.1:0", upstream_addr, profile, 1).unwrap();
+
+        // first connection: the cut lands mid-stream
+        let mut client = TcpStream::connect(proxy.addr()).unwrap();
+        let mut died = false;
+        for _ in 0..100 {
+            if client.write_all(&[0u8; 64]).is_err() {
+                died = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(died, "disconnect profile never cut the stream");
+
+        // reconnect goes through (budget doubled on connection 2)
+        let mut again = TcpStream::connect(proxy.addr()).unwrap();
+        again.write_all(&[0u8; 64]).unwrap();
+        assert!(proxy.connections() >= 2);
+        drop(client);
+        drop(again);
+        proxy.shutdown();
+        sink.join().unwrap();
+    }
+}

@@ -13,10 +13,13 @@
 //! * [`shutdown`] — the drain-vs-abort teardown contract every
 //!   connection-holding handle implements
 //! * [`adaptive`] — analytic split-point selection (extension)
+//! * [`fault`] — deterministic link-fault injection (profiles, chaos
+//!   proxy, transport wrapper) and the retry/backoff policy
 
 pub mod adaptive;
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod link;
 pub mod pipeline;
 pub mod remote;
@@ -27,8 +30,9 @@ pub mod transport;
 pub use engine::{
     Engine, EngineRole, FrameResult, HeadFrame, Side, TimingBreakdown, TransferredFrame,
 };
+pub use fault::{ChaosProxy, FaultProfile, FaultTransport, LinkHealth, RetryPolicy};
 pub use link::{BandwidthEstimator, LinkModel};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
-pub use remote::{Server, ServerConfig, ServerStats};
+pub use remote::{ClientOptions, Server, ServerConfig, ServerStats};
 pub use session::{ServerSession, ServerSessionBuilder, SplitSession, SplitSessionBuilder};
 pub use shutdown::{Shutdown, ShutdownMode};

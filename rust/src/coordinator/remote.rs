@@ -32,7 +32,7 @@
 //! boundary; everything inside the frame then runs on the id-indexed
 //! store, sharing tensors by refcount.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::Read as _;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -43,6 +43,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::engine::{Engine, HeadFrame};
+use crate::coordinator::fault::{Backoff, LinkHealth, RetryPolicy};
 use crate::coordinator::pipeline::Reorder;
 use crate::coordinator::shutdown::{Shutdown, ShutdownMode};
 use crate::coordinator::transport::{read_message, write_message, Message};
@@ -51,6 +52,7 @@ use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::Detection;
 use crate::tensor::codec::{Packet, Policy};
+use crate::util::rng::Rng;
 
 /// Admission, batching, and teardown knobs for [`Server`].
 #[derive(Debug, Clone)]
@@ -107,6 +109,8 @@ fn wire_len(msg: &Message) -> u64 {
         Message::Error { message, .. } => 8 + message.len(),
         Message::Busy { .. } => 16,
         Message::StatsResult { text } => text.len(),
+        Message::Hello { .. } => 16,
+        Message::HelloAck { .. } => 8,
         Message::Shutdown | Message::Stats => 0,
     };
     9 + payload as u64
@@ -130,29 +134,76 @@ struct Window {
     submitted: u64,
 }
 
+/// Ledger cap: a resumable session keeps at most this many finished,
+/// unacknowledged replies for retransmission. Evicting the oldest entry
+/// is safe — if the client ever retransmits an evicted id it is simply
+/// re-admitted and recomputed, and the tail is deterministic, so the
+/// recomputed reply is byte-identical.
+const RESUME_LEDGER_CAP: usize = 256;
+
+/// Cap on parked (disconnected, resumable) sessions held for adoption.
+const DETACHED_CAP: usize = 64;
+
+/// How long a resume handshake waits for the dropped session's handler to
+/// park its state (the reconnect can race the old handler noticing EOF).
+const RESUME_GRACE: Duration = Duration::from_secs(2);
+
+/// Resumable-session state: the per-session ledger that makes reconnect
+/// lossless. `token == 0` means the session is not resumable (the
+/// default) and every other field stays empty.
+#[derive(Default)]
+struct ResumeState {
+    token: u64,
+    /// Request ids admitted into the pipeline: still in flight, or
+    /// finished with the reply held in `done`. Retransmissions of these
+    /// ids are never admitted twice.
+    admitted: BTreeSet<u64>,
+    /// Finished replies not yet acknowledged by the client, keyed by
+    /// request id, for retransmission after a resume.
+    done: BTreeMap<u64, Message>,
+    /// Highest request id the client has confirmed delivered.
+    acked: u64,
+}
+
 /// Everything one connection's handler, jobs, and metrics share.
 struct SessionState {
     id: u64,
     peer: String,
     /// Write half. Replies go out under this lock in `seq` order — the
     /// reorder drain runs inside it so concurrent tail workers cannot
-    /// interleave one session's replies.
+    /// interleave one session's replies. Swapped on session resume.
     sock: Mutex<TcpStream>,
     /// Shutdown control handle, outside the write lock: a write blocked on
     /// a stalled client must still be interruptible.
-    ctrl: TcpStream,
+    ctrl: Mutex<TcpStream>,
     /// Parks out-of-order replies until their predecessors land, restoring
     /// the connection's FIFO reply contract.
     replies: Reorder<Message>,
     win: Mutex<Window>,
     win_cv: Condvar,
     /// Cleared on write failure or abort; dead sessions drop replies
-    /// instead of erroring the tail workers that computed them.
+    /// instead of erroring the tail workers that computed them (resumable
+    /// sessions still *ledger* those replies for retransmission).
     alive: AtomicBool,
+    /// Lock-order rule: never wait on `sock` while holding `resume` —
+    /// every path gathers what it needs under `resume`, drops it, then
+    /// takes `sock` (the reverse nesting, `sock` → `resume`, is allowed).
+    resume: Mutex<ResumeState>,
+    resumes: AtomicU64,
     frames: AtomicU64,
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
     tail_nanos: AtomicU64,
+}
+
+/// The request id a reply retransmission would be keyed by.
+fn reply_request_id(msg: &Message) -> Option<u64> {
+    match msg {
+        Message::InferResult { request_id, .. } | Message::Error { request_id, .. } => {
+            Some(*request_id)
+        }
+        _ => None,
+    }
 }
 
 impl SessionState {
@@ -160,6 +211,22 @@ impl SessionState {
     /// contiguous ready run to the socket, then release window slots for
     /// every flushed frame.
     fn complete(&self, seq: u64, msg: Message, metrics: &ServerMetrics) {
+        // Ledger the reply for a resumable session *before* any write
+        // attempt: it must survive a dead socket so a resumed client can
+        // fetch it by retransmitting the request id.
+        {
+            let mut r = self.resume.lock().unwrap();
+            if r.token != 0 {
+                if let Some(rid) = reply_request_id(&msg) {
+                    r.done.insert(rid, msg.clone());
+                    while r.done.len() > RESUME_LEDGER_CAP {
+                        if let Some((old, _)) = r.done.pop_first() {
+                            r.admitted.remove(&old);
+                        }
+                    }
+                }
+            }
+        }
         let mut sock = self.sock.lock().unwrap();
         self.replies.complete(seq, msg);
         let ready = self.replies.drain_ready();
@@ -199,6 +266,10 @@ struct ServerMetrics {
     busy_rejections: AtomicU64,
     accept_refusals: AtomicU64,
     session_errors: AtomicU64,
+    sessions_resumed: AtomicU64,
+    /// retransmitted `Infer` requests deduplicated (or re-served from the
+    /// resume ledger) instead of recomputed
+    retransmits: AtomicU64,
     /// batcher depth sampled at each dispatch
     queue_occupancy: Mutex<OccupancyHist>,
 }
@@ -213,7 +284,11 @@ struct ServerShared {
     /// admitted-but-unanswered jobs across all sessions
     pending: AtomicUsize,
     next_session: AtomicU64,
+    next_token: AtomicU64,
     sessions: Mutex<HashMap<u64, Arc<SessionState>>>,
+    /// Resumable sessions whose connection dropped, keyed by token and
+    /// waiting for a reconnect to adopt them.
+    detached: Mutex<HashMap<u64, Arc<SessionState>>>,
     handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     metrics: ServerMetrics,
 }
@@ -226,8 +301,9 @@ impl ServerShared {
         self.stop.store(true, Ordering::SeqCst);
         for sess in self.sessions.lock().unwrap().values() {
             sess.alive.store(false, Ordering::Release);
-            let _ = sess.ctrl.shutdown(std::net::Shutdown::Both);
+            let _ = sess.ctrl.lock().unwrap().shutdown(std::net::Shutdown::Both);
         }
+        self.detached.lock().unwrap().clear();
         self.batcher.close();
     }
 
@@ -252,6 +328,7 @@ impl ServerShared {
                             nanos: s.tail_nanos.load(Ordering::Relaxed) as u128,
                         },
                         in_flight,
+                        resumes: s.resumes.load(Ordering::Relaxed),
                     }
                 })
                 .collect();
@@ -271,6 +348,8 @@ impl ServerShared {
             busy_rejections: m.busy_rejections.load(Ordering::Relaxed),
             accept_refusals: m.accept_refusals.load(Ordering::Relaxed),
             session_errors: m.session_errors.load(Ordering::Relaxed),
+            sessions_resumed: m.sessions_resumed.load(Ordering::Relaxed),
+            retransmits: m.retransmits.load(Ordering::Relaxed),
             pending: self.pending.load(Ordering::Relaxed),
             tail_time: SimTime {
                 nanos: m.tail_nanos.load(Ordering::Relaxed) as u128,
@@ -296,6 +375,8 @@ pub struct SessionSnapshot {
     pub downlink_bytes: u64,
     pub tail_time: SimTime,
     pub in_flight: usize,
+    /// times this session was resumed onto a fresh connection
+    pub resumes: u64,
 }
 
 /// Point-in-time server metrics: [`Server::stats`] in process, the
@@ -317,6 +398,11 @@ pub struct ServerStats {
     pub accept_refusals: u64,
     /// sessions that ended with a protocol/socket error (isolated)
     pub session_errors: u64,
+    /// resumable sessions adopted onto a fresh connection after a drop
+    pub sessions_resumed: u64,
+    /// retransmitted requests answered from the resume ledger (or dropped
+    /// as duplicates) instead of recomputed
+    pub retransmits: u64,
     /// admitted-but-unanswered jobs right now
     pub pending: usize,
     /// cumulative tail compute
@@ -333,7 +419,8 @@ impl ServerStats {
         format!(
             "server: {} session(s) active, {} total | {} frame(s) in {} batch(es) \
              ({} multi-session), {} pending | up {:.2} MB, down {:.2} MB | \
-             tail {:.1} ms total, queue mean {:.2} max {} | {} busy, {} refused, {} error(s)",
+             tail {:.1} ms total, queue mean {:.2} max {} | {} busy, {} refused, {} error(s), \
+             {} resumed",
             self.sessions_active,
             self.sessions_total,
             self.frames,
@@ -348,6 +435,7 @@ impl ServerStats {
             self.busy_rejections,
             self.accept_refusals,
             self.session_errors,
+            self.sessions_resumed,
         )
     }
 
@@ -366,6 +454,8 @@ impl ServerStats {
         let _ = writeln!(out, "busy_rejections={}", self.busy_rejections);
         let _ = writeln!(out, "accept_refusals={}", self.accept_refusals);
         let _ = writeln!(out, "session_errors={}", self.session_errors);
+        let _ = writeln!(out, "sessions_resumed={}", self.sessions_resumed);
+        let _ = writeln!(out, "retransmits={}", self.retransmits);
         let _ = writeln!(out, "pending={}", self.pending);
         let _ = writeln!(out, "tail_ms={:.3}", self.tail_time.as_millis_f64());
         let _ = writeln!(out, "queue_mean={:.3}", self.queue_mean);
@@ -373,7 +463,7 @@ impl ServerStats {
         for s in &self.per_session {
             let _ = writeln!(
                 out,
-                "session id={} peer={} frames={} submitted={} up={} down={} tail_ms={:.3} in_flight={}",
+                "session id={} peer={} frames={} submitted={} up={} down={} tail_ms={:.3} in_flight={} resumes={}",
                 s.id,
                 s.peer,
                 s.frames,
@@ -382,6 +472,7 @@ impl ServerStats {
                 s.downlink_bytes,
                 s.tail_time.as_millis_f64(),
                 s.in_flight,
+                s.resumes,
             );
         }
         out
@@ -420,7 +511,9 @@ impl Server {
             aborted: AtomicBool::new(false),
             pending: AtomicUsize::new(0),
             next_session: AtomicU64::new(0),
+            next_token: AtomicU64::new(0),
             sessions: Mutex::new(HashMap::new()),
+            detached: Mutex::new(HashMap::new()),
             handlers: Mutex::new(Vec::new()),
             metrics: ServerMetrics::default(),
         });
@@ -496,8 +589,11 @@ impl Shutdown for Server {
             // requests already buffered, admit nothing more, and exit —
             // write halves stay open so admitted frames still flush
             for sess in shared.sessions.lock().unwrap().values() {
-                let _ = sess.ctrl.shutdown(std::net::Shutdown::Read);
+                let _ = sess.ctrl.lock().unwrap().shutdown(std::net::Shutdown::Read);
             }
+            // parked resumable sessions can no longer be adopted: drop
+            // their ledgers so nothing keeps the registry alive
+            shared.detached.lock().unwrap().clear();
             let handlers: Vec<_> = std::mem::take(&mut *shared.handlers.lock().unwrap());
             for h in handlers {
                 let _ = h.join();
@@ -613,7 +709,7 @@ fn spawn_session(
         id,
         peer: peer.to_string(),
         sock: Mutex::new(stream),
-        ctrl,
+        ctrl: Mutex::new(ctrl),
         replies: Reorder::new(),
         win: Mutex::new(Window {
             in_flight: 0,
@@ -621,6 +717,8 @@ fn spawn_session(
         }),
         win_cv: Condvar::new(),
         alive: AtomicBool::new(true),
+        resume: Mutex::new(ResumeState::default()),
+        resumes: AtomicU64::new(0),
         frames: AtomicU64::new(0),
         bytes_in: AtomicU64::new(0),
         bytes_out: AtomicU64::new(0),
@@ -642,27 +740,181 @@ fn spawn_session(
     }
 }
 
+/// How one pass of [`session_loop`] ended.
+enum SessionEnd {
+    /// Clean close (client `Shutdown`, or teardown): forget the session.
+    Closed,
+    /// The connection died. A resumable session is parked for adoption
+    /// instead of being torn down.
+    Lost,
+    /// The client sent a resume handshake: this fresh connection should
+    /// adopt the parked session behind `token`.
+    ResumeInto { token: u64, acked_up_to: u64 },
+}
+
+/// Mint a resume token: unguessable enough to not collide, never zero
+/// (zero is the "not resumable" sentinel on the wire).
+fn next_resume_token(shared: &ServerShared) -> u64 {
+    let counter = shared.next_token.fetch_add(1, Ordering::Relaxed);
+    let clock = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    Rng::new(counter ^ clock.rotate_left(32)).next_u64().max(1)
+}
+
+/// Park a dropped resumable session for later adoption. Returns `false`
+/// when the session is not resumable (or the server is stopping) and
+/// should be torn down instead.
+fn park_session(shared: &ServerShared, sess: &Arc<SessionState>) -> bool {
+    if sess.resume.lock().unwrap().token == 0 || shared.stop.load(Ordering::Acquire) {
+        return false;
+    }
+    let token = sess.resume.lock().unwrap().token;
+    // dead socket: tail workers must ledger replies, not write them
+    sess.alive.store(false, Ordering::Release);
+    shared.sessions.lock().unwrap().remove(&sess.id);
+    let mut detached = shared.detached.lock().unwrap();
+    while detached.len() >= DETACHED_CAP {
+        match detached.values().map(|s| s.id).min() {
+            Some(oldest) => {
+                detached.retain(|_, s| s.id != oldest);
+            }
+            None => break,
+        }
+    }
+    detached.insert(token, sess.clone());
+    true
+}
+
+/// Adopt a parked session onto the fresh connection that sent
+/// `Hello { token, acked_up_to }`: prune the ledger up to the client's
+/// ack watermark, swap the sockets in, and re-register the old session
+/// under its original id. Returns the adopted session; the fresh
+/// connection's placeholder state is discarded by the caller.
+fn adopt_session(
+    shared: &Arc<ServerShared>,
+    fresh: &Arc<SessionState>,
+    token: u64,
+    acked_up_to: u64,
+) -> Result<Arc<SessionState>> {
+    // The reconnect can beat the old handler noticing EOF: poll briefly
+    // for the park to land before declaring the token unknown.
+    let deadline = Instant::now() + RESUME_GRACE;
+    let old = loop {
+        if let Some(old) = shared.detached.lock().unwrap().remove(&token) {
+            break old;
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            bail!("server stopping; resume refused");
+        }
+        if Instant::now() >= deadline {
+            let reply = Message::Error {
+                request_id: 0,
+                message: "unknown resume token".into(),
+            };
+            let mut sock = fresh.sock.lock().unwrap();
+            let _ = write_message(&mut *sock, &reply);
+            bail!("resume with unknown token {token:#x}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+
+    let new_sock = fresh.sock.lock().unwrap().try_clone()?;
+    let new_ctrl = fresh.ctrl.lock().unwrap().try_clone()?;
+    {
+        let mut r = old.resume.lock().unwrap();
+        r.acked = r.acked.max(acked_up_to);
+        let acked = r.acked;
+        r.done.retain(|&id, _| id > acked);
+        r.admitted.retain(|&id| id > acked);
+    }
+    *old.sock.lock().unwrap() = new_sock;
+    *old.ctrl.lock().unwrap() = new_ctrl;
+    old.alive.store(true, Ordering::Release);
+    old.resumes.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut sessions = shared.sessions.lock().unwrap();
+        sessions.remove(&fresh.id);
+        sessions.insert(old.id, old.clone());
+    }
+    let ack = Message::HelloAck { token };
+    let n = wire_len(&ack);
+    let mut sock = old.sock.lock().unwrap();
+    write_message(&mut *sock, &ack).context("acking session resume")?;
+    drop(sock);
+    old.bytes_out.fetch_add(n, Ordering::Relaxed);
+    shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+    Ok(old)
+}
+
 /// Session handler wrapper: errors are logged and isolated — a malformed
 /// frame or a mid-frame disconnect ends *this* session only, never the
-/// accept loop or the shared batcher.
+/// accept loop or the shared batcher. A resumable session whose link
+/// drops is parked for adoption instead of torn down, and a connection
+/// that presents a resume token becomes the parked session it names.
 fn run_session(shared: &Arc<ServerShared>, sess: &Arc<SessionState>, reader: TcpStream) {
-    if let Err(e) = session_loop(shared, sess, reader) {
-        shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
-        eprintln!(
-            "server: session {} ({}) ended with error (others unaffected): {e:#}",
-            sess.id, sess.peer
-        );
+    let mut sess = sess.clone();
+    let mut reader = reader;
+    loop {
+        match session_loop(shared, &sess, &mut reader) {
+            Ok(SessionEnd::Closed) => break,
+            Ok(SessionEnd::Lost) => {
+                if park_session(shared, &sess) {
+                    return; // parked: keep the registry entry out, ledger in
+                }
+                break;
+            }
+            Ok(SessionEnd::ResumeInto { token, acked_up_to }) => {
+                match adopt_session(shared, &sess, token, acked_up_to) {
+                    Ok(adopted) => {
+                        sess = adopted;
+                        continue; // same reader socket, adopted state
+                    }
+                    Err(e) => {
+                        shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "server: session {} ({}) resume failed: {e:#}",
+                            sess.id, sess.peer
+                        );
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                // a mid-frame cut on a resumable session is the event
+                // resume exists for — park it, don't count an error
+                if park_session(shared, &sess) {
+                    return;
+                }
+                shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "server: session {} ({}) ended with error (others unaffected): {e:#}",
+                    sess.id, sess.peer
+                );
+                break;
+            }
+        }
     }
     shared.sessions.lock().unwrap().remove(&sess.id);
     // tail jobs still in flight hold the session Arc: their replies flush
     // (or are dropped if the socket died) and the window drains after us.
 }
 
+/// What to do with an `Infer` whose request id a resumable session has
+/// seen before.
+enum Dedup {
+    Admit,
+    Drop,
+    Resend(Message),
+}
+
 fn session_loop(
     shared: &Arc<ServerShared>,
     sess: &Arc<SessionState>,
-    mut reader: TcpStream,
-) -> Result<()> {
+    reader: &mut TcpStream,
+) -> Result<SessionEnd> {
     loop {
         // Distinguish a clean close (EOF *between* frames — a client that
         // just went away) from a mid-frame cut (malformed peer): read one
@@ -672,20 +924,46 @@ fn session_loop(
             match reader.read(&mut first) {
                 Ok(n) => break n,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(()),
+                Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(SessionEnd::Closed),
                 Err(e) => return Err(e).context("reading session socket"),
             }
         };
         if n == 0 {
-            return Ok(()); // clean EOF at a frame boundary (or drain)
+            // EOF at a frame boundary: drain teardown or a client that
+            // went away (a resumable one may come back)
+            if shared.stop.load(Ordering::Acquire) {
+                return Ok(SessionEnd::Closed);
+            }
+            return Ok(SessionEnd::Lost);
         }
-        let msg = match read_message(&mut (&first[..]).chain(&mut reader)) {
+        let msg = match read_message(&mut (&first[..]).chain(&mut *reader)) {
             Ok(m) => m,
-            Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(()), // cut mid-read by teardown
+            // cut mid-read by teardown
+            Err(_) if shared.stop.load(Ordering::Acquire) => return Ok(SessionEnd::Closed),
             Err(e) => return Err(e).context("malformed frame"),
         };
         match msg {
-            Message::Shutdown => return Ok(()),
+            Message::Shutdown => return Ok(SessionEnd::Closed),
+            Message::Hello {
+                token: 0,
+                acked_up_to: _,
+            } => {
+                // open a new resumable session: mint a token, remember it,
+                // hand it back
+                let token = next_resume_token(shared);
+                sess.resume.lock().unwrap().token = token;
+                let ack = Message::HelloAck { token };
+                let n = wire_len(&ack);
+                let mut sock = sess.sock.lock().unwrap();
+                write_message(&mut *sock, &ack).context("acking resumable hello")?;
+                drop(sock);
+                sess.bytes_out.fetch_add(n, Ordering::Relaxed);
+                shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+            }
+            Message::Hello {
+                token,
+                acked_up_to,
+            } => return Ok(SessionEnd::ResumeInto { token, acked_up_to }),
             Message::Stats => {
                 let text = shared.snapshot().to_text();
                 let reply = Message::StatsResult { text };
@@ -704,6 +982,42 @@ fn session_loop(
                 let rx_bytes = 18 + packet.len() as u64;
                 sess.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
                 shared.metrics.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
+
+                // resumable-session dedup: a retransmitted request id is
+                // never executed twice — drop it (in flight or already
+                // acknowledged) or re-serve the ledgered reply
+                let dedup = {
+                    let r = sess.resume.lock().unwrap();
+                    if r.token == 0 {
+                        Dedup::Admit
+                    } else if request_id <= r.acked {
+                        Dedup::Drop
+                    } else if r.admitted.contains(&request_id) {
+                        match r.done.get(&request_id) {
+                            Some(reply) => Dedup::Resend(reply.clone()),
+                            None => Dedup::Drop, // still in flight
+                        }
+                    } else {
+                        Dedup::Admit
+                    }
+                };
+                match dedup {
+                    Dedup::Admit => {}
+                    Dedup::Drop => {
+                        shared.metrics.retransmits.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    Dedup::Resend(reply) => {
+                        shared.metrics.retransmits.fetch_add(1, Ordering::Relaxed);
+                        let tx_bytes = wire_len(&reply);
+                        let mut sock = sess.sock.lock().unwrap();
+                        write_message(&mut *sock, &reply).context("resending ledgered reply")?;
+                        drop(sock);
+                        sess.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                        shared.metrics.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                        continue;
+                    }
+                }
 
                 // global admission: refuse (with a retry hint) rather than
                 // queue unboundedly
@@ -732,7 +1046,7 @@ fn session_loop(
                             break;
                         }
                         if shared.aborted.load(Ordering::Acquire) {
-                            return Ok(());
+                            return Ok(SessionEnd::Closed);
                         }
                         let (guard, _) = sess
                             .win_cv
@@ -745,6 +1059,14 @@ fn session_loop(
                     w.submitted += 1;
                     seq
                 };
+                {
+                    // register the admitted id before the push so a
+                    // concurrent retransmission can never double-admit
+                    let mut r = sess.resume.lock().unwrap();
+                    if r.token != 0 {
+                        r.admitted.insert(request_id);
+                    }
+                }
                 shared.pending.fetch_add(1, Ordering::AcqRel);
                 let job = TailJob {
                     session: sess.clone(),
@@ -820,9 +1142,14 @@ fn dispatch_loop(shared: &Arc<ServerShared>) {
 /// and lane assignment never change the computed bytes — the determinism
 /// contract cross-client batching rests on.
 fn run_tail_job(shared: &ServerShared, job: &TailJob) {
-    if shared.aborted.load(Ordering::Acquire) || !job.session.alive.load(Ordering::Acquire) {
-        // aborting, or the client is gone: keep the reply chain gap-free
-        // without burning tail compute
+    // A resumable session with a dead socket still computes: the reply is
+    // ledgered by `complete` and retransmitted after the resume.
+    let resumable = job.session.resume.lock().unwrap().token != 0;
+    if shared.aborted.load(Ordering::Acquire)
+        || (!job.session.alive.load(Ordering::Acquire) && !resumable)
+    {
+        // aborting, or the client is gone for good: keep the reply chain
+        // gap-free without burning tail compute
         job.session.complete(
             job.seq,
             Message::Error {
@@ -951,11 +1278,182 @@ pub struct RemoteTiming {
     pub inference_time: SimTime,
 }
 
+/// Client-side resilience knobs shared by [`EdgeClient`] and
+/// [`EdgeStream`].
+#[derive(Debug, Clone, Default)]
+pub struct ClientOptions {
+    /// Backoff schedule for `Busy` refusals and (with `resume` on)
+    /// reconnect attempts. [`RetryPolicy::none()`] restores the
+    /// fail-fast behavior.
+    pub retry: RetryPolicy,
+    /// Open the session with a resume handshake so a dropped connection
+    /// is transparently re-established with no frame lost or duplicated.
+    /// Off by default: the clean-path byte stream is unchanged.
+    pub resume: bool,
+}
+
+/// Link-resilience counters, written by the client/stream retry paths and
+/// read by the policy plane through `Transport::link_health`.
+#[derive(Debug, Default)]
+pub struct LinkCounters {
+    pub retries: AtomicU64,
+    pub reconnects: AtomicU64,
+    pub backoff_nanos: AtomicU64,
+}
+
+impl LinkCounters {
+    pub fn health(&self) -> LinkHealth {
+        LinkHealth {
+            retries: self.retries.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            backoff_time: SimTime {
+                nanos: self.backoff_nanos.load(Ordering::Relaxed) as u128,
+            },
+            stall_time: SimTime::ZERO,
+            rtt: None,
+        }
+    }
+}
+
+/// Sleep one backoff delay, accounting it into the counters.
+fn sleep_backoff(counters: &LinkCounters, delay: Duration) {
+    counters
+        .backoff_nanos
+        .fetch_add(delay.as_nanos() as u64, Ordering::Relaxed);
+    std::thread::sleep(delay);
+}
+
+/// One server reply to an `Infer`, classified for the retry loop: links
+/// fail with `Err` (reconnectable under resume), the server answers with
+/// one of these.
+enum InferReply {
+    Done { server_nanos: u64, packet: Vec<u8> },
+    Busy { pending: u64 },
+    Failed(String),
+}
+
+/// Read the server's reply to `expected_id` without applying it. Replies
+/// for ids *below* `expected_id` are stale duplicates — a retransmit
+/// racing the in-flight original after a resume can produce one — and are
+/// skipped (request ids are monotonic, so "below expected" is exactly
+/// "already delivered" on the serial client).
+fn read_infer_reply(stream: &mut TcpStream, expected_id: u64) -> Result<InferReply> {
+    loop {
+        match read_message(stream)? {
+            Message::InferResult {
+                request_id: rid,
+                server_nanos,
+                packet,
+            } => {
+                if rid < expected_id {
+                    continue;
+                }
+                if rid != expected_id {
+                    bail!("response id {rid} != request {expected_id}");
+                }
+                return Ok(InferReply::Done {
+                    server_nanos,
+                    packet,
+                });
+            }
+            Message::Busy {
+                request_id: rid,
+                pending,
+            } => {
+                if rid < expected_id {
+                    continue;
+                }
+                return Ok(InferReply::Busy { pending });
+            }
+            Message::Error {
+                request_id: rid,
+                message,
+            } => {
+                if rid != 0 && rid < expected_id {
+                    continue;
+                }
+                return Ok(InferReply::Failed(message));
+            }
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+}
+
+/// Apply a successful reply: decode the response tensors into `store`,
+/// finalize, reclaim scratch.
+fn finalize_reply(
+    engine: &Engine,
+    store: &mut crate::model::graph::TensorStore,
+    resp_packet: &[u8],
+) -> Result<Vec<Detection>> {
+    let graph = engine.graph();
+    for (name, t) in Packet::decode(resp_packet)?.tensors {
+        let id = graph
+            .tensor_id(&name)
+            .with_context(|| format!("response tensor '{name}' not in this pipeline"))?;
+        store.insert(id, t);
+    }
+    let detections = engine.finalize(store)?;
+    engine.reclaim_scratch(store);
+    Ok(detections)
+}
+
+/// Open a resumable session on a fresh connection: `Hello { token: 0 }`
+/// asks the server to mint a token; the `HelloAck` carries it back.
+fn open_resumable(stream: &mut TcpStream) -> Result<u64> {
+    let hello = Message::Hello {
+        token: 0,
+        acked_up_to: 0,
+    };
+    write_message(stream, &hello)?;
+    match read_message(stream)? {
+        Message::HelloAck { token } => Ok(token),
+        Message::Error { message, .. } => {
+            bail!("server refused resumable session: {message}")
+        }
+        other => bail!("unexpected handshake reply {other:?}"),
+    }
+}
+
+/// Reconnect and present a resume token. `Ok(None)` means the attempt
+/// failed in a retryable way (server not back yet); `Err` means the
+/// server actively refused the resume — don't keep trying.
+fn dial_resume(addr: SocketAddr, token: u64, acked: u64) -> Result<Option<TcpStream>> {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return Ok(None),
+    };
+    if stream.set_nodelay(true).is_err() {
+        return Ok(None);
+    }
+    let hello = Message::Hello {
+        token,
+        acked_up_to: acked,
+    };
+    if write_message(&mut stream, &hello).is_err() {
+        return Ok(None);
+    }
+    match read_message(&mut stream) {
+        Ok(Message::HelloAck { token: t }) if t == token => Ok(Some(stream)),
+        Ok(Message::Error { message, .. }) => bail!("server refused resume: {message}"),
+        Ok(other) => bail!("unexpected resume reply {other:?}"),
+        Err(_) => Ok(None),
+    }
+}
+
 /// Edge-device client for a remote server.
 pub struct EdgeClient {
     stream: TcpStream,
     engine: Arc<Engine>,
     next_id: u64,
+    /// resolved server address, kept for reconnects
+    addr: Option<SocketAddr>,
+    opts: ClientOptions,
+    /// resume token from the handshake (0 = session not resumable)
+    token: u64,
+    /// highest request id fully delivered (the resume ack watermark)
+    acked: u64,
+    counters: Arc<LinkCounters>,
 }
 
 impl EdgeClient {
@@ -963,14 +1461,77 @@ impl EdgeClient {
         addr: A,
         engine: Arc<Engine>,
     ) -> Result<EdgeClient> {
-        let stream =
+        EdgeClient::connect_with(addr, engine, ClientOptions::default())
+    }
+
+    /// Connect with explicit resilience knobs. With `opts.resume` the
+    /// session opens with a `Hello` handshake and survives link drops;
+    /// otherwise the wire traffic is byte-identical to [`EdgeClient::connect`].
+    pub fn connect_with<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        engine: Arc<Engine>,
+        opts: ClientOptions,
+    ) -> Result<EdgeClient> {
+        let resolved = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr:?}"))?
+            .next();
+        let mut stream =
             TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
         stream.set_nodelay(true)?;
+        let token = if opts.resume {
+            open_resumable(&mut stream)?
+        } else {
+            0
+        };
         Ok(EdgeClient {
             stream,
             engine,
             next_id: 1,
+            addr: resolved,
+            opts,
+            token,
+            acked: 0,
+            counters: Arc::new(LinkCounters::default()),
         })
+    }
+
+    /// The client's link-resilience counters (shared with any
+    /// [`EdgeStream`] it is converted into).
+    pub fn counters(&self) -> Arc<LinkCounters> {
+        self.counters.clone()
+    }
+
+    /// Replace the dead connection via the resume handshake, driving the
+    /// shared backoff budget. `cause` is returned when the session is not
+    /// resumable or the budget runs out.
+    fn reconnect(&mut self, backoff: &mut Backoff, cause: anyhow::Error) -> Result<()> {
+        let addr = match self.addr {
+            Some(a) if self.token != 0 => a,
+            _ => return Err(cause),
+        };
+        loop {
+            let delay = match backoff.next_delay() {
+                Some(d) => d,
+                None => {
+                    return Err(cause).with_context(|| {
+                        format!(
+                            "link lost; reconnect budget exhausted after {} attempt(s)",
+                            backoff.attempts()
+                        )
+                    })
+                }
+            };
+            sleep_backoff(&self.counters, delay);
+            match dial_resume(addr, self.token, self.acked)? {
+                Some(stream) => {
+                    self.stream = stream;
+                    self.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                None => continue,
+            }
+        }
     }
 
     /// Run one frame: head locally, tail on the server. The head half is
@@ -991,18 +1552,45 @@ impl EdgeClient {
 
         let request_id = self.next_id;
         self.next_id += 1;
-        let t_send = Instant::now();
         let uplink_bytes = bytes.len();
-        write_message(
-            &mut self.stream,
-            &Message::Infer {
-                request_id,
-                head_len: sp.head_len as u8,
-                packet: bytes,
-            },
-        )?;
-        let (detections, server_nanos, round_trip) =
-            receive_reply(&mut self.stream, &engine, request_id, &mut store, t_send)?;
+        let msg = Message::Infer {
+            request_id,
+            head_len: sp.head_len as u8,
+            packet: bytes,
+        };
+        // Busy refusals back off and resubmit; link errors reconnect and
+        // retransmit when the session is resumable. The server dedups
+        // retransmissions by request id, so a frame is never executed
+        // twice. `round_trip` includes any backoff — that is the observed
+        // latency under a hostile link, which is the point.
+        let mut backoff = self.opts.retry.backoff(request_id);
+        let t_send = Instant::now();
+        let (server_nanos, resp_packet) = loop {
+            let attempt = write_message(&mut self.stream, &msg)
+                .and_then(|()| read_infer_reply(&mut self.stream, request_id));
+            match attempt {
+                Ok(InferReply::Done {
+                    server_nanos,
+                    packet,
+                }) => break (server_nanos, packet),
+                Ok(InferReply::Failed(message)) => bail!("server error: {message}"),
+                Ok(InferReply::Busy { pending }) => {
+                    let delay = backoff.next_delay().with_context(|| {
+                        format!(
+                            "server saturated ({pending} request(s) pending); \
+                             gave up after {} retries",
+                            backoff.max_retries()
+                        )
+                    })?;
+                    self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    sleep_backoff(&self.counters, delay);
+                }
+                Err(e) => self.reconnect(&mut backoff, e)?,
+            }
+        };
+        let round_trip = SimTime::from_duration(t_send.elapsed());
+        let detections = finalize_reply(&engine, &mut store, &resp_packet)?;
+        self.acked = request_id;
         let inference_time = SimTime::from_duration(t_start.elapsed());
 
         Ok((
@@ -1033,7 +1621,7 @@ impl EdgeClient {
     /// still overlaps head(N+1) with the server round trip of frame N
     /// one frame at a time.
     pub fn into_stream(self, depth: usize) -> Result<EdgeStream> {
-        EdgeStream::spawn(self.stream, self.engine, self.next_id, depth)
+        EdgeStream::spawn(self, depth)
     }
 
     /// Pipelined streaming: overlap the local head compute of frame N+1
@@ -1253,6 +1841,58 @@ fn send_frame(
     Ok(true)
 }
 
+/// [`send_frame`] for the resilient [`EdgeStream`]: same shape, but the
+/// socket write goes through the shared write lock and the message is
+/// journaled first whenever retries or resume are on — a failed write on
+/// a resumable session is *not* an error (the reader reconnects and the
+/// journal is replayed).
+fn stream_send_frame(
+    engine: &Engine,
+    shared: &StreamShared,
+    cloud: &PointCloud,
+    sp: SplitPoint,
+    request_id: u64,
+    tx: &std::sync::mpsc::SyncSender<PendingRequest>,
+) -> Result<bool> {
+    let t_start = Instant::now();
+    let mut head = engine.head_stage(cloud, sp)?;
+    let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+    let (store, _) = head.into_store();
+    let pending = PendingRequest {
+        request_id,
+        store,
+        edge_compute: SimTime::from_duration(t_start.elapsed()),
+        uplink_bytes: bytes.len(),
+        uplink_v1_bytes,
+        t_start,
+        t_send: Instant::now(),
+    };
+    if tx.send(pending).is_err() {
+        return Ok(false); // reader bailed
+    }
+    let msg = Message::Infer {
+        request_id,
+        head_len: sp.head_len as u8,
+        packet: bytes,
+    };
+    if shared.opts.resume || shared.opts.retry.max_retries > 0 {
+        // journal before the write (never hold `unanswered` across a
+        // potentially blocking socket write)
+        shared
+            .unanswered
+            .lock()
+            .unwrap()
+            .insert(request_id, msg.clone());
+    }
+    let res = write_message(&mut *shared.sock.lock().unwrap(), &msg);
+    match res {
+        Ok(()) => Ok(true),
+        // journaled: the reader's reconnect replays it
+        Err(_) if shared.opts.resume => Ok(true),
+        Err(e) => Err(e),
+    }
+}
+
 /// Writer half of the pipelined stream: [`send_frame`] for every cloud,
 /// in order.
 fn send_stream(
@@ -1308,26 +1948,64 @@ struct StreamJob {
 /// caller that never lets `in_flight()` exceed `depth` before submitting
 /// can never deadlock.
 pub struct EdgeStream {
-    /// reader half (and shutdown control) of the shared socket
+    /// reader half (and shutdown control) of the shared socket, replaced
+    /// on a resume reconnect
     stream: TcpStream,
     engine: Arc<Engine>,
+    shared: Arc<StreamShared>,
     job_tx: Option<std::sync::mpsc::SyncSender<StreamJob>>,
     pending_rx: Option<std::sync::mpsc::Receiver<PendingRequest>>,
     writer: Option<std::thread::JoinHandle<Result<()>>>,
     submitted: u64,
     delivered: u64,
+    /// highest request id fully delivered (the resume ack watermark)
+    acked: u64,
+    /// replies that arrived ahead of the frame the reader is waiting on
+    /// (Busy-retry and resume replay can reorder), keyed by request id
+    parked: HashMap<u64, (u64, Vec<u8>)>,
+}
+
+/// State shared between an [`EdgeStream`]'s reader (the owning thread)
+/// and its writer thread. Lock-order rule: never *wait* on `sock` while
+/// holding `unanswered` — journal first, drop the guard, then write.
+struct StreamShared {
+    /// resolved server address, kept for reconnects
+    addr: Option<SocketAddr>,
+    opts: ClientOptions,
+    /// resume token from the handshake (0 = session not resumable)
+    token: u64,
+    /// write half of the connection, shared so a resume reconnect can
+    /// swap it under the writer
+    sock: Mutex<TcpStream>,
+    /// journal of sent-but-undelivered `Infer` messages for replay, kept
+    /// whenever Busy retries or resume are enabled (bounded by depth)
+    unanswered: Mutex<BTreeMap<u64, Message>>,
+    counters: Arc<LinkCounters>,
 }
 
 impl EdgeStream {
-    fn spawn(
-        stream: TcpStream,
-        engine: Arc<Engine>,
-        first_id: u64,
-        depth: usize,
-    ) -> Result<EdgeStream> {
+    fn spawn(client: EdgeClient, depth: usize) -> Result<EdgeStream> {
+        let EdgeClient {
+            stream,
+            engine,
+            next_id,
+            addr,
+            opts,
+            token,
+            acked,
+            counters,
+        } = client;
         let depth = depth.max(1);
-        let mut write_stream = stream.try_clone()?;
+        let shared = Arc::new(StreamShared {
+            addr,
+            opts,
+            token,
+            sock: Mutex::new(stream.try_clone()?),
+            unanswered: Mutex::new(BTreeMap::new()),
+            counters,
+        });
         let writer_engine = engine.clone();
+        let writer_shared = shared.clone();
         // jobs hand off one at a time; the *pending* channel is what caps
         // the in-flight window (same scheme as `run_stream`)
         let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<StreamJob>(1);
@@ -1335,11 +2013,11 @@ impl EdgeStream {
         let writer = std::thread::Builder::new()
             .name("sp-edge-stream".into())
             .spawn(move || -> Result<()> {
-                let mut request_id = first_id;
+                let mut request_id = next_id;
                 while let Ok(job) = job_rx.recv() {
-                    let sent = send_frame(
+                    let sent = stream_send_frame(
                         &writer_engine,
-                        &mut write_stream,
+                        &writer_shared,
                         &job.cloud,
                         job.sp,
                         request_id,
@@ -1351,7 +2029,11 @@ impl EdgeStream {
                         Err(e) => {
                             // unblock a reader waiting on a reply that
                             // will never arrive
-                            let _ = write_stream.shutdown(std::net::Shutdown::Both);
+                            let _ = writer_shared
+                                .sock
+                                .lock()
+                                .unwrap()
+                                .shutdown(std::net::Shutdown::Both);
                             return Err(e);
                         }
                     }
@@ -1361,12 +2043,21 @@ impl EdgeStream {
         Ok(EdgeStream {
             stream,
             engine,
+            shared,
             job_tx: Some(job_tx),
             pending_rx: Some(pending_rx),
             writer: Some(writer),
             submitted: 0,
             delivered: 0,
+            acked,
+            parked: HashMap::new(),
         })
+    }
+
+    /// The stream's link-resilience counters (shared with the
+    /// [`EdgeClient`] it was converted from).
+    pub fn counters(&self) -> Arc<LinkCounters> {
+        self.shared.counters.clone()
     }
 
     /// Frames submitted but not yet delivered through [`EdgeStream::recv`].
@@ -1399,14 +2090,7 @@ impl EdgeStream {
             Err(_) => return Err(self.writer_error()),
         };
         let engine = self.engine.clone();
-        let reply = receive_reply(
-            &mut self.stream,
-            &engine,
-            pending.request_id,
-            &mut pending.store,
-            pending.t_send,
-        );
-        let (detections, server_nanos, round_trip) = match reply {
+        let (server_nanos, resp_packet) = match self.await_reply(pending.request_id) {
             Ok(r) => r,
             Err(e) => {
                 // unblock a writer stuck in a socket write before the
@@ -1415,7 +2099,21 @@ impl EdgeStream {
                 return Err(e);
             }
         };
+        let round_trip = SimTime::from_duration(pending.t_send.elapsed());
+        let detections = match finalize_reply(&engine, &mut pending.store, &resp_packet) {
+            Ok(d) => d,
+            Err(e) => {
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                return Err(e);
+            }
+        };
         self.delivered += 1;
+        self.acked = pending.request_id;
+        self.shared
+            .unanswered
+            .lock()
+            .unwrap()
+            .remove(&pending.request_id);
         Ok((
             detections,
             RemoteTiming {
@@ -1429,6 +2127,130 @@ impl EdgeStream {
                 inference_time: SimTime::from_duration(pending.t_start.elapsed()),
             },
         ))
+    }
+
+    /// Wait for the reply to `expected`, absorbing everything a hostile
+    /// link throws at the pipeline: `Busy` refusals (back off, resubmit
+    /// from the journal), replies arriving out of order after a resume
+    /// replay (parked), stale duplicates (dropped by the ack watermark),
+    /// and link failures (reconnect + replay when resumable).
+    fn await_reply(&mut self, expected: u64) -> Result<(u64, Vec<u8>)> {
+        if let Some(hit) = self.parked.remove(&expected) {
+            return Ok(hit);
+        }
+        let mut backoff = self.shared.opts.retry.backoff(expected);
+        loop {
+            match read_message(&mut self.stream) {
+                Ok(Message::InferResult {
+                    request_id: rid,
+                    server_nanos,
+                    packet,
+                }) => {
+                    if rid == expected {
+                        return Ok((server_nanos, packet));
+                    }
+                    if rid > self.acked {
+                        self.parked.entry(rid).or_insert((server_nanos, packet));
+                    }
+                    // rid <= acked: stale duplicate — drop
+                }
+                Ok(Message::Busy {
+                    request_id: rid,
+                    pending,
+                }) => {
+                    if rid <= self.acked {
+                        continue; // stale refusal of a delivered frame
+                    }
+                    let delay = backoff.next_delay().with_context(|| {
+                        format!(
+                            "server saturated ({pending} request(s) pending); \
+                             gave up after {} retries",
+                            backoff.max_retries()
+                        )
+                    })?;
+                    self.shared.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    sleep_backoff(&self.shared.counters, delay);
+                    self.retransmit(rid)?;
+                }
+                Ok(Message::Error {
+                    request_id: rid,
+                    message,
+                }) => {
+                    if rid != 0 && rid <= self.acked {
+                        continue; // stale
+                    }
+                    bail!("server error: {message}");
+                }
+                Ok(other) => bail!("unexpected reply {other:?}"),
+                Err(e) => self.reconnect_stream(&mut backoff, e)?,
+            }
+        }
+    }
+
+    /// Resubmit one journaled frame (after its `Busy` backoff).
+    fn retransmit(&mut self, rid: u64) -> Result<()> {
+        let msg = self.shared.unanswered.lock().unwrap().get(&rid).cloned();
+        let msg = match msg {
+            Some(m) => m,
+            // journaling off (retries without journal can't happen —
+            // `stream_send_frame` journals whenever retries are on) or
+            // already delivered; nothing to do
+            None => return Ok(()),
+        };
+        let res = write_message(&mut *self.shared.sock.lock().unwrap(), &msg);
+        match res {
+            Ok(()) => Ok(()),
+            // journaled: the reconnect path replays it
+            Err(_) if self.shared.opts.resume => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Re-establish the connection via the resume handshake and replay
+    /// the journal. Holds the shared write lock for the whole handshake
+    /// so the writer cannot interleave new frames into the replay.
+    fn reconnect_stream(&mut self, backoff: &mut Backoff, cause: anyhow::Error) -> Result<()> {
+        let token = self.shared.token;
+        let addr = match self.shared.addr {
+            Some(a) if self.shared.opts.resume && token != 0 => a,
+            _ => return Err(cause),
+        };
+        let mut sock = self.shared.sock.lock().unwrap();
+        loop {
+            let delay = match backoff.next_delay() {
+                Some(d) => d,
+                None => {
+                    return Err(cause).with_context(|| {
+                        format!(
+                            "link lost; reconnect budget exhausted after {} attempt(s)",
+                            backoff.attempts()
+                        )
+                    })
+                }
+            };
+            sleep_backoff(&self.shared.counters, delay);
+            let mut fresh = match dial_resume(addr, token, self.acked)? {
+                Some(s) => s,
+                None => continue,
+            };
+            // replay every unanswered frame in id order; the server
+            // dedups anything it already admitted or answered
+            let msgs: Vec<Message> = self
+                .shared
+                .unanswered
+                .lock()
+                .unwrap()
+                .values()
+                .cloned()
+                .collect();
+            if msgs.iter().any(|m| write_message(&mut fresh, m).is_err()) {
+                continue; // fresh link died mid-replay; try again
+            }
+            *sock = fresh.try_clone()?;
+            self.stream = fresh;
+            self.shared.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
     }
 
     /// Stop the writer and join it, surfacing its error. Idempotent.

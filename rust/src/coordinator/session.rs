@@ -47,10 +47,12 @@ use crate::config::SystemConfig;
 use crate::coordinator::adaptive::{self, Objective};
 use crate::coordinator::batcher::MultiSource;
 use crate::coordinator::engine::{Engine, EngineRole, FrameResult, TimingBreakdown};
+use crate::coordinator::fault::{FaultProfile, FaultTransport, LinkHealth, RetryPolicy};
 use crate::coordinator::link::BandwidthEstimator;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig, PipelineReport};
 use crate::coordinator::remote::{
-    EdgeClient, EdgeStream, RemoteTiming, Server, ServerConfig, ServerStats,
+    ClientOptions, EdgeClient, EdgeStream, LinkCounters, RemoteTiming, Server, ServerConfig,
+    ServerStats,
 };
 use crate::metrics::SimTime;
 use crate::model::graph::SplitPoint;
@@ -203,6 +205,14 @@ pub trait Transport: Send {
     /// periodic telemetry drain.
     fn needs_queue_free_samples(&self) -> bool {
         false
+    }
+
+    /// Link-resilience telemetry: retries, reconnects, backoff/stall time
+    /// and smoothed RTT observed so far. The default (a transport with no
+    /// real link) is permanently clean; [`Tcp`] reports its client's
+    /// counters and [`FaultTransport`] adds its injected stall time.
+    fn link_health(&self) -> LinkHealth {
+        LinkHealth::default()
     }
 
     /// Flush and release transport resources (idempotent). In-flight
@@ -404,6 +414,13 @@ impl Transport for InProcess {
 pub struct Tcp {
     addr: String,
     conn: TcpConn,
+    opts: ClientOptions,
+    /// the connected client's retry/reconnect counters (shared with the
+    /// stream handle it may be converted into)
+    counters: Option<Arc<LinkCounters>>,
+    /// smoothed link round trip (reply latency minus server compute) from
+    /// queue-free frames — the policy plane's RTT signal
+    rtt: Option<SimTime>,
     estimator: BandwidthEstimator,
     /// serial-mode results completed at submit time, awaiting recv
     ready: VecDeque<(Vec<Detection>, RemoteTiming)>,
@@ -431,9 +448,18 @@ pub const MIN_BANDWIDTH_SAMPLE_BYTES: usize = 16 * 1024;
 
 impl Tcp {
     pub fn new(addr: impl Into<String>) -> Tcp {
+        Tcp::with_options(addr, ClientOptions::default())
+    }
+
+    /// TCP transport with explicit resilience knobs (Busy backoff policy,
+    /// resumable sessions).
+    pub fn with_options(addr: impl Into<String>, opts: ClientOptions) -> Tcp {
         Tcp {
             addr: addr.into(),
             conn: TcpConn::Idle,
+            opts,
+            counters: None,
+            rtt: None,
             estimator: BandwidthEstimator::default(),
             ready: VecDeque::new(),
             queue_free: VecDeque::new(),
@@ -445,10 +471,12 @@ impl Tcp {
     /// lifetime — the session never changes `pipe` mid-stream.
     fn connect(&mut self, engine: &Arc<Engine>, depth: usize) -> Result<()> {
         if matches!(self.conn, TcpConn::Idle) {
-            let client = EdgeClient::connect(self.addr.as_str(), engine.clone())
-                .with_context(|| {
-                    format!("is `splitpoint serve-server` running at {}?", self.addr)
-                })?;
+            let client =
+                EdgeClient::connect_with(self.addr.as_str(), engine.clone(), self.opts.clone())
+                    .with_context(|| {
+                        format!("is `splitpoint serve-server` running at {}?", self.addr)
+                    })?;
+            self.counters = Some(client.counters());
             self.conn = if depth <= 1 {
                 TcpConn::Serial(client)
             } else {
@@ -511,6 +539,18 @@ impl Transport for Tcp {
         // filters keep the EWMA honest: RTT-dominated payloads are skipped
         // (MIN_BANDWIDTH_SAMPLE_BYTES), and queue-waiting frames are never
         // sampled (`queue_free`).
+        if queue_free {
+            // smoothed RTT signal for the policy plane: reply latency
+            // minus the server's self-reported compute (link legs +
+            // transfer), EWMA'd over queue-free frames only
+            let sample = t.round_trip.saturating_sub(t.server_compute);
+            self.rtt = Some(match self.rtt {
+                Some(prev) => SimTime {
+                    nanos: (prev.nanos * 7 + sample.nanos) / 8,
+                },
+                None => sample,
+            });
+        }
         if queue_free && t.uplink_bytes >= MIN_BANDWIDTH_SAMPLE_BYTES {
             let rtt_both_legs = SimTime::from_secs_f64(2.0 * engine.link().config().rtt_one_way);
             self.estimator.observe(
@@ -547,6 +587,12 @@ impl Transport for Tcp {
         self.estimator.bandwidth_bps()
     }
 
+    fn link_health(&self) -> LinkHealth {
+        let mut h = self.counters.as_ref().map(|c| c.health()).unwrap_or_default();
+        h.rtt = self.rtt;
+        h
+    }
+
     fn close(&mut self) -> Result<()> {
         match std::mem::replace(&mut self.conn, TcpConn::Idle) {
             TcpConn::Idle => Ok(()),
@@ -573,6 +619,9 @@ pub struct PolicyContext<'a> {
     /// continuous stream this stays above zero across every boundary that
     /// doesn't flip the split (pinned by `rust/tests/session.rs`)
     pub in_flight: usize,
+    /// link-resilience telemetry from [`Transport::link_health`]: retries,
+    /// reconnects, backoff/stall time, smoothed RTT
+    pub health: LinkHealth,
 }
 
 /// Decides the split point for each segment of the stream.
@@ -795,6 +844,14 @@ impl SplitPolicy for Adaptive {
         } else {
             self.evals_since_switch = self.evals_since_switch.saturating_add(1);
         }
+        if !ctx.health.is_clean() {
+            // surface the fault telemetry the decision was made under —
+            // degradation shows up in the segment records, not just stats
+            self.last_explain.push_str(&format!(
+                " [link degraded: {} retry(ies), {} reconnect(s)]",
+                ctx.health.retries, ctx.health.reconnects
+            ));
+        }
         Ok(chosen)
     }
 
@@ -873,6 +930,9 @@ pub struct SessionReport {
     pub transport_report: Option<String>,
     /// per-segment policy decisions in stream order (`run --report`)
     pub segments: Vec<SegmentRecord>,
+    /// link-resilience telemetry at end of stream (all-zero on a clean
+    /// link or a linkless transport)
+    pub link_health: LinkHealth,
 }
 
 impl SessionReport {
@@ -940,6 +1000,15 @@ impl SessionReport {
                 savings * 100.0
             );
         }
+        if !self.link_health.is_clean() {
+            let _ = write!(
+                s,
+                "; link: {} retry(ies), {} reconnect(s), {:.1} ms stalled",
+                self.link_health.retries,
+                self.link_health.reconnects,
+                self.link_health.stall_time.as_millis_f64()
+            );
+        }
         s
     }
 }
@@ -989,6 +1058,7 @@ impl SplitSession {
         let t0 = Instant::now();
         let mut report = SessionReport::default();
         let run_res = self.run_loop(&mut on_frame, &mut report);
+        report.link_health = self.transport.link_health();
         let close_res = self.transport.close();
         report.transport_report = self.transport.report();
         report.bandwidth_bps = self.transport.bandwidth_bps();
@@ -1086,6 +1156,7 @@ impl SplitSession {
                         bandwidth_bps: transport.bandwidth_bps(),
                         current: current_sp,
                         in_flight: transport.in_flight(),
+                        health: transport.link_health(),
                     };
                     let sp = policy.choose(&ctx)?;
                     if current_sp.is_some_and(|c| c != sp) {
@@ -1230,6 +1301,10 @@ pub struct SplitSessionBuilder {
     role: EngineRole,
     sensors: usize,
     record: Option<PathBuf>,
+    tcp_addr: Option<String>,
+    retry_max: Option<u32>,
+    resume: bool,
+    fault: Option<(FaultProfile, u64)>,
 }
 
 impl Default for SplitSessionBuilder {
@@ -1255,6 +1330,10 @@ impl SplitSessionBuilder {
             role: EngineRole::Full,
             sensors: 1,
             record: None,
+            tcp_addr: None,
+            retry_max: None,
+            resume: false,
+            fault: None,
         }
     }
 
@@ -1359,8 +1438,35 @@ impl SplitSessionBuilder {
     }
 
     /// TCP transport shortcut (edge process against `serve-server`).
-    pub fn tcp(self, addr: &str) -> Self {
-        self.transport(Box::new(Tcp::new(addr)))
+    /// Resolved at [`SplitSessionBuilder::build`] so later
+    /// [`SplitSessionBuilder::retry_max`] / [`SplitSessionBuilder::resume`]
+    /// calls still apply.
+    pub fn tcp(mut self, addr: &str) -> Self {
+        self.tcp_addr = Some(addr.to_string());
+        self
+    }
+
+    /// Cap on Busy/reconnect retries per request for the TCP transport
+    /// (default: [`RetryPolicy::default`]'s budget). `0` restores the
+    /// legacy fail-fast behaviour.
+    pub fn retry_max(mut self, n: u32) -> Self {
+        self.retry_max = Some(n);
+        self
+    }
+
+    /// Opt the TCP transport into the resumable-session handshake:
+    /// reconnect after a link drop and resume with no lost or duplicated
+    /// frames. Default off — the clean-path byte stream is unchanged.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.resume = on;
+        self
+    }
+
+    /// Wrap the transport in a deterministic [`FaultTransport`] replaying
+    /// `profile` from `seed` (test/CI knob; default off).
+    pub fn fault(mut self, profile: FaultProfile, seed: u64) -> Self {
+        self.fault = Some((profile, seed));
+        self
     }
 
     /// Split policy (any [`SplitPolicy`]). Default: [`Fixed`] at the
@@ -1446,10 +1552,28 @@ impl SplitSessionBuilder {
         if let Some(dir) = self.record.take() {
             source = Box::new(RecordingSource::new(source, &dir)?);
         }
-        let transport = self
-            .transport
-            .take()
-            .unwrap_or_else(|| Box::new(InProcess::new()));
+        let mut transport: Box<dyn Transport> = match self.transport.take() {
+            Some(t) => t,
+            None => match self.tcp_addr.take() {
+                Some(addr) => {
+                    let opts = ClientOptions {
+                        retry: match self.retry_max {
+                            Some(n) => RetryPolicy {
+                                max_retries: n,
+                                ..RetryPolicy::default()
+                            },
+                            None => RetryPolicy::default(),
+                        },
+                        resume: self.resume,
+                    };
+                    Box::new(Tcp::with_options(addr, opts))
+                }
+                None => Box::new(InProcess::new()),
+            },
+        };
+        if let Some((profile, seed)) = self.fault.take() {
+            transport = Box::new(FaultTransport::new(transport, profile, seed));
+        }
         Ok(SplitSession {
             engine,
             source,

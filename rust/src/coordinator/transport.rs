@@ -42,6 +42,16 @@ pub enum Message {
     /// server → edge: metrics snapshot as `key=value` lines plus one
     /// `session …` row per live session.
     StatsResult { text: String },
+    /// edge → server, first message of a resumable session. `token == 0`
+    /// opens a new resumable session (`acked_up_to` ignored); a nonzero
+    /// token resumes a parked session, and `acked_up_to` is the highest
+    /// request id the client has fully delivered — the server prunes its
+    /// ledger up to it. Plain (non-resumable) sessions never send this,
+    /// keeping the clean-path byte stream unchanged.
+    Hello { token: u64, acked_up_to: u64 },
+    /// server → edge: resumable-session handshake accepted; `token` is
+    /// the session token to present on reconnect.
+    HelloAck { token: u64 },
 }
 
 impl Message {
@@ -54,6 +64,8 @@ impl Message {
             Message::Busy { .. } => 5,
             Message::Stats => 6,
             Message::StatsResult { .. } => 7,
+            Message::Hello { .. } => 8,
+            Message::HelloAck { .. } => 9,
         }
     }
 }
@@ -98,6 +110,16 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
         Message::Stats => {}
         Message::StatsResult { text } => {
             payload.extend_from_slice(text.as_bytes());
+        }
+        Message::Hello {
+            token,
+            acked_up_to,
+        } => {
+            payload.extend_from_slice(&token.to_le_bytes());
+            payload.extend_from_slice(&acked_up_to.to_le_bytes());
+        }
+        Message::HelloAck { token } => {
+            payload.extend_from_slice(&token.to_le_bytes());
         }
     }
     w.write_all(&FRAME_MAGIC.to_le_bytes())?;
@@ -154,6 +176,11 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
         7 => Message::StatsResult {
             text: String::from_utf8_lossy(&payload).to_string(),
         },
+        8 => Message::Hello {
+            token: u64_at(0)?,
+            acked_up_to: u64_at(8)?,
+        },
+        9 => Message::HelloAck { token: u64_at(0)? },
         t => bail!("unknown message type {t}"),
     })
 }
@@ -195,6 +222,15 @@ mod tests {
             Message::StatsResult {
                 text: "frames=3\nsessions_active=1\n".into(),
             },
+            Message::Hello {
+                token: 0,
+                acked_up_to: 0,
+            },
+            Message::Hello {
+                token: 0xdead_beef,
+                acked_up_to: 41,
+            },
+            Message::HelloAck { token: 0xdead_beef },
         ] {
             assert_eq!(roundtrip(msg.clone()), msg);
         }

@@ -15,6 +15,7 @@
 //!   serve-server    edge-server process (TCP, realtime, concurrent sessions)
 //!   serve-edge      edge-device process: stream a source to a server (TCP)
 //!   server-stats    fetch a running serve-server's metrics snapshot
+//!   chaos-proxy     deterministic link-fault TCP relay for resilience tests
 
 use std::path::Path;
 
@@ -22,6 +23,7 @@ use anyhow::{bail, Result};
 
 use splitpoint::bench::paper;
 use splitpoint::coordinator::adaptive::{self, Objective};
+use splitpoint::coordinator::fault::{ChaosProxy, FaultProfile};
 use splitpoint::coordinator::remote::fetch_stats;
 use splitpoint::coordinator::session::{
     Adaptive, ServerSession, SessionFrame, SessionReport, SplitPolicy, SplitSession,
@@ -54,6 +56,8 @@ fn cli() -> Cli {
             OptSpec { name: "sink", value: Some("spec"), help: "frame sink: record:<dir> writes the streamed clouds + manifest as a replay corpus" },
             OptSpec { name: "dets-out", value: Some("file"), help: "write per-frame detections (bit-exact hex) for cross-run diffing" },
             OptSpec { name: "report", value: None, help: "print the per-segment policy-decision table after the stream" },
+            OptSpec { name: "fault", value: Some("profile"), help: "wrap the transport in a seeded link-fault injector: clean | jitter | bandwidth-step | stall | disconnect (default off)" },
+            OptSpec { name: "fault-seed", value: Some("n"), help: "fault-schedule seed; same seed = same schedule (default 1)" },
         ]
     };
     Cli {
@@ -110,10 +114,22 @@ fn cli() -> Cli {
                     OptSpec { name: "pipeline-depth", value: Some("n"), help: "max in-flight frames; overlap head(N+1) with server(N), window kept full across segments (default 1 = serial)" },
                     OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads for the edge head (default 1)" },
                     OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced (default auto)" },
+                    OptSpec { name: "retry-max", value: Some("n"), help: "Busy/reconnect retry budget per request; 0 = fail fast (default 5)" },
+                    OptSpec { name: "resume", value: None, help: "resumable session: reconnect after link drops and resume with no lost or duplicated frames" },
                 ]
                 .into_iter()
                 .chain(streaming())
                 .collect(),
+            },
+            CommandSpec {
+                name: "chaos-proxy",
+                help: "deterministic link-fault TCP relay (resilience testing)",
+                opts: vec![
+                    OptSpec { name: "listen", value: Some("addr"), help: "bind address clients dial (default 127.0.0.1:7474)" },
+                    OptSpec { name: "connect", value: Some("addr"), help: "upstream serve-server address (default 127.0.0.1:7070)" },
+                    OptSpec { name: "fault", value: Some("profile"), help: "fault profile: clean | jitter | bandwidth-step | stall | disconnect (default clean)" },
+                    OptSpec { name: "fault-seed", value: Some("n"), help: "fault-schedule seed; same seed = same schedule (default 1)" },
+                ],
             },
         ],
         global_opts: vec![],
@@ -183,6 +199,16 @@ fn build_session(
     }
     if let Some(addr) = tcp_addr {
         b = b.tcp(addr);
+        if let Some(n) = args.get_parse("retry-max")? {
+            b = b.retry_max(n);
+        }
+        if args.has("resume") {
+            b = b.resume(true);
+        }
+    }
+    if let Some(profile) = args.get("fault") {
+        let seed: u64 = args.get_parse("fault-seed")?.unwrap_or(1);
+        b = b.fault(FaultProfile::parse(profile)?, seed);
     }
     b.build()
 }
@@ -468,6 +494,24 @@ fn cmd_server_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_chaos_proxy(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:7474");
+    let upstream = args.get_or("connect", "127.0.0.1:7070");
+    let profile = FaultProfile::parse(args.get_or("fault", "clean"))?;
+    let seed: u64 = args.get_parse("fault-seed")?.unwrap_or(1);
+    let proxy = ChaosProxy::spawn(listen, upstream, profile, seed)?;
+    println!(
+        "chaos-proxy relaying {} -> {} (profile {}, seed {seed})",
+        proxy.addr(),
+        upstream,
+        args.get_or("fault", "clean"),
+    );
+    println!("Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_serve_edge(args: &Args) -> Result<()> {
     let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
     let mut session = build_session(args, Some(10), Some(addr.as_str()))?;
@@ -506,6 +550,7 @@ fn main() -> Result<()> {
         Some("serve-server") => cmd_serve_server(&args),
         Some("server-stats") => cmd_server_stats(&args),
         Some("serve-edge") => cmd_serve_edge(&args),
+        Some("chaos-proxy") => cmd_chaos_proxy(&args),
         _ => {
             println!("{}", cli.help(None));
             Ok(())

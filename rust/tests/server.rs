@@ -15,7 +15,8 @@ use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
-use splitpoint::coordinator::remote::{fetch_stats, EdgeClient};
+use splitpoint::coordinator::fault::{ChaosProxy, DisconnectSpec, FaultProfile, RetryPolicy};
+use splitpoint::coordinator::remote::{fetch_stats, ClientOptions, EdgeClient};
 use splitpoint::coordinator::session::{ServerSession, SplitSession};
 use splitpoint::coordinator::shutdown::{Shutdown, ShutdownMode};
 use splitpoint::coordinator::transport::{read_message, write_message, Message};
@@ -402,6 +403,147 @@ fn stats_snapshot_in_process_and_over_the_wire() {
     assert!(stats.summary().contains("1 frame(s)"));
 
     client.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+/// `Busy` is no longer fatal: the default client maps it to bounded
+/// backoff and succeeds once the backlog clears, bitwise-identical to a
+/// solo run, while the server's refusal counters still record the event.
+#[test]
+fn busy_auto_retry_succeeds_after_backoff() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .pending_cap(1)
+        // hold the pinned job long enough that the client's first attempt
+        // sees Busy, short enough that its retry budget comfortably wins
+        .batch(64, Duration::from_millis(150))
+        .build()
+        .unwrap();
+
+    // pin the queue with a raw edge_only frame (empty live set)
+    let head_len = full.graph().len() as u8;
+    let empty = Packet::from_shared(Vec::new()).encode(full.config().codec);
+    let mut pin = TcpStream::connect(server.addr()).unwrap();
+    write_message(
+        &mut pin,
+        &Message::Infer {
+            request_id: 1,
+            head_len,
+            packet: empty,
+        },
+    )
+    .unwrap();
+    wait_for("pinned frame admitted", || server.stats().pending == 1);
+
+    let scene = SceneGenerator::with_seed(28_000).generate();
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let solo = full.run_frame(&scene.cloud, sp).unwrap().detections;
+
+    let mut client = EdgeClient::connect(server.addr(), full.clone()).unwrap();
+    let (dets, _) = client.run_frame(&scene.cloud, sp).unwrap();
+    assert!(dets_bitwise_equal(&dets, &solo), "retried frame diverged");
+    assert!(
+        server.stats().busy_rejections >= 1,
+        "the client was never refused — the retry path went unexercised"
+    );
+    assert!(
+        client.counters().health().retries >= 1,
+        "client telemetry missed the retry"
+    );
+
+    client.shutdown().unwrap();
+    match read_message(&mut pin).unwrap() {
+        Message::InferResult { request_id, .. } => assert_eq!(request_id, 1),
+        other => panic!("expected the pinned frame's result, got {other:?}"),
+    }
+    write_message(&mut pin, &Message::Shutdown).unwrap();
+    server.shutdown().unwrap();
+}
+
+/// The tentpole resilience contract: a resumable pipelined stream through
+/// a link that hard-cuts mid-frame delivers every frame exactly once —
+/// zero lost, zero duplicated executions, detections bitwise identical to
+/// a solo run.
+#[test]
+fn reconnect_resume_no_loss_no_dup() {
+    let full = engine();
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .build()
+        .unwrap();
+    // cut every connection after an escalating byte budget: the first cut
+    // lands inside the first vfe uplink, and the doubling budget
+    // guarantees forward progress within the client's retry allowance
+    let profile = FaultProfile {
+        disconnect: Some(DisconnectSpec {
+            first_bytes: 256 * 1024,
+        }),
+        ..FaultProfile::disconnect()
+    };
+    let proxy = ChaosProxy::spawn("127.0.0.1:0", server.addr(), profile, 7).unwrap();
+
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let scenes = clouds(29_000, 10);
+    let solo: Vec<Vec<Detection>> = scenes
+        .iter()
+        .map(|c| full.run_frame(c, sp).unwrap().detections)
+        .collect();
+
+    let opts = ClientOptions {
+        retry: RetryPolicy {
+            max_retries: 12,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(200),
+            seed: 9,
+        },
+        resume: true,
+    };
+    let client = EdgeClient::connect_with(proxy.addr(), full.clone(), opts).unwrap();
+    let mut stream = client.into_stream(3).unwrap();
+    let mut next = 0usize;
+    for (i, solo) in solo.iter().enumerate() {
+        while next < scenes.len() && next < i + 3 {
+            stream.submit(scenes[next].clone(), sp).unwrap();
+            next += 1;
+        }
+        let (dets, _) = stream
+            .recv()
+            .unwrap_or_else(|e| panic!("frame {i} lost across reconnects: {e:#}"));
+        assert!(
+            dets_bitwise_equal(&dets, solo),
+            "frame {i} diverged across session resume"
+        );
+    }
+
+    assert!(
+        proxy.connections() >= 2,
+        "the proxy never cut the link — resilience went unexercised"
+    );
+    assert!(
+        stream.counters().health().reconnects >= 1,
+        "client telemetry missed the reconnect"
+    );
+    let stats = server.stats();
+    assert_eq!(
+        stats.frames,
+        scenes.len() as u64,
+        "a frame was executed twice (retransmit dedup failed) or dropped"
+    );
+    assert!(stats.sessions_resumed >= 1, "no resume ever happened");
+    assert_eq!(
+        stats.session_errors, 0,
+        "link cuts on a resumable session must park, not error"
+    );
+    let text = fetch_stats(server.addr()).unwrap();
+    assert!(
+        text.contains("sessions_resumed="),
+        "wire snapshot misses the resume counter:\n{text}"
+    );
+    stream.shutdown().unwrap();
+    drop(proxy);
     server.shutdown().unwrap();
 }
 

@@ -14,6 +14,7 @@ use splitpoint::bench::paper;
 use splitpoint::config::SystemConfig;
 use splitpoint::coordinator::adaptive::{self, Objective};
 use splitpoint::coordinator::batcher::MultiSource;
+use splitpoint::coordinator::fault::LinkHealth;
 use splitpoint::coordinator::pipeline::{run_source, PipelineConfig};
 use splitpoint::coordinator::remote::{EdgeClient, Server};
 use splitpoint::coordinator::session::{
@@ -702,6 +703,7 @@ fn adaptive_hysteresis_and_cooldown_refuse_flips() {
         bandwidth_bps: None,
         current,
         in_flight: 0,
+        health: LinkHealth::default(),
     };
 
     // precondition: under the default link, running everything on the
@@ -753,6 +755,7 @@ fn adaptive_explain_reports_decision_reasons() {
         bandwidth_bps: None,
         current,
         in_flight: 0,
+        health: LinkHealth::default(),
     };
     let best = adaptive::choose_split(&e, &cloud, Objective::InferenceTime).unwrap().split;
     assert_ne!(best, edge_only, "test precondition");
