@@ -39,6 +39,7 @@ use crate::coordinator::engine::{Engine, FrameResult};
 use crate::metrics::{OccupancyHist, Recorder};
 use crate::model::graph::SplitPoint;
 use crate::pointcloud::{FrameSource, PointCloud};
+use crate::telemetry;
 
 // --------------------------------------------------------- bounded queue
 
@@ -291,22 +292,80 @@ impl PipelineReport {
     }
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct PipelineShared {
     latency: Mutex<Recorder>,
     occupancy: Mutex<BTreeMap<String, OccupancyHist>>,
     frames: AtomicUsize,
+    /// [`telemetry::global`] handles, pre-interned at spawn and keyed by
+    /// the same labels the local recorders use — the per-frame additions
+    /// below are relaxed atomic ops on already-held `Arc`s
+    stage_seconds: BTreeMap<&'static str, Arc<telemetry::Histogram>>,
+    queue_depth: BTreeMap<&'static str, Arc<telemetry::Histogram>>,
+    frames_total: Arc<telemetry::Counter>,
 }
 
 impl PipelineShared {
+    fn new() -> PipelineShared {
+        let reg = telemetry::global();
+        let mut stage_seconds = BTreeMap::new();
+        for (label, stage) in [
+            ("stage/head", "head"),
+            ("stage/transfer", "transfer"),
+            ("stage/tail", "tail"),
+        ] {
+            stage_seconds.insert(
+                label,
+                reg.histogram(
+                    "sp_stage_latency_seconds",
+                    "Service time per pipeline stage (seconds).",
+                    &[("stage", stage)],
+                    &telemetry::latency_buckets(),
+                ),
+            );
+        }
+        let mut queue_depth = BTreeMap::new();
+        for (label, queue) in [
+            ("queue/input", "input"),
+            ("queue/transfer", "transfer"),
+            ("queue/tail", "tail"),
+        ] {
+            queue_depth.insert(
+                label,
+                reg.histogram(
+                    "sp_queue_depth",
+                    "Queue depth observed at each dequeue.",
+                    &[("queue", queue)],
+                    &telemetry::depth_buckets(),
+                ),
+            );
+        }
+        PipelineShared {
+            latency: Mutex::new(Recorder::default()),
+            occupancy: Mutex::new(BTreeMap::new()),
+            frames: AtomicUsize::new(0),
+            stage_seconds,
+            queue_depth,
+            frames_total: reg.counter(
+                "sp_pipeline_frames_total",
+                "Frames fully completed by the pipelined executor.",
+                &[],
+            ),
+        }
+    }
+
     fn record_latency(&self, label: &str, since: Instant) {
-        self.latency
-            .lock()
-            .unwrap()
-            .record(label, since.elapsed().as_secs_f64() * 1e3);
+        let secs = since.elapsed().as_secs_f64();
+        if let Some(h) = self.stage_seconds.get(label) {
+            h.observe(secs);
+        }
+        self.latency.lock().unwrap().record(label, secs * 1e3);
     }
 
     fn record_occupancy(&self, queue: &str, depth: usize) {
+        if let Some(h) = self.queue_depth.get(queue) {
+            h.observe(depth as f64);
+        }
         self.occupancy
             .lock()
             .unwrap()
@@ -347,7 +406,7 @@ impl Pipeline {
         let q_transfer = Arc::new(BoundedQueue::new(depth));
         let q_tail = Arc::new(BoundedQueue::new(depth));
         let reorder = Arc::new(Reorder::new());
-        let shared = Arc::new(PipelineShared::default());
+        let shared = Arc::new(PipelineShared::new());
         let mut threads = Vec::with_capacity(2 + tail_workers);
 
         // ---- stage 1: head (voxelize + head nodes + wire encode)
@@ -435,6 +494,7 @@ impl Pipeline {
                             let result = engine.tail_stage(frame);
                             shared.record_latency("stage/tail", t0);
                             shared.frames.fetch_add(1, Ordering::Relaxed);
+                            shared.frames_total.inc();
                             reorder.complete(seq, result);
                         }
                         // the head and transfer workers have already

@@ -51,6 +51,7 @@ use crate::metrics::{OccupancyHist, SimTime};
 use crate::model::graph::SplitPoint;
 use crate::pointcloud::PointCloud;
 use crate::postprocess::Detection;
+use crate::telemetry::{self, Counter, Histogram, MetricsServer, Registry};
 use crate::tensor::codec::{Packet, Policy};
 use crate::util::rng::Rng;
 
@@ -82,6 +83,14 @@ pub struct ServerConfig {
     pub batch: BatchPolicy,
     /// Periodic stderr metrics summary (`None` = off).
     pub stats_interval: Option<Duration>,
+    /// Serve this server's telemetry registry as a Prometheus `/metrics`
+    /// HTTP endpoint on this address (`None` = off). Stable metric names
+    /// are documented in `docs/METRICS.md`.
+    pub metrics_addr: Option<String>,
+    /// Per-session resume-ledger bound: a resumable session keeps at
+    /// most this many finished, unacknowledged replies for
+    /// retransmission (default [`RESUME_LEDGER_CAP`]).
+    pub resume_ledger_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -97,6 +106,8 @@ impl Default for ServerConfig {
                 max_wait: Duration::ZERO,
             },
             stats_interval: None,
+            metrics_addr: None,
+            resume_ledger_cap: RESUME_LEDGER_CAP,
         }
     }
 }
@@ -134,12 +145,13 @@ struct Window {
     submitted: u64,
 }
 
-/// Ledger cap: a resumable session keeps at most this many finished,
-/// unacknowledged replies for retransmission. Evicting the oldest entry
-/// is safe — if the client ever retransmits an evicted id it is simply
-/// re-admitted and recomputed, and the tail is deterministic, so the
-/// recomputed reply is byte-identical.
-const RESUME_LEDGER_CAP: usize = 256;
+/// Default ledger cap ([`ServerConfig::resume_ledger_cap`]): a resumable
+/// session keeps at most this many finished, unacknowledged replies for
+/// retransmission. Evicting the oldest entry is safe — if the client
+/// ever retransmits an evicted id it is simply re-admitted and
+/// recomputed, and the tail is deterministic, so the recomputed reply is
+/// byte-identical.
+pub const RESUME_LEDGER_CAP: usize = 256;
 
 /// Cap on parked (disconnected, resumable) sessions held for adoption.
 const DETACHED_CAP: usize = 64;
@@ -189,11 +201,14 @@ struct SessionState {
     /// every path gathers what it needs under `resume`, drops it, then
     /// takes `sock` (the reverse nesting, `sock` → `resume`, is allowed).
     resume: Mutex<ResumeState>,
-    resumes: AtomicU64,
-    frames: AtomicU64,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
-    tail_nanos: AtomicU64,
+    /// Per-session registry counters (labeled `session="<id>"`),
+    /// unregistered when the session truly ends. Still a single relaxed
+    /// atomic op per update.
+    resumes: Arc<Counter>,
+    frames: Arc<Counter>,
+    bytes_in: Arc<Counter>,
+    bytes_out: Arc<Counter>,
+    tail_nanos: Arc<Counter>,
 }
 
 /// The request id a reply retransmission would be keyed by.
@@ -210,7 +225,7 @@ impl SessionState {
     /// Route one reply: park it in the reorder buffer, flush the
     /// contiguous ready run to the socket, then release window slots for
     /// every flushed frame.
-    fn complete(&self, seq: u64, msg: Message, metrics: &ServerMetrics) {
+    fn complete(&self, seq: u64, msg: Message, shared: &ServerShared) {
         // Ledger the reply for a resumable session *before* any write
         // attempt: it must survive a dead socket so a resumed client can
         // fetch it by retransmitting the request id.
@@ -219,7 +234,7 @@ impl SessionState {
             if r.token != 0 {
                 if let Some(rid) = reply_request_id(&msg) {
                     r.done.insert(rid, msg.clone());
-                    while r.done.len() > RESUME_LEDGER_CAP {
+                    while r.done.len() > shared.cfg.resume_ledger_cap {
                         if let Some((old, _)) = r.done.pop_first() {
                             r.admitted.remove(&old);
                         }
@@ -236,8 +251,8 @@ impl SessionState {
                 match write_message(&mut *sock, &msg) {
                     Ok(()) => {
                         let n = wire_len(&msg);
-                        self.bytes_out.fetch_add(n, Ordering::Relaxed);
-                        metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+                        self.bytes_out.add(n);
+                        shared.metrics.bytes_out.add(n);
                     }
                     Err(_) => self.alive.store(false, Ordering::Release),
                 }
@@ -253,25 +268,86 @@ impl SessionState {
     }
 }
 
-/// Server-wide counters behind relaxed atomics (hot paths never contend).
-#[derive(Default)]
+/// Server-wide counters: registry-backed handles, pre-interned once at
+/// spawn so the hot paths stay single relaxed atomic ops (zero alloc,
+/// zero lock). [`ServerStats`] (and the `Stats` wire message) is now a
+/// *view* over these handles, so the snapshot and the `/metrics`
+/// endpoint can never disagree.
 struct ServerMetrics {
-    sessions_total: AtomicU64,
-    frames: AtomicU64,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
-    tail_nanos: AtomicU64,
-    tail_batches: AtomicU64,
-    multi_session_batches: AtomicU64,
-    busy_rejections: AtomicU64,
-    accept_refusals: AtomicU64,
-    session_errors: AtomicU64,
-    sessions_resumed: AtomicU64,
+    sessions_total: Arc<Counter>,
+    frames: Arc<Counter>,
+    bytes_in: Arc<Counter>,
+    bytes_out: Arc<Counter>,
+    tail_nanos: Arc<Counter>,
+    tail_batches: Arc<Counter>,
+    multi_session_batches: Arc<Counter>,
+    busy_rejections: Arc<Counter>,
+    accept_refusals: Arc<Counter>,
+    session_errors: Arc<Counter>,
+    sessions_resumed: Arc<Counter>,
     /// retransmitted `Infer` requests deduplicated (or re-served from the
     /// resume ledger) instead of recomputed
-    retransmits: AtomicU64,
-    /// batcher depth sampled at each dispatch
+    retransmits: Arc<Counter>,
+    /// per-job tail latency distribution (seconds)
+    tail_seconds: Arc<Histogram>,
+    /// batcher depth sampled at each dispatch, as a fixed-bucket export
+    queue_depth: Arc<Histogram>,
+    /// batcher depth sampled at each dispatch (exact per-depth counts,
+    /// kept alongside the bucketed export for `queue_mean`/`queue_max`)
     queue_occupancy: Mutex<OccupancyHist>,
+}
+
+impl ServerMetrics {
+    /// Intern every server-wide metric in `reg` (stable names; see
+    /// `docs/METRICS.md`).
+    fn register(reg: &Registry) -> ServerMetrics {
+        let c = |name: &str, help: &str| reg.counter(name, help, &[]);
+        ServerMetrics {
+            sessions_total: c("sp_server_sessions_total", "Sessions accepted since start"),
+            frames: c("sp_server_frames_total", "Tail jobs completed"),
+            bytes_in: c("sp_server_uplink_bytes_total", "Request bytes received"),
+            bytes_out: c("sp_server_downlink_bytes_total", "Reply bytes sent"),
+            tail_nanos: c("sp_server_tail_nanos_total", "Cumulative tail compute, nanoseconds"),
+            tail_batches: c("sp_server_tail_batches_total", "Tail dispatches executed"),
+            multi_session_batches: c(
+                "sp_server_multi_session_batches_total",
+                "Tail dispatches that coalesced frames from more than one session",
+            ),
+            busy_rejections: c(
+                "sp_server_busy_rejections_total",
+                "Infer requests refused with Busy at the pending cap",
+            ),
+            accept_refusals: c(
+                "sp_server_accept_refusals_total",
+                "Connections refused at the session cap",
+            ),
+            session_errors: c(
+                "sp_server_session_errors_total",
+                "Sessions ended by a protocol or socket error",
+            ),
+            sessions_resumed: c(
+                "sp_server_sessions_resumed_total",
+                "Resumable sessions adopted onto a fresh connection",
+            ),
+            retransmits: c(
+                "sp_server_retransmits_total",
+                "Retransmitted requests answered from the resume ledger or dropped as duplicates",
+            ),
+            tail_seconds: reg.histogram(
+                "sp_stage_latency_seconds",
+                "Per-stage latency in seconds",
+                &[("stage", "tail")],
+                &telemetry::latency_buckets(),
+            ),
+            queue_depth: reg.histogram(
+                "sp_queue_depth",
+                "Queue depth observed per dispatch",
+                &[("queue", "batcher")],
+                &telemetry::depth_buckets(),
+            ),
+            queue_occupancy: Mutex::new(OccupancyHist::new()),
+        }
+    }
 }
 
 /// State shared by the accept loop, session handlers, and dispatcher.
@@ -290,6 +366,10 @@ struct ServerShared {
     /// waiting for a reconnect to adopt them.
     detached: Mutex<HashMap<u64, Arc<SessionState>>>,
     handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Per-server registry (not the process-global one): two servers in
+    /// one test process keep exact, independent stats. Served over HTTP
+    /// when `cfg.metrics_addr` is set.
+    registry: Arc<Registry>,
     metrics: ServerMetrics,
 }
 
@@ -317,18 +397,20 @@ impl ServerShared {
                         let w = s.win.lock().unwrap();
                         (w.in_flight, w.submitted)
                     };
+                    let ledger = s.resume.lock().unwrap().done.len();
                     SessionSnapshot {
                         id: s.id,
                         peer: s.peer.clone(),
-                        frames: s.frames.load(Ordering::Relaxed),
+                        frames: s.frames.get(),
                         submitted,
-                        uplink_bytes: s.bytes_in.load(Ordering::Relaxed),
-                        downlink_bytes: s.bytes_out.load(Ordering::Relaxed),
+                        uplink_bytes: s.bytes_in.get(),
+                        downlink_bytes: s.bytes_out.get(),
                         tail_time: SimTime {
-                            nanos: s.tail_nanos.load(Ordering::Relaxed) as u128,
+                            nanos: s.tail_nanos.get() as u128,
                         },
                         in_flight,
-                        resumes: s.resumes.load(Ordering::Relaxed),
+                        resumes: s.resumes.get(),
+                        ledger,
                     }
                 })
                 .collect();
@@ -339,20 +421,20 @@ impl ServerShared {
         let occ = m.queue_occupancy.lock().unwrap();
         ServerStats {
             sessions_active: per_session.len(),
-            sessions_total: m.sessions_total.load(Ordering::Relaxed),
-            frames: m.frames.load(Ordering::Relaxed),
-            uplink_bytes: m.bytes_in.load(Ordering::Relaxed),
-            downlink_bytes: m.bytes_out.load(Ordering::Relaxed),
-            tail_batches: m.tail_batches.load(Ordering::Relaxed),
-            multi_session_batches: m.multi_session_batches.load(Ordering::Relaxed),
-            busy_rejections: m.busy_rejections.load(Ordering::Relaxed),
-            accept_refusals: m.accept_refusals.load(Ordering::Relaxed),
-            session_errors: m.session_errors.load(Ordering::Relaxed),
-            sessions_resumed: m.sessions_resumed.load(Ordering::Relaxed),
-            retransmits: m.retransmits.load(Ordering::Relaxed),
+            sessions_total: m.sessions_total.get(),
+            frames: m.frames.get(),
+            uplink_bytes: m.bytes_in.get(),
+            downlink_bytes: m.bytes_out.get(),
+            tail_batches: m.tail_batches.get(),
+            multi_session_batches: m.multi_session_batches.get(),
+            busy_rejections: m.busy_rejections.get(),
+            accept_refusals: m.accept_refusals.get(),
+            session_errors: m.session_errors.get(),
+            sessions_resumed: m.sessions_resumed.get(),
+            retransmits: m.retransmits.get(),
             pending: self.pending.load(Ordering::Relaxed),
             tail_time: SimTime {
-                nanos: m.tail_nanos.load(Ordering::Relaxed) as u128,
+                nanos: m.tail_nanos.get() as u128,
             },
             queue_mean: occ.mean(),
             queue_max: occ.max(),
@@ -377,6 +459,9 @@ pub struct SessionSnapshot {
     pub in_flight: usize,
     /// times this session was resumed onto a fresh connection
     pub resumes: u64,
+    /// finished, unacknowledged replies currently held in the resume
+    /// ledger (bounded by [`ServerConfig::resume_ledger_cap`])
+    pub ledger: usize,
 }
 
 /// Point-in-time server metrics: [`Server::stats`] in process, the
@@ -463,7 +548,7 @@ impl ServerStats {
         for s in &self.per_session {
             let _ = writeln!(
                 out,
-                "session id={} peer={} frames={} submitted={} up={} down={} tail_ms={:.3} in_flight={} resumes={}",
+                "session id={} peer={} frames={} submitted={} up={} down={} tail_ms={:.3} in_flight={} resumes={} ledger={}",
                 s.id,
                 s.peer,
                 s.frames,
@@ -473,6 +558,7 @@ impl ServerStats {
                 s.tail_time.as_millis_f64(),
                 s.in_flight,
                 s.resumes,
+                s.ledger,
             );
         }
         out
@@ -488,6 +574,7 @@ pub struct Server {
     accept: Option<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     stats_thread: Option<std::thread::JoinHandle<()>>,
+    metrics_http: Option<MetricsServer>,
 }
 
 impl Server {
@@ -503,10 +590,12 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
+        let registry = Arc::new(Registry::new());
+        let metrics = ServerMetrics::register(&registry);
         let shared = Arc::new(ServerShared {
             batcher: Batcher::new(cfg.batch),
             cfg,
-            engine,
+            engine: engine.clone(),
             stop: AtomicBool::new(false),
             aborted: AtomicBool::new(false),
             pending: AtomicUsize::new(0),
@@ -515,8 +604,68 @@ impl Server {
             sessions: Mutex::new(HashMap::new()),
             detached: Mutex::new(HashMap::new()),
             handlers: Mutex::new(Vec::new()),
-            metrics: ServerMetrics::default(),
+            registry: registry.clone(),
+            metrics,
         });
+
+        // Live gauges are pulled at render time by a collector. The weak
+        // reference breaks the shared → registry → collector → shared
+        // cycle: once the server is gone the gauges simply stop updating.
+        {
+            let weak = Arc::downgrade(&shared);
+            let sessions_active =
+                registry.gauge("sp_server_sessions_active", "Live sessions right now", &[]);
+            let pending = registry.gauge(
+                "sp_server_pending_jobs",
+                "Admitted-but-unanswered tail jobs right now",
+                &[],
+            );
+            registry.register_collector(move || {
+                if let Some(s) = weak.upgrade() {
+                    sessions_active.set(s.sessions.lock().unwrap().len() as f64);
+                    pending.set(s.pending.load(Ordering::Relaxed) as f64);
+                }
+            });
+        }
+        // Engine / link / runtime provenance: configured RTT, kernel
+        // threads, SIMD dispatch level, and the sparse-conv tap counters
+        // (cumulative in the runtime, synced monotonically per render).
+        {
+            let rtt = registry.gauge(
+                "sp_link_configured_rtt_seconds",
+                "Configured one-way link RTT of the engine's link model",
+                &[],
+            );
+            rtt.set(engine.link().config().rtt_one_way);
+            let threads = registry.gauge("sp_runtime_threads", "Kernel worker threads", &[]);
+            threads.set(engine.runtime().threads() as f64);
+            let dispatch = registry.gauge(
+                "sp_runtime_dispatch_info",
+                "Always 1; the dispatch label carries the SIMD level",
+                &[("dispatch", engine.runtime().simd_dispatch())],
+            );
+            dispatch.set(1.0);
+            let taps_seen = registry.counter(
+                "sp_runtime_taps_seen_total",
+                "Sparse-conv taps considered by the gather kernels",
+                &[],
+            );
+            let taps_skipped = registry.counter(
+                "sp_runtime_taps_skipped_total",
+                "Sparse-conv taps skipped by per-tap occupancy masks",
+                &[],
+            );
+            let rt_engine = engine;
+            registry.register_collector(move || {
+                let (seen, skipped) = rt_engine.runtime().tap_stats();
+                taps_seen.merge_total(seen);
+                taps_skipped.merge_total(skipped);
+            });
+        }
+        let metrics_http = match shared.cfg.metrics_addr.clone() {
+            Some(addr) => Some(MetricsServer::spawn(&addr, registry)?),
+            None => None,
+        };
 
         let accept = {
             let shared = shared.clone();
@@ -548,6 +697,7 @@ impl Server {
             accept: Some(accept),
             dispatcher: Some(dispatcher),
             stats_thread,
+            metrics_http,
         })
     }
 
@@ -558,6 +708,17 @@ impl Server {
     /// Point-in-time metrics snapshot.
     pub fn stats(&self) -> ServerStats {
         self.shared.snapshot()
+    }
+
+    /// This server's telemetry registry (per-instance; rendered by the
+    /// `/metrics` endpoint when `metrics_addr` is configured).
+    pub fn registry(&self) -> Arc<Registry> {
+        self.shared.registry.clone()
+    }
+
+    /// The bound `/metrics` endpoint address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_http.as_ref().map(|m| m.addr())
     }
 
     /// Graceful drain: stop accepting, flush every admitted frame, then
@@ -574,6 +735,9 @@ impl Shutdown for Server {
             return Ok(()); // already torn down
         }
         self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(mut m) = self.metrics_http.take() {
+            m.shutdown();
+        }
         let accept = self.accept.take();
         let dispatcher = self.dispatcher.take();
         let stats_thread = self.stats_thread.take();
@@ -670,7 +834,7 @@ fn accept_loop(listener: TcpListener, shared: &Arc<ServerShared>) {
                 reap_finished(shared);
                 let active = shared.sessions.lock().unwrap().len();
                 if active >= shared.cfg.max_sessions {
-                    shared.metrics.accept_refusals.fetch_add(1, Ordering::Relaxed);
+                    shared.metrics.accept_refusals.inc();
                     let mut stream = stream;
                     let _ = write_message(
                         &mut stream,
@@ -705,6 +869,9 @@ fn spawn_session(
     let id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
     let reader = stream.try_clone()?;
     let ctrl = stream.try_clone()?;
+    let sid = id.to_string();
+    let labels = [("session", sid.as_str())];
+    let reg = &shared.registry;
     let sess = Arc::new(SessionState {
         id,
         peer: peer.to_string(),
@@ -718,14 +885,34 @@ fn spawn_session(
         win_cv: Condvar::new(),
         alive: AtomicBool::new(true),
         resume: Mutex::new(ResumeState::default()),
-        resumes: AtomicU64::new(0),
-        frames: AtomicU64::new(0),
-        bytes_in: AtomicU64::new(0),
-        bytes_out: AtomicU64::new(0),
-        tail_nanos: AtomicU64::new(0),
+        resumes: reg.counter(
+            "sp_server_session_resumes_total",
+            "Resume adoptions per session",
+            &labels,
+        ),
+        frames: reg.counter(
+            "sp_server_session_frames_total",
+            "Tail jobs completed per session",
+            &labels,
+        ),
+        bytes_in: reg.counter(
+            "sp_server_session_uplink_bytes_total",
+            "Request bytes received per session",
+            &labels,
+        ),
+        bytes_out: reg.counter(
+            "sp_server_session_downlink_bytes_total",
+            "Reply bytes sent per session",
+            &labels,
+        ),
+        tail_nanos: reg.counter(
+            "sp_server_session_tail_nanos_total",
+            "Cumulative tail compute per session, nanoseconds",
+            &labels,
+        ),
     });
     shared.sessions.lock().unwrap().insert(id, sess.clone());
-    shared.metrics.sessions_total.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.sessions_total.inc();
     let shared = shared.clone();
     let spawned = std::thread::Builder::new()
         .name(format!("sp-server-sess-{id}"))
@@ -735,8 +922,26 @@ fn spawn_session(
         Err(e) => {
             // roll the registration back so the slot frees immediately
             shared.sessions.lock().unwrap().remove(&id);
+            unregister_session_metrics(&shared, id);
             Err(e).context("spawning session handler")
         }
+    }
+}
+
+/// Drop a finished session's per-session metrics from its server's
+/// registry. Handles still held by in-flight tail jobs keep counting;
+/// the label set just stops rendering.
+fn unregister_session_metrics(shared: &ServerShared, id: u64) {
+    let sid = id.to_string();
+    let labels = [("session", sid.as_str())];
+    for name in [
+        "sp_server_session_resumes_total",
+        "sp_server_session_frames_total",
+        "sp_server_session_uplink_bytes_total",
+        "sp_server_session_downlink_bytes_total",
+        "sp_server_session_tail_nanos_total",
+    ] {
+        shared.registry.unregister(name, &labels);
     }
 }
 
@@ -832,20 +1037,23 @@ fn adopt_session(
     *old.sock.lock().unwrap() = new_sock;
     *old.ctrl.lock().unwrap() = new_ctrl;
     old.alive.store(true, Ordering::Release);
-    old.resumes.fetch_add(1, Ordering::Relaxed);
-    shared.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+    old.resumes.inc();
+    shared.metrics.sessions_resumed.inc();
     {
         let mut sessions = shared.sessions.lock().unwrap();
         sessions.remove(&fresh.id);
         sessions.insert(old.id, old.clone());
     }
+    // the fresh connection's placeholder state is discarded: drop its
+    // per-session metrics with it
+    unregister_session_metrics(shared, fresh.id);
     let ack = Message::HelloAck { token };
     let n = wire_len(&ack);
     let mut sock = old.sock.lock().unwrap();
     write_message(&mut *sock, &ack).context("acking session resume")?;
     drop(sock);
-    old.bytes_out.fetch_add(n, Ordering::Relaxed);
-    shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+    old.bytes_out.add(n);
+    shared.metrics.bytes_out.add(n);
     Ok(old)
 }
 
@@ -873,7 +1081,7 @@ fn run_session(shared: &Arc<ServerShared>, sess: &Arc<SessionState>, reader: Tcp
                         continue; // same reader socket, adopted state
                     }
                     Err(e) => {
-                        shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.session_errors.inc();
                         eprintln!(
                             "server: session {} ({}) resume failed: {e:#}",
                             sess.id, sess.peer
@@ -888,7 +1096,7 @@ fn run_session(shared: &Arc<ServerShared>, sess: &Arc<SessionState>, reader: Tcp
                 if park_session(shared, &sess) {
                     return;
                 }
-                shared.metrics.session_errors.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.session_errors.inc();
                 eprintln!(
                     "server: session {} ({}) ended with error (others unaffected): {e:#}",
                     sess.id, sess.peer
@@ -898,6 +1106,7 @@ fn run_session(shared: &Arc<ServerShared>, sess: &Arc<SessionState>, reader: Tcp
         }
     }
     shared.sessions.lock().unwrap().remove(&sess.id);
+    unregister_session_metrics(shared, sess.id);
     // tail jobs still in flight hold the session Arc: their replies flush
     // (or are dropped if the socket died) and the window drains after us.
 }
@@ -957,8 +1166,8 @@ fn session_loop(
                 let mut sock = sess.sock.lock().unwrap();
                 write_message(&mut *sock, &ack).context("acking resumable hello")?;
                 drop(sock);
-                sess.bytes_out.fetch_add(n, Ordering::Relaxed);
-                shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+                sess.bytes_out.add(n);
+                shared.metrics.bytes_out.add(n);
             }
             Message::Hello {
                 token,
@@ -971,8 +1180,8 @@ fn session_loop(
                 let mut sock = sess.sock.lock().unwrap();
                 write_message(&mut *sock, &reply).context("writing stats reply")?;
                 drop(sock);
-                sess.bytes_out.fetch_add(n, Ordering::Relaxed);
-                shared.metrics.bytes_out.fetch_add(n, Ordering::Relaxed);
+                sess.bytes_out.add(n);
+                shared.metrics.bytes_out.add(n);
             }
             Message::Infer {
                 request_id,
@@ -980,8 +1189,8 @@ fn session_loop(
                 packet,
             } => {
                 let rx_bytes = 18 + packet.len() as u64;
-                sess.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
-                shared.metrics.bytes_in.fetch_add(rx_bytes, Ordering::Relaxed);
+                sess.bytes_in.add(rx_bytes);
+                shared.metrics.bytes_in.add(rx_bytes);
 
                 // resumable-session dedup: a retransmitted request id is
                 // never executed twice — drop it (in flight or already
@@ -1004,17 +1213,17 @@ fn session_loop(
                 match dedup {
                     Dedup::Admit => {}
                     Dedup::Drop => {
-                        shared.metrics.retransmits.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.retransmits.inc();
                         continue;
                     }
                     Dedup::Resend(reply) => {
-                        shared.metrics.retransmits.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.retransmits.inc();
                         let tx_bytes = wire_len(&reply);
                         let mut sock = sess.sock.lock().unwrap();
                         write_message(&mut *sock, &reply).context("resending ledgered reply")?;
                         drop(sock);
-                        sess.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
-                        shared.metrics.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                        sess.bytes_out.add(tx_bytes);
+                        shared.metrics.bytes_out.add(tx_bytes);
                         continue;
                     }
                 }
@@ -1023,7 +1232,7 @@ fn session_loop(
                 // queue unboundedly
                 let pending = shared.pending.load(Ordering::Acquire);
                 if pending >= shared.cfg.pending_cap {
-                    shared.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                    shared.metrics.busy_rejections.inc();
                     let reply = Message::Busy {
                         request_id,
                         pending: pending as u64,
@@ -1032,8 +1241,8 @@ fn session_loop(
                     let mut sock = sess.sock.lock().unwrap();
                     write_message(&mut *sock, &reply).context("writing busy reply")?;
                     drop(sock);
-                    sess.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
-                    shared.metrics.bytes_out.fetch_add(tx_bytes, Ordering::Relaxed);
+                    sess.bytes_out.add(tx_bytes);
+                    shared.metrics.bytes_out.add(tx_bytes);
                     continue;
                 }
 
@@ -1085,7 +1294,7 @@ fn session_loop(
                             request_id,
                             message: "server draining; resubmit".into(),
                         },
-                        &shared.metrics,
+                        shared,
                     );
                 }
             }
@@ -1100,21 +1309,15 @@ fn session_loop(
 fn dispatch_loop(shared: &Arc<ServerShared>) {
     let mut batch: Vec<TailJob> = Vec::new();
     while shared.batcher.next_batch_into(&mut batch) {
-        shared
-            .metrics
-            .queue_occupancy
-            .lock()
-            .unwrap()
-            .record(shared.batcher.pending());
-        shared.metrics.tail_batches.fetch_add(1, Ordering::Relaxed);
+        let depth = shared.batcher.pending();
+        shared.metrics.queue_occupancy.lock().unwrap().record(depth);
+        shared.metrics.queue_depth.observe(depth as f64);
+        shared.metrics.tail_batches.inc();
         let mut ids: Vec<u64> = batch.iter().map(|j| j.session.id).collect();
         ids.sort_unstable();
         ids.dedup();
         if ids.len() > 1 {
-            shared
-                .metrics
-                .multi_session_batches
-                .fetch_add(1, Ordering::Relaxed);
+            shared.metrics.multi_session_batches.inc();
         }
 
         let slots = shared.cfg.tail_slots.clamp(1, batch.len());
@@ -1156,14 +1359,15 @@ fn run_tail_job(shared: &ServerShared, job: &TailJob) {
                 request_id: job.request_id,
                 message: "server aborted".into(),
             },
-            &shared.metrics,
+            shared,
         );
         return;
     }
     let reply = match serve_infer(&shared.engine, job.head_len as usize, &job.packet) {
         Ok((server_nanos, bytes)) => {
-            job.session.tail_nanos.fetch_add(server_nanos, Ordering::Relaxed);
-            shared.metrics.tail_nanos.fetch_add(server_nanos, Ordering::Relaxed);
+            job.session.tail_nanos.add(server_nanos);
+            shared.metrics.tail_nanos.add(server_nanos);
+            shared.metrics.tail_seconds.observe(server_nanos as f64 / 1e9);
             Message::InferResult {
                 request_id: job.request_id,
                 server_nanos,
@@ -1175,9 +1379,9 @@ fn run_tail_job(shared: &ServerShared, job: &TailJob) {
             message: format!("{e:#}"),
         },
     };
-    job.session.frames.fetch_add(1, Ordering::Relaxed);
-    shared.metrics.frames.fetch_add(1, Ordering::Relaxed);
-    job.session.complete(job.seq, reply, &shared.metrics);
+    job.session.frames.inc();
+    shared.metrics.frames.inc();
+    job.session.complete(job.seq, reply, shared);
 }
 
 /// Periodic stderr heartbeat (opt-in via `ServerConfig::stats_interval`).

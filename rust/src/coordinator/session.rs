@@ -63,6 +63,10 @@ use crate::pointcloud::{Frame, FrameSource, PointCloud, RecordingSource, ReplayS
 use crate::postprocess::Detection;
 use crate::runtime::simd::SimdMode;
 use crate::runtime::XlaRuntime;
+use crate::telemetry::{
+    self,
+    sla::{SlaEvaluator, SlaSpec, SlaVerdict},
+};
 
 /// Upper bound on frames between policy re-evaluations, whatever the
 /// policy's own `interval()` asks for — bounds how long a stale split
@@ -92,6 +96,11 @@ const FEED_AHEAD: usize = 4;
 /// every frame on the virtual clock), never pay this: their streams stay
 /// continuously pipelined.
 const RESAMPLE_BOUNDARIES: usize = 4;
+
+/// How far above the configured two-leg RTT the measured RTT must sit
+/// before [`Adaptive`] treats the link as degraded and starts preferring
+/// smaller-uplink splits (in addition to any breached SLA objective).
+const DEGRADED_RTT_FACTOR: f64 = 4.0;
 
 // ------------------------------------------------------------ transports
 
@@ -622,6 +631,10 @@ pub struct PolicyContext<'a> {
     /// link-resilience telemetry from [`Transport::link_health`]: retries,
     /// reconnects, backoff/stall time, smoothed RTT
     pub health: LinkHealth,
+    /// declared SLA objectives' verdict at this boundary
+    /// ([`SlaEvaluator`]); empty when the session declared none — policies
+    /// see *objective pressure*, not just raw link samples
+    pub sla: SlaVerdict,
 }
 
 /// Decides the split point for each segment of the stream.
@@ -772,6 +785,30 @@ impl SplitPolicy for Adaptive {
         let costs = self.cached_costs.as_ref().expect("profiled above");
         let estimates = adaptive::price_splits(costs, &link);
         let best = adaptive::best_estimate(&estimates, self.objective);
+        // degraded-link preference: while an SLA objective is breached or
+        // the measured RTT sits well above the configured link's, prefer
+        // the smallest-uplink split among those within the hysteresis band
+        // of the optimum — shipping fewer bytes is the edge's only lever
+        // against a sick wire, and inside the band the cost difference is
+        // below the threshold the policy considers meaningful anyway
+        let baseline_rtt = (2.0 * ctx.engine.link().config().rtt_one_way).max(1e-3);
+        let rtt_inflated = ctx
+            .health
+            .rtt
+            .is_some_and(|rtt| rtt.as_secs_f64() > DEGRADED_RTT_FACTOR * baseline_rtt);
+        let degraded = ctx.sla.any_breached() || rtt_inflated;
+        let best = if degraded {
+            let band = SimTime::from_secs_f64(
+                self.objective.cost(best).as_secs_f64() * (1.0 + self.hysteresis),
+            );
+            estimates
+                .iter()
+                .filter(|e| self.objective.cost(e) <= band)
+                .min_by_key(|e| (e.uplink_bytes, self.objective.cost(e)))
+                .unwrap_or(best)
+        } else {
+            best
+        };
         let best_ms = self.objective.cost(best).as_secs_f64() * 1e3;
         let bw = match ctx.bandwidth_bps {
             Some(bps) if bps > 0.0 => format!("{:.2} MB/s measured", bps / 1e6),
@@ -843,6 +880,16 @@ impl SplitPolicy for Adaptive {
             self.evals_since_switch = 0;
         } else {
             self.evals_since_switch = self.evals_since_switch.saturating_add(1);
+        }
+        if degraded {
+            let cause = if ctx.sla.any_breached() {
+                "SLA breached"
+            } else {
+                "RTT inflated"
+            };
+            self.last_explain.push_str(&format!(
+                " [degraded ({cause}): preferring smallest uplink within the hysteresis band]"
+            ));
         }
         if !ctx.health.is_clean() {
             // surface the fault telemetry the decision was made under —
@@ -933,6 +980,9 @@ pub struct SessionReport {
     /// link-resilience telemetry at end of stream (all-zero on a clean
     /// link or a linkless transport)
     pub link_health: LinkHealth,
+    /// declared SLA objectives' final verdict; `None` when the session
+    /// declared none ([`SplitSessionBuilder::sla_specs`])
+    pub sla: Option<SlaVerdict>,
 }
 
 impl SessionReport {
@@ -952,6 +1002,16 @@ impl SessionReport {
             );
         }
         Some(s)
+    }
+
+    /// Render the process-wide telemetry registry in Prometheus text
+    /// exposition format — the offline analogue of `serve-server
+    /// --metrics-addr`'s `/metrics` endpoint. The session's frame/byte
+    /// counters, per-stage latency histograms, link health, and SLA state
+    /// all report into [`telemetry::global`], so this is the whole run's
+    /// telemetry in one scrape-shaped string.
+    pub fn prometheus(&self) -> String {
+        telemetry::global().render()
     }
 
     /// Wire bytes saved by the v2 delta framing, as a fraction of v1.
@@ -1024,6 +1084,42 @@ pub struct SplitSession {
     policy: Box<dyn SplitPolicy>,
     pipe: PipelineConfig,
     frames_done: u64,
+    telemetry: SessionTelemetry,
+}
+
+/// The session's pre-interned [`telemetry::global`] handles plus the
+/// optional SLA evaluator — registered once at build time, so the
+/// per-frame cost is relaxed atomic adds (plus plain field adds for the
+/// SLA window) on the delivery path.
+struct SessionTelemetry {
+    frames: Arc<telemetry::Counter>,
+    uplink_bytes: Arc<telemetry::Counter>,
+    uplink_v1_bytes: Arc<telemetry::Counter>,
+    sla: Option<SlaEvaluator>,
+}
+
+impl SessionTelemetry {
+    fn new(sla_specs: Vec<SlaSpec>) -> SessionTelemetry {
+        let reg = telemetry::global();
+        SessionTelemetry {
+            frames: reg.counter(
+                "sp_session_frames_total",
+                "Frames delivered by the client session.",
+                &[],
+            ),
+            uplink_bytes: reg.counter(
+                "sp_session_uplink_bytes_total",
+                "Uplink bytes actually shipped (wire v2).",
+                &[],
+            ),
+            uplink_v1_bytes: reg.counter(
+                "sp_session_uplink_v1_bytes_total",
+                "What the same stream would have cost under the v1 framing.",
+                &[],
+            ),
+            sla: (!sla_specs.is_empty()).then(|| SlaEvaluator::new(sla_specs, reg)),
+        }
+    }
 }
 
 impl SplitSession {
@@ -1059,6 +1155,12 @@ impl SplitSession {
         let mut report = SessionReport::default();
         let run_res = self.run_loop(&mut on_frame, &mut report);
         report.link_health = self.transport.link_health();
+        // final SLA evaluation over whatever window remains, then publish
+        // the link + runtime totals into the process-wide registry
+        if let Some(sla) = self.telemetry.sla.as_mut() {
+            report.sla = Some(sla.evaluate(&report.link_health));
+        }
+        publish_global_telemetry(self.engine.as_ref(), &report.link_health);
         let close_res = self.transport.close();
         report.transport_report = self.transport.report();
         report.bandwidth_bps = self.transport.bandwidth_bps();
@@ -1094,6 +1196,7 @@ impl SplitSession {
         let transport = &mut self.transport;
         let policy = &mut self.policy;
         let frames_done = &mut self.frames_done;
+        let telem = &mut self.telemetry;
 
         std::thread::scope(|s| -> Result<()> {
             // the channel lives inside the scope body: when the main loop
@@ -1144,11 +1247,19 @@ impl SplitSession {
                                 &mut **transport,
                                 &mut pending,
                                 frames_done,
+                                telem,
                                 report,
                                 on_frame,
                             )?;
                         }
                     }
+                    let health = transport.link_health();
+                    // fold the frames since the last boundary into the SLA
+                    // verdict the policy sees alongside raw link health
+                    let sla = match telem.sla.as_mut() {
+                        Some(s) => s.evaluate(&health),
+                        None => SlaVerdict::default(),
+                    };
                     let ctx = PolicyContext {
                         engine: &*engine,
                         cloud: &frame.cloud,
@@ -1156,7 +1267,8 @@ impl SplitSession {
                         bandwidth_bps: transport.bandwidth_bps(),
                         current: current_sp,
                         in_flight: transport.in_flight(),
-                        health: transport.link_health(),
+                        health,
+                        sla,
                     };
                     let sp = policy.choose(&ctx)?;
                     if current_sp.is_some_and(|c| c != sp) {
@@ -1168,6 +1280,7 @@ impl SplitSession {
                                 &mut **transport,
                                 &mut pending,
                                 frames_done,
+                                telem,
                                 report,
                                 on_frame,
                             )?;
@@ -1195,6 +1308,7 @@ impl SplitSession {
                         &mut **transport,
                         &mut pending,
                         frames_done,
+                        telem,
                         report,
                         on_frame,
                     )?;
@@ -1221,6 +1335,7 @@ impl SplitSession {
                     &mut **transport,
                     &mut pending,
                     frames_done,
+                    telem,
                     report,
                     on_frame,
                 )?;
@@ -1250,12 +1365,13 @@ struct PendingMeta {
 }
 
 /// Deliver the transport's next completed frame to `on_frame`, folding it
-/// into the running report.
+/// into the running report, the registry counters, and the SLA window.
 fn deliver_one(
     engine: &Arc<Engine>,
     transport: &mut dyn Transport,
     pending: &mut VecDeque<PendingMeta>,
     frames_done: &mut u64,
+    telem: &mut SessionTelemetry,
     report: &mut SessionReport,
     on_frame: &mut dyn FnMut(SessionFrame),
 ) -> Result<()> {
@@ -1266,6 +1382,16 @@ fn deliver_one(
     report.uplink_bytes += output.uplink_bytes;
     report.uplink_v1_bytes += output.uplink_v1_bytes;
     report.frames += 1;
+    telem.frames.inc();
+    telem.uplink_bytes.add(output.uplink_bytes as u64);
+    telem.uplink_v1_bytes.add(output.uplink_v1_bytes as u64);
+    if let Some(sla) = telem.sla.as_mut() {
+        sla.observe_frame(
+            output.inference_time.as_secs_f64(),
+            output.uplink_bytes as u64,
+            output.edge_time.as_secs_f64(),
+        );
+    }
     *report.sensor_usage.entry(meta.sensor_id).or_default() += 1;
     on_frame(SessionFrame {
         seq: *frames_done,
@@ -1278,6 +1404,68 @@ fn deliver_one(
     });
     *frames_done += 1;
     Ok(())
+}
+
+/// Publish end-of-run link and runtime telemetry into
+/// [`telemetry::global`]. Counters merge monotonically
+/// ([`telemetry::Counter::merge_total`]) so repeated sessions in one
+/// process never double-count an externally-accumulated total; gauges are
+/// last-value by nature.
+fn publish_global_telemetry(engine: &Engine, health: &LinkHealth) {
+    let reg = telemetry::global();
+    reg.counter(
+        "sp_link_retries_total",
+        "Busy rejections retried after backoff.",
+        &[],
+    )
+    .merge_total(health.retries);
+    reg.counter(
+        "sp_link_reconnects_total",
+        "Transparent reconnect + session-resume cycles.",
+        &[],
+    )
+    .merge_total(health.reconnects);
+    reg.gauge(
+        "sp_link_backoff_seconds",
+        "Total time spent sleeping in retry/reconnect backoff.",
+        &[],
+    )
+    .set(health.backoff_time.as_secs_f64());
+    reg.gauge(
+        "sp_link_stall_seconds",
+        "Injected stall time, when a fault profile is in the path.",
+        &[],
+    )
+    .set(health.stall_time.as_secs_f64());
+    if let Some(rtt) = health.rtt {
+        reg.gauge(
+            "sp_link_rtt_seconds",
+            "Smoothed measured round-trip time over queue-free frames.",
+            &[],
+        )
+        .set(rtt.as_secs_f64());
+    }
+    let (seen, skipped) = engine.runtime().tap_stats();
+    reg.counter(
+        "sp_runtime_taps_seen_total",
+        "Gather taps inspected by the sparse kernels.",
+        &[],
+    )
+    .merge_total(seen);
+    reg.counter(
+        "sp_runtime_taps_skipped_total",
+        "Gather taps skipped via per-tap occupancy masks.",
+        &[],
+    )
+    .merge_total(skipped);
+    reg.gauge("sp_runtime_threads", "Kernel pool threads.", &[])
+        .set(engine.runtime().threads() as f64);
+    reg.gauge(
+        "sp_runtime_dispatch_info",
+        "Active SIMD dispatch tier (value is always 1).",
+        &[("dispatch", engine.runtime().simd_dispatch())],
+    )
+    .set(1.0);
 }
 
 // --------------------------------------------------------------- builder
@@ -1305,6 +1493,7 @@ pub struct SplitSessionBuilder {
     retry_max: Option<u32>,
     resume: bool,
     fault: Option<(FaultProfile, u64)>,
+    sla: Vec<SlaSpec>,
 }
 
 impl Default for SplitSessionBuilder {
@@ -1334,6 +1523,7 @@ impl SplitSessionBuilder {
             retry_max: None,
             resume: false,
             fault: None,
+            sla: Vec::new(),
         }
     }
 
@@ -1469,6 +1659,16 @@ impl SplitSessionBuilder {
         self
     }
 
+    /// Declare SLA objectives (the `--sla` flag; parse a CSV spec with
+    /// [`crate::telemetry::sla::parse_specs`]). They are evaluated at
+    /// every policy boundary, surfaced to the policy through
+    /// `PolicyContext::sla`, exported as `sp_sla_*` metrics, and reported
+    /// in [`SessionReport::sla`]. Default: none.
+    pub fn sla_specs(mut self, specs: Vec<SlaSpec>) -> Self {
+        self.sla = specs;
+        self
+    }
+
     /// Split policy (any [`SplitPolicy`]). Default: [`Fixed`] at the
     /// config's split.
     pub fn policy(mut self, policy: Box<dyn SplitPolicy>) -> Self {
@@ -1574,6 +1774,7 @@ impl SplitSessionBuilder {
         if let Some((profile, seed)) = self.fault.take() {
             transport = Box::new(FaultTransport::new(transport, profile, seed));
         }
+        let telemetry = SessionTelemetry::new(std::mem::take(&mut self.sla));
         Ok(SplitSession {
             engine,
             source,
@@ -1584,6 +1785,7 @@ impl SplitSessionBuilder {
                 tail_workers: self.tail_workers,
             },
             frames_done: 0,
+            telemetry,
         })
     }
 
@@ -1635,6 +1837,18 @@ impl ServerSession {
     /// Point-in-time server metrics.
     pub fn stats(&self) -> ServerStats {
         self.server.stats()
+    }
+
+    /// The metrics endpoint's bound address, when one was configured
+    /// ([`ServerSessionBuilder::metrics_addr`]).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.server.metrics_addr()
+    }
+
+    /// This server's per-instance metric registry (the one the `/metrics`
+    /// endpoint renders).
+    pub fn registry(&self) -> Arc<telemetry::Registry> {
+        self.server.registry()
     }
 
     /// Graceful drain (see [`Server::shutdown`]).
@@ -1759,6 +1973,22 @@ impl ServerSessionBuilder {
     /// [`ServerConfig::stats_interval`]); zero disables it.
     pub fn stats_interval(mut self, d: Duration) -> Self {
         self.cfg.stats_interval = (!d.is_zero()).then_some(d);
+        self
+    }
+
+    /// Serve this server's metric registry as a Prometheus `/metrics`
+    /// endpoint at `addr` (see [`ServerConfig::metrics_addr`]; port 0
+    /// picks a free one, readable back through
+    /// [`ServerSession::metrics_addr`]).
+    pub fn metrics_addr(mut self, addr: &str) -> Self {
+        self.cfg.metrics_addr = Some(addr.to_string());
+        self
+    }
+
+    /// Per-session resume-ledger size bound (see
+    /// [`ServerConfig::resume_ledger_cap`]).
+    pub fn resume_ledger_cap(mut self, n: usize) -> Self {
+        self.cfg.resume_ledger_cap = n.max(1);
         self
     }
 

@@ -27,6 +27,7 @@ pub mod model;
 pub mod pointcloud;
 pub mod postprocess;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod testing;
 pub mod util;

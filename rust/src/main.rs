@@ -58,6 +58,7 @@ fn cli() -> Cli {
             OptSpec { name: "report", value: None, help: "print the per-segment policy-decision table after the stream" },
             OptSpec { name: "fault", value: Some("profile"), help: "wrap the transport in a seeded link-fault injector: clean | jitter | bandwidth-step | stall | disconnect (default off)" },
             OptSpec { name: "fault-seed", value: Some("n"), help: "fault-schedule seed; same seed = same schedule (default 1)" },
+            OptSpec { name: "sla", value: Some("spec"), help: "SLA objectives, comma-separated kind=threshold: latency-bound=<secs> | bytes-bound=<bytes/frame> | edge-power-bound=<secs> (default none)" },
         ]
     };
     Cli {
@@ -89,13 +90,15 @@ fn cli() -> Cli {
                     OptSpec { name: "batch-frames", value: Some("n"), help: "max frames coalesced into one tail dispatch (default 8)" },
                     OptSpec { name: "drain-timeout", value: Some("secs"), help: "graceful-drain deadline on shutdown (default 10)" },
                     OptSpec { name: "stats-every", value: Some("secs"), help: "periodic stderr metrics summary; 0 = off (default 30)" },
+                    OptSpec { name: "metrics-addr", value: Some("addr"), help: "serve Prometheus text metrics over HTTP at this address (default off)" },
                 ],
             },
             CommandSpec {
                 name: "server-stats",
                 help: "fetch a running serve-server's metrics snapshot",
                 opts: vec![
-                    OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070)" },
+                    OptSpec { name: "connect", value: Some("addr"), help: "server address (default 127.0.0.1:7070); with --prom, the server's --metrics-addr" },
+                    OptSpec { name: "prom", value: None, help: "scrape the Prometheus /metrics endpoint instead of the protocol Stats snapshot" },
                 ],
             },
             CommandSpec {
@@ -210,6 +213,9 @@ fn build_session(
         let seed: u64 = args.get_parse("fault-seed")?.unwrap_or(1);
         b = b.fault(FaultProfile::parse(profile)?, seed);
     }
+    if let Some(spec) = args.get("sla") {
+        b = b.sla_specs(splitpoint::telemetry::sla::parse_specs(spec)?);
+    }
     b.build()
 }
 
@@ -289,6 +295,9 @@ fn print_session_tail(report: &SessionReport, show_segments: bool) {
     }
     if let Some(md) = &report.transport_report {
         println!("\n{md}");
+    }
+    if let Some(sla) = &report.sla {
+        println!("\n{}", sla.line());
     }
 }
 
@@ -477,11 +486,17 @@ fn cmd_serve_server(args: &Args) -> Result<()> {
     }
     let stats_every: u64 = args.get_parse("stats-every")?.unwrap_or(30);
     b = b.stats_interval(std::time::Duration::from_secs(stats_every));
+    if let Some(addr) = args.get("metrics-addr") {
+        b = b.metrics_addr(addr);
+    }
     let server = b.build()?;
     println!(
         "edge-server listening on {} (tail-role engine, concurrent sessions)",
         server.addr()
     );
+    if let Some(addr) = server.metrics_addr() {
+        println!("metrics: http://{addr}/metrics (Prometheus text 0.0.4)");
+    }
     println!("Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -490,7 +505,11 @@ fn cmd_serve_server(args: &Args) -> Result<()> {
 
 fn cmd_server_stats(args: &Args) -> Result<()> {
     let addr = args.get_or("connect", "127.0.0.1:7070");
-    print!("{}", fetch_stats(addr)?);
+    if args.has("prom") {
+        print!("{}", splitpoint::telemetry::scrape(addr)?);
+    } else {
+        print!("{}", fetch_stats(addr)?);
+    }
     Ok(())
 }
 

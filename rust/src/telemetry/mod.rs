@@ -1,0 +1,601 @@
+//! Process-wide telemetry plane: stable-named metrics, a Prometheus
+//! text-format exporter, and declarative SLA objectives ([`sla`]).
+//!
+//! The paper's whole contribution is a latency/bytes/edge-power
+//! trade-off; operating a split system (rather than benchmarking it)
+//! needs that trade-off observable continuously. This module is the
+//! registry every layer reports through:
+//!
+//! * [`Counter`] / [`Gauge`] are single relaxed `AtomicU64` cells;
+//! * [`Histogram`] is a fixed-bucket distribution (the shape of
+//!   [`crate::metrics::OccupancyHist`], generalized to f64 bounds);
+//! * [`Registry`] interns `(name, labels)` once at registration and
+//!   hands back an `Arc` handle — the hot path is a single relaxed
+//!   atomic op, zero alloc, zero lock, so instrumented code stays
+//!   bitwise-identical in output and unmeasurable in cost;
+//! * [`Registry::render`] emits Prometheus text exposition format 0.0.4,
+//!   served over HTTP by [`MetricsServer`] (`serve-server
+//!   --metrics-addr`) and scraped by [`scrape`] (`server-stats --prom`).
+//!
+//! Metric names are a **compatibility surface**: dashboards and the CI
+//! soak gate grep for them. The full stable-name table lives in
+//! `docs/METRICS.md`; rename a metric only with a deprecation note
+//! there.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+pub mod sla;
+
+// ------------------------------------------------------------ instruments
+
+/// Monotonic counter: one relaxed `AtomicU64`.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Raise the counter to `total` if it is below it (monotonic merge,
+    /// via `fetch_max`). For syncing an externally-accumulated cumulative
+    /// total (e.g. [`LinkHealth`](crate::coordinator::fault::LinkHealth)
+    /// counters) into the registry without double-counting.
+    pub fn merge_total(&self, total: u64) {
+        self.0.fetch_max(total, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge: an f64 stored as its bit pattern in an `AtomicU64`.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: per-bucket relaxed counters plus a count and a
+/// fixed-point sum (micro-units), so rendering is deterministic — the
+/// same observations always produce the same text.
+///
+/// Bucket `i` counts observations `v <= bounds[i]`; one extra implicit
+/// `+Inf` bucket catches the rest (rendered cumulatively, per the
+/// Prometheus histogram convention).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// sum of observations in micro-units (`round(v * 1e6)`), kept in
+    /// fixed point so concurrent observers never lose precision races
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut buckets = Vec::with_capacity(bounds.len() + 1);
+        for _ in 0..=bounds.len() {
+            buckets.push(AtomicU64::new(0));
+        }
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation: three relaxed atomic adds, no lock.
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let micros = (v.max(0.0) * 1e6).round() as u64;
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Default latency bucket bounds (seconds), 0.5 ms – 10 s.
+pub fn latency_buckets() -> Vec<f64> {
+    vec![
+        0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+    ]
+}
+
+/// Default queue-depth bucket bounds — the power-of-two shape of
+/// [`crate::metrics::OccupancyHist`].
+pub fn depth_buckets() -> Vec<f64> {
+    vec![0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0]
+}
+
+// ------------------------------------------------------------ registry
+
+/// What a metric family is, for the `# TYPE` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    /// label-string → instrument, sorted so rendering is deterministic
+    metrics: BTreeMap<String, Handle>,
+}
+
+/// A collector runs just before rendering, pulling lazy values (live
+/// gauges, externally-accumulated totals) into registered instruments.
+type Collector = Arc<dyn Fn() + Send + Sync>;
+
+/// Registry of stable-named metrics. `(name, sorted labels)` is interned
+/// once at registration; repeated registration of the same pair returns
+/// the same handle, so call sites never need to coordinate.
+///
+/// One process-wide instance lives behind [`global`]; the concurrent
+/// split server keeps its own per-instance registry (so two servers in
+/// one test process cannot mix counters).
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let families = self.families.lock().unwrap();
+        f.debug_struct("Registry")
+            .field("families", &families.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Render one label set as `key="value",…` (no braces), escaping the
+/// characters the exposition format requires.
+fn label_string(labels: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+    pairs.sort_unstable();
+    let mut out = String::new();
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            families: Mutex::new(BTreeMap::new()),
+            collectors: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn intern(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Handle,
+    ) -> Handle {
+        let mut families = self.families.lock().unwrap();
+        let family = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            metrics: BTreeMap::new(),
+        });
+        if family.kind != kind {
+            // kind clash: hand back a detached instrument instead of
+            // panicking — the misnamed metric simply never renders
+            return make();
+        }
+        family
+            .metrics
+            .entry(label_string(labels))
+            .or_insert_with(make)
+            .clone()
+    }
+
+    /// Get-or-register a counter. Same `(name, labels)` → same handle.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let h = self.intern(name, help, MetricKind::Counter, labels, || {
+            Handle::Counter(Arc::new(Counter::default()))
+        });
+        match h {
+            Handle::Counter(c) => c,
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    /// Get-or-register a gauge. Same `(name, labels)` → same handle.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let h = self.intern(name, help, MetricKind::Gauge, labels, || {
+            Handle::Gauge(Arc::new(Gauge::default()))
+        });
+        match h {
+            Handle::Gauge(g) => g,
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    /// Get-or-register a histogram with explicit bucket bounds. Same
+    /// `(name, labels)` → same handle (the first registration's bounds
+    /// win).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        let h = self.intern(name, help, MetricKind::Histogram, labels, || {
+            Handle::Histogram(Arc::new(Histogram::new(bounds)))
+        });
+        match h {
+            Handle::Histogram(hist) => hist,
+            _ => Arc::new(Histogram::new(bounds)),
+        }
+    }
+
+    /// Drop one `(name, labels)` instrument (e.g. a finished session's
+    /// per-session counters). Handles already held keep working; the
+    /// metric just stops rendering.
+    pub fn unregister(&self, name: &str, labels: &[(&str, &str)]) {
+        let mut families = self.families.lock().unwrap();
+        if let Some(family) = families.get_mut(name) {
+            family.metrics.remove(&label_string(labels));
+            if family.metrics.is_empty() {
+                families.remove(name);
+            }
+        }
+    }
+
+    /// Register a pre-render hook (see [`Collector`]). Collectors run
+    /// outside the registry lock, so they may register and update
+    /// instruments freely.
+    pub fn register_collector(&self, f: impl Fn() + Send + Sync + 'static) {
+        self.collectors.lock().unwrap().push(Arc::new(f));
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// 0.0.4. Deterministic: families and label sets render sorted, and
+    /// every value has a canonical formatting (see the golden test).
+    pub fn render(&self) -> String {
+        // run collectors without holding the families lock — they update
+        // (and may register) instruments
+        let collectors: Vec<Collector> = self.collectors.lock().unwrap().clone();
+        for c in &collectors {
+            c();
+        }
+        let families = self.families.lock().unwrap();
+        let mut out = String::new();
+        use std::fmt::Write as _;
+        for (name, family) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", family.help);
+            let _ = writeln!(out, "# TYPE {name} {}", family.kind.as_str());
+            for (labels, handle) in &family.metrics {
+                match handle {
+                    Handle::Counter(c) => {
+                        let _ = writeln!(out, "{name}{} {}", braced(labels), c.get());
+                    }
+                    Handle::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{} {}", braced(labels), g.get());
+                    }
+                    Handle::Histogram(h) => {
+                        let mut cum = 0u64;
+                        for (i, bound) in h.bounds.iter().enumerate() {
+                            cum += h.buckets[i].load(Ordering::Relaxed);
+                            let le = join_labels(labels, &format!("le=\"{bound}\""));
+                            let _ = writeln!(out, "{name}_bucket{{{le}}} {cum}");
+                        }
+                        cum += h.buckets[h.bounds.len()].load(Ordering::Relaxed);
+                        let le = join_labels(labels, "le=\"+Inf\"");
+                        let _ = writeln!(out, "{name}_bucket{{{le}}} {cum}");
+                        let _ = writeln!(out, "{name}_sum{} {}", braced(labels), h.sum());
+                        let _ = writeln!(out, "{name}_count{} {}", braced(labels), h.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `a="b"` → `{a="b"}`; empty label string → nothing.
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+/// Join a label string with one extra pair (the histogram `le` label).
+fn join_labels(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        extra.to_string()
+    } else {
+        format!("{labels},{extra}")
+    }
+}
+
+/// The process-wide registry: client/session/pipeline/runtime metrics
+/// report here, and [`SessionReport::prometheus`]
+/// (crate::coordinator::session::SessionReport) renders it for offline
+/// runs.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ------------------------------------------------------------ HTTP export
+
+/// Tiny blocking `/metrics` endpoint: one listener thread, one request
+/// per connection, Prometheus text format. This is deliberately not a
+/// web server — it answers every request with the rendered registry and
+/// closes, which is exactly what a scraper needs.
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` and serve `registry` until [`MetricsServer::shutdown`]
+    /// (or drop).
+    pub fn spawn(addr: &str, registry: Arc<Registry>) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("sp-metrics-http".into())
+            .spawn(move || {
+                while !thread_stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                            // best-effort read of the request line; any
+                            // request gets the same answer
+                            let mut buf = [0u8; 1024];
+                            let _ = stream.read(&mut buf);
+                            let body = registry.render();
+                            let resp = format!(
+                                "HTTP/1.1 200 OK\r\n\
+                                 Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+                                 Content-Length: {}\r\n\
+                                 Connection: close\r\n\r\n{body}",
+                                body.len(),
+                            );
+                            let _ = stream.write_all(resp.as_bytes());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and join it. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Fetch a [`MetricsServer`]'s rendered registry over HTTP (the client
+/// half of `server-stats --prom`).
+pub fn scrape<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(&addr).with_context(|| format!("connecting metrics endpoint {addr:?}"))?;
+    let req = format!("GET /metrics HTTP/1.1\r\nHost: {addr:?}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response from metrics endpoint")?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        bail!("metrics endpoint answered '{status}'");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "help", &[("k", "v")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same (name, labels) → same cell
+        let c2 = reg.counter("t_total", "help", &[("k", "v")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        // different labels → different cell
+        let c3 = reg.counter("t_total", "help", &[("k", "w")]);
+        assert_eq!(c3.get(), 0);
+
+        let g = reg.gauge("t_gauge", "help", &[]);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn merge_total_is_monotonic() {
+        let c = Counter::default();
+        c.merge_total(10);
+        c.merge_total(7); // stale snapshot: no effect
+        assert_eq!(c.get(), 10);
+        c.merge_total(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_lat", "help", &[], &[0.01, 0.1, 1.0]);
+        h.observe(0.005);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = reg.render();
+        assert!(text.contains("t_lat_bucket{le=\"0.01\"} 1"));
+        assert!(text.contains("t_lat_bucket{le=\"0.1\"} 2"));
+        assert!(text.contains("t_lat_bucket{le=\"1\"} 3"));
+        assert!(text.contains("t_lat_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("t_lat_count 4"));
+        assert!(text.contains("t_lat_sum 5.555"));
+    }
+
+    #[test]
+    fn kind_clash_returns_detached_handle() {
+        let reg = Registry::new();
+        let c = reg.counter("t_thing", "help", &[]);
+        c.inc();
+        // a gauge under the same name must not corrupt the counter
+        let g = reg.gauge("t_thing", "help", &[]);
+        g.set(9.0);
+        assert_eq!(c.get(), 1);
+        assert!(reg.render().contains("t_thing 1"));
+    }
+
+    #[test]
+    fn unregister_removes_one_label_set() {
+        let reg = Registry::new();
+        reg.counter("t_total", "help", &[("session", "1")]).inc();
+        reg.counter("t_total", "help", &[("session", "2")]).inc();
+        reg.unregister("t_total", &[("session", "1")]);
+        let text = reg.render();
+        assert!(!text.contains("session=\"1\""));
+        assert!(text.contains("session=\"2\""));
+    }
+
+    #[test]
+    fn collectors_run_before_render() {
+        let reg = Arc::new(Registry::new());
+        let g = reg.gauge("t_live", "help", &[]);
+        let src = Arc::new(AtomicU64::new(0));
+        let src2 = src.clone();
+        reg.register_collector(move || g.set(src2.load(Ordering::Relaxed) as f64));
+        src.store(7, Ordering::Relaxed);
+        assert!(reg.render().contains("t_live 7"));
+    }
+
+    #[test]
+    fn labels_render_sorted_and_escaped() {
+        let reg = Registry::new();
+        reg.counter("t_total", "help", &[("z", "a\"b\\c"), ("a", "x")])
+            .inc();
+        let text = reg.render();
+        assert!(text.contains("t_total{a=\"x\",z=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn http_endpoint_serves_render() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("t_http_total", "help", &[]).add(3);
+        let mut srv = MetricsServer::spawn("127.0.0.1:0", reg).expect("spawn metrics server");
+        let body = scrape(srv.addr()).expect("scrape");
+        assert!(body.contains("# TYPE t_http_total counter"));
+        assert!(body.contains("t_http_total 3"));
+        srv.shutdown();
+    }
+}

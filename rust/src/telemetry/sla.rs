@@ -1,0 +1,366 @@
+//! Declarative SLA objectives over the live metrics.
+//!
+//! The paper's three axes — inference latency, uplink bytes, edge
+//! compute (the power proxy) — become three declarative objectives:
+//!
+//! * `latency-bound=<secs>` — mean per-frame inference time (floored by
+//!   the measured link RTT: a frame can never beat the wire);
+//! * `bytes-bound=<bytes>` — mean per-frame uplink bytes;
+//! * `edge-power-bound=<secs>` — mean per-frame edge compute time.
+//!
+//! An [`SlaEvaluator`] accumulates per-frame samples
+//! ([`SlaEvaluator::observe_frame`]) and is evaluated periodically
+//! (segment boundaries in a session) against the window plus the link's
+//! [`LinkHealth`]. Breach state is exported as metrics
+//! (`sp_sla_value` / `sp_sla_threshold` / `sp_sla_breached` /
+//! `sp_sla_breaches_total`, labeled `objective=<name>`) and surfaced to
+//! split policies through `PolicyContext::sla`, so a policy sees
+//! *objective pressure*, not just raw link samples.
+
+use anyhow::{bail, Result};
+
+use super::{Counter, Gauge, Registry};
+use crate::coordinator::fault::LinkHealth;
+
+use std::sync::Arc;
+
+/// Which axis an objective bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlaKind {
+    /// Mean per-frame inference latency, seconds.
+    LatencyBound,
+    /// Mean per-frame uplink, bytes.
+    BytesBound,
+    /// Mean per-frame edge compute, seconds (the paper's power proxy).
+    EdgePowerBound,
+}
+
+impl SlaKind {
+    pub const ALL: [SlaKind; 3] = [
+        SlaKind::LatencyBound,
+        SlaKind::BytesBound,
+        SlaKind::EdgePowerBound,
+    ];
+
+    /// Stable objective name (the `objective` label value).
+    pub fn name(self) -> &'static str {
+        match self {
+            SlaKind::LatencyBound => "latency-bound",
+            SlaKind::BytesBound => "bytes-bound",
+            SlaKind::EdgePowerBound => "edge-power-bound",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SlaKind> {
+        match s {
+            "latency-bound" => Ok(SlaKind::LatencyBound),
+            "bytes-bound" => Ok(SlaKind::BytesBound),
+            "edge-power-bound" => Ok(SlaKind::EdgePowerBound),
+            other => bail!(
+                "unknown SLA objective '{other}' \
+                 (want latency-bound, bytes-bound, or edge-power-bound)"
+            ),
+        }
+    }
+}
+
+/// One declared objective: a kind and its threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaSpec {
+    pub kind: SlaKind,
+    pub threshold: f64,
+}
+
+impl SlaSpec {
+    /// Parse `kind=threshold`, e.g. `latency-bound=0.25`.
+    pub fn parse(s: &str) -> Result<SlaSpec> {
+        let (kind, value) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("SLA spec '{s}' is not 'objective=threshold'"))?;
+        let threshold: f64 = value
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("SLA threshold '{value}' is not a number"))?;
+        if !threshold.is_finite() || threshold <= 0.0 {
+            bail!("SLA threshold must be finite and positive, got {threshold}");
+        }
+        Ok(SlaSpec {
+            kind: SlaKind::parse(kind.trim())?,
+            threshold,
+        })
+    }
+}
+
+/// Parse a comma-separated objective list (the `--sla` flag):
+/// `latency-bound=0.25,bytes-bound=500000`.
+pub fn parse_specs(csv: &str) -> Result<Vec<SlaSpec>> {
+    csv.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(SlaSpec::parse)
+        .collect()
+}
+
+/// One objective's state at the last evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaStatus {
+    pub kind: SlaKind,
+    /// Windowed value at the last evaluation.
+    pub value: f64,
+    pub threshold: f64,
+    pub breached: bool,
+}
+
+/// Every declared objective's last-evaluated state; what policies see in
+/// `PolicyContext::sla` and what `run --report` prints.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SlaVerdict {
+    pub statuses: Vec<SlaStatus>,
+}
+
+impl SlaVerdict {
+    pub fn is_empty(&self) -> bool {
+        self.statuses.is_empty()
+    }
+
+    /// True when any declared objective is currently breached.
+    pub fn any_breached(&self) -> bool {
+        self.statuses.iter().any(|s| s.breached)
+    }
+
+    /// One deterministic summary line, e.g.
+    /// `sla: latency-bound ok (0.0123 vs 0.2500) | bytes-bound BREACHED
+    /// (712340 vs 500000)`.
+    pub fn line(&self) -> String {
+        if self.statuses.is_empty() {
+            return "sla: no objectives declared".to_string();
+        }
+        let parts: Vec<String> = self
+            .statuses
+            .iter()
+            .map(|s| {
+                let state = if s.breached { "BREACHED" } else { "ok" };
+                match s.kind {
+                    SlaKind::BytesBound => format!(
+                        "{} {state} ({:.0} vs {:.0})",
+                        s.kind.name(),
+                        s.value,
+                        s.threshold
+                    ),
+                    _ => format!(
+                        "{} {state} ({:.4} vs {:.4})",
+                        s.kind.name(),
+                        s.value,
+                        s.threshold
+                    ),
+                }
+            })
+            .collect();
+        format!("sla: {}", parts.join(" | "))
+    }
+}
+
+/// Per-objective registry exports.
+struct SlaExport {
+    value: Arc<Gauge>,
+    breached: Arc<Gauge>,
+    breaches_total: Arc<Counter>,
+}
+
+/// Windowed evaluator for a set of declared objectives.
+///
+/// `observe_frame` accumulates one frame's samples (relaxed cost: plain
+/// field adds on the session thread); `evaluate` folds the window plus
+/// the current [`LinkHealth`] into an [`SlaVerdict`], updates the
+/// exported metrics, and resets the window. With an empty window the
+/// previous verdict is retained (no frames → no new evidence).
+pub struct SlaEvaluator {
+    specs: Vec<SlaSpec>,
+    exports: Vec<SlaExport>,
+    frames: u64,
+    inference_sum: f64,
+    uplink_sum: f64,
+    edge_sum: f64,
+    verdict: SlaVerdict,
+}
+
+impl std::fmt::Debug for SlaEvaluator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SlaEvaluator")
+            .field("specs", &self.specs)
+            .field("frames", &self.frames)
+            .field("verdict", &self.verdict)
+            .finish()
+    }
+}
+
+impl SlaEvaluator {
+    /// Declare `specs` and register their exports in `registry`.
+    pub fn new(specs: Vec<SlaSpec>, registry: &Registry) -> SlaEvaluator {
+        let exports = specs
+            .iter()
+            .map(|spec| {
+                let labels = [("objective", spec.kind.name())];
+                let threshold = registry.gauge(
+                    "sp_sla_threshold",
+                    "Declared SLA threshold per objective",
+                    &labels,
+                );
+                threshold.set(spec.threshold);
+                SlaExport {
+                    value: registry.gauge(
+                        "sp_sla_value",
+                        "Last evaluated windowed value per SLA objective",
+                        &labels,
+                    ),
+                    breached: registry.gauge(
+                        "sp_sla_breached",
+                        "1 when the SLA objective is currently breached",
+                        &labels,
+                    ),
+                    breaches_total: registry.counter(
+                        "sp_sla_breaches_total",
+                        "Evaluations that found the SLA objective breached",
+                        &labels,
+                    ),
+                }
+            })
+            .collect();
+        SlaEvaluator {
+            specs,
+            exports,
+            frames: 0,
+            inference_sum: 0.0,
+            uplink_sum: 0.0,
+            edge_sum: 0.0,
+            verdict: SlaVerdict::default(),
+        }
+    }
+
+    pub fn specs(&self) -> &[SlaSpec] {
+        &self.specs
+    }
+
+    /// Accumulate one delivered frame into the current window.
+    pub fn observe_frame(&mut self, inference_secs: f64, uplink_bytes: u64, edge_secs: f64) {
+        self.frames += 1;
+        self.inference_sum += inference_secs;
+        self.uplink_sum += uplink_bytes as f64;
+        self.edge_sum += edge_secs;
+    }
+
+    /// Fold the window + link health into a fresh verdict, update the
+    /// exported metrics, and reset the window.
+    pub fn evaluate(&mut self, health: &LinkHealth) -> SlaVerdict {
+        if self.frames == 0 && self.verdict.statuses.len() == self.specs.len() {
+            return self.verdict.clone();
+        }
+        let n = self.frames.max(1) as f64;
+        let rtt = health.rtt.map(|t| t.as_secs_f64()).unwrap_or(0.0);
+        let statuses: Vec<SlaStatus> = self
+            .specs
+            .iter()
+            .map(|spec| {
+                let value = match spec.kind {
+                    // a frame can never beat the measured wire RTT, so an
+                    // inflated link breaches the latency bound even while
+                    // the compute window looks healthy
+                    SlaKind::LatencyBound => (self.inference_sum / n).max(rtt),
+                    SlaKind::BytesBound => self.uplink_sum / n,
+                    SlaKind::EdgePowerBound => self.edge_sum / n,
+                };
+                SlaStatus {
+                    kind: spec.kind,
+                    value,
+                    threshold: spec.threshold,
+                    breached: value > spec.threshold,
+                }
+            })
+            .collect();
+        for (status, export) in statuses.iter().zip(&self.exports) {
+            export.value.set(status.value);
+            export.breached.set(if status.breached { 1.0 } else { 0.0 });
+            if status.breached {
+                export.breaches_total.inc();
+            }
+        }
+        self.frames = 0;
+        self.inference_sum = 0.0;
+        self.uplink_sum = 0.0;
+        self.edge_sum = 0.0;
+        self.verdict = SlaVerdict { statuses };
+        self.verdict.clone()
+    }
+
+    /// The last evaluation's verdict.
+    pub fn verdict(&self) -> &SlaVerdict {
+        &self.verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SimTime;
+
+    #[test]
+    fn parse_specs_roundtrip() {
+        let specs = parse_specs("latency-bound=0.25, bytes-bound=500000").expect("parse");
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, SlaKind::LatencyBound);
+        assert_eq!(specs[0].threshold, 0.25);
+        assert_eq!(specs[1].kind, SlaKind::BytesBound);
+        assert!(parse_specs("latency-bound=-1").is_err());
+        assert!(parse_specs("latency-bound=abc").is_err());
+        assert!(parse_specs("warp-bound=1").is_err());
+    }
+
+    #[test]
+    fn evaluate_flags_breaches_and_resets_window() {
+        let reg = Registry::new();
+        let specs = parse_specs("latency-bound=0.1,bytes-bound=1000").expect("parse");
+        let mut eval = SlaEvaluator::new(specs, &reg);
+        eval.observe_frame(0.05, 500, 0.01);
+        eval.observe_frame(0.07, 700, 0.01);
+        let v = eval.evaluate(&LinkHealth::default());
+        assert!(!v.any_breached());
+        assert_eq!(v.statuses[0].value, 0.06);
+        assert_eq!(v.statuses[1].value, 600.0);
+
+        // breach the bytes bound in the next window
+        eval.observe_frame(0.05, 5000, 0.01);
+        let v = eval.evaluate(&LinkHealth::default());
+        assert!(v.any_breached());
+        assert!(!v.statuses[0].breached);
+        assert!(v.statuses[1].breached);
+        assert!(v.line().contains("bytes-bound BREACHED"));
+        assert!(reg.render().contains("sp_sla_breaches_total{objective=\"bytes-bound\"} 1"));
+    }
+
+    #[test]
+    fn rtt_floors_the_latency_value() {
+        let reg = Registry::new();
+        let mut eval =
+            SlaEvaluator::new(parse_specs("latency-bound=0.1").expect("parse"), &reg);
+        eval.observe_frame(0.01, 0, 0.0);
+        let health = LinkHealth {
+            rtt: Some(SimTime::from_secs_f64(0.5)),
+            ..LinkHealth::default()
+        };
+        let v = eval.evaluate(&health);
+        assert!(v.statuses[0].breached, "inflated RTT must breach latency bound");
+        assert_eq!(v.statuses[0].value, 0.5);
+    }
+
+    #[test]
+    fn empty_window_retains_last_verdict() {
+        let reg = Registry::new();
+        let mut eval =
+            SlaEvaluator::new(parse_specs("edge-power-bound=0.01").expect("parse"), &reg);
+        eval.observe_frame(0.0, 0, 0.5);
+        let first = eval.evaluate(&LinkHealth::default());
+        assert!(first.any_breached());
+        let second = eval.evaluate(&LinkHealth::default());
+        assert_eq!(first, second);
+    }
+}

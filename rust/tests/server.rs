@@ -547,6 +547,103 @@ fn reconnect_resume_no_loss_no_dup() {
     server.shutdown().unwrap();
 }
 
+/// Satellite (PR 9): sustained load across resumes keeps the server-side
+/// resume ledger bounded. With the cap lowered to 8 and 24 frames driven
+/// through a link that hard-cuts repeatedly, delivery stays exactly-once
+/// and no snapshot ever shows a ledger above the cap — and the `/metrics`
+/// HTTP endpoint (the `--metrics-addr` surface) serves the same counters
+/// in Prometheus text while the run is still warm.
+#[test]
+fn resume_ledger_stays_bounded_under_sustained_load() {
+    let full = engine();
+    let cap = 8usize;
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .engine(full.clone())
+        .resume_ledger_cap(cap)
+        .metrics_addr("127.0.0.1:0")
+        .build()
+        .unwrap();
+    let profile = FaultProfile {
+        disconnect: Some(DisconnectSpec {
+            first_bytes: 256 * 1024,
+        }),
+        ..FaultProfile::disconnect()
+    };
+    let proxy = ChaosProxy::spawn("127.0.0.1:0", server.addr(), profile, 11).unwrap();
+
+    let sp = full.graph().split_by_name("vfe").unwrap();
+    let scenes = clouds(31_000, 24);
+    // detections are transport-invariant (pinned exhaustively elsewhere);
+    // sampling a few here keeps the sustained-load loop fast
+    let sampled: Vec<(usize, Vec<Detection>)> = [0usize, 11, 23]
+        .iter()
+        .map(|&i| (i, full.run_frame(&scenes[i], sp).unwrap().detections))
+        .collect();
+
+    let opts = ClientOptions {
+        retry: RetryPolicy {
+            max_retries: 12,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(200),
+            seed: 5,
+        },
+        resume: true,
+    };
+    let client = EdgeClient::connect_with(proxy.addr(), full.clone(), opts).unwrap();
+    let mut stream = client.into_stream(3).unwrap();
+    let mut next = 0usize;
+    let mut max_ledger = 0usize;
+    for i in 0..scenes.len() {
+        while next < scenes.len() && next < i + 3 {
+            stream.submit(scenes[next].clone(), sp).unwrap();
+            next += 1;
+        }
+        let (dets, _) = stream
+            .recv()
+            .unwrap_or_else(|e| panic!("frame {i} lost under sustained load: {e:#}"));
+        if let Some((_, solo)) = sampled.iter().find(|(j, _)| *j == i) {
+            assert!(dets_bitwise_equal(&dets, solo), "frame {i} diverged");
+        }
+        // the bound holds at every observation point, not just at the end
+        for s in &server.stats().per_session {
+            max_ledger = max_ledger.max(s.ledger);
+            assert!(
+                s.ledger <= cap,
+                "frame {i}: ledger {} above cap {cap}",
+                s.ledger
+            );
+        }
+    }
+    assert!(
+        max_ledger >= cap,
+        "ledger peaked at {max_ledger} < cap {cap} — the eviction path went unexercised"
+    );
+
+    let stats = server.stats();
+    assert_eq!(stats.frames, scenes.len() as u64, "exactly-once delivery");
+    assert!(stats.sessions_resumed >= 1, "no resume ever happened");
+    assert_eq!(stats.session_errors, 0);
+
+    // the HTTP exporter serves the same registry, Prometheus-shaped
+    let addr = server.metrics_addr().expect("metrics endpoint enabled");
+    let text = splitpoint::telemetry::scrape(addr).unwrap();
+    assert!(
+        text.contains("# TYPE sp_server_frames_total counter"),
+        "scrape:\n{text}"
+    );
+    assert!(
+        text.contains(&format!("sp_server_frames_total {}", scenes.len())),
+        "scrape:\n{text}"
+    );
+    assert!(text.contains("sp_server_sessions_resumed_total"));
+    assert!(text.contains("sp_stage_latency_seconds_bucket"));
+
+    stream.shutdown().unwrap();
+    drop(proxy);
+    server.shutdown().unwrap();
+}
+
 /// Dropping the server with live sessions and in-flight work must abort
 /// cleanly: no panic, no hang (the `Drop`-path half of the Shutdown
 /// contract).

@@ -704,6 +704,7 @@ fn adaptive_hysteresis_and_cooldown_refuse_flips() {
         current,
         in_flight: 0,
         health: LinkHealth::default(),
+        sla: Default::default(),
     };
 
     // precondition: under the default link, running everything on the
@@ -756,6 +757,7 @@ fn adaptive_explain_reports_decision_reasons() {
         current,
         in_flight: 0,
         health: LinkHealth::default(),
+        sla: Default::default(),
     };
     let best = adaptive::choose_split(&e, &cloud, Objective::InferenceTime).unwrap().split;
     assert_ne!(best, edge_only, "test precondition");
@@ -786,5 +788,86 @@ fn adaptive_explain_reports_decision_reasons() {
         cooled.explain().contains("cooldown"),
         "got: {}",
         cooled.explain()
+    );
+}
+
+/// Satellite (PR 9): `Adaptive` *acts* on link degradation instead of
+/// only narrating it. With the measured RTT far above the configured
+/// baseline — or any SLA objective breached — the policy prefers the
+/// smallest-uplink split inside its hysteresis cost band, and the
+/// explain string records the degraded preference.
+#[test]
+fn adaptive_prefers_smaller_uplink_on_degraded_link() {
+    use splitpoint::metrics::SimTime;
+    use splitpoint::telemetry::sla::{SlaKind, SlaStatus, SlaVerdict};
+
+    let e = engine();
+    let cloud = SceneGenerator::with_seed(23000).generate().cloud;
+    let estimates = adaptive::estimate_splits(&e, &cloud).unwrap();
+    let uplink_of = |sp: SplitPoint| {
+        estimates
+            .iter()
+            .find(|est| est.split == sp)
+            .map(|est| est.uplink_bytes)
+            .expect("estimated split")
+    };
+    let ctx = |health: LinkHealth, sla: SlaVerdict| PolicyContext {
+        engine: &*e,
+        cloud: &cloud,
+        frames_done: 0,
+        bandwidth_bps: None,
+        current: None,
+        in_flight: 0,
+        health,
+        sla,
+    };
+
+    // a wide hysteresis band gives the degraded preference room to move
+    let mut policy = Adaptive::new(Objective::InferenceTime).hysteresis(0.5);
+    let clean = policy
+        .choose(&ctx(LinkHealth::default(), SlaVerdict::default()))
+        .unwrap();
+
+    // scripted degraded link: measured RTT 100x the configured two-leg
+    // baseline trips the preference
+    let inflated = SimTime::from_secs_f64(1.0 + 100.0 * 2.0 * e.link().config().rtt_one_way);
+    let mut policy = Adaptive::new(Objective::InferenceTime).hysteresis(0.5);
+    let degraded = policy
+        .choose(&ctx(
+            LinkHealth {
+                rtt: Some(inflated),
+                ..Default::default()
+            },
+            SlaVerdict::default(),
+        ))
+        .unwrap();
+    assert!(
+        uplink_of(degraded) <= uplink_of(clean),
+        "degraded link picked a larger uplink ({} > {})",
+        uplink_of(degraded),
+        uplink_of(clean)
+    );
+    assert!(
+        policy.explain().contains("degraded (RTT inflated)"),
+        "got: {}",
+        policy.explain()
+    );
+
+    // an SLA breach alone (no RTT sample at all) trips the same preference
+    let breached = SlaVerdict {
+        statuses: vec![SlaStatus {
+            kind: SlaKind::LatencyBound,
+            value: 1.0,
+            threshold: 0.1,
+            breached: true,
+        }],
+    };
+    let mut policy = Adaptive::new(Objective::InferenceTime).hysteresis(0.5);
+    let under_breach = policy.choose(&ctx(LinkHealth::default(), breached)).unwrap();
+    assert!(uplink_of(under_breach) <= uplink_of(clean));
+    assert!(
+        policy.explain().contains("degraded (SLA breached)"),
+        "got: {}",
+        policy.explain()
     );
 }

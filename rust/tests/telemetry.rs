@@ -1,0 +1,190 @@
+//! Telemetry-plane invariants: the Prometheus text rendering is pinned
+//! byte-for-byte (metric names and formatting are a compatibility
+//! surface — dashboards and the CI soak gate grep for them), the HTTP
+//! exporter serves exactly what `render()` produces, and a session run
+//! populates the process-wide registry without perturbing detections.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use splitpoint::coordinator::fault::LinkHealth;
+use splitpoint::coordinator::session::SessionFrame;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::{PointCloud, ReplaySource};
+use splitpoint::telemetry::sla::{parse_specs, SlaEvaluator, SlaKind};
+use splitpoint::telemetry::{MetricsServer, Registry};
+use splitpoint::SplitSession;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn clouds(seed0: u64, n: usize) -> Vec<PointCloud> {
+    (0..n)
+        .map(|i| SceneGenerator::with_seed(seed0 + i as u64).generate().cloud)
+        .collect()
+}
+
+/// Seed a registry with one of every instrument shape, deterministically.
+fn seeded_registry() -> Registry {
+    let reg = Registry::new();
+    reg.counter("sp_test_frames_total", "Frames completed.", &[]).add(3);
+    reg.counter("sp_test_bytes_total", "Bytes shipped.", &[("direction", "up")])
+        .add(1024);
+    reg.counter("sp_test_bytes_total", "Bytes shipped.", &[("direction", "down")])
+        .add(512);
+    reg.gauge("sp_test_rtt_seconds", "Smoothed RTT.", &[]).set(0.25);
+    let h = reg.histogram(
+        "sp_test_latency_seconds",
+        "Stage latency.",
+        &[("stage", "tail")],
+        &[0.01, 0.1, 1.0],
+    );
+    h.observe(0.005);
+    h.observe(0.05);
+    h.observe(0.05);
+    h.observe(2.0);
+    reg
+}
+
+/// The pinned text-format rendering of [`seeded_registry`]: families and
+/// label sets sorted, cumulative `le` buckets with `+Inf`, `_sum` and
+/// `_count`. Any change here is a breaking change to the scrape surface
+/// and needs a deprecation note in `docs/METRICS.md`.
+const GOLDEN: &str = "\
+# HELP sp_test_bytes_total Bytes shipped.
+# TYPE sp_test_bytes_total counter
+sp_test_bytes_total{direction=\"down\"} 512
+sp_test_bytes_total{direction=\"up\"} 1024
+# HELP sp_test_frames_total Frames completed.
+# TYPE sp_test_frames_total counter
+sp_test_frames_total 3
+# HELP sp_test_latency_seconds Stage latency.
+# TYPE sp_test_latency_seconds histogram
+sp_test_latency_seconds_bucket{stage=\"tail\",le=\"0.01\"} 1
+sp_test_latency_seconds_bucket{stage=\"tail\",le=\"0.1\"} 3
+sp_test_latency_seconds_bucket{stage=\"tail\",le=\"1\"} 3
+sp_test_latency_seconds_bucket{stage=\"tail\",le=\"+Inf\"} 4
+sp_test_latency_seconds_sum{stage=\"tail\"} 2.105
+sp_test_latency_seconds_count{stage=\"tail\"} 4
+# HELP sp_test_rtt_seconds Smoothed RTT.
+# TYPE sp_test_rtt_seconds gauge
+sp_test_rtt_seconds 0.25
+";
+
+/// Golden test: `Registry::render` is deterministic and pinned.
+#[test]
+fn render_matches_golden_text() {
+    assert_eq!(seeded_registry().render(), GOLDEN);
+    // a second render of the same state is byte-identical
+    let reg = seeded_registry();
+    assert_eq!(reg.render(), reg.render());
+}
+
+/// The HTTP exporter serves exactly the registry rendering — the scrape
+/// body is the golden text, unmodified.
+#[test]
+fn http_scrape_returns_exact_rendering() {
+    let reg = Arc::new(seeded_registry());
+    let mut srv = MetricsServer::spawn("127.0.0.1:0", reg).expect("spawn metrics endpoint");
+    let body = splitpoint::telemetry::scrape(srv.addr()).expect("scrape");
+    assert_eq!(body, GOLDEN);
+    srv.shutdown();
+}
+
+/// Every rendered line is promtool-parseable: a comment, or
+/// `name{labels} value` with a bare-token value (the shape the CI soak
+/// gate enforces with a regex).
+#[test]
+fn rendered_lines_are_parseable() {
+    for line in seeded_registry().render().lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("metric line has a value");
+        assert!(!series.is_empty() && value.parse::<f64>().is_ok(), "bad line: {line}");
+        let name = series.split('{').next().unwrap();
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name in: {line}"
+        );
+    }
+}
+
+/// SLA evaluator against a scripted window: breach detection, the
+/// exported `sp_sla_*` families, and the one-line verdict `run --report`
+/// prints.
+#[test]
+fn sla_evaluator_exports_breach_state() {
+    let reg = Registry::new();
+    let specs = parse_specs("latency-bound=0.1,bytes-bound=1000000").expect("parse");
+    let mut sla = SlaEvaluator::new(specs, &reg);
+
+    sla.observe_frame(0.05, 500_000, 0.02);
+    let v = sla.evaluate(&LinkHealth::default());
+    assert!(!v.any_breached());
+    assert!(v.line().contains("latency-bound ok"), "got: {}", v.line());
+
+    sla.observe_frame(0.5, 2_000_000, 0.02);
+    let v = sla.evaluate(&LinkHealth::default());
+    assert!(v.any_breached());
+    assert_eq!(v.statuses[0].kind, SlaKind::LatencyBound);
+    assert!(v.statuses.iter().all(|s| s.breached));
+    assert!(v.line().contains("BREACHED"), "got: {}", v.line());
+
+    let text = reg.render();
+    assert!(text.contains("sp_sla_threshold{objective=\"latency-bound\"} 0.1"), "{text}");
+    assert!(text.contains("sp_sla_breached{objective=\"latency-bound\"} 1"), "{text}");
+    assert!(text.contains("sp_sla_breached{objective=\"bytes-bound\"} 1"), "{text}");
+    assert!(text.contains("sp_sla_breaches_total{objective=\"bytes-bound\"} 1"), "{text}");
+}
+
+/// End-to-end: a pipelined session with declared SLA objectives streams
+/// normally (telemetry must never perturb output), lands a verdict in the
+/// report, and populates the process-wide registry that
+/// `SessionReport::prometheus` renders.
+#[test]
+fn session_run_populates_global_registry_and_sla_verdict() {
+    let stream = clouds(40_000, 3);
+    let mut session = SplitSession::builder()
+        .artifacts(artifacts_dir())
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .pipeline_depth(2)
+        // bytes-bound=1 is unmeetable (every frame ships more than one
+        // byte); latency-bound=1000 is unmissable — a deterministic
+        // mixed verdict without depending on wall-clock speed
+        .sla_specs(parse_specs("latency-bound=1000,bytes-bound=1").expect("parse"))
+        .build()
+        .expect("run `make artifacts` before cargo test");
+    let mut delivered = 0usize;
+    let report = session
+        .run_with(|_f: SessionFrame| {
+            delivered += 1;
+        })
+        .unwrap();
+    assert_eq!(delivered, stream.len());
+
+    let sla = report.sla.as_ref().expect("objectives were declared");
+    assert!(sla.any_breached(), "bytes-bound=1 must breach");
+    let breached: Vec<SlaKind> = sla
+        .statuses
+        .iter()
+        .filter(|s| s.breached)
+        .map(|s| s.kind)
+        .collect();
+    assert_eq!(breached, [SlaKind::BytesBound], "latency-bound=1000 must hold");
+
+    let text = report.prometheus();
+    for family in [
+        "sp_session_frames_total",
+        "sp_session_uplink_bytes_total",
+        "sp_session_uplink_v1_bytes_total",
+        "sp_pipeline_frames_total",
+        "sp_stage_latency_seconds_bucket",
+        "sp_queue_depth_bucket",
+        "sp_runtime_threads",
+        "sp_sla_breached{objective=\"bytes-bound\"} 1",
+    ] {
+        assert!(text.contains(family), "missing '{family}' in:\n{text}");
+    }
+}
