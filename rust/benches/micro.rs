@@ -30,7 +30,7 @@ use splitpoint::postprocess::nms::nms_bev;
 use splitpoint::postprocess::Detection;
 use splitpoint::runtime::reference::ReferenceModel;
 use splitpoint::runtime::simd::{self, SimdMode};
-use splitpoint::tensor::codec::{Packet, Policy};
+use splitpoint::tensor::codec::{Packet, Policy, WirePrecision};
 use splitpoint::util::cli::{parse_simd, parse_threads};
 use splitpoint::util::json::{self, Value};
 use splitpoint::util::rng::Rng;
@@ -174,6 +174,39 @@ fn main() -> anyhow::Result<()> {
                 (1.0 - v2.len() as f64 / v1.len() as f64) * 100.0
             );
         }
+        // wire v3 quantized payloads (f16 halves, int8 quarters the value
+        // bytes) vs the exact f32/v2 encode of the same packet as the
+        // `@legacy` twin — speedup_vs_legacy reads as the quantize cost
+        // (or win: fewer bytes to write) at equal input
+        for (name, precision) in [
+            ("codec/encode_sparse_v3_f16", WirePrecision::F16),
+            ("codec/encode_sparse_v3_int8", WirePrecision::Int8),
+        ] {
+            {
+                let p = packet.clone();
+                let mut buf = Vec::new();
+                results.push(run_bench(name, cfg, move || {
+                    p.encode_wire_into(Policy::Auto, precision, &mut buf);
+                    std::hint::black_box(buf.len());
+                    None
+                }));
+            }
+            {
+                let p = packet.clone();
+                let mut buf = Vec::new();
+                results.push(run_bench(&format!("{name}@legacy"), cfg, move || {
+                    p.encode_wire_into(Policy::Auto, WirePrecision::F32, &mut buf);
+                    std::hint::black_box(buf.len());
+                    None
+                }));
+            }
+        }
+        eprintln!(
+            "[micro] sparse VFE live set: f32 {} B, f16 {} B, int8 {} B",
+            packet.encoded_size_wire(Policy::Auto, WirePrecision::F32),
+            packet.encoded_size_wire(Policy::Auto, WirePrecision::F16),
+            packet.encoded_size_wire(Policy::Auto, WirePrecision::Int8),
+        );
         let bytes = packet.encode(Policy::Auto);
         results.push(run_bench("codec/decode_sparse", cfg, move || {
             std::hint::black_box(Packet::decode(&bytes).unwrap().tensors.len());

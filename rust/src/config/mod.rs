@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::tensor::codec::Policy;
+use crate::tensor::codec::{Policy, WirePrecision};
 use crate::util::json::{self, Value};
 
 /// Compute profile of one device tier.
@@ -89,6 +89,9 @@ pub struct SystemConfig {
     pub server: DeviceProfile,
     pub link: LinkConfig,
     pub codec: Policy,
+    /// uplink payload precision: f32 ships byte-identical v2 frames,
+    /// f16/int8 ship lossy v3 quantized frames (`--wire`)
+    pub wire: WirePrecision,
     /// default split point by name ("vfe", "conv1", …, "raw", "edge_only")
     pub split: String,
     /// batcher: max frames per batch and max wait before flushing
@@ -144,6 +147,7 @@ impl Default for SystemConfig {
             },
             link: LinkConfig::default(),
             codec: Policy::Auto,
+            wire: WirePrecision::F32,
             split: "vfe".into(),
             batch_max: 4,
             batch_wait_ms: 5.0,
@@ -205,6 +209,7 @@ impl SystemConfig {
                     Policy::AutoQuantized => "auto_quantized",
                 }),
             ),
+            ("wire", Value::str(self.wire.as_str())),
             ("split", Value::str(&self.split)),
             ("batch_max", Value::num(self.batch_max as f64)),
             ("batch_wait_ms", Value::num(self.batch_wait_ms)),
@@ -244,6 +249,10 @@ impl SystemConfig {
             Some("auto") | None => Policy::Auto,
             Some(other) => anyhow::bail!("unknown codec policy '{other}'"),
         };
+        let wire = match v.get("wire").and_then(Value::as_str) {
+            Some(s) => WirePrecision::parse(s)?,
+            None => WirePrecision::F32,
+        };
         Ok(SystemConfig {
             edge: device("edge", &d.edge),
             server: device("server", &d.server),
@@ -258,6 +267,7 @@ impl SystemConfig {
                     .unwrap_or(d.link.rtt_one_way),
             },
             codec,
+            wire,
             split: v
                 .get("split")
                 .and_then(Value::as_str)
@@ -307,10 +317,12 @@ mod tests {
         let mut c = SystemConfig::paper();
         c.split = "conv2".into();
         c.codec = Policy::AutoQuantized;
+        c.wire = WirePrecision::Int8;
         c.link.bandwidth_bps = 1e6;
         let back = SystemConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.split, "conv2");
         assert_eq!(back.codec, Policy::AutoQuantized);
+        assert_eq!(back.wire, WirePrecision::Int8);
         assert_eq!(back.link.bandwidth_bps, 1e6);
         assert_eq!(back.edge, c.edge);
     }
@@ -336,6 +348,22 @@ mod tests {
     fn rejects_unknown_codec() {
         let v = json::parse(r#"{"codec": "zip"}"#).unwrap();
         assert!(SystemConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn wire_defaults_to_f32_and_rejects_unknown() {
+        let v = json::parse(r#"{"split": "conv1"}"#).unwrap();
+        assert_eq!(
+            SystemConfig::from_json(&v).unwrap().wire,
+            WirePrecision::F32
+        );
+        let v = json::parse(r#"{"wire": "f16"}"#).unwrap();
+        assert_eq!(
+            SystemConfig::from_json(&v).unwrap().wire,
+            WirePrecision::F16
+        );
+        let bad = json::parse(r#"{"wire": "bf16"}"#).unwrap();
+        assert!(SystemConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::model::manifest::{Manifest, ModelConfig};
 use crate::pointcloud::PointCloud;
 use crate::postprocess::{assemble_predictions, Detection, ProposalConfig, ProposalStage};
 use crate::runtime::{ModuleId, XlaRuntime};
-use crate::tensor::codec::Packet;
+use crate::tensor::codec::{Packet, WIRE_VERSION};
 use crate::tensor::Tensor;
 use crate::voxel::Voxelizer;
 
@@ -79,6 +79,13 @@ pub struct TimingBreakdown {
     /// (flat site index) — the per-frame v1-vs-v2 savings EXPERIMENTS.md
     /// tracks on real sweeps; equals `uplink_bytes` when nothing ships
     pub uplink_v1_bytes: usize,
+    /// what the same live set costs at exact f32 (v2 framing) — equals
+    /// `uplink_bytes` on f32 runs; on quantized runs it is the baseline
+    /// the v3 savings are measured against
+    pub uplink_f32_bytes: usize,
+    /// bytes actually shipped under v3 quantized framing (0 when the
+    /// session wire precision is f32)
+    pub uplink_v3_bytes: usize,
     pub downlink_bytes: usize,
     pub uplink_time: SimTime,
     pub downlink_time: SimTime,
@@ -134,6 +141,12 @@ pub struct HeadFrame {
     wire: Option<Vec<u8>>,
     /// live-set cost under the legacy v1 framing (0 when nothing ships)
     wire_v1_bytes: usize,
+    /// live-set cost at exact f32 / v2 framing (== wire length on f32
+    /// runs; 0 when nothing ships)
+    wire_f32_bytes: usize,
+    /// actual wire length when shipped under v3 quantized framing (0 on
+    /// f32 runs or when nothing ships)
+    wire_v3_bytes: usize,
     encode_time: SimTime,
 }
 
@@ -146,6 +159,16 @@ impl HeadFrame {
     /// Byte cost of the same live set under the legacy v1 wire framing.
     pub fn wire_v1_bytes(&self) -> usize {
         self.wire_v1_bytes
+    }
+
+    /// Byte cost of the same live set at exact f32 (v2 framing).
+    pub fn wire_f32_bytes(&self) -> usize {
+        self.wire_f32_bytes
+    }
+
+    /// Bytes shipped under v3 quantized framing (0 on f32 runs).
+    pub fn wire_v3_bytes(&self) -> usize {
+        self.wire_v3_bytes
     }
 
     /// Take the wire buffer out (for transports that consume the bytes)
@@ -172,6 +195,8 @@ pub struct TransferredFrame {
     decode_time: SimTime,
     uplink_bytes: usize,
     uplink_v1_bytes: usize,
+    uplink_f32_bytes: usize,
+    uplink_v3_bytes: usize,
     uplink_time: SimTime,
 }
 
@@ -453,8 +478,10 @@ impl Engine {
 
         // ---- edge: encode the live set
         let live = self.graph.live_ids(sp);
-        let (wire, wire_v1_bytes, encode_time) = if live.is_empty() {
-            (None, 0, SimTime::ZERO)
+        let (wire, wire_v1_bytes, wire_f32_bytes, wire_v3_bytes, encode_time) = if live
+            .is_empty()
+        {
+            (None, 0, 0, 0, SimTime::ZERO)
         } else {
             let mut tensors = Vec::with_capacity(live.len());
             for &id in live {
@@ -472,7 +499,8 @@ impl Engine {
             // the cached site indexes — no second encode)
             let v1 = packet.encoded_size_versioned(self.cfg.codec, 1);
             // encode into a pooled, exactly-presized buffer — the
-            // steady-state wire path allocates nothing
+            // steady-state wire path allocates nothing. f32 precision
+            // emits the byte-identical v2 frame; f16/int8 emit v3.
             let mut buf = self
                 .wire_buffers
                 .lock()
@@ -480,9 +508,18 @@ impl Engine {
                 .pop()
                 .unwrap_or_default();
             let t0 = Instant::now();
-            packet.encode_into(self.cfg.codec, &mut buf);
+            packet.encode_wire_into(self.cfg.codec, self.cfg.wire, &mut buf);
             let enc = SimTime::from_duration(t0.elapsed()).scaled(self.cfg.edge.slowdown);
-            (Some(buf), v1, enc)
+            // v2-f32 baseline + actual v3 cost, both without re-encoding
+            let (f32b, v3b) = if self.cfg.wire.lossy() {
+                (
+                    packet.encoded_size_versioned(self.cfg.codec, WIRE_VERSION),
+                    buf.len(),
+                )
+            } else {
+                (buf.len(), 0)
+            };
+            (Some(buf), v1, f32b, v3b, enc)
         };
 
         Ok(HeadFrame {
@@ -491,6 +528,8 @@ impl Engine {
             node_times,
             wire,
             wire_v1_bytes,
+            wire_f32_bytes,
+            wire_v3_bytes,
             encode_time,
         })
     }
@@ -506,6 +545,8 @@ impl Engine {
             node_times,
             wire,
             wire_v1_bytes,
+            wire_f32_bytes,
+            wire_v3_bytes,
             encode_time,
         } = head;
         let (uplink_bytes, decode_time) = match wire {
@@ -544,6 +585,8 @@ impl Engine {
             decode_time,
             uplink_bytes,
             uplink_v1_bytes: wire_v1_bytes,
+            uplink_f32_bytes: wire_f32_bytes,
+            uplink_v3_bytes: wire_v3_bytes,
             uplink_time,
         })
     }
@@ -563,6 +606,8 @@ impl Engine {
             decode_time,
             uplink_bytes,
             uplink_v1_bytes,
+            uplink_f32_bytes,
+            uplink_v3_bytes,
             uplink_time,
         } = frame;
 
@@ -627,6 +672,8 @@ impl Engine {
                 decode_time,
                 uplink_bytes,
                 uplink_v1_bytes,
+                uplink_f32_bytes,
+                uplink_v3_bytes,
                 downlink_bytes,
                 uplink_time,
                 downlink_time,

@@ -1455,18 +1455,34 @@ fn serve_infer(engine: &Engine, head_len: usize, packet: &[u8]) -> Result<(u64, 
     Ok((server_nanos, bytes))
 }
 
+/// Per-frame wire byte accounting extracted alongside the bytes by
+/// [`wire_with_v1`]: the actual frame plus the v1 and f32/v2 baselines
+/// (and the v3 cost when a lossy precision shipped).
+struct WireCost {
+    v1: usize,
+    f32b: usize,
+    v3: usize,
+}
+
 /// Take a head frame's wire bytes for the TCP protocol (an encoded empty
 /// packet when the live set is empty — the protocol always ships one),
-/// plus the v1-framing cost of what actually ships: for an empty packet
-/// the framing is identical under both versions, so the v1 side is
-/// charged symmetrically and `wire_savings` stays honest.
-fn wire_with_v1(head: &mut HeadFrame, codec: Policy) -> (Vec<u8>, usize) {
+/// plus the v1-framing / f32-precision cost of what actually ships: for
+/// an empty packet the framing is identical under every version, so the
+/// baselines are charged symmetrically and `wire_savings` /
+/// `quant_savings` stay honest.
+fn wire_with_v1(head: &mut HeadFrame, codec: Policy) -> (Vec<u8>, WireCost) {
     let v1 = head.wire_v1_bytes();
+    let f32b = head.wire_f32_bytes();
+    let v3 = head.wire_v3_bytes();
     let bytes = head
         .take_wire()
         .unwrap_or_else(|| Packet::from_shared(Vec::new()).encode(codec));
-    let v1 = if v1 == 0 { bytes.len() } else { v1 };
-    (bytes, v1)
+    let cost = WireCost {
+        v1: if v1 == 0 { bytes.len() } else { v1 },
+        f32b: if f32b == 0 { bytes.len() } else { f32b },
+        v3,
+    };
+    (bytes, cost)
 }
 
 /// Timing of one remote frame (wall-clock, realtime).
@@ -1476,6 +1492,12 @@ pub struct RemoteTiming {
     pub uplink_bytes: usize,
     /// legacy v1-framing cost of the same live set (wire-savings metric)
     pub uplink_v1_bytes: usize,
+    /// exact-f32 (v2 framing) cost of the same live set — the baseline
+    /// quantized runs are measured against; equals `uplink_bytes` on f32
+    /// sessions
+    pub uplink_f32_bytes: usize,
+    /// bytes actually shipped under v3 quantized framing (0 on f32 runs)
+    pub uplink_v3_bytes: usize,
     /// send → result received (uplink + server + downlink)
     pub round_trip: SimTime,
     pub server_compute: SimTime,
@@ -1750,7 +1772,7 @@ impl EdgeClient {
         let t_start = Instant::now();
 
         let mut head = engine.head_stage(cloud, sp)?;
-        let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+        let (bytes, wire_cost) = wire_with_v1(&mut head, engine.config().codec);
         let (mut store, _) = head.into_store();
         let edge_compute = SimTime::from_duration(t_start.elapsed());
 
@@ -1802,7 +1824,9 @@ impl EdgeClient {
             RemoteTiming {
                 edge_compute,
                 uplink_bytes,
-                uplink_v1_bytes,
+                uplink_v1_bytes: wire_cost.v1,
+                uplink_f32_bytes: wire_cost.f32b,
+                uplink_v3_bytes: wire_cost.v3,
                 round_trip,
                 server_compute: SimTime {
                     nanos: server_nanos as u128,
@@ -1934,6 +1958,8 @@ impl EdgeClient {
                     edge_compute: pending.edge_compute,
                     uplink_bytes: pending.uplink_bytes,
                     uplink_v1_bytes: pending.uplink_v1_bytes,
+                    uplink_f32_bytes: pending.uplink_f32_bytes,
+                    uplink_v3_bytes: pending.uplink_v3_bytes,
                     round_trip,
                     server_compute: SimTime {
                         nanos: server_nanos as u128,
@@ -2020,14 +2046,16 @@ fn send_frame(
 ) -> Result<bool> {
     let t_start = Instant::now();
     let mut head = engine.head_stage(cloud, sp)?;
-    let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+    let (bytes, wire_cost) = wire_with_v1(&mut head, engine.config().codec);
     let (store, _) = head.into_store();
     let pending = PendingRequest {
         request_id,
         store,
         edge_compute: SimTime::from_duration(t_start.elapsed()),
         uplink_bytes: bytes.len(),
-        uplink_v1_bytes,
+        uplink_v1_bytes: wire_cost.v1,
+        uplink_f32_bytes: wire_cost.f32b,
+        uplink_v3_bytes: wire_cost.v3,
         t_start,
         t_send: Instant::now(),
     };
@@ -2060,14 +2088,16 @@ fn stream_send_frame(
 ) -> Result<bool> {
     let t_start = Instant::now();
     let mut head = engine.head_stage(cloud, sp)?;
-    let (bytes, uplink_v1_bytes) = wire_with_v1(&mut head, engine.config().codec);
+    let (bytes, wire_cost) = wire_with_v1(&mut head, engine.config().codec);
     let (store, _) = head.into_store();
     let pending = PendingRequest {
         request_id,
         store,
         edge_compute: SimTime::from_duration(t_start.elapsed()),
         uplink_bytes: bytes.len(),
-        uplink_v1_bytes,
+        uplink_v1_bytes: wire_cost.v1,
+        uplink_f32_bytes: wire_cost.f32b,
+        uplink_v3_bytes: wire_cost.v3,
         t_start,
         t_send: Instant::now(),
     };
@@ -2123,6 +2153,8 @@ struct PendingRequest {
     edge_compute: SimTime,
     uplink_bytes: usize,
     uplink_v1_bytes: usize,
+    uplink_f32_bytes: usize,
+    uplink_v3_bytes: usize,
     t_start: Instant,
     t_send: Instant,
 }
@@ -2324,6 +2356,8 @@ impl EdgeStream {
                 edge_compute: pending.edge_compute,
                 uplink_bytes: pending.uplink_bytes,
                 uplink_v1_bytes: pending.uplink_v1_bytes,
+                uplink_f32_bytes: pending.uplink_f32_bytes,
+                uplink_v3_bytes: pending.uplink_v3_bytes,
                 round_trip,
                 server_compute: SimTime {
                     nanos: server_nanos as u128,

@@ -63,6 +63,7 @@ use crate::pointcloud::{Frame, FrameSource, PointCloud, RecordingSource, ReplayS
 use crate::postprocess::Detection;
 use crate::runtime::simd::SimdMode;
 use crate::runtime::XlaRuntime;
+use crate::tensor::codec::WirePrecision;
 use crate::telemetry::{
     self,
     sla::{SlaEvaluator, SlaSpec, SlaVerdict},
@@ -114,6 +115,11 @@ pub struct FrameOutput {
     pub uplink_bytes: usize,
     /// legacy v1-framing cost of the same live set (wire-savings metric)
     pub uplink_v1_bytes: usize,
+    /// exact-f32 (v2) cost of the same live set — equals `uplink_bytes`
+    /// on f32 sessions, the quant-savings baseline on f16/int8 sessions
+    pub uplink_f32_bytes: usize,
+    /// bytes actually shipped under v3 quantized framing (0 on f32 runs)
+    pub uplink_v3_bytes: usize,
     /// transport-defined "edge time": [`InProcess`] reports the paper's
     /// Fig 7 quantity on the virtual clock (edge compute + encode +
     /// uplink; the full breakdown is in `timing`), while [`Tcp`] can only
@@ -298,6 +304,8 @@ impl InProcess {
         }
         let uplink_bytes = t.uplink_bytes;
         let uplink_v1_bytes = t.uplink_v1_bytes;
+        let uplink_f32_bytes = t.uplink_f32_bytes;
+        let uplink_v3_bytes = t.uplink_v3_bytes;
         let edge_time = t.edge_time;
         let inference_time = t.inference_time;
         let server_time = t.server_compute();
@@ -309,6 +317,8 @@ impl InProcess {
             detections: r.detections,
             uplink_bytes,
             uplink_v1_bytes,
+            uplink_f32_bytes,
+            uplink_v3_bytes,
             edge_time,
             round_trip,
             server_time,
@@ -573,6 +583,8 @@ impl Transport for Tcp {
             detections,
             uplink_bytes: t.uplink_bytes,
             uplink_v1_bytes: t.uplink_v1_bytes,
+            uplink_f32_bytes: t.uplink_f32_bytes,
+            uplink_v3_bytes: t.uplink_v3_bytes,
             edge_time: t.edge_compute,
             round_trip: t.round_trip,
             server_time: t.server_compute,
@@ -969,10 +981,17 @@ pub struct SessionReport {
     pub sensor_usage: BTreeMap<u32, usize>,
     /// transport's final bandwidth estimate
     pub bandwidth_bps: Option<f64>,
-    /// total uplink bytes actually shipped (wire v2)
+    /// total uplink bytes actually shipped (wire v2, or v3 when the
+    /// session runs a lossy `--wire` precision)
     pub uplink_bytes: usize,
     /// what the same stream would have cost under the v1 framing
     pub uplink_v1_bytes: usize,
+    /// what the same stream costs at exact f32 / v2 framing — equals
+    /// `uplink_bytes` on f32 sessions; the quant-savings baseline on
+    /// f16/int8 sessions
+    pub uplink_f32_bytes: usize,
+    /// total bytes shipped under v3 quantized framing (0 on f32 sessions)
+    pub uplink_v3_bytes: usize,
     /// staged-pipeline stage/queue report, when the transport kept one
     pub transport_report: Option<String>,
     /// per-segment policy decisions in stream order (`run --report`)
@@ -1020,6 +1039,14 @@ impl SessionReport {
             .then(|| 1.0 - self.uplink_bytes as f64 / self.uplink_v1_bytes as f64)
     }
 
+    /// Wire bytes saved by v3 quantization, as a fraction of the same
+    /// stream at exact f32 (v2 framing). `None` on f32 sessions — there
+    /// is no quantized traffic to compare.
+    pub fn quant_savings(&self) -> Option<f64> {
+        (self.uplink_v3_bytes > 0 && self.uplink_f32_bytes > 0)
+            .then(|| 1.0 - self.uplink_bytes as f64 / self.uplink_f32_bytes as f64)
+    }
+
     /// One-paragraph human summary for CLI output.
     pub fn summary(&self) -> String {
         use std::fmt::Write as _;
@@ -1051,7 +1078,17 @@ impl SessionReport {
         if let Some(bps) = self.bandwidth_bps {
             let _ = write!(s, "; est. bandwidth {:.2} MB/s", bps / 1e6);
         }
-        if let Some(savings) = self.wire_savings() {
+        if let Some(quant) = self.quant_savings() {
+            let _ = write!(
+                s,
+                "; uplink {:.2} MB (wire v3 quantized; f32 would be {:.2} MB, \
+                 {:.1}% saved; v1 would be {:.2} MB)",
+                self.uplink_bytes as f64 / 1e6,
+                self.uplink_f32_bytes as f64 / 1e6,
+                quant * 100.0,
+                self.uplink_v1_bytes as f64 / 1e6,
+            );
+        } else if let Some(savings) = self.wire_savings() {
             let _ = write!(
                 s,
                 "; uplink {:.2} MB (wire v2; v1 would be {:.2} MB, {:.1}% saved)",
@@ -1095,6 +1132,7 @@ struct SessionTelemetry {
     frames: Arc<telemetry::Counter>,
     uplink_bytes: Arc<telemetry::Counter>,
     uplink_v1_bytes: Arc<telemetry::Counter>,
+    uplink_v3_bytes: Arc<telemetry::Counter>,
     sla: Option<SlaEvaluator>,
 }
 
@@ -1115,6 +1153,12 @@ impl SessionTelemetry {
             uplink_v1_bytes: reg.counter(
                 "sp_session_uplink_v1_bytes_total",
                 "What the same stream would have cost under the v1 framing.",
+                &[],
+            ),
+            uplink_v3_bytes: reg.counter(
+                "sp_session_uplink_v3_bytes_total",
+                "Uplink bytes shipped under the v3 quantized framing \
+                 (zero on f32 sessions).",
                 &[],
             ),
             sla: (!sla_specs.is_empty()).then(|| SlaEvaluator::new(sla_specs, reg)),
@@ -1381,10 +1425,13 @@ fn deliver_one(
         .context("transport delivered a frame with no pending meta")?;
     report.uplink_bytes += output.uplink_bytes;
     report.uplink_v1_bytes += output.uplink_v1_bytes;
+    report.uplink_f32_bytes += output.uplink_f32_bytes;
+    report.uplink_v3_bytes += output.uplink_v3_bytes;
     report.frames += 1;
     telem.frames.inc();
     telem.uplink_bytes.add(output.uplink_bytes as u64);
     telem.uplink_v1_bytes.add(output.uplink_v1_bytes as u64);
+    telem.uplink_v3_bytes.add(output.uplink_v3_bytes as u64);
     if let Some(sla) = telem.sla.as_mut() {
         sla.observe_frame(
             output.inference_time.as_secs_f64(),
@@ -1486,6 +1533,7 @@ pub struct SplitSessionBuilder {
     tail_workers: usize,
     threads: usize,
     simd: SimdMode,
+    wire: Option<WirePrecision>,
     role: EngineRole,
     sensors: usize,
     record: Option<PathBuf>,
@@ -1516,6 +1564,7 @@ impl SplitSessionBuilder {
             tail_workers: 1,
             threads: 1,
             simd: SimdMode::Auto,
+            wire: None,
             role: EngineRole::Full,
             sensors: 1,
             record: None,
@@ -1718,6 +1767,15 @@ impl SplitSessionBuilder {
         self
     }
 
+    /// Wire precision for the uplink payloads (`--wire f32|f16|int8`).
+    /// F32 (the default) ships byte-identical v2 frames; F16/Int8 ship
+    /// v3 quantized frames. Overrides the config file's `wire` field,
+    /// like [`SplitSessionBuilder::split`] overrides its split.
+    pub fn wire_precision(mut self, precision: WirePrecision) -> Self {
+        self.wire = Some(precision);
+        self
+    }
+
     /// Build just the engine — the thin-shell path for subcommands and
     /// benches that drive [`Engine`] directly (sweep, estimate,
     /// calibrate).
@@ -1729,6 +1787,9 @@ impl SplitSessionBuilder {
         let mut cfg = self.config.clone().unwrap_or_else(SystemConfig::paper);
         if let Some(split) = &self.split {
             cfg.split = split.clone();
+        }
+        if let Some(wire) = self.wire {
+            cfg.wire = wire;
         }
         let tails = if self.depth > 1 { self.tail_workers } else { 1 };
         let kernel = PipelineConfig::kernel_threads_for(self.threads, tails);
@@ -1924,6 +1985,14 @@ impl ServerSessionBuilder {
         self
     }
 
+    /// Wire precision for frames this server *originates* (raw-offload
+    /// tails re-encode nothing, so this mostly matters for symmetric
+    /// tooling; decode always accepts v1/v2/v3 regardless).
+    pub fn wire_precision(mut self, precision: WirePrecision) -> Self {
+        self.inner = self.inner.wire_precision(precision);
+        self
+    }
+
     /// Inject a prebuilt engine (tests sharing one compiled runtime).
     pub fn engine(mut self, engine: Arc<Engine>) -> Self {
         self.inner = self.inner.engine(engine);
@@ -2087,6 +2156,31 @@ mod tests {
         assert!((savings - 0.5).abs() < 1e-12);
         // an all-empty stream's summary must not print a savings clause
         assert!(!empty.summary().contains("saved"));
+    }
+
+    /// `quant_savings` only reports when v3 traffic actually shipped, and
+    /// measures against the f32 baseline (not v1).
+    #[test]
+    fn quant_savings_is_none_on_f32_sessions() {
+        let f32_run = SessionReport {
+            uplink_bytes: 50,
+            uplink_v1_bytes: 100,
+            uplink_f32_bytes: 50,
+            ..SessionReport::default()
+        };
+        assert_eq!(f32_run.quant_savings(), None);
+        assert!(f32_run.summary().contains("wire v2"));
+
+        let quantized = SessionReport {
+            uplink_bytes: 30,
+            uplink_v1_bytes: 100,
+            uplink_f32_bytes: 60,
+            uplink_v3_bytes: 30,
+            ..SessionReport::default()
+        };
+        let q = quantized.quant_savings().expect("v3 bytes observed");
+        assert!((q - 0.5).abs() < 1e-12);
+        assert!(quantized.summary().contains("wire v3 quantized"));
     }
 
     #[test]

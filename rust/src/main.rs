@@ -16,6 +16,7 @@
 //!   serve-edge      edge-device process: stream a source to a server (TCP)
 //!   server-stats    fetch a running serve-server's metrics snapshot
 //!   chaos-proxy     deterministic link-fault TCP relay for resilience tests
+//!   compare-dets    tolerance-diff two --dets-out files (lossy wire gates)
 
 use std::path::Path;
 
@@ -30,6 +31,8 @@ use splitpoint::coordinator::session::{
     SplitSessionBuilder,
 };
 use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::postprocess::compare::{self, Tolerance};
+use splitpoint::tensor::codec::WirePrecision;
 use splitpoint::util::cli::{parse_simd, parse_threads, Args, Cli, CommandSpec, OptSpec};
 
 fn cli() -> Cli {
@@ -47,6 +50,7 @@ fn cli() -> Cli {
             OptSpec { name: "tail-workers", value: Some("n"), help: "parallel tail stages when pipelined (default 1)" },
             OptSpec { name: "threads", value: Some("n|max"), help: "kernel worker threads; bit-identical at any count (default 1)" },
             OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced; bit-identical at any setting (default auto)" },
+            OptSpec { name: "wire", value: Some("prec"), help: "uplink payload precision: f32 | f16 | int8 (f32 ships byte-identical v2 frames; default f32)" },
         ]
     };
     // session-streaming extras (run + serve-edge)
@@ -91,6 +95,7 @@ fn cli() -> Cli {
                     OptSpec { name: "drain-timeout", value: Some("secs"), help: "graceful-drain deadline on shutdown (default 10)" },
                     OptSpec { name: "stats-every", value: Some("secs"), help: "periodic stderr metrics summary; 0 = off (default 30)" },
                     OptSpec { name: "metrics-addr", value: Some("addr"), help: "serve Prometheus text metrics over HTTP at this address (default off)" },
+                    OptSpec { name: "wire", value: Some("prec"), help: "default uplink precision for locally built sessions: f32 | f16 | int8 (TCP clients choose their own; default f32)" },
                 ],
             },
             CommandSpec {
@@ -119,10 +124,24 @@ fn cli() -> Cli {
                     OptSpec { name: "simd", value: Some("mode"), help: "kernel SIMD dispatch: auto | scalar | forced (default auto)" },
                     OptSpec { name: "retry-max", value: Some("n"), help: "Busy/reconnect retry budget per request; 0 = fail fast (default 5)" },
                     OptSpec { name: "resume", value: None, help: "resumable session: reconnect after link drops and resume with no lost or duplicated frames" },
+                    OptSpec { name: "wire", value: Some("prec"), help: "uplink payload precision: f32 | f16 | int8 (f32 ships byte-identical v2 frames; default f32)" },
                 ]
                 .into_iter()
                 .chain(streaming())
                 .collect(),
+            },
+            CommandSpec {
+                name: "compare-dets",
+                help: "tolerance-diff two --dets-out files (gate for lossy wire precisions)",
+                opts: vec![
+                    OptSpec { name: "a", value: Some("file"), help: "reference --dets-out file (typically the f32 run)" },
+                    OptSpec { name: "b", value: Some("file"), help: "candidate --dets-out file (typically the quantized run)" },
+                    OptSpec { name: "out", value: Some("file"), help: "write the machine-readable JSON diff report here" },
+                    OptSpec { name: "iou-min", value: Some("f"), help: "minimum BEV IoU for two boxes to pair (default 0.7; 1.0 with the other epsilons at 0 = bit-identical)" },
+                    OptSpec { name: "score-eps", value: Some("f"), help: "maximum |score difference| within a pair (default 0.05)" },
+                    OptSpec { name: "center-eps", value: Some("f"), help: "maximum center distance in meters within a pair (default 0.1)" },
+                    OptSpec { name: "drop-below", value: Some("f"), help: "ignore detections under this score on both sides (default 0 = keep all)" },
+                ],
             },
             CommandSpec {
                 name: "chaos-proxy",
@@ -156,6 +175,9 @@ fn session_builder(args: &Args) -> Result<SplitSessionBuilder> {
     } else {
         1
     };
+    if let Some(w) = args.get("wire") {
+        b = b.wire_precision(WirePrecision::parse(w)?);
+    }
     Ok(b
         .threads(parse_threads(args.get("threads"))?)
         .simd(parse_simd(args.get("simd"))?)
@@ -466,6 +488,9 @@ fn cmd_serve_server(args: &Args) -> Result<()> {
     if let Some(p) = args.get("config") {
         b = b.config_file(Path::new(p))?;
     }
+    if let Some(w) = args.get("wire") {
+        b = b.wire_precision(WirePrecision::parse(w)?);
+    }
     if let Some(n) = args.get_parse("max-sessions")? {
         b = b.max_sessions(n);
     }
@@ -556,6 +581,36 @@ fn cmd_serve_edge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_compare_dets(args: &Args) -> Result<()> {
+    let path_a = args.get("a").ok_or_else(|| anyhow::anyhow!("--a <file> is required"))?;
+    let path_b = args.get("b").ok_or_else(|| anyhow::anyhow!("--b <file> is required"))?;
+    let read = |p: &str| -> Result<Vec<compare::FrameDets>> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading --dets-out file {p}: {e}"))?;
+        compare::parse_dets(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e:#}"))
+    };
+    let defaults = Tolerance::default();
+    let tol = Tolerance {
+        iou_min: args.get_parse("iou-min")?.unwrap_or(defaults.iou_min),
+        score_eps: args.get_parse("score-eps")?.unwrap_or(defaults.score_eps),
+        center_eps: args.get_parse("center-eps")?.unwrap_or(defaults.center_eps),
+        drop_below: args.get_parse("drop-below")?.unwrap_or(defaults.drop_below),
+    };
+    let report = compare::compare_runs(&read(path_a)?, &read(path_b)?, &tol)?;
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing --out {out}: {e}"))?;
+    }
+    println!("{}", report.summary());
+    for line in &report.mismatched_frames {
+        println!("  {line}");
+    }
+    if !report.pass() {
+        bail!("detections differ beyond tolerance ({path_a} vs {path_b})");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cli = cli();
@@ -570,6 +625,7 @@ fn main() -> Result<()> {
         Some("server-stats") => cmd_server_stats(&args),
         Some("serve-edge") => cmd_serve_edge(&args),
         Some("chaos-proxy") => cmd_chaos_proxy(&args),
+        Some("compare-dets") => cmd_compare_dets(&args),
         _ => {
             println!("{}", cli.help(None));
             Ok(())

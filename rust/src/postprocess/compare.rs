@@ -1,0 +1,514 @@
+//! Tolerance-based detection comparison — the eval harness for lossy wire
+//! precisions (codec v3) and every lossy direction after them.
+//!
+//! Bitwise `cmp` on `--dets-out` files is the right gate for exact paths
+//! (f32 wire, SIMD, threading, transports), but quantization changes bits
+//! by design. This module defines what "the same detections" means under a
+//! [`Tolerance`]: per-frame, per-class greedy BEV-IoU matching with score
+//! and center epsilons. Every box must find a partner — a missing or extra
+//! box is a failure, never a statistic — and NaN anywhere in the inputs is
+//! a loud error, not a silent non-match.
+//!
+//! The CI `codec-accuracy` lane drives this through the `compare-dets`
+//! subcommand on serve-edge/serve-server `--dets-out` pairs; the report is
+//! machine-readable JSON ([`CompareReport::to_json`]) so lanes can table
+//! accuracy against uplink bytes.
+
+use anyhow::{bail, Context, Result};
+
+use super::nms::bev_iou;
+use super::Detection;
+use crate::util::json::Value;
+
+/// Matching tolerances. [`Tolerance::exact`] (all zero, IoU 1) accepts
+/// only bit-identical detection sets — useful as a self-check that the
+/// comparator agrees with `cmp` on exact paths.
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    /// minimum BEV IoU for two boxes to pair (bitwise-identical boxes
+    /// always pair, so `1.0` means "identical")
+    pub iou_min: f64,
+    /// maximum absolute score difference within a pair
+    pub score_eps: f32,
+    /// maximum Euclidean center distance (meters) within a pair
+    pub center_eps: f64,
+    /// drop detections below this score on *both* sides before matching —
+    /// quantization legitimately moves near-threshold detections across
+    /// the session's score cut, and this is how the comparator ignores
+    /// that boundary churn instead of failing on it
+    pub drop_below: f32,
+}
+
+impl Tolerance {
+    /// Accept only bit-identical detection sets.
+    pub fn exact() -> Tolerance {
+        Tolerance {
+            iou_min: 1.0,
+            score_eps: 0.0,
+            center_eps: 0.0,
+            drop_below: 0.0,
+        }
+    }
+}
+
+impl Default for Tolerance {
+    /// Defaults sized for f16/int8 wire quantization of this model's
+    /// intermediates (see EXPERIMENTS.md §Quantization sweep).
+    fn default() -> Tolerance {
+        Tolerance {
+            iou_min: 0.7,
+            score_eps: 0.05,
+            center_eps: 0.1,
+            drop_below: 0.0,
+        }
+    }
+}
+
+/// One frame of a parsed `--dets-out` file.
+#[derive(Debug, Clone)]
+pub struct FrameDets {
+    pub seq: u64,
+    pub sensor: u32,
+    pub source_seq: u64,
+    pub points: usize,
+    pub dets: Vec<Detection>,
+}
+
+/// Outcome of matching one frame pair.
+#[derive(Debug, Clone, Copy, Default)]
+struct FrameOutcome {
+    matched: usize,
+    missing: usize,
+    extra: usize,
+    max_score_delta: f32,
+    max_center_delta: f64,
+    /// minimum IoU over matched pairs (1.0 when nothing matched)
+    min_iou: f64,
+}
+
+/// Whole-run comparison result.
+#[derive(Debug, Clone, Default)]
+pub struct CompareReport {
+    pub frames: usize,
+    pub dets_a: usize,
+    pub dets_b: usize,
+    pub matched: usize,
+    pub missing: usize,
+    pub extra: usize,
+    pub max_score_delta: f32,
+    pub max_center_delta: f64,
+    pub min_matched_iou: f64,
+    /// human-readable description of each failing frame
+    pub mismatched_frames: Vec<String>,
+}
+
+impl CompareReport {
+    /// A comparison passes iff every (post-filter) box on either side
+    /// found a partner within tolerance.
+    pub fn pass(&self) -> bool {
+        self.missing == 0 && self.extra == 0
+    }
+
+    /// Machine-readable report for `compare-dets --out` and the CI
+    /// accuracy lane.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("pass", Value::Bool(self.pass())),
+            ("frames", Value::num(self.frames as f64)),
+            ("dets_a", Value::num(self.dets_a as f64)),
+            ("dets_b", Value::num(self.dets_b as f64)),
+            ("matched", Value::num(self.matched as f64)),
+            ("missing", Value::num(self.missing as f64)),
+            ("extra", Value::num(self.extra as f64)),
+            ("max_score_delta", Value::num(self.max_score_delta as f64)),
+            ("max_center_delta", Value::num(self.max_center_delta)),
+            ("min_matched_iou", Value::num(self.min_matched_iou)),
+            (
+                "mismatched_frames",
+                Value::arr(self.mismatched_frames.iter().map(|s| Value::str(s))),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} frame(s), {}/{} det(s) matched ({} missing, {} extra); \
+             max Δscore {:.4}, max Δcenter {:.4} m, min IoU {:.4}",
+            if self.pass() { "PASS" } else { "FAIL" },
+            self.frames,
+            self.matched,
+            self.dets_a.max(self.dets_b),
+            self.missing,
+            self.extra,
+            self.max_score_delta,
+            self.max_center_delta,
+            self.min_matched_iou,
+        )
+    }
+}
+
+fn check_finite(side: &str, dets: &[Detection]) -> Result<()> {
+    for (i, d) in dets.iter().enumerate() {
+        if d.score.is_nan() {
+            bail!("NaN score in {side} detection {i} (class {})", d.class);
+        }
+        if d.boxx.iter().any(|v| v.is_nan()) {
+            bail!("NaN box coordinate in {side} detection {i} (class {})", d.class);
+        }
+    }
+    Ok(())
+}
+
+fn center_dist(a: &Detection, b: &Detection) -> f64 {
+    let dx = a.boxx[0] as f64 - b.boxx[0] as f64;
+    let dy = a.boxx[1] as f64 - b.boxx[1] as f64;
+    let dz = a.boxx[2] as f64 - b.boxx[2] as f64;
+    (dx * dx + dy * dy + dz * dz).sqrt()
+}
+
+fn bits_equal(a: &Detection, b: &Detection) -> bool {
+    a.boxx
+        .iter()
+        .zip(&b.boxx)
+        .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Match one frame's detection sets under `tol`. Greedy, highest-score
+/// first, class-aware: the standard KITTI-style assignment (see
+/// `eval::match_frame`), specialized to det-vs-det with both-side
+/// unmatched counting. Errors on NaN anywhere in either side.
+fn compare_sets(a: &[Detection], b: &[Detection], tol: &Tolerance) -> Result<FrameOutcome> {
+    check_finite("lhs", a)?;
+    check_finite("rhs", b)?;
+    let a: Vec<&Detection> = a.iter().filter(|d| d.score >= tol.drop_below).collect();
+    let b: Vec<&Detection> = b.iter().filter(|d| d.score >= tol.drop_below).collect();
+
+    // highest-score-first gives the deterministic greedy assignment
+    let mut order: Vec<usize> = (0..a.len()).collect();
+    order.sort_by(|&i, &j| {
+        a[j].score
+            .partial_cmp(&a[i].score)
+            .expect("scores checked finite")
+            .then(i.cmp(&j))
+    });
+
+    let mut used = vec![false; b.len()];
+    let mut out = FrameOutcome {
+        min_iou: 1.0,
+        ..FrameOutcome::default()
+    };
+    for &i in &order {
+        let da = a[i];
+        let mut best: Option<(usize, f64)> = None;
+        for (j, db) in b.iter().enumerate() {
+            if used[j] || db.class != da.class {
+                continue;
+            }
+            if (da.score - db.score).abs() > tol.score_eps
+                || center_dist(da, db) > tol.center_eps
+            {
+                continue;
+            }
+            // bit-identical boxes always pair — IoU of a degenerate
+            // (zero-size) box is 0/0, and exact comparison must not
+            // depend on polygon-clipping round-off
+            let iou = if bits_equal(da, db) {
+                1.0
+            } else {
+                bev_iou(&da.boxx, &db.boxx)
+            };
+            if iou < tol.iou_min {
+                continue;
+            }
+            if best.is_none_or(|(_, bi)| iou > bi) {
+                best = Some((j, iou));
+            }
+        }
+        match best {
+            Some((j, iou)) => {
+                used[j] = true;
+                out.matched += 1;
+                out.max_score_delta = out.max_score_delta.max((da.score - b[j].score).abs());
+                out.max_center_delta = out.max_center_delta.max(center_dist(da, b[j]));
+                out.min_iou = out.min_iou.min(iou);
+            }
+            None => out.missing += 1,
+        }
+    }
+    out.extra = used.iter().filter(|u| !**u).count();
+    Ok(out)
+}
+
+/// Compare two runs frame by frame. Frames pair by position and must
+/// agree on `seq`/`sensor` — two recordings of different streams are a
+/// hard error, not a diff.
+pub fn compare_runs(
+    a: &[FrameDets],
+    b: &[FrameDets],
+    tol: &Tolerance,
+) -> Result<CompareReport> {
+    if a.len() != b.len() {
+        bail!("frame count mismatch: {} vs {}", a.len(), b.len());
+    }
+    let mut report = CompareReport {
+        frames: a.len(),
+        min_matched_iou: 1.0,
+        ..CompareReport::default()
+    };
+    for (fa, fb) in a.iter().zip(b) {
+        if fa.seq != fb.seq || fa.sensor != fb.sensor {
+            bail!(
+                "frame identity mismatch: seq {} sensor {} vs seq {} sensor {}",
+                fa.seq,
+                fa.sensor,
+                fb.seq,
+                fb.sensor
+            );
+        }
+        let o = compare_sets(&fa.dets, &fb.dets, tol)
+            .with_context(|| format!("frame seq {}", fa.seq))?;
+        report.dets_a += fa.dets.len();
+        report.dets_b += fb.dets.len();
+        report.matched += o.matched;
+        report.missing += o.missing;
+        report.extra += o.extra;
+        report.max_score_delta = report.max_score_delta.max(o.max_score_delta);
+        report.max_center_delta = report.max_center_delta.max(o.max_center_delta);
+        report.min_matched_iou = report.min_matched_iou.min(o.min_iou);
+        if o.missing > 0 || o.extra > 0 {
+            report.mismatched_frames.push(format!(
+                "seq {} sensor {}: {} matched, {} missing, {} extra",
+                fa.seq, fa.sensor, o.matched, o.missing, o.extra
+            ));
+        }
+    }
+    Ok(report)
+}
+
+fn field<'a>(tokens: &'a [&str], key: &str) -> Result<&'a str> {
+    tokens
+        .iter()
+        .find_map(|t| t.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+        .with_context(|| format!("missing field '{key}'"))
+}
+
+fn f32_from_hex(s: &str) -> Result<f32> {
+    let bits = u32::from_str_radix(s, 16).with_context(|| format!("bad f32 hex '{s}'"))?;
+    Ok(f32::from_bits(bits))
+}
+
+/// Parse a `--dets-out` file (the bit-exact hex rendering `run` and
+/// `serve-edge` write) back into frames of [`Detection`]s.
+pub fn parse_dets(text: &str) -> Result<Vec<FrameDets>> {
+    let mut frames: Vec<FrameDets> = Vec::new();
+    let mut declared: Vec<usize> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let err = || format!("--dets-out line {}", lineno + 1);
+        if let Some(rest) = line.strip_prefix("frame ") {
+            let t: Vec<&str> = rest.split_whitespace().collect();
+            declared.push(field(&t, "dets")?.parse().with_context(err)?);
+            frames.push(FrameDets {
+                seq: field(&t, "seq")?.parse().with_context(err)?,
+                sensor: field(&t, "sensor")?.parse().with_context(err)?,
+                source_seq: field(&t, "src")?.parse().with_context(err)?,
+                points: field(&t, "pts")?.parse().with_context(err)?,
+                dets: Vec::new(),
+            });
+        } else if let Some(rest) = line.trim_start().strip_prefix("det ") {
+            let frame = frames.last_mut().with_context(|| {
+                format!("{}: det line before any frame header", err())
+            })?;
+            let t: Vec<&str> = rest.split_whitespace().collect();
+            let box_hex = field(&t, "box")?;
+            let mut boxx = [0.0f32; 7];
+            let parts: Vec<&str> = box_hex.split(',').collect();
+            if parts.len() != 7 {
+                bail!("{}: box wants 7 values, got {}", err(), parts.len());
+            }
+            for (slot, p) in boxx.iter_mut().zip(parts) {
+                *slot = f32_from_hex(p).with_context(err)?;
+            }
+            frame.dets.push(Detection {
+                class: field(&t, "class")?.parse().with_context(err)?,
+                score: f32_from_hex(field(&t, "score")?).with_context(err)?,
+                boxx,
+            });
+        } else if !line.trim().is_empty() {
+            bail!("{}: unrecognized line '{line}'", err());
+        }
+    }
+    // the headers promise a count — hold the file (truncated copies,
+    // interleaved writers) to it
+    for (f, want) in frames.iter().zip(declared) {
+        if f.dets.len() != want {
+            bail!(
+                "frame seq {}: header declares {} det(s), file has {}",
+                f.seq,
+                want,
+                f.dets.len()
+            );
+        }
+    }
+    Ok(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(class: usize, score: f32, cx: f32, cy: f32) -> Detection {
+        Detection {
+            score,
+            boxx: [cx, cy, 0.5, 4.0, 1.8, 1.6, 0.3],
+            class,
+        }
+    }
+
+    fn frame(seq: u64, dets: Vec<Detection>) -> FrameDets {
+        FrameDets {
+            seq,
+            sensor: 0,
+            source_seq: seq,
+            points: 1000,
+            dets,
+        }
+    }
+
+    #[test]
+    fn identical_dets_pass_at_zero_tolerance() {
+        let dets = vec![det(0, 0.9, 10.0, 2.0), det(1, 0.7, -5.0, 8.0)];
+        let a = vec![frame(0, dets.clone())];
+        let b = vec![frame(0, dets)];
+        let r = compare_runs(&a, &b, &Tolerance::exact()).unwrap();
+        assert!(r.pass(), "{}", r.summary());
+        assert_eq!(r.matched, 2);
+        assert_eq!(r.max_score_delta, 0.0);
+        assert_eq!(r.max_center_delta, 0.0);
+    }
+
+    #[test]
+    fn permuted_box_order_passes() {
+        let a = vec![frame(
+            0,
+            vec![det(0, 0.9, 10.0, 2.0), det(1, 0.7, -5.0, 8.0), det(0, 0.5, 0.0, 0.0)],
+        )];
+        let b = vec![frame(
+            0,
+            vec![det(0, 0.5, 0.0, 0.0), det(0, 0.9, 10.0, 2.0), det(1, 0.7, -5.0, 8.0)],
+        )];
+        let r = compare_runs(&a, &b, &Tolerance::exact()).unwrap();
+        assert!(r.pass(), "{}", r.summary());
+        assert_eq!(r.matched, 3);
+    }
+
+    #[test]
+    fn missing_and_extra_boxes_fail() {
+        let full = vec![det(0, 0.9, 10.0, 2.0), det(1, 0.7, -5.0, 8.0)];
+        let short = vec![det(0, 0.9, 10.0, 2.0)];
+        // b missing one box
+        let r = compare_runs(
+            &[frame(0, full.clone())],
+            &[frame(0, short.clone())],
+            &Tolerance::default(),
+        )
+        .unwrap();
+        assert!(!r.pass());
+        assert_eq!(r.missing, 1);
+        assert_eq!(r.mismatched_frames.len(), 1);
+        // b has one extra box
+        let r = compare_runs(&[frame(0, short)], &[frame(0, full)], &Tolerance::default())
+            .unwrap();
+        assert!(!r.pass());
+        assert_eq!(r.extra, 1);
+    }
+
+    #[test]
+    fn nan_scores_fail_loudly() {
+        let good = vec![frame(0, vec![det(0, 0.9, 10.0, 2.0)])];
+        let bad = vec![frame(0, vec![det(0, f32::NAN, 10.0, 2.0)])];
+        let err = compare_runs(&good, &bad, &Tolerance::default()).unwrap_err();
+        assert!(err.to_string().contains("frame seq 0"), "{err:#}");
+        assert!(format!("{err:#}").contains("NaN score"), "{err:#}");
+        // NaN in a box coordinate is equally loud
+        let mut d = det(0, 0.9, 10.0, 2.0);
+        d.boxx[3] = f32::NAN;
+        let bad_box = vec![frame(0, vec![d])];
+        assert!(compare_runs(&good, &bad_box, &Tolerance::default()).is_err());
+    }
+
+    #[test]
+    fn tolerance_accepts_small_perturbations_only() {
+        let a = vec![frame(0, vec![det(0, 0.90, 10.0, 2.0)])];
+        let nudged = vec![frame(0, vec![det(0, 0.91, 10.02, 2.01)])];
+        let tol = Tolerance {
+            iou_min: 0.8,
+            score_eps: 0.05,
+            center_eps: 0.1,
+            drop_below: 0.0,
+        };
+        assert!(compare_runs(&a, &nudged, &tol).unwrap().pass());
+        // the same nudge fails a tighter score epsilon
+        let tight = Tolerance { score_eps: 0.001, ..tol };
+        assert!(!compare_runs(&a, &nudged, &tight).unwrap().pass());
+        // and a moved box fails the center epsilon
+        let moved = vec![frame(0, vec![det(0, 0.90, 10.5, 2.0)])];
+        assert!(!compare_runs(&a, &moved, &tol).unwrap().pass());
+    }
+
+    #[test]
+    fn drop_below_ignores_threshold_churn() {
+        // a near-threshold det present on one side only is forgiven once
+        // both sides are cut at drop_below
+        let a = vec![frame(
+            0,
+            vec![det(0, 0.9, 10.0, 2.0), det(1, 0.31, -5.0, 8.0)],
+        )];
+        let b = vec![frame(0, vec![det(0, 0.9, 10.0, 2.0)])];
+        let tol = Tolerance {
+            drop_below: 0.35,
+            ..Tolerance::default()
+        };
+        assert!(compare_runs(&a, &b, &tol).unwrap().pass());
+        assert!(!compare_runs(&a, &b, &Tolerance::default()).unwrap().pass());
+    }
+
+    #[test]
+    fn class_mismatch_never_pairs() {
+        let a = vec![frame(0, vec![det(0, 0.9, 10.0, 2.0)])];
+        let b = vec![frame(0, vec![det(1, 0.9, 10.0, 2.0)])];
+        let r = compare_runs(&a, &b, &Tolerance::default()).unwrap();
+        assert!(!r.pass());
+        assert_eq!(r.missing, 1);
+        assert_eq!(r.extra, 1);
+    }
+
+    #[test]
+    fn parses_dets_out_format() {
+        // exactly what main.rs's DetsOut writes
+        let d = det(2, 0.75, 1.5, -3.25);
+        let mut text = String::from("frame seq=0 sensor=1 src=4 pts=1200 dets=1\n");
+        let boxx: Vec<String> = d.boxx.iter().map(|v| format!("{:08x}", v.to_bits())).collect();
+        text.push_str(&format!(
+            "  det class={} score={:08x} box={}\n",
+            d.class,
+            d.score.to_bits(),
+            boxx.join(",")
+        ));
+        text.push_str("frame seq=1 sensor=1 src=5 pts=900 dets=0\n");
+        let frames = parse_dets(&text).unwrap();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].sensor, 1);
+        assert_eq!(frames[0].source_seq, 4);
+        assert_eq!(frames[0].dets.len(), 1);
+        let back = frames[0].dets[0];
+        assert_eq!(back.class, 2);
+        assert_eq!(back.score.to_bits(), d.score.to_bits());
+        assert_eq!(back.boxx, d.boxx);
+        assert!(frames[1].dets.is_empty());
+        // self-comparison through the parser is exact
+        assert!(compare_runs(&frames, &frames, &Tolerance::exact()).unwrap().pass());
+        // garbage is an error, not a skip
+        assert!(parse_dets("what is this\n").is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! (top-K of a score-dependent set); the AOT'd RoI head takes a fixed
 //! `num_proposals` box tensor.
 
+pub mod compare;
 pub mod decode;
 pub mod eval;
 pub mod nms;

@@ -16,7 +16,7 @@
 //! `encode_auto` picks the smallest exact format; quantized formats are
 //! opt-in because they are lossy.
 //!
-//! **Wire version 2** (the current framing) delta + run-length encodes the
+//! **Wire version 2** (the default framing) delta + run-length encodes the
 //! sorted sparse site index: occupied sites on real scans are
 //! near-contiguous (points fill surfaces, so runs along the fastest grid
 //! axis are long), so instead of 4 bytes per site the index is a varint
@@ -24,6 +24,17 @@
 //! couple of bytes per *run* (paper §VI compression direction). Version 1
 //! packets (raw little-endian u32 per site) still decode; see
 //! [`Packet::encode_versioned_into`].
+//!
+//! **Wire version 3** keeps the v2 site index and adds lossy sparse value
+//! payloads, selected per session by [`WirePrecision`]: `SparseF16`
+//! (IEEE-754 binary16, round-to-nearest-even) and `SparseQ8C` (symmetric
+//! int8 with one scale per channel, computed in a single pass over the
+//! occupied-site index). Both conversions are pure integer/IEEE
+//! arithmetic — no FMA, ties-to-even — so quantize→dequantize is
+//! bit-reproducible across architectures. An f32 sender keeps shipping
+//! byte-identical version-2 packets ([`Packet::encode_wire`] only emits
+//! the version-3 byte when a lossy precision is selected); v1/v2 frames
+//! always decode.
 //!
 //! Perf contract (see docs/PERF.md): packets hold `Arc<Tensor>` so frame
 //! assembly never deep-copies; format choice and sparse emission run off
@@ -39,9 +50,14 @@ use super::Tensor;
 
 const MAGIC: u32 = 0x5350_5754; // "SPWT"
 
-/// Current wire framing: delta/varint run-length site indices. Version 1
+/// Default wire framing: delta/varint run-length site indices. Version 1
 /// (raw u32 indices) remains decodable for old senders.
 pub const WIRE_VERSION: u8 = 2;
+
+/// Quantized framing: the v2 site index plus f16 / per-channel-int8
+/// sparse value payloads. Only emitted when the sender selects a lossy
+/// [`WirePrecision`]; v1 and v2 packets still decode.
+pub const WIRE_VERSION_V3: u8 = 3;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Format {
@@ -50,6 +66,10 @@ pub enum Format {
     MaskBitset = 2,
     DenseQ8 = 3,
     SparseQ8 = 4,
+    /// v3: sparse values as IEEE-754 binary16 (round-to-nearest-even)
+    SparseF16 = 5,
+    /// v3: sparse values as symmetric int8 with one f32 scale per channel
+    SparseQ8C = 6,
 }
 
 impl Format {
@@ -60,12 +80,73 @@ impl Format {
             2 => Format::MaskBitset,
             3 => Format::DenseQ8,
             4 => Format::SparseQ8,
+            5 => Format::SparseF16,
+            6 => Format::SparseQ8C,
             _ => bail!("unknown wire format {b}"),
         })
     }
 
     pub fn lossy(self) -> bool {
-        matches!(self, Format::DenseQ8 | Format::SparseQ8)
+        matches!(
+            self,
+            Format::DenseQ8 | Format::SparseQ8 | Format::SparseF16 | Format::SparseQ8C
+        )
+    }
+
+    /// Formats that require the version-3 framing (a v1/v2 packet carrying
+    /// one is corrupt).
+    fn needs_v3(self) -> bool {
+        matches!(self, Format::SparseF16 | Format::SparseQ8C)
+    }
+}
+
+/// Wire value precision for sparse feature payloads — the `--wire` knob,
+/// carried in [`crate::config::SystemConfig::wire`]. `F32` is the pinned
+/// default: it ships byte-identical version-2 packets. `F16`/`Int8`
+/// switch the sender to the version-3 framing, quantizing non-mask sparse
+/// values (masks reconstruct exactly under every precision; the dense
+/// fallback stays f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WirePrecision {
+    /// Exact f32 payloads, version-2 framing (byte-identical to a sender
+    /// without the knob).
+    #[default]
+    F32,
+    /// IEEE-754 binary16 payloads (round-to-nearest-even), version 3.
+    F16,
+    /// Symmetric int8 with a per-channel scale (ties-to-even), version 3.
+    Int8,
+}
+
+impl WirePrecision {
+    /// Parse the `--wire` CLI / config value.
+    pub fn parse(s: &str) -> Result<WirePrecision> {
+        Ok(match s {
+            "f32" => WirePrecision::F32,
+            "f16" => WirePrecision::F16,
+            "int8" => WirePrecision::Int8,
+            _ => bail!("unknown wire precision '{s}' (want f32, f16, or int8)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WirePrecision::F32 => "f32",
+            WirePrecision::F16 => "f16",
+            WirePrecision::Int8 => "int8",
+        }
+    }
+
+    /// The framing version this precision ships.
+    pub fn wire_version(self) -> u8 {
+        match self {
+            WirePrecision::F32 => WIRE_VERSION,
+            WirePrecision::F16 | WirePrecision::Int8 => WIRE_VERSION_V3,
+        }
+    }
+
+    pub fn lossy(self) -> bool {
+        !matches!(self, WirePrecision::F32)
     }
 }
 
@@ -91,6 +172,9 @@ struct Writer<'a> {
 impl Writer<'_> {
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
@@ -150,6 +234,9 @@ impl<'a> Reader<'a> {
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
@@ -265,6 +352,103 @@ fn decode_site_index(r: &mut Reader, spatial: usize) -> Result<Vec<usize>> {
     Ok(idx)
 }
 
+// ------------------------------------------------- f16 / int8 conversion
+
+/// f32 → IEEE-754 binary16 bits with round-to-nearest-even. Pure integer
+/// bit arithmetic: identical output on every architecture (the
+/// cross-platform determinism the CI accuracy gate relies on). Overflow
+/// saturates to ±Inf exactly as hardware conversion would; NaN becomes a
+/// quiet NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf stays Inf; NaN collapses to a quiet NaN
+        return sign | if abs > 0x7f80_0000 { 0x7e00 } else { 0x7c00 };
+    }
+    // re-bias the exponent from 127 to 15
+    let exp = (abs >> 23) as i32 - 112;
+    let man = abs & 0x007f_ffff;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // >= 2^16: past the largest finite f16
+    }
+    if exp <= 0 {
+        // subnormal (or underflow-to-zero) output
+        if exp < -10 {
+            return sign; // < 2^-25 rounds to zero even on a tie
+        }
+        let m = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let out = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let out = if rem > half || (rem == half && out & 1 == 1) {
+            out + 1 // may carry into the smallest normal — correct bits
+        } else {
+            out
+        };
+        return sign | out as u16;
+    }
+    // normal: drop 13 mantissa bits, rounding ties to even; a mantissa
+    // carry rolls into the exponent (and into Inf at the top) by itself
+    let mut out = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && out & 1 == 1) {
+        out += 1;
+    }
+    sign | out as u16
+}
+
+/// IEEE-754 binary16 bits → f32 (exact: every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = u32::from(h & 0x3ff);
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: value = m * 2^-24; normalize into f32
+            let p = 31 - m.leading_zeros(); // top set bit, 0..=9
+            sign | ((p + 103) << 23) | ((m << (23 - p)) & 0x007f_ffff)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13),
+        (e, m) => sign | ((u32::from(e) + 112) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Per-channel symmetric int8 scales for [`Format::SparseQ8C`]: channel
+/// abs-max over the occupied-site index (one pass, no dense rescan)
+/// divided by 127, with all-zero channels pinned to scale 1.0 so
+/// dequantization never divides by zero.
+fn channel_scales(t: &Tensor) -> Vec<f32> {
+    let c = t.channels().max(1);
+    let mut maxes = vec![0.0f32; c];
+    let data = t.data();
+    for &s in t.site_index() {
+        let site = &data[s as usize * c..(s as usize + 1) * c];
+        for (m, &x) in maxes.iter_mut().zip(site) {
+            let a = x.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    for m in &mut maxes {
+        *m = if *m == 0.0 { 1.0 } else { *m / 127.0 };
+    }
+    maxes
+}
+
+/// Quantize one value against a channel scale: plain IEEE division, then
+/// `round_ties_even` — no FMA anywhere on this path, so the emitted byte
+/// is identical across x86_64 and aarch64.
+fn quantize_i8(x: f32, scale: f32) -> u8 {
+    (x / scale).round_ties_even().clamp(-127.0, 127.0) as i8 as u8
+}
+
 // ---------------------------------------------------------- single tensor
 
 /// Masks are single-channel tensors whose non-zero values are all exactly
@@ -286,6 +470,9 @@ fn format_payload(t: &Tensor, fmt: Format, index_bytes: usize, value_count: usiz
         Format::MaskBitset => t.spatial().div_ceil(8),
         Format::DenseQ8 => 8 + t.numel(),
         Format::SparseQ8 => 8 + index_bytes + value_count,
+        Format::SparseF16 => index_bytes + value_count * 2,
+        // one f32 scale per channel, then index + 1 byte per value
+        Format::SparseQ8C => 4 * t.channels().max(1) + index_bytes + value_count,
     }
 }
 
@@ -312,9 +499,11 @@ struct TensorPlan {
     n_runs: u32,
 }
 
-fn plan(t: &Tensor, policy: Policy, version: u8) -> TensorPlan {
+fn plan(t: &Tensor, policy: Policy, version: u8, precision: WirePrecision) -> TensorPlan {
     if policy == Policy::Dense {
         // no format choice to make — don't walk the site index at all
+        // (Dense stays exact f32 under every precision; `--wire` only
+        // quantizes the sparse feature payloads)
         return TensorPlan {
             fmt: Format::DenseF32,
             payload: t.size_bytes(),
@@ -334,23 +523,30 @@ fn plan(t: &Tensor, policy: Policy, version: u8) -> TensorPlan {
         }
         best
     };
-    let fmt = match policy {
-        Policy::Dense => unreachable!("handled above"),
-        Policy::Auto => {
-            if is_mask(t) {
-                best_of(&[Format::SparseF32, Format::MaskBitset])
-            } else {
-                best_of(&[Format::SparseF32])
-            }
+    // the precision's lossy sparse candidate — version-3 framing only
+    let quant = match precision {
+        _ if version < WIRE_VERSION_V3 => None,
+        WirePrecision::F32 => None,
+        WirePrecision::F16 => Some(Format::SparseF16),
+        WirePrecision::Int8 => Some(Format::SparseQ8C),
+    };
+    let fmt = if is_mask(t) {
+        // masks quantize to themselves under every precision; bitset is
+        // already 1 bit — keep the exact candidates
+        best_of(&[Format::SparseF32, Format::MaskBitset])
+    } else {
+        let mut candidates = [Format::SparseF32; 4];
+        let mut n = 1;
+        if policy == Policy::AutoQuantized {
+            candidates[n] = Format::DenseQ8;
+            candidates[n + 1] = Format::SparseQ8;
+            n += 2;
         }
-        Policy::AutoQuantized => {
-            if is_mask(t) {
-                // masks quantize to themselves; bitset is already 1 bit
-                best_of(&[Format::SparseF32, Format::MaskBitset])
-            } else {
-                best_of(&[Format::SparseF32, Format::DenseQ8, Format::SparseQ8])
-            }
+        if let Some(q) = quant {
+            candidates[n] = q;
+            n += 1;
         }
+        best_of(&candidates[..n])
     };
     TensorPlan {
         fmt,
@@ -431,6 +627,40 @@ fn encode_tensor(w: &mut Writer, name: &str, t: &Tensor, plan: TensorPlan, versi
                 w.u8(((x / scale).round().clamp(-127.0, 127.0)) as i8 as u8);
             }
         }
+        Format::SparseF16 => {
+            // v3: delta/varint index, then IEEE half bits per value.
+            // Conversion is pure integer round-to-nearest-even — identical
+            // bytes on every target.
+            let sites = t.site_index();
+            let c = t.channels().max(1);
+            encode_site_index(w, sites, plan.n_runs);
+            let data = t.data();
+            for &s in sites {
+                let site = &data[s as usize * c..(s as usize + 1) * c];
+                for &x in site {
+                    w.u16(f32_to_f16_bits(x));
+                }
+            }
+        }
+        Format::SparseQ8C => {
+            // v3: per-channel scales (one pass over the site index), then
+            // the delta/varint index, then one i8 per value. Ties round to
+            // even so x86_64 and aarch64 emit identical bytes.
+            let sites = t.site_index();
+            let c = t.channels().max(1);
+            let scales = channel_scales(t);
+            for &s in &scales {
+                w.f32(s);
+            }
+            encode_site_index(w, sites, plan.n_runs);
+            let data = t.data();
+            for &s in sites {
+                let base = s as usize * c;
+                for (ch, &scale) in scales.iter().enumerate() {
+                    w.u8(quantize_i8(data[base + ch], scale));
+                }
+            }
+        }
     }
 }
 
@@ -438,6 +668,12 @@ fn decode_tensor(r: &mut Reader, version: u8) -> Result<(String, Tensor)> {
     let nlen = r.u8()? as usize;
     let name = String::from_utf8(r.take(nlen)?.to_vec()).context("tensor name")?;
     let fmt = Format::from_u8(r.u8()?)?;
+    if fmt.needs_v3() && version < WIRE_VERSION_V3 {
+        bail!(
+            "format {:?} requires wire version {WIRE_VERSION_V3} (frame says {version})",
+            fmt
+        );
+    }
     let ndim = r.u8()? as usize;
     let mut shape = Vec::with_capacity(ndim);
     for _ in 0..ndim {
@@ -543,6 +779,44 @@ fn decode_tensor(r: &mut Reader, version: u8) -> Result<(String, Tensor)> {
             }
             Tensor::from_vec(&shape, v)?
         }
+        Format::SparseF16 => {
+            let idx = decode_site_index(r, spatial)?;
+            let mut v = vec![0.0f32; numel];
+            let mut sites: Vec<u32> = Vec::with_capacity(idx.len());
+            for &i in &idx {
+                let mut nonzero = false;
+                for ch in 0..channels {
+                    let x = f16_bits_to_f32(r.u16()?);
+                    nonzero |= x != 0.0;
+                    v[i * channels + ch] = x;
+                }
+                if nonzero {
+                    sites.push(i as u32);
+                }
+            }
+            Tensor::from_vec_with_sites(&shape, v, sites)?
+        }
+        Format::SparseQ8C => {
+            let mut scales = Vec::with_capacity(channels);
+            for _ in 0..channels {
+                scales.push(r.f32()?);
+            }
+            let idx = decode_site_index(r, spatial)?;
+            let mut v = vec![0.0f32; numel];
+            let mut sites: Vec<u32> = Vec::with_capacity(idx.len());
+            for &i in &idx {
+                let mut nonzero = false;
+                for (ch, &scale) in scales.iter().enumerate() {
+                    let x = (r.u8()? as i8) as f32 * scale;
+                    nonzero |= x != 0.0;
+                    v[i * channels + ch] = x;
+                }
+                if nonzero {
+                    sites.push(i as u32);
+                }
+            }
+            Tensor::from_vec_with_sites(&shape, v, sites)?
+        }
     };
     Ok((name, tensor))
 }
@@ -589,30 +863,54 @@ impl Packet {
     /// Encode into a caller-owned buffer, cleared and presized to the
     /// exact encoded length (steady-state reuse allocates nothing once the
     /// buffer has grown to the working-set size). Writes the current
-    /// [`WIRE_VERSION`] framing.
+    /// [`WIRE_VERSION`] framing at exact f32 precision.
     pub fn encode_into(&self, policy: Policy, buf: &mut Vec<u8>) {
-        self.encode_versioned_into(policy, WIRE_VERSION, buf)
-            .expect("WIRE_VERSION is always encodable");
+        self.encode_with(policy, WIRE_VERSION, WirePrecision::F32, buf);
+    }
+
+    /// Encode at a wire precision: f32 ships the byte-identical
+    /// [`WIRE_VERSION`] (v2) frame, f16/int8 ship [`WIRE_VERSION_V3`]
+    /// frames whose sparse payloads are quantized. The session hot path
+    /// goes through here; `--wire f32` therefore cannot change a single
+    /// bit on the link.
+    pub fn encode_wire(&self, policy: Policy, precision: WirePrecision) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode_wire_into(policy, precision, &mut buf);
+        buf
+    }
+
+    /// [`Packet::encode_wire`] into a caller-owned (pooled) buffer.
+    pub fn encode_wire_into(&self, policy: Policy, precision: WirePrecision, buf: &mut Vec<u8>) {
+        self.encode_with(policy, precision.wire_version(), precision, buf);
     }
 
     /// [`Packet::encode_into`] with an explicit wire version: 1 = legacy
-    /// raw-u32 site indices, 2 = delta/varint run-length. Decoders accept
-    /// both; new senders use the default. Public for cross-version tests,
-    /// the `codec/encode_sparse_delta@legacy` bench twin, and senders that
-    /// must interoperate with v1-only peers — an unknown version (e.g.
-    /// from a future peer's handshake) is a recoverable error, not a
-    /// panic.
+    /// raw-u32 site indices, 2 = delta/varint run-length, 3 = v2 index +
+    /// quantized payload support. Decoders accept all three; new senders
+    /// use the default (or [`Packet::encode_wire_into`] when a precision
+    /// is configured). Public for cross-version tests, the
+    /// `codec/encode_sparse_delta@legacy` bench twin, and senders that
+    /// must interoperate with older peers — an unknown version (e.g. from
+    /// a future peer's handshake) is a recoverable error, not a panic.
+    /// Encoding *at* version 3 through this entry point keeps exact f32
+    /// payloads: the version byte governs framing, the precision governs
+    /// loss, and this method never makes a lossy choice on its own.
     pub fn encode_versioned_into(
         &self,
         policy: Policy,
         version: u8,
         buf: &mut Vec<u8>,
     ) -> Result<()> {
-        if version != 1 && version != WIRE_VERSION {
-            bail!("unsupported encode version {version} (supported: 1, {WIRE_VERSION})");
+        if !(1..=WIRE_VERSION_V3).contains(&version) {
+            bail!("unsupported encode version {version} (supported: 1..={WIRE_VERSION_V3})");
         }
+        self.encode_with(policy, version, WirePrecision::F32, buf);
+        Ok(())
+    }
+
+    fn encode_with(&self, policy: Policy, version: u8, precision: WirePrecision, buf: &mut Vec<u8>) {
         buf.clear();
-        let exact = self.encoded_size_versioned(policy, version);
+        let exact = self.size_with(policy, version, precision);
         buf.reserve(exact);
         {
             let mut w = Writer { buf: &mut *buf };
@@ -620,11 +918,10 @@ impl Packet {
             w.u8(version);
             w.u32(self.tensors.len() as u32);
             for (name, t) in &self.tensors {
-                encode_tensor(&mut w, name, t, plan(t, policy, version), version);
+                encode_tensor(&mut w, name, t, plan(t, policy, version, precision), version);
             }
         }
         debug_assert_eq!(buf.len(), exact, "encoded_size drifted from encoder");
-        Ok(())
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Packet> {
@@ -633,7 +930,7 @@ impl Packet {
             bail!("bad wire magic");
         }
         let version = r.u8()?;
-        if version != 1 && version != WIRE_VERSION {
+        if !(1..=WIRE_VERSION_V3).contains(&version) {
             bail!("unsupported wire version {version}");
         }
         let n = r.u32()? as usize;
@@ -655,14 +952,25 @@ impl Packet {
     }
 
     /// [`Packet::encoded_size`] at an explicit framing version (1 = legacy
-    /// flat index, 2 = delta run-list). Costing both versions from one
-    /// packet is how the session reports live v1-vs-v2 wire savings
-    /// without encoding twice.
+    /// flat index, 2 = delta run-list, 3 = quantization-capable framing at
+    /// exact f32). Costing versions side by side from one packet is how
+    /// the session reports live v1-vs-v2 wire savings without encoding
+    /// twice.
     pub fn encoded_size_versioned(&self, policy: Policy, version: u8) -> usize {
+        self.size_with(policy, version, WirePrecision::F32)
+    }
+
+    /// Exact byte count [`Packet::encode_wire_into`] will produce for this
+    /// precision (v3 quantized-payload costing included).
+    pub fn encoded_size_wire(&self, policy: Policy, precision: WirePrecision) -> usize {
+        self.size_with(policy, precision.wire_version(), precision)
+    }
+
+    fn size_with(&self, policy: Policy, version: u8, precision: WirePrecision) -> usize {
         let mut total = 4 + 1 + 4;
         for (name, t) in &self.tensors {
             total += 1 + name.len() + 1 + 1 + 4 * t.shape().len();
-            total += plan(t, policy, version).payload;
+            total += plan(t, policy, version, precision).payload;
         }
         total
     }
@@ -866,7 +1174,7 @@ mod tests {
         let v2 = p.encode(Policy::Auto);
         // unknown versions are a recoverable error, not a panic
         assert!(p
-            .encode_versioned_into(Policy::Auto, 3, &mut Vec::new())
+            .encode_versioned_into(Policy::Auto, 4, &mut Vec::new())
             .is_err());
         assert_eq!(Packet::decode(&v1).unwrap().get("t").unwrap(), &t);
         assert_eq!(Packet::decode(&v2).unwrap().get("t").unwrap(), &t);
@@ -914,5 +1222,232 @@ mod tests {
             let back = Packet::decode(&buf).unwrap();
             assert_eq!(back.get("t").unwrap(), &t);
         }
+    }
+
+    // ------------------------------------------------------------- wire v3
+
+    #[test]
+    fn f16_conversion_known_vectors() {
+        // hand-checked IEEE binary16 round-to-nearest-even vectors
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // tie rounds to even → Inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(2049.0), 0x6800); // tie → even (down)
+        assert_eq!(f32_to_f16_bits(2051.0), 0x6802); // tie → even (up)
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-25)), 0x0000); // underflow tie → 0
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001); // smallest subnormal
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-14)), 0x0400); // smallest normal
+        let nan = f32_to_f16_bits(f32::NAN);
+        assert_eq!(nan & 0x7c00, 0x7c00);
+        assert_ne!(nan & 0x03ff, 0, "NaN must stay NaN");
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_all_patterns() {
+        // every f16 bit pattern except NaNs survives f16→f32→f16 exactly
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn int8_ties_round_to_even() {
+        // scale 1.0: halfway values must go to the even neighbour on every
+        // target (this is the cross-platform determinism pin)
+        assert_eq!(quantize_i8(0.5, 1.0) as i8, 0);
+        assert_eq!(quantize_i8(1.5, 1.0) as i8, 2);
+        assert_eq!(quantize_i8(2.5, 1.0) as i8, 2);
+        assert_eq!(quantize_i8(-0.5, 1.0) as i8, 0);
+        assert_eq!(quantize_i8(-1.5, 1.0) as i8, -2);
+        assert_eq!(quantize_i8(200.0, 1.0) as i8, 127);
+        assert_eq!(quantize_i8(-200.0, 1.0) as i8, -127);
+    }
+
+    #[test]
+    fn v3_f16_roundtrip_bounded_error() {
+        let mut rng = Rng::new(21);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 8], 0.3);
+        let p = Packet::new(vec![("t".into(), t.clone())]);
+        let bytes = p.encode_wire(Policy::Auto, WirePrecision::F16);
+        assert_eq!(bytes[4], WIRE_VERSION_V3);
+        assert_eq!(bytes.len(), p.encoded_size_wire(Policy::Auto, WirePrecision::F16));
+        let back = Packet::decode(&bytes).unwrap();
+        let bt = back.get("t").unwrap();
+        assert_eq!(bt.shape(), t.shape());
+        for (a, b) in t.data().iter().zip(bt.data()) {
+            // f16 has 11 significand bits → relative error ≤ 2^-11
+            assert!((a - b).abs() <= a.abs() * 4.9e-4 + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn v3_int8_roundtrip_per_channel_scales() {
+        // channel 1 is 100× larger than channel 0; a per-channel scale
+        // keeps channel 0's error small where a global scale would not
+        let mut t = Tensor::zeros(&[16, 2]);
+        let mut rng = Rng::new(5);
+        for s in 0..16 {
+            if rng.chance(0.6) {
+                t.data_mut()[s * 2] = rng.normal() as f32 * 0.01;
+                t.data_mut()[s * 2 + 1] = rng.normal() as f32;
+            }
+        }
+        let p = Packet::new(vec![("t".into(), t.clone())]);
+        let bytes = p.encode_wire(Policy::Auto, WirePrecision::Int8);
+        assert_eq!(bytes[4], WIRE_VERSION_V3);
+        assert_eq!(bytes.len(), p.encoded_size_wire(Policy::Auto, WirePrecision::Int8));
+        let back = Packet::decode(&bytes).unwrap();
+        let bt = back.get("t").unwrap();
+        let scales = channel_scales(&t);
+        for s in 0..16 {
+            for ch in 0..2 {
+                let a = t.data()[s * 2 + ch];
+                let b = bt.data()[s * 2 + ch];
+                assert!(
+                    (a - b).abs() <= scales[ch] * 0.5 + 1e-9,
+                    "site {s} ch {ch}: {a} vs {b} (scale {})",
+                    scales[ch]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wire_f32_is_byte_identical_to_v2() {
+        // the pin: `--wire f32` must not change a single bit on the link
+        let mut rng = Rng::new(33);
+        for occ in [0.0, 0.15, 0.7] {
+            let t = masked_tensor(&mut rng, &[4, 8, 8, 4], occ);
+            let p = Packet::new(vec![("t".into(), t)]);
+            for policy in [Policy::Auto, Policy::Dense, Policy::AutoQuantized] {
+                let v2 = p.encode(policy);
+                let wire = p.encode_wire(policy, WirePrecision::F32);
+                assert_eq!(v2, wire);
+                assert_eq!(
+                    p.encoded_size_wire(policy, WirePrecision::F32),
+                    p.encoded_size(policy)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v3_sizes_are_exact_for_all_precisions() {
+        let mut rng = Rng::new(13);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 6], 0.25);
+        let mask = {
+            let mut m = Tensor::zeros(&[4, 8, 8, 1]);
+            for s in 0..m.spatial() {
+                if rng.chance(0.25) {
+                    m.data_mut()[s] = 1.0;
+                }
+            }
+            m
+        };
+        let p = Packet::new(vec![("feat".into(), t), ("mask".into(), mask)]);
+        for prec in [WirePrecision::F32, WirePrecision::F16, WirePrecision::Int8] {
+            let bytes = p.encode_wire(Policy::Auto, prec);
+            assert_eq!(
+                bytes.len(),
+                p.encoded_size_wire(Policy::Auto, prec),
+                "{prec:?}"
+            );
+            Packet::decode(&bytes).unwrap();
+        }
+        // lossy precisions must actually shrink the frame
+        let f32b = p.encoded_size_wire(Policy::Auto, WirePrecision::F32);
+        let f16b = p.encoded_size_wire(Policy::Auto, WirePrecision::F16);
+        let i8b = p.encoded_size_wire(Policy::Auto, WirePrecision::Int8);
+        assert!(f16b < f32b, "f16 {f16b} vs f32 {f32b}");
+        assert!(i8b < f16b, "int8 {i8b} vs f16 {f16b}");
+    }
+
+    #[test]
+    fn v3_masks_stay_exact_under_quantization() {
+        // occupancy masks reconstruct exactly at every precision — the
+        // bitset is already 1 bit and never goes through a lossy format
+        let mut m = Tensor::zeros(&[128, 1]);
+        for s in [0usize, 1, 2, 63, 100] {
+            m.data_mut()[s] = 1.0;
+        }
+        let p = Packet::new(vec![("mask".into(), m.clone())]);
+        for prec in [WirePrecision::F16, WirePrecision::Int8] {
+            let back = Packet::decode(&p.encode_wire(Policy::Auto, prec)).unwrap();
+            assert_eq!(back.get("mask").unwrap(), &m, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn v3_formats_rejected_under_v2_framing() {
+        // a corrupt/hostile frame claiming v2 but carrying a v3 format
+        // byte errors instead of misdecoding
+        let mut rng = Rng::new(17);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 2], 0.3);
+        let p = Packet::new(vec![("t".into(), t)]);
+        let mut bytes = p.encode_wire(Policy::Auto, WirePrecision::F16);
+        assert_eq!(bytes[4], WIRE_VERSION_V3);
+        bytes[4] = WIRE_VERSION; // lie about the version
+        assert!(Packet::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn v3_truncation_never_panics() {
+        let mut rng = Rng::new(29);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 3], 0.4);
+        let p = Packet::new(vec![("t".into(), t)]);
+        for prec in [WirePrecision::F16, WirePrecision::Int8] {
+            let bytes = p.encode_wire(Policy::Auto, prec);
+            for cut in 0..bytes.len() {
+                let _ = Packet::decode(&bytes[..cut]); // must not panic
+            }
+        }
+    }
+
+    #[test]
+    fn v3_framing_with_f32_precision_is_lossless() {
+        // encode_versioned_into at version 3 keeps exact payloads — the
+        // version byte governs framing, not loss
+        let mut rng = Rng::new(41);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 4], 0.3);
+        let p = Packet::new(vec![("t".into(), t.clone())]);
+        let mut v3 = Vec::new();
+        p.encode_versioned_into(Policy::Auto, WIRE_VERSION_V3, &mut v3)
+            .unwrap();
+        assert_eq!(v3[4], WIRE_VERSION_V3);
+        assert_eq!(Packet::decode(&v3).unwrap().get("t").unwrap(), &t);
+    }
+
+    #[test]
+    fn v3_quantized_encode_is_deterministic() {
+        // same tensor → same bytes, every time (retransmit dedup relies on
+        // bit-identical re-encodes)
+        let mut rng = Rng::new(55);
+        let t = masked_tensor(&mut rng, &[4, 8, 8, 5], 0.35);
+        let p = Packet::new(vec![("t".into(), t)]);
+        for prec in [WirePrecision::F16, WirePrecision::Int8] {
+            let a = p.encode_wire(Policy::Auto, prec);
+            let b = p.encode_wire(Policy::Auto, prec);
+            assert_eq!(a, b, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn wire_precision_parses() {
+        assert_eq!(WirePrecision::parse("f32").unwrap(), WirePrecision::F32);
+        assert_eq!(WirePrecision::parse("f16").unwrap(), WirePrecision::F16);
+        assert_eq!(WirePrecision::parse("int8").unwrap(), WirePrecision::Int8);
+        assert!(WirePrecision::parse("bf16").is_err());
+        assert_eq!(WirePrecision::F32.wire_version(), WIRE_VERSION);
+        assert_eq!(WirePrecision::F16.wire_version(), WIRE_VERSION_V3);
+        assert_eq!(WirePrecision::Int8.wire_version(), WIRE_VERSION_V3);
     }
 }

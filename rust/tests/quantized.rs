@@ -1,0 +1,198 @@
+//! Wire codec v3 (lossy uplink precisions) end-to-end invariants
+//! (require `make artifacts`).
+//!
+//! The contract under test, in three parts:
+//!   1. `--wire f32` is a no-op — byte-identical v2 frames, bitwise-
+//!      identical detections, zero v3 accounting.
+//!   2. `--wire f16|int8` changes detections only within the comparator's
+//!      tolerances, ships measurably fewer bytes, and fills the v3
+//!      accounting (`uplink_v3_bytes`, `quant_savings`).
+//!   3. Quantization is transport-invariant: the TCP path and the
+//!      in-process path dequantize to bitwise-identical detections, so
+//!      retransmitted quantized frames dedup cleanly (fault-matrix lane).
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use splitpoint::coordinator::session::{ServerSession, SessionFrame, SplitSession};
+use splitpoint::coordinator::Engine;
+use splitpoint::pointcloud::scene::SceneGenerator;
+use splitpoint::pointcloud::{PointCloud, ReplaySource};
+use splitpoint::postprocess::compare::{self, FrameDets, Tolerance};
+use splitpoint::postprocess::Detection;
+use splitpoint::tensor::codec::WirePrecision;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Shared baseline (f32) engine for the whole binary.
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            SplitSession::builder()
+                .artifacts(artifacts_dir())
+                .build_engine()
+                .expect("engine")
+        })
+        .clone()
+}
+
+fn clouds(seed0: u64, n: usize) -> Vec<PointCloud> {
+    (0..n)
+        .map(|i| SceneGenerator::with_seed(seed0 + i as u64).generate().cloud)
+        .collect()
+}
+
+fn dets_bitwise_equal(a: &[Detection], b: &[Detection]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.class == y.class
+                && x.score.to_bits() == y.score.to_bits()
+                && x.boxx
+                    .iter()
+                    .zip(&y.boxx)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Session frames → comparator frames.
+fn to_frames(frames: &[SessionFrame]) -> Vec<FrameDets> {
+    frames
+        .iter()
+        .map(|f| FrameDets {
+            seq: f.seq,
+            sensor: f.sensor_id,
+            source_seq: f.source_seq,
+            points: f.points,
+            dets: f.output.detections.clone(),
+        })
+        .collect()
+}
+
+/// One in-process session at the given precision over `stream`.
+fn run_at(
+    precision: WirePrecision,
+    stream: &[PointCloud],
+) -> (Vec<SessionFrame>, splitpoint::coordinator::session::SessionReport) {
+    // wire_precision overrides engine *config*, so the session builds its
+    // own engine from artifacts instead of borrowing the shared one
+    let mut session = SplitSession::builder()
+        .artifacts(artifacts_dir())
+        .wire_precision(precision)
+        .source(Box::new(ReplaySource::from_clouds(stream.to_vec())))
+        .build()
+        .unwrap();
+    session.run().unwrap()
+}
+
+/// `--wire f32` must be invisible: bitwise-identical detections to the
+/// default engine, identical uplink byte counts, and no v3 accounting.
+#[test]
+fn f32_wire_is_bitwise_identical_with_no_v3_accounting() {
+    let e = engine();
+    let stream = clouds(31000, 3);
+    let (frames, report) = run_at(WirePrecision::F32, &stream);
+    assert_eq!(frames.len(), stream.len());
+    for f in &frames {
+        let serial = e.run_frame(&stream[f.source_seq as usize], f.split).unwrap();
+        assert!(
+            dets_bitwise_equal(&f.output.detections, &serial.detections),
+            "frame {}: --wire f32 changed detections",
+            f.seq
+        );
+        assert_eq!(f.output.uplink_bytes, serial.timing.uplink_bytes);
+        assert_eq!(f.output.uplink_v3_bytes, 0, "f32 ships v2 frames");
+        // the f32 twin of an f32 run is the run itself
+        assert_eq!(f.output.uplink_f32_bytes, f.output.uplink_bytes);
+    }
+    assert_eq!(report.uplink_v3_bytes, 0);
+    assert!(report.quant_savings().is_none());
+    assert!(report.summary().contains("wire v2"), "{}", report.summary());
+}
+
+/// f16 and int8 sessions pass the tolerance comparator against the f32
+/// baseline, ship strictly fewer uplink bytes, and report the savings.
+#[test]
+fn quantized_sessions_pass_comparator_and_save_bytes() {
+    let stream = clouds(32000, 3);
+    let (base_frames, base_report) = run_at(WirePrecision::F32, &stream);
+    let baseline = to_frames(&base_frames);
+    assert!(base_report.uplink_bytes > 0, "test needs a non-empty live set");
+
+    for precision in [WirePrecision::F16, WirePrecision::Int8] {
+        let (frames, report) = run_at(precision, &stream);
+        let r = compare::compare_runs(&baseline, &to_frames(&frames), &Tolerance::default())
+            .unwrap();
+        assert!(
+            r.pass(),
+            "--wire {} drifted beyond tolerance: {}",
+            precision.as_str(),
+            r.summary()
+        );
+
+        assert!(
+            report.uplink_v3_bytes > 0,
+            "--wire {} must account shipped v3 bytes",
+            precision.as_str()
+        );
+        assert_eq!(report.uplink_v3_bytes, report.uplink_bytes);
+        assert!(
+            report.uplink_bytes < report.uplink_f32_bytes,
+            "--wire {} shipped {} bytes but f32 twin is {}",
+            precision.as_str(),
+            report.uplink_bytes,
+            report.uplink_f32_bytes
+        );
+        let savings = report.quant_savings().expect("quantized run reports savings");
+        assert!(savings > 0.0 && savings < 1.0, "savings {savings}");
+        assert!(
+            report.summary().contains("wire v3 quantized"),
+            "{}",
+            report.summary()
+        );
+        // int8 payloads are half of f16's — savings must be ordered
+        if precision == WirePrecision::Int8 {
+            let f16_report = run_at(WirePrecision::F16, &stream).1;
+            assert!(report.uplink_bytes < f16_report.uplink_bytes);
+        }
+    }
+}
+
+/// Transport invariance under quantization: an int8 TCP session is
+/// bitwise-identical to the in-process int8 session — the dequantized
+/// tensors, and hence the tail numerics, do not depend on the transport.
+/// This is what makes retransmitted quantized frames dedup bit-exactly
+/// in the fault-matrix lane.
+#[test]
+fn quantized_tcp_matches_in_process_bitwise() {
+    let stream = clouds(33000, 2);
+    let (local_frames, _) = run_at(WirePrecision::Int8, &stream);
+
+    let server = ServerSession::builder()
+        .listen("127.0.0.1:0")
+        .artifacts(artifacts_dir())
+        .build()
+        .unwrap();
+    let addr = server.addr().to_string();
+    let mut session = SplitSession::builder()
+        .artifacts(artifacts_dir())
+        .wire_precision(WirePrecision::Int8)
+        .source(Box::new(ReplaySource::from_clouds(stream.clone())))
+        .tcp(&addr)
+        .build()
+        .unwrap();
+    let (tcp_frames, report) = session.run().unwrap();
+    assert_eq!(tcp_frames.len(), local_frames.len());
+    for (a, b) in local_frames.iter().zip(&tcp_frames) {
+        assert!(
+            dets_bitwise_equal(&a.output.detections, &b.output.detections),
+            "frame {}: quantized detections depend on the transport",
+            a.seq
+        );
+    }
+    assert!(report.uplink_v3_bytes > 0, "TCP path fills the v3 accounting");
+    assert!(report.quant_savings().is_some());
+    server.shutdown().unwrap();
+}

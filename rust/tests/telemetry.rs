@@ -179,6 +179,7 @@ fn session_run_populates_global_registry_and_sla_verdict() {
         "sp_session_frames_total",
         "sp_session_uplink_bytes_total",
         "sp_session_uplink_v1_bytes_total",
+        "sp_session_uplink_v3_bytes_total",
         "sp_pipeline_frames_total",
         "sp_stage_latency_seconds_bucket",
         "sp_queue_depth_bucket",
